@@ -1,0 +1,12 @@
+"""Build-time compile path: JAX/Pallas → HLO text artifacts.
+
+Python never runs on the request path — `aot.py` lowers the worker
+computation (and a plaintext logistic-regression step for baselines) once,
+and the rust coordinator loads the resulting `artifacts/*.hlo.txt` via the
+PJRT C API.
+"""
+
+import jax
+
+# Field elements are int64 end to end.
+jax.config.update("jax_enable_x64", True)

@@ -1,0 +1,105 @@
+"""AOT lowering: JAX graphs → HLO *text* artifacts + JSON manifest.
+
+HLO text (not serialized HloModuleProto) is the interchange format: jax
+≥ 0.5 emits protos with 64-bit instruction ids which xla_extension 0.5.1
+(the version behind the published `xla` 0.1.6 crate) rejects; the text
+parser reassigns ids and round-trips cleanly. See /opt/xla-example.
+
+Usage: python -m compile.aot --out-dir ../artifacts
+Skips unchanged artifacts (content-compare) so `make artifacts` is a no-op
+when inputs haven't changed.
+"""
+
+import argparse
+import functools
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model, shapes
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_worker(rows: int, d: int, r: int, p: int) -> str:
+    fn = functools.partial(
+        model.worker_step, p=p, block_rows=shapes.cpu_block_rows(rows)
+    )
+    x = jax.ShapeDtypeStruct((rows, d), jnp.int64)
+    w = jax.ShapeDtypeStruct((d, r), jnp.int64)
+    c = jax.ShapeDtypeStruct((r + 1,), jnp.int64)
+    return to_hlo_text(jax.jit(fn).lower(x, w, c))
+
+
+def lower_lr_step(m: int, d: int) -> str:
+    x = jax.ShapeDtypeStruct((m, d), jnp.float64)
+    y = jax.ShapeDtypeStruct((m,), jnp.float64)
+    w = jax.ShapeDtypeStruct((d,), jnp.float64)
+    eta = jax.ShapeDtypeStruct((), jnp.float64)
+    return to_hlo_text(jax.jit(model.lr_step).lower(x, y, w, eta))
+
+
+def write_if_changed(path: str, text: str) -> bool:
+    if os.path.exists(path):
+        with open(path) as f:
+            if f.read() == text:
+                return False
+    with open(path, "w") as f:
+        f.write(text)
+    return True
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--prime", type=int, default=shapes.PAPER_PRIME)
+    args = ap.parse_args()
+    os.makedirs(args.out_dir, exist_ok=True)
+
+    entries = []
+    wrote = 0
+    for s in shapes.WORKER_SHAPES:
+        name = shapes.worker_name(s["rows"], s["d"], s["r"])
+        fname = f"{name}.hlo.txt"
+        text = lower_worker(s["rows"], s["d"], s["r"], args.prime)
+        wrote += write_if_changed(os.path.join(args.out_dir, fname), text)
+        entries.append(
+            dict(
+                kind="worker_f",
+                name=name,
+                file=fname,
+                rows=s["rows"],
+                d=s["d"],
+                r=s["r"],
+                p=args.prime,
+                block_rows=shapes.BLOCK_ROWS,
+            )
+        )
+        print(f"  worker_f rows={s['rows']} d={s['d']} r={s['r']} -> {fname}")
+
+    for s in shapes.LR_STEP_SHAPES:
+        name = shapes.lr_step_name(s["m"], s["d"])
+        fname = f"{name}.hlo.txt"
+        text = lower_lr_step(s["m"], s["d"])
+        wrote += write_if_changed(os.path.join(args.out_dir, fname), text)
+        entries.append(dict(kind="lr_step", name=name, file=fname, m=s["m"], d=s["d"]))
+        print(f"  lr_step m={s['m']} d={s['d']} -> {fname}")
+
+    manifest = dict(version=1, prime=args.prime, artifacts=entries)
+    write_if_changed(
+        os.path.join(args.out_dir, "manifest.json"), json.dumps(manifest, indent=1)
+    )
+    print(f"wrote {wrote} changed artifact(s), manifest lists {len(entries)}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,2 @@
+"""Layer-1 kernels: the modular-arithmetic hot spot as Pallas, plus the
+pure-jnp reference oracle used by the build-time test suite."""

@@ -1,0 +1,106 @@
+"""Pallas kernel for the worker computation f(X̃, W̃) = X̃ᵀ ḡ(X̃, W̃) over F_p.
+
+Hardware adaptation (DESIGN.md §Hardware-Adaptation): the paper's workers
+are CPUs, so the kernel design question is how finite-field GEMM maps onto
+a TPU-shaped memory hierarchy. We tile X̃ into (BLOCK_ROWS × d) VMEM blocks
+via BlockSpec; the weight panel W̃ (d × r, a few KiB) and the output
+accumulator (d,) stay resident across the grid. Each grid step
+
+  1. computes the r row-dots u_j = x_blk @ w_j          (int64 MACs)
+  2. evaluates the degree-r polynomial ḡ elementwise     (VPU)
+  3. accumulates x_blkᵀ ḡ into the output, mod p once    (int64 MACs)
+
+Modular arithmetic is integer, so the MXU (bf16 systolic array) is not
+usable — the schedule targets the VPU with lane-aligned blocks, and the
+deferred-reduction discipline (one `% p` per contraction, legal because
+p ≤ 26 bits keeps partial sums < 2^63) minimizes the expensive modulo ops.
+
+interpret=True always: CPU PJRT cannot execute Mosaic custom-calls; the
+interpret path lowers to plain HLO the rust runtime can run. VMEM estimate
+for the default BLOCK_ROWS=32, d=1568, r=2: (32·1568 + 1568·2 + 1568 + 32)
+int64 ≈ 430 KiB ≪ 16 MiB.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(x_ref, w_ref, c_ref, o_ref, *, p, r):
+    """One grid step over a block of rows."""
+    blk = x_ref[...]  # (bm, d) int64
+
+    # ḡ over this block: g = c_0 + Σ_i c_i Π_{j≤i} (x_blk @ w_j)
+    g = jnp.full((blk.shape[0],), c_ref[0], dtype=jnp.int64)
+    prod = jnp.ones((blk.shape[0],), dtype=jnp.int64)
+    for j in range(r):
+        u_j = (blk @ w_ref[:, j]) % p
+        prod = (prod * u_j) % p
+        g = (g + c_ref[j + 1] * prod) % p
+
+    # Accumulate the block's contribution to X̃ᵀ ḡ. All grid steps map to
+    # the same output block; initialize it on the first step.
+    @pl.when(pl.program_id(0) == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    partial = (blk.T @ g) % p
+    o_ref[...] = (o_ref[...] + partial) % p
+
+
+def worker_f_pallas(x, w, coeffs, *, p, block_rows=32):
+    """Tiled Pallas evaluation of f(X̃, W̃). Shapes as in ref.worker_f_ref.
+
+    `block_rows` must divide rows; `p` must fit in 26 bits so deferred
+    reduction is exact (checked).
+    """
+    rows, d = x.shape
+    r = w.shape[1]
+    assert rows % block_rows == 0, f"rows={rows} not a multiple of {block_rows}"
+    assert p < (1 << 26), "deferred-reduction discipline needs p < 2^26"
+    assert coeffs.shape == (r + 1,)
+
+    grid = (rows // block_rows,)
+    return pl.pallas_call(
+        functools.partial(_kernel, p=p, r=r),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_rows, d), lambda i: (i, 0)),  # stream X̃ blocks
+            pl.BlockSpec((d, r), lambda i: (0, 0)),           # W̃ resident
+            pl.BlockSpec((r + 1,), lambda i: (0,)),           # coefficients
+        ],
+        out_specs=pl.BlockSpec((d,), lambda i: (0,)),          # accumulator
+        out_shape=jax.ShapeDtypeStruct((d,), jnp.int64),
+        interpret=True,  # CPU PJRT cannot run Mosaic custom-calls
+    )(x, w, coeffs)
+
+
+def modmatmul_pallas(a, b, *, p, block_rows=32):
+    """Tiled modular matmul (A @ B) % p — the reusable L1 building block.
+
+    a: int64[m, k], b: int64[k, n], entries in [0, p); returns int64[m, n].
+    Used by tests and available for alternative L2 graphs (e.g. the linear-
+    regression variant, whose worker computation is a pure modmatmul chain).
+    """
+    m, k = a.shape
+    k2, n = b.shape
+    assert k == k2
+    assert m % block_rows == 0, f"m={m} not a multiple of {block_rows}"
+    assert p < (1 << 26)
+
+    def kernel(a_ref, b_ref, o_ref):
+        o_ref[...] = (a_ref[...] @ b_ref[...]) % p
+
+    return pl.pallas_call(
+        kernel,
+        grid=(m // block_rows,),
+        in_specs=[
+            pl.BlockSpec((block_rows, k), lambda i: (i, 0)),
+            pl.BlockSpec((k, n), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((block_rows, n), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.int64),
+        interpret=True,
+    )(a, b)

@@ -1,0 +1,51 @@
+"""Pure-jnp correctness oracle for the worker computation (paper eq. 17, 20).
+
+This is the ground truth the Pallas kernel is tested against (pytest +
+hypothesis, python/tests/test_kernel.py), and it mirrors — operation for
+operation — the rust native backend in rust/src/compute/, which is itself
+property-tested against a big-integer reference. Between the three
+implementations every pair is checked somewhere.
+"""
+
+import jax.numpy as jnp
+
+
+def g_bar_ref(x, w, coeffs, p):
+    """ḡ(X̃, W̃) = Σ_i c̄_i Π_{j≤i}(X̃ w̃_j) over F_p — int64[rows].
+
+    Overflow discipline: products of reduced elements are < p² ≤ 2^52
+    (p ≤ 26 bits) and dot-accumulations over ≤ 2^11 terms stay < 2^63, so
+    a single mod after each contraction is exact.
+    """
+    r = w.shape[1]
+    g = jnp.full((x.shape[0],), coeffs[0], dtype=jnp.int64)
+    prod = jnp.ones((x.shape[0],), dtype=jnp.int64)
+    for j in range(r):
+        u_j = (x @ w[:, j]) % p
+        prod = (prod * u_j) % p
+        g = (g + coeffs[j + 1] * prod) % p
+    return g
+
+
+def worker_f_ref(x, w, coeffs, p):
+    """f(X̃, W̃) = X̃ᵀ ḡ(X̃, W̃) over F_p.
+
+    Args:
+      x: int64[rows, d]  coded data block, entries in [0, p)
+      w: int64[d, r]     coded weight quantizations, entries in [0, p)
+      coeffs: int64[r+1] field-quantized sigmoid-polynomial coefficients
+      p: python int prime (static)
+
+    Returns:
+      int64[d] in [0, p).
+    """
+    g = g_bar_ref(x, w, coeffs, p)
+    return (x.T @ g) % p
+
+
+def lr_step_ref(x, y, w, eta):
+    """One plaintext logistic-regression GD step (paper eq. 3), f64."""
+    z = x @ w
+    pred = 1.0 / (1.0 + jnp.exp(-z))
+    grad = x.T @ (pred - y) / x.shape[0]
+    return w - eta * grad

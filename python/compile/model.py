@@ -1,0 +1,38 @@
+"""Layer-2: the JAX compute graphs that get AOT-lowered for the rust runtime.
+
+Two graphs:
+
+* `worker_step` — the CodedPrivateML worker computation over F_p, calling
+  the L1 Pallas kernel. This is what every worker executes each training
+  iteration (paper eq. 20).
+* `lr_step` — a plaintext f64 logistic-regression gradient step (paper
+  eq. 3), used by the conventional-LR baseline of Figures 3–4 so the
+  baseline also exercises the JAX→PJRT path.
+
+Both are pure functions of arrays, lowered with static shapes by aot.py.
+"""
+
+import jax
+import jax.numpy as jnp
+
+from .kernels.coded_gradient import worker_f_pallas
+from .shapes import BLOCK_ROWS
+
+
+def worker_step(x, w, coeffs, *, p, block_rows=BLOCK_ROWS):
+    """f(X̃, W̃) ∈ F_p^d — wraps the Pallas kernel (tuple-returning for AOT)."""
+    return (worker_f_pallas(x, w, coeffs, p=p, block_rows=block_rows),)
+
+
+def lr_step(x, y, w, eta):
+    """One full-batch GD step of logistic regression; returns (w', loss).
+
+    The loss output lets the rust baseline log Figure-4 curves from the
+    same executable without a second artifact.
+    """
+    z = x @ w
+    pred = jax.nn.sigmoid(z)
+    eps = 1e-12
+    loss = -jnp.mean(y * jnp.log(pred + eps) + (1.0 - y) * jnp.log(1.0 - pred + eps))
+    grad = x.T @ (pred - y) / x.shape[0]
+    return (w - eta * grad, loss)

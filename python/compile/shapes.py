@@ -1,0 +1,57 @@
+"""The artifact shape matrix.
+
+XLA executables have static shapes, so the AOT step emits one artifact per
+(rows, d, r) the examples and benches use; any other shape falls back to
+the rust native backend (bit-exact, see rust/src/compute/). Keep this list
+small — each entry costs a compile at `make artifacts` and a PJRT compile
+at first use.
+"""
+
+# Paper default field prime (24-bit). Must match rust::field::PAPER_PRIME.
+PAPER_PRIME = 15_485_863
+
+# Worker-computation artifacts: f(X̃, W̃) = X̃ᵀ ḡ(X̃, W̃) over F_p.
+# rows = coded block height m/K; d = features; r = sigmoid degree.
+WORKER_SHAPES = [
+    # quickstart / integration-test scale
+    dict(rows=32, d=64, r=1),
+    dict(rows=64, d=784, r=1),
+    dict(rows=128, d=784, r=1),
+    dict(rows=64, d=784, r=2),
+    # e2e / benchmark scale
+    dict(rows=256, d=784, r=1),
+    dict(rows=256, d=1568, r=1),
+    dict(rows=1024, d=784, r=1),
+]
+
+# Plaintext logistic-regression gradient-step artifacts (f64): the L2
+# "model" path used by the conventional-LR baseline example.
+LR_STEP_SHAPES = [
+    dict(m=256, d=784),
+    dict(m=1024, d=784),
+]
+
+# Pallas kernel block size over rows (must divide every WORKER rows above).
+# 32 is the TPU-shaped VMEM schedule the kernel is *designed* for (see the
+# kernel docstring); the AOT artifacts for the CPU PJRT runtime are emitted
+# with block_rows == rows (one grid step) because interpret-mode grid loops
+# lower to XLA while-loops with dynamic slicing — measured 8-40x slower on
+# CPU with no fidelity benefit (EXPERIMENTS.md §Perf, L1). Correctness of
+# the tiled schedule is still enforced by python/tests/test_kernel.py,
+# which sweeps block_rows ∈ {8, 16, 32}.
+BLOCK_ROWS = 32
+
+
+def cpu_block_rows(rows: int) -> int:
+    """Block size used when emitting CPU-runtime artifacts: few grid
+    steps, but blocks capped at 256 rows (a single huge block regressed
+    the larger shapes — §Perf iteration log)."""
+    return min(rows, 256)
+
+
+def worker_name(rows: int, d: int, r: int) -> str:
+    return f"worker_f_m{rows}_d{d}_r{r}"
+
+
+def lr_step_name(m: int, d: int) -> str:
+    return f"lr_step_m{m}_d{d}"

@@ -1,0 +1,81 @@
+"""Cross-layer semantic checks: the finite-field conventions the python
+kernel and the rust coordinator must share (two's-complement embedding,
+scale bookkeeping, coefficient quantization). These mirror the rust unit
+tests in rust/src/quant — if either side changes, one of the two suites
+breaks."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+jax.config.update("jax_enable_x64", True)
+
+from compile.kernels.ref import worker_f_ref
+from compile.shapes import PAPER_PRIME
+
+
+def phi(x, p):
+    return x % p
+
+
+def phi_inv(x, p):
+    x = np.asarray(x, dtype=np.int64)
+    return np.where(x <= (p - 1) // 2, x, x - p)
+
+
+def test_phi_roundtrip_matches_rust_convention():
+    p = PAPER_PRIME
+    vals = np.array([-(p - 1) // 2, -1000, -1, 0, 1, 1000, (p - 1) // 2])
+    assert np.all(phi_inv(phi(vals, p), p) == vals)
+
+
+def test_worker_f_of_negative_embeddings():
+    """Signed semantics survive the field round trip: computing on
+    φ(negative) values and mapping back equals the integer computation —
+    the property the whole quantization scheme rests on."""
+    p = PAPER_PRIME
+    rng = np.random.default_rng(7)
+    rows, d, r = 32, 8, 1
+    xs = rng.integers(-5, 6, size=(rows, d)).astype(np.int64)
+    ws = rng.integers(-5, 6, size=(d, r)).astype(np.int64)
+    cs = rng.integers(-5, 6, size=(r + 1,)).astype(np.int64)
+
+    x = jnp.asarray(phi(xs, p))
+    w = jnp.asarray(phi(ws, p))
+    c = jnp.asarray(phi(cs, p))
+    got = phi_inv(np.asarray(worker_f_ref(x, w, c, p)), p)
+
+    # Integer reference with python bignums.
+    g = cs[0] + cs[1] * (xs @ ws[:, 0])
+    want = xs.T @ g
+    assert np.all(got == want)
+
+
+def test_scale_bookkeeping_degree1():
+    """l = l_c + l_x + r(l_x + l_w): quantize a real computation, run in
+    the field, dequantize, compare against the float result."""
+    p = PAPER_PRIME
+    lx, lw, lc, r = 2, 4, 3, 1
+    rng = np.random.default_rng(11)
+    rows, d = 32, 6
+    xr = rng.random((rows, d))  # [0, 1) like normalized pixels
+    wr = rng.normal(size=(d, 1)) * 0.2
+    c0, c1 = 0.5, 0.15
+
+    xq = np.round(xr * 2**lx).astype(np.int64)
+    wq = np.round(wr * 2**lw).astype(np.int64)  # deterministic stand-in
+    cq = np.array(
+        [round(c0 * 2 ** (lc + (lx + lw))), round(c1 * 2**lc)], dtype=np.int64
+    )
+
+    out = worker_f_ref(
+        jnp.asarray(phi(xq, p)), jnp.asarray(phi(wq, p)), jnp.asarray(phi(cq, p)), p
+    )
+    scale = 2 ** (lc + lx + r * (lx + lw))
+    got = phi_inv(np.asarray(out), p) / scale
+
+    g = c0 + c1 * (xr @ wr[:, 0])
+    want = xr.T @ g
+    # Error budget: quantization of x (2^-lx-1), w (2^-lw-1), c (2^-lc-1)
+    # propagated through the bilinear form — generous bound.
+    np.testing.assert_allclose(got, want, atol=rows * 0.2)

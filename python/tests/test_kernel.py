@@ -1,0 +1,114 @@
+"""L1 correctness: Pallas kernel vs pure-jnp oracle.
+
+Hypothesis sweeps shapes, degrees, block sizes, and primes; exact equality
+is required — this is finite-field arithmetic, not floats.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+jax.config.update("jax_enable_x64", True)
+
+from compile.kernels.coded_gradient import modmatmul_pallas, worker_f_pallas
+from compile.kernels.ref import g_bar_ref, worker_f_ref
+from compile.shapes import PAPER_PRIME
+
+PRIMES = [97, 15485863, 67108859]  # toy, paper 24-bit, max 26-bit
+
+
+def rand_field(rng, shape, p):
+    return jnp.asarray(rng.integers(0, p, size=shape, dtype=np.int64))
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    blocks=st.integers(1, 4),
+    block_rows=st.sampled_from([8, 16, 32]),
+    d=st.integers(1, 96),
+    r=st.integers(1, 3),
+    p=st.sampled_from(PRIMES),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_worker_f_matches_ref(blocks, block_rows, d, r, p, seed):
+    rng = np.random.default_rng(seed)
+    rows = blocks * block_rows
+    x = rand_field(rng, (rows, d), p)
+    w = rand_field(rng, (d, r), p)
+    c = rand_field(rng, (r + 1,), p)
+    got = worker_f_pallas(x, w, c, p=p, block_rows=block_rows)
+    want = worker_f_ref(x, w, c, p)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    m_blocks=st.integers(1, 3),
+    k=st.integers(1, 64),
+    n=st.integers(1, 8),
+    p=st.sampled_from(PRIMES),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_modmatmul_matches_numpy(m_blocks, k, n, p, seed):
+    rng = np.random.default_rng(seed)
+    m = 32 * m_blocks
+    a = rand_field(rng, (m, k), p)
+    b = rand_field(rng, (k, n), p)
+    got = modmatmul_pallas(a, b, p=p)
+    want = (np.asarray(a, dtype=object) @ np.asarray(b, dtype=object)) % p
+    np.testing.assert_array_equal(np.asarray(got), want.astype(np.int64))
+
+
+def test_worker_f_paper_scale_shape():
+    """One paper-scale shape (m/K=256, d=1568, r=1) — exact vs ref."""
+    rng = np.random.default_rng(0)
+    p = PAPER_PRIME
+    x = rand_field(rng, (256, 1568), p)
+    w = rand_field(rng, (1568, 1), p)
+    c = rand_field(rng, (2,), p)
+    got = worker_f_pallas(x, w, c, p=p)
+    want = worker_f_ref(x, w, c, p)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_g_bar_polynomial_semantics():
+    """ḡ with c = [c0, c1] equals c0 + c1·(x @ w) elementwise (mod p)."""
+    rng = np.random.default_rng(3)
+    p = 97
+    x = rand_field(rng, (8, 5), p)
+    w = rand_field(rng, (5, 1), p)
+    c = jnp.asarray([7, 11], dtype=jnp.int64)
+    got = g_bar_ref(x, w, c, p)
+    want = (7 + 11 * ((np.asarray(x) @ np.asarray(w)[:, 0]) % p)) % p
+    np.testing.assert_array_equal(np.asarray(got), want)
+
+
+def test_block_rows_must_divide():
+    x = jnp.zeros((33, 4), dtype=jnp.int64)
+    w = jnp.zeros((4, 1), dtype=jnp.int64)
+    c = jnp.zeros((2,), dtype=jnp.int64)
+    with pytest.raises(AssertionError):
+        worker_f_pallas(x, w, c, p=97, block_rows=32)
+
+
+def test_prime_bound_enforced():
+    x = jnp.zeros((32, 4), dtype=jnp.int64)
+    w = jnp.zeros((4, 1), dtype=jnp.int64)
+    c = jnp.zeros((2,), dtype=jnp.int64)
+    with pytest.raises(AssertionError):
+        worker_f_pallas(x, w, c, p=(1 << 27) - 39, block_rows=32)
+
+
+def test_deferred_reduction_extreme_values():
+    """All entries at p-1 — the worst case for the overflow discipline."""
+    p = 67108859  # 26-bit: tightest margins
+    rows, d, r = 64, 96, 3
+    x = jnp.full((rows, d), p - 1, dtype=jnp.int64)
+    w = jnp.full((d, r), p - 1, dtype=jnp.int64)
+    c = jnp.full((r + 1,), p - 1, dtype=jnp.int64)
+    got = worker_f_pallas(x, w, c, p=p, block_rows=32)
+    want = worker_f_ref(x, w, c, p)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+    assert np.all(np.asarray(got) >= 0) and np.all(np.asarray(got) < p)

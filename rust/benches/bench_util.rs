@@ -1,0 +1,60 @@
+//! Shared mini-bench harness (criterion is unavailable offline).
+//!
+//! Each bench target is a `harness = false` binary that times closures
+//! with warmup + minimum-duration repetition and prints aligned rows:
+//!
+//! ```text
+//! name                                 time/iter        throughput
+//! ```
+
+use std::time::Instant;
+
+/// Time `f` for at least `min_secs` (and ≥ 3 iters); returns secs/iter.
+pub fn bench_secs(min_secs: f64, mut f: impl FnMut()) -> f64 {
+    f(); // warmup
+    let mut iters = 0u32;
+    let t0 = Instant::now();
+    loop {
+        f();
+        iters += 1;
+        let elapsed = t0.elapsed().as_secs_f64();
+        if iters >= 3 && elapsed >= min_secs {
+            return elapsed / iters as f64;
+        }
+    }
+}
+
+/// Pretty-print one result row. `work` is optional items/op for
+/// throughput (e.g. field multiplications).
+pub fn report(name: &str, secs_per_iter: f64, work: Option<f64>) {
+    let time = if secs_per_iter >= 1.0 {
+        format!("{secs_per_iter:.3} s")
+    } else if secs_per_iter >= 1e-3 {
+        format!("{:.3} ms", secs_per_iter * 1e3)
+    } else {
+        format!("{:.3} µs", secs_per_iter * 1e6)
+    };
+    match work {
+        Some(w) => {
+            let rate = w / secs_per_iter;
+            let rate_s = if rate >= 1e9 {
+                format!("{:.2} Gop/s", rate / 1e9)
+            } else if rate >= 1e6 {
+                format!("{:.2} Mop/s", rate / 1e6)
+            } else {
+                format!("{:.2} Kop/s", rate / 1e3)
+            };
+            println!("{name:<52} {time:>12}   {rate_s:>12}");
+        }
+        None => println!("{name:<52} {time:>12}"),
+    }
+}
+
+/// Environment knob: `BENCH_SECS` (default 0.3) — raise for stabler
+/// numbers in the §Perf runs.
+pub fn min_secs() -> f64 {
+    std::env::var("BENCH_SECS")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(0.3)
+}

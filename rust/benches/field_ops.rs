@@ -1,0 +1,67 @@
+//! Microbenches for the F_p substrate: scalar ops, batch inversion,
+//! Lagrange coefficient computation, interpolation. These are the inner
+//! loops of encode/decode — see EXPERIMENTS.md §Perf.
+
+mod bench_util;
+use bench_util::{bench_secs, min_secs, report};
+
+use codedml::field::{eval_poly, interpolate, lagrange_coeffs, PrimeField, PAPER_PRIME};
+use codedml::util::Rng;
+
+fn main() {
+    let f = PrimeField::new(PAPER_PRIME);
+    let mut rng = Rng::new(1);
+    let secs = min_secs();
+    println!("== field_ops (p = {}) ==", f.modulus());
+
+    // Scalar multiply-add chain.
+    let xs: Vec<u64> = (0..4096).map(|_| f.random(&mut rng)).collect();
+    let t = bench_secs(secs, || {
+        let mut acc = 1u64;
+        for &x in &xs {
+            acc = f.mul(acc, x);
+            acc = f.add(acc, x);
+        }
+        std::hint::black_box(acc);
+    });
+    report("mul+add chain (4096 elems)", t, Some(2.0 * 4096.0));
+
+    // Single inversions vs batch.
+    let inv_in: Vec<u64> = (0..256).map(|_| 1 + rng.below(f.modulus() - 1)).collect();
+    let t = bench_secs(secs, || {
+        for &x in &inv_in {
+            std::hint::black_box(f.inv(x));
+        }
+    });
+    report("inv x256 (Fermat)", t, Some(256.0));
+    let t = bench_secs(secs, || {
+        std::hint::black_box(f.batch_inv(&inv_in));
+    });
+    report("batch_inv x256 (Montgomery trick)", t, Some(256.0));
+
+    // Lagrange basis coefficients at decode sizes (R = threshold).
+    for r in [10usize, 22, 40] {
+        let pts: Vec<u64> = f.distinct_points(r);
+        let t = bench_secs(secs, || {
+            std::hint::black_box(lagrange_coeffs(&f, &pts, 999_983).unwrap());
+        });
+        report(&format!("lagrange_coeffs (R={r})"), t, None);
+    }
+
+    // Full interpolation (diagnostics path).
+    for n in [16usize, 40] {
+        let pts = f.distinct_points(n);
+        let vals: Vec<u64> = (0..n).map(|_| f.random(&mut rng)).collect();
+        let t = bench_secs(secs, || {
+            std::hint::black_box(interpolate(&f, &pts, &vals).unwrap());
+        });
+        report(&format!("interpolate (n={n})"), t, None);
+    }
+
+    // Horner evaluation.
+    let coeffs: Vec<u64> = (0..64).map(|_| f.random(&mut rng)).collect();
+    let t = bench_secs(secs, || {
+        std::hint::black_box(eval_poly(&f, &coeffs, 12345));
+    });
+    report("eval_poly (deg 63)", t, Some(63.0));
+}

@@ -1,0 +1,34 @@
+//! End-to-end bench: regenerates every paper table and figure at bench
+//! scale (one criterion-style target per paper artifact, as `make bench`
+//! requires). Scale via `BENCH_SCALE` (default 0.02) and `BENCH_ITERS`
+//! (default 5); the full-scale runs recorded in EXPERIMENTS.md use
+//! `codedml reproduce all --scale 0.25 --iters 25`.
+
+use codedml::reproduce::{run_experiment, ExpParams, EXPERIMENTS};
+use std::time::Instant;
+
+fn main() {
+    let scale: f64 = std::env::var("BENCH_SCALE")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(0.02);
+    let iters: usize = std::env::var("BENCH_ITERS")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(5);
+    let params = ExpParams { scale, iters, ..Default::default() };
+    println!("== tables: all paper artifacts at scale {scale}, {iters} iters ==\n");
+    for e in EXPERIMENTS {
+        let t0 = Instant::now();
+        match run_experiment(e.id, &params) {
+            Ok(out) => {
+                println!("{}", out.text);
+                println!("[{} regenerated in {:.2}s]\n", e.id, t0.elapsed().as_secs_f64());
+            }
+            Err(err) => {
+                println!("[{} FAILED: {err}]\n", e.id);
+                std::process::exit(1);
+            }
+        }
+    }
+}

@@ -1,0 +1,73 @@
+//! Worker hot-path bench: native rust kernel vs the AOT JAX/Pallas
+//! artifact via PJRT, across manifest shapes. This is the per-iteration
+//! per-worker cost that dominates the paper's Comp. column.
+
+mod bench_util;
+use bench_util::{bench_secs, min_secs, report};
+
+use codedml::compute::WorkerComputation;
+use codedml::field::PrimeField;
+use codedml::runtime::{ArtifactKind, XlaRuntime};
+use codedml::util::Rng;
+use std::path::PathBuf;
+
+fn main() {
+    let secs = min_secs();
+    println!("== worker_compute: f(X̃, W̃) per call ==");
+
+    let shapes = [
+        (64usize, 784usize, 1usize),
+        (128, 784, 1),
+        (256, 784, 1),
+        (256, 1568, 1),
+        (1024, 784, 1),
+        (64, 784, 2),
+    ];
+    let p = 15_485_863u64;
+    let f = PrimeField::new(p);
+    let mut rng = Rng::new(5);
+
+    let rt = {
+        let dir = PathBuf::from("artifacts");
+        if dir.join("manifest.json").exists() {
+            match XlaRuntime::new(&dir) {
+                Ok(rt) => Some(rt),
+                Err(e) => {
+                    eprintln!("xla runtime unavailable: {e}");
+                    None
+                }
+            }
+        } else {
+            eprintln!("artifacts/ not built; native only");
+            None
+        }
+    };
+
+    for (rows, d, r) in shapes {
+        let x = f.random_matrix(&mut rng, rows, d);
+        let w = f.random_matrix(&mut rng, d, r);
+        let coeffs: Vec<u64> = (0..=r).map(|_| f.random(&mut rng)).collect();
+        // Work: (r+1) row-dots + transpose pass ≈ (r+2)·rows·d MACs.
+        let work = ((r + 2) * rows * d) as f64;
+
+        let wc = WorkerComputation::new(f, rows, d, coeffs.clone());
+        let t = bench_secs(secs, || {
+            std::hint::black_box(wc.compute(&x, &w));
+        });
+        report(&format!("native rows={rows} d={d} r={r}"), t, Some(work));
+
+        if let Some(rt) = &rt {
+            let has = rt
+                .manifest()
+                .entries
+                .iter()
+                .any(|e| e.kind == ArtifactKind::WorkerF && e.rows == rows && e.d == d && e.r == r);
+            if has {
+                let t = bench_secs(secs, || {
+                    std::hint::black_box(rt.worker_f(&x, &w, &coeffs, rows, d, p).unwrap());
+                });
+                report(&format!("xla    rows={rows} d={d} r={r}"), t, Some(work));
+            }
+        }
+    }
+}

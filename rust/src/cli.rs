@@ -1,0 +1,363 @@
+//! `codedml` command-line interface.
+//!
+//! ```text
+//! codedml train       [--n 10 --k 3 --t 1 --r 1 --case 1|2 --iters 25 --m 600
+//!                      --d 784 --dup --backend native|xla --seed 42
+//!                      --config cfg.json --json out.json]
+//! codedml mpc         [--n 10 --t 4 --iters 25 --m 600 --d 784]
+//! codedml reproduce   <fig2|table1..6|fig3|fig4|fig5|all>
+//!                     [--scale 0.05 --iters 25 --json out.json --backend ...]
+//! codedml budget      [--m 12396 --k 13 --lx 2 --lw 4 --lc 3 --r 1 --p ...]
+//! codedml artifacts   [--dir artifacts]
+//! codedml list
+//! ```
+
+use std::path::PathBuf;
+
+use crate::cluster::{NetworkModel, StragglerModel};
+use crate::coordinator::{CodedMlConfig, CodedMlSession};
+use crate::data::{paper_dataset, synthetic_3v7};
+use crate::mpc::{BgwConfig, BgwGradientProtocol};
+use crate::quant::OverflowBudget;
+use crate::reproduce::{self, run_experiment, ExpParams};
+use crate::runtime::{BackendKind, XlaRuntime};
+use crate::util::args::Args;
+use crate::util::json::Json;
+
+const USAGE: &str = "usage: codedml <train|mpc|reproduce|budget|artifacts|list> [options]
+  train      run one CodedPrivateML training session
+  mpc        run the BGW MPC baseline
+  reproduce  regenerate a paper table/figure (or 'all')
+  budget     overflow-budget analysis for a parameter set
+  artifacts  inspect the AOT artifact manifest
+  list       list reproducible experiments";
+
+/// Entry point; returns the process exit code.
+pub fn run() -> i32 {
+    let args = Args::from_env();
+    match dispatch(&args) {
+        Ok(()) => {
+            let unknown = args.unknown_options();
+            if !unknown.is_empty() {
+                eprintln!("warning: unused option(s): --{}", unknown.join(", --"));
+            }
+            0
+        }
+        Err(e) => {
+            eprintln!("error: {e}");
+            1
+        }
+    }
+}
+
+fn dispatch(args: &Args) -> Result<(), String> {
+    match args.positional.first().map(String::as_str) {
+        Some("train") => cmd_train(args),
+        Some("mpc") => cmd_mpc(args),
+        Some("reproduce") => cmd_reproduce(args),
+        Some("budget") => cmd_budget(args),
+        Some("artifacts") => cmd_artifacts(args),
+        Some("list") => {
+            for e in reproduce::EXPERIMENTS {
+                println!("{:<8} {:<18} {}", e.id, e.paper_ref, e.what);
+            }
+            Ok(())
+        }
+        _ => {
+            println!("{USAGE}");
+            Ok(())
+        }
+    }
+}
+
+fn parse_backend(args: &Args) -> Result<BackendKind, String> {
+    match args.get("backend") {
+        None => Ok(BackendKind::Native),
+        Some(s) => s.parse(),
+    }
+}
+
+fn maybe_write_json(args: &Args, json: &Json) -> Result<(), String> {
+    if let Some(path) = args.get("json") {
+        std::fs::write(path, json.to_string()).map_err(|e| format!("write {path}: {e}"))?;
+        eprintln!("wrote {path}");
+    }
+    Ok(())
+}
+
+fn cmd_train(args: &Args) -> Result<(), String> {
+    let n = args.get_usize("n", 10)?;
+    let r = args.get_usize("r", 1)?;
+    let mut cfg = match args.get("case") {
+        Some("1") => CodedMlConfig::case1(n, r).map_err(|e| e.to_string())?,
+        Some("2") => CodedMlConfig::case2(n, r).map_err(|e| e.to_string())?,
+        Some(other) => return Err(format!("--case must be 1 or 2, got {other}")),
+        None => CodedMlConfig {
+            n,
+            k: args.get_usize("k", 3)?,
+            t: args.get_usize("t", 1)?,
+            r,
+            ..Default::default()
+        },
+    };
+    cfg.iters = args.get_usize("iters", 25)?;
+    cfg.seed = args.get_u64("seed", 42)?;
+    cfg.backend = parse_backend(args)?;
+    if let Some(p) = args.get("p") {
+        cfg.p = p.parse().map_err(|_| "--p: bad integer")?;
+    }
+    cfg.lx = args.get_usize("lx", cfg.lx as usize)? as u32;
+    cfg.lw = args.get_usize("lw", cfg.lw as usize)? as u32;
+    cfg.lc = args.get_usize("lc", cfg.lc as usize)? as u32;
+    if let Some(eta) = args.get("eta") {
+        cfg.eta = Some(eta.parse().map_err(|_| "--eta: bad number")?);
+    }
+    if args.flag("no-straggle") {
+        cfg.straggler = StragglerModel::none();
+    }
+    if args.flag("free-net") {
+        cfg.net = NetworkModel::free();
+    }
+    cfg.chaos_failures = args.get_usize("chaos-failures", 0)?;
+    cfg.chaos_from_iter = args.get_u64("chaos-from-iter", 0)?;
+    cfg.strict_budget = args.flag("strict-budget");
+    if let Some(path) = args.get("config") {
+        let text = std::fs::read_to_string(path).map_err(|e| format!("read {path}: {e}"))?;
+        cfg.apply_json(&text)?;
+    }
+    if let Some(dir) = args.get("artifact-dir") {
+        cfg.artifact_dir = PathBuf::from(dir);
+    }
+
+    let m = args.get_usize("m", 600)?;
+    let d = args.get_usize("d", 784)?;
+    let test_m = args.get_usize("test-m", (m / 6).max(30))?;
+    let (mut train, mut test) = paper_dataset(m, test_m, cfg.seed);
+    if d == 2 * train.d || args.flag("dup") {
+        train = train.duplicate_features();
+        test = test.duplicate_features();
+    } else if d != train.d {
+        return Err(format!("--d must be {} or {} (use --dup)", train.d, 2 * train.d));
+    }
+
+    let iters = cfg.iters;
+    println!(
+        "CodedPrivateML: N={} K={} T={} r={} p={} backend={:?} m={} d={} iters={}",
+        cfg.n, cfg.k, cfg.t, cfg.r, cfg.p, cfg.backend, train.m, train.d, iters
+    );
+    let mut sess = CodedMlSession::new(cfg, &train).map_err(|e| e.to_string())?;
+    println!(
+        "recovery threshold {} (straggler slack {})",
+        sess.params().recovery_threshold(),
+        sess.params().straggler_slack()
+    );
+    if let Some(path) = args.get("trace") {
+        sess.set_tracer(
+            crate::coordinator::Tracer::file(std::path::Path::new(path))
+                .map_err(|e| format!("trace {path}: {e}"))?,
+        );
+        eprintln!("tracing to {path}");
+    }
+    let report = sess.train(iters, Some(&test)).map_err(|e| e.to_string())?;
+    if let Some(path) = args.get("save-model") {
+        crate::model::SavedModel::new("logistic", report.weights.clone())
+            .with_meta("iters", iters)
+            .with_meta("source", &train.source)
+            .with_meta("final_accuracy", format!("{:?}", report.final_accuracy()))
+            .save(std::path::Path::new(path))
+            .map_err(|e| e.to_string())?;
+        eprintln!("saved model to {path}");
+    }
+    for it in &report.iterations {
+        println!(
+            "iter {:>3}  loss {:.5}  acc {:.4}",
+            it.iter,
+            it.train_loss,
+            it.test_accuracy.unwrap_or(f64::NAN)
+        );
+    }
+    println!("{}", reproduce::TABLE_HEADER);
+    println!("{}", report.breakdown.row("CodedPrivateML"));
+    println!(
+        "decode cache: {} hits / {} misses; bytes sent {}, received {}",
+        report.decode_cache.0, report.decode_cache.1, report.bytes_sent, report.bytes_received
+    );
+    maybe_write_json(args, &report.to_json())
+}
+
+fn cmd_mpc(args: &Args) -> Result<(), String> {
+    let n = args.get_usize("n", 10)?;
+    let cfg = BgwConfig {
+        n,
+        t: args.get_usize("t", ((n - 1) / 2).max(1))?,
+        r: args.get_usize("r", 1)?,
+        seed: args.get_u64("seed", 42)?,
+        net: if args.flag("free-net") { NetworkModel::free() } else { NetworkModel::default() },
+        straggler: if args.flag("no-straggle") {
+            StragglerModel::none()
+        } else {
+            StragglerModel::default()
+        },
+        ..Default::default()
+    };
+    let m = args.get_usize("m", 600)?;
+    let iters = args.get_usize("iters", 25)?;
+    let (train, test) = paper_dataset(m, (m / 6).max(30), cfg.seed);
+    println!("BGW MPC baseline: N={} T={} m={} d={} iters={}", cfg.n, cfg.t, train.m, train.d, iters);
+    let mut proto = BgwGradientProtocol::new(cfg, &train).map_err(|e| e.to_string())?;
+    let report = proto.train(iters, Some(&test));
+    for it in &report.iterations {
+        println!(
+            "iter {:>3}  loss {:.5}  acc {:.4}",
+            it.iter,
+            it.train_loss,
+            it.test_accuracy.unwrap_or(f64::NAN)
+        );
+    }
+    println!("{}", reproduce::TABLE_HEADER);
+    println!("{}", report.breakdown.row("MPC approach"));
+    println!(
+        "resharing rounds {}, worker↔worker bytes {}",
+        proto.protocol_report().resharing_rounds,
+        proto.protocol_report().bytes_worker_to_worker
+    );
+    maybe_write_json(args, &report.to_json())
+}
+
+fn cmd_reproduce(args: &Args) -> Result<(), String> {
+    let target = args
+        .positional
+        .get(1)
+        .cloned()
+        .unwrap_or_else(|| "all".to_string());
+    let params = ExpParams {
+        scale: args.get_f64("scale", 0.05)?,
+        iters: args.get_usize("iters", 25)?,
+        seed: args.get_u64("seed", 42)?,
+        backend: parse_backend(args)?,
+        straggler: if args.flag("no-straggle") {
+            StragglerModel::none()
+        } else {
+            StragglerModel::default()
+        },
+        net: NetworkModel::default(),
+        ..Default::default()
+    };
+    let ids: Vec<&str> = if target == "all" {
+        reproduce::list()
+    } else {
+        vec![Box::leak(target.into_boxed_str())]
+    };
+    let mut outputs = Vec::new();
+    for id in ids {
+        eprintln!("running {id} (scale {}, {} iters)...", params.scale, params.iters);
+        let out = run_experiment(id, &params)?;
+        println!("{}", out.text);
+        outputs.push(out.json);
+    }
+    maybe_write_json(args, &Json::Arr(outputs))
+}
+
+fn cmd_budget(args: &Args) -> Result<(), String> {
+    let budget = OverflowBudget {
+        p: args.get_u64("p", crate::field::PAPER_PRIME)?,
+        max_abs_x: args.get_f64("max-x", 1.0)?,
+        rows_per_block: args.get_usize("m", 12396)? / args.get_usize("k", 13)?.max(1),
+        lx: args.get_usize("lx", 2)? as u32,
+        lw: args.get_usize("lw", 4)? as u32,
+        lc: args.get_usize("lc", 3)? as u32,
+        r: args.get_usize("r", 1)? as u32,
+        max_abs_g: args.get_f64("max-g", 2.0)?,
+    };
+    let rep = budget.analyze();
+    println!("overflow budget analysis");
+    println!("  worst-case decoded magnitude : {:.4e}", rep.worst_case);
+    println!("  field limit (p-1)/2          : {:.4e}", rep.limit);
+    println!("  utilization                  : {:.3}", rep.utilization);
+    println!("  verdict                      : {}", if rep.ok() { "OK" } else { "OVERFLOW RISK" });
+    println!(
+        "  max rows/block at 90% headroom: {}",
+        budget.max_block_rows(0.9)
+    );
+    Ok(())
+}
+
+fn cmd_artifacts(args: &Args) -> Result<(), String> {
+    let dir = PathBuf::from(args.get("dir").unwrap_or("artifacts"));
+    let rt = XlaRuntime::new(&dir).map_err(|e| e.to_string())?;
+    println!("{} artifact(s) in {}", rt.manifest().entries.len(), dir.display());
+    for e in &rt.manifest().entries {
+        println!(
+            "  {:<28} kind={:?} rows={} d={} r={} p={}",
+            e.name, e.kind, e.rows, e.d, e.r, e.p
+        );
+    }
+    // Smoke-execute the smallest worker artifact to prove the PJRT path.
+    if let Some(e) = rt.manifest().find_worker(32, 64, 1, 15485863) {
+        let f = crate::field::PrimeField::new(e.p);
+        let mut rng = crate::util::Rng::new(1);
+        let x = f.random_matrix(&mut rng, e.rows, e.d);
+        let w = f.random_matrix(&mut rng, e.d, e.r);
+        let c: Vec<u64> = (0..=e.r).map(|_| f.random(&mut rng)).collect();
+        let out = rt
+            .worker_f(&x, &w, &c, e.rows, e.d, e.p)
+            .map_err(|e| e.to_string())?;
+        println!("smoke-executed {}: output[0..4] = {:?}", e.name, &out[..4.min(out.len())]);
+    }
+    Ok(())
+}
+
+// Keep synthetic_3v7 linked for the doc-examples that reference it.
+#[allow(unused)]
+fn _doc_anchor() {
+    let _ = synthetic_3v7;
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn args(s: &str) -> Args {
+        Args::parse(&s.split_whitespace().map(String::from).collect::<Vec<_>>())
+    }
+
+    #[test]
+    fn no_subcommand_prints_usage_ok() {
+        assert!(dispatch(&args("")).is_ok());
+    }
+
+    #[test]
+    fn list_ok() {
+        assert!(dispatch(&args("list")).is_ok());
+    }
+
+    #[test]
+    fn budget_ok() {
+        assert!(dispatch(&args("budget --m 1200 --k 3")).is_ok());
+    }
+
+    #[test]
+    fn train_micro_run() {
+        assert!(dispatch(&args(
+            "train --n 10 --k 3 --t 1 --iters 2 --m 120 --no-straggle --free-net"
+        ))
+        .is_ok());
+    }
+
+    #[test]
+    fn mpc_micro_run() {
+        assert!(dispatch(&args("mpc --n 5 --t 1 --iters 1 --m 60 --no-straggle --free-net")).is_ok());
+    }
+
+    #[test]
+    fn reproduce_rejects_unknown() {
+        let err = dispatch(&args("reproduce fig99 --scale 0.008 --iters 1")).unwrap_err();
+        assert!(err.contains("unknown experiment"));
+    }
+
+    #[test]
+    fn train_rejects_bad_case() {
+        let err = dispatch(&args("train --case 5")).unwrap_err();
+        assert!(err.contains("case"));
+    }
+}

@@ -1,0 +1,19 @@
+//! Simulated master–worker cluster.
+//!
+//! The paper runs on Amazon EC2 (`m3.xlarge`, MPI4Py). Here each worker is
+//! an OS thread owning its own compute backend; messages are typed channel
+//! sends with byte accounting, and a [`NetworkModel`] converts bytes moved
+//! into modeled communication time (DESIGN.md §Substitutions). Straggling
+//! is injected with the shifted-exponential model standard in the coded-
+//! computing literature, and per-iteration computation time is the
+//! *modeled parallel* time — the R-th order statistic of per-worker
+//! (measured compute + sampled straggle) — which matches the paper's
+//! N-independent-machines semantics without requiring N physical hosts.
+
+mod netmodel;
+mod straggler;
+pub mod worker;
+
+pub use netmodel::NetworkModel;
+pub use straggler::StragglerModel;
+pub use worker::{Cluster, ClusterError, StepResult, WorkerOp, WorkerSpec};

@@ -1,0 +1,83 @@
+//! Network cost model.
+//!
+//! All workers are local threads, so real network time is ~0; the model
+//! converts bytes moved into the comm-time column of Tables 1–6. Defaults
+//! approximate the paper's EC2 `m3.xlarge` testbed (≈1 Gb/s instance
+//! networking, sub-millisecond intra-AZ latency).
+
+/// Store-and-forward transfer time: latency + bytes/bandwidth per message,
+/// serialized at the sender's NIC when one endpoint sends many messages.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct NetworkModel {
+    /// Sender bandwidth in bytes/second.
+    pub bandwidth: f64,
+    /// Per-message latency in seconds.
+    pub latency: f64,
+}
+
+impl Default for NetworkModel {
+    fn default() -> Self {
+        // 1 Gb/s, 0.5 ms.
+        NetworkModel { bandwidth: 125e6, latency: 0.5e-3 }
+    }
+}
+
+impl NetworkModel {
+    /// A zero-cost network (for isolating compute in ablations).
+    pub fn free() -> Self {
+        NetworkModel { bandwidth: f64::INFINITY, latency: 0.0 }
+    }
+
+    /// Time for one message of `bytes`.
+    pub fn message_time(&self, bytes: u64) -> f64 {
+        self.latency + bytes as f64 / self.bandwidth
+    }
+
+    /// Time for a sender to push `count` messages of `bytes` each
+    /// (serialized on its NIC; latencies pipeline, so one latency term).
+    pub fn fanout_time(&self, count: usize, bytes: u64) -> f64 {
+        if count == 0 {
+            return 0.0;
+        }
+        self.latency + (count as u64 * bytes) as f64 / self.bandwidth
+    }
+
+    /// Time for a receiver to drain `count` messages of `bytes` each.
+    pub fn fanin_time(&self, count: usize, bytes: u64) -> f64 {
+        self.fanout_time(count, bytes)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn message_time_components() {
+        let net = NetworkModel { bandwidth: 1000.0, latency: 0.1 };
+        assert!((net.message_time(500) - 0.6).abs() < 1e-12);
+    }
+
+    #[test]
+    fn fanout_serializes_bytes_pipelines_latency() {
+        let net = NetworkModel { bandwidth: 1000.0, latency: 0.1 };
+        // 4 × 250 bytes = 1 s of wire time + one 0.1 s latency.
+        assert!((net.fanout_time(4, 250) - 1.1).abs() < 1e-12);
+        assert_eq!(net.fanout_time(0, 1000), 0.0);
+    }
+
+    #[test]
+    fn free_network_is_zero() {
+        let net = NetworkModel::free();
+        assert_eq!(net.message_time(1 << 30), 0.0);
+        assert_eq!(net.fanout_time(100, 1 << 30), 0.0);
+    }
+
+    #[test]
+    fn default_is_gigabit() {
+        let net = NetworkModel::default();
+        // 125 MB at 1 Gb/s ≈ 1 s.
+        let t = net.message_time(125_000_000);
+        assert!((t - 1.0005).abs() < 1e-6, "t={t}");
+    }
+}

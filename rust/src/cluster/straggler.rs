@@ -1,0 +1,82 @@
+//! Straggler injection.
+//!
+//! Coded computing exists because of stragglers; to exercise the
+//! fastest-R collection path we add a per-(worker, iteration) delay drawn
+//! from the shifted-exponential model used throughout the coded-computing
+//! literature (Lee et al. 2018): delay = shift + Exp(rate), optionally
+//! scaled by the worker's compute time (slow *machines* rather than slow
+//! packets).
+
+use crate::util::Rng;
+
+/// Shifted-exponential straggler model.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct StragglerModel {
+    /// Deterministic extra seconds every worker pays.
+    pub shift: f64,
+    /// Exponential rate λ; mean extra delay is 1/λ. `f64::INFINITY`
+    /// disables the random part.
+    pub rate: f64,
+    /// If true, the sampled delay multiplies the worker's compute time
+    /// (delay_fraction) instead of being absolute seconds.
+    pub relative: bool,
+}
+
+impl Default for StragglerModel {
+    fn default() -> Self {
+        // Mild relative straggling: mean 20% compute-time inflation.
+        StragglerModel { shift: 0.0, rate: 5.0, relative: true }
+    }
+}
+
+impl StragglerModel {
+    /// No straggling at all.
+    pub fn none() -> Self {
+        StragglerModel { shift: 0.0, rate: f64::INFINITY, relative: false }
+    }
+
+    /// Sample this worker's extra delay given its measured compute time.
+    pub fn sample(&self, rng: &mut Rng, compute_secs: f64) -> f64 {
+        let tail = if self.rate.is_finite() {
+            rng.exponential(self.rate)
+        } else {
+            0.0
+        };
+        if self.relative {
+            (self.shift + tail) * compute_secs
+        } else {
+            self.shift + tail
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn none_is_zero() {
+        let mut rng = Rng::new(1);
+        let m = StragglerModel::none();
+        for _ in 0..10 {
+            assert_eq!(m.sample(&mut rng, 1.0), 0.0);
+        }
+    }
+
+    #[test]
+    fn absolute_mean_matches_rate() {
+        let mut rng = Rng::new(2);
+        let m = StragglerModel { shift: 0.1, rate: 10.0, relative: false };
+        let n = 50_000;
+        let mean: f64 = (0..n).map(|_| m.sample(&mut rng, 123.0)).sum::<f64>() / n as f64;
+        assert!((mean - 0.2).abs() < 0.005, "mean={mean}");
+    }
+
+    #[test]
+    fn relative_scales_with_compute() {
+        let mut rng = Rng::new(3);
+        let m = StragglerModel { shift: 0.5, rate: f64::INFINITY, relative: true };
+        assert!((m.sample(&mut rng, 2.0) - 1.0).abs() < 1e-12);
+        assert!((m.sample(&mut rng, 4.0) - 2.0).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,368 @@
+//! Worker threads and the cluster handle.
+//!
+//! Each worker owns its backend (constructed in-thread — the XLA runtime
+//! is thread-local by design) and its coded data share, mirroring the
+//! paper's protocol where X̃_i is sent once and W̃_i^(t) every iteration.
+
+use std::sync::mpsc;
+use std::thread::JoinHandle;
+use std::time::Instant;
+
+use crate::runtime::{BackendKind, WorkerBackend};
+use crate::field::PrimeField;
+use std::path::PathBuf;
+
+/// What the worker computes each step.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum WorkerOp {
+    /// Logistic: f = X̃ᵀ ḡ(X̃, W̃) with the polynomial coefficients.
+    Logistic,
+    /// Linear (Remark 1): f = X̃ᵀ (X̃·w̃ − ỹ) — needs the coded labels.
+    Linear,
+}
+
+/// `Send`-able recipe for building a worker.
+#[derive(Debug, Clone)]
+pub struct WorkerSpec {
+    pub id: usize,
+    pub kind: BackendKind,
+    pub artifact_dir: PathBuf,
+    pub field: PrimeField,
+    /// Coded block height m/K.
+    pub rows: usize,
+    pub d: usize,
+    /// Field-quantized sigmoid coefficients (len r+1); ignored for Linear.
+    pub coeffs: Vec<u64>,
+    pub op: WorkerOp,
+    /// Chaos hook: fail every step with iter ≥ this (crash-style fault
+    /// injection for resilience tests; None = healthy).
+    pub fail_from_iter: Option<u64>,
+}
+
+enum ToWorker {
+    /// One-time delivery of the coded dataset share (and labels for Linear).
+    LoadData { x: Vec<u64>, y: Option<Vec<u64>> },
+    /// Per-iteration coded weights.
+    Step { iter: u64, w: Vec<u64> },
+    Shutdown,
+}
+
+/// A worker's per-step result.
+#[derive(Debug, Clone)]
+pub struct StepResult {
+    pub worker: usize,
+    pub iter: u64,
+    /// f(X̃_i, W̃_i) — or an error message if the backend failed.
+    pub data: Result<Vec<u64>, String>,
+    /// Measured compute seconds on the worker.
+    pub compute_secs: f64,
+}
+
+#[derive(Debug)]
+pub enum ClusterError {
+    /// A worker thread disconnected unexpectedly.
+    WorkerLost(usize),
+    /// Backend construction failed on a worker.
+    Backend(String),
+    /// Channel failure.
+    Channel(&'static str),
+}
+
+impl std::fmt::Display for ClusterError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ClusterError::WorkerLost(w) => write!(f, "worker {w} disconnected"),
+            ClusterError::Backend(e) => write!(f, "backend: {e}"),
+            ClusterError::Channel(what) => write!(f, "channel failure: {what}"),
+        }
+    }
+}
+
+impl std::error::Error for ClusterError {}
+
+struct WorkerHandle {
+    tx: mpsc::Sender<ToWorker>,
+    join: Option<JoinHandle<()>>,
+}
+
+/// Handle to N running workers.
+pub struct Cluster {
+    workers: Vec<WorkerHandle>,
+    results_rx: mpsc::Receiver<StepResult>,
+}
+
+fn worker_main(
+    spec: WorkerSpec,
+    rx: mpsc::Receiver<ToWorker>,
+    tx: mpsc::Sender<StepResult>,
+    ready: mpsc::Sender<Result<(), String>>,
+) {
+    let backend = match WorkerBackend::create(
+        spec.kind,
+        &spec.artifact_dir,
+        spec.field,
+        spec.rows,
+        spec.d,
+        spec.coeffs.clone(),
+    ) {
+        Ok(b) => {
+            let _ = ready.send(Ok(()));
+            b
+        }
+        Err(e) => {
+            let _ = ready.send(Err(e.to_string()));
+            return;
+        }
+    };
+    let mut x_share: Vec<u64> = Vec::new();
+    let mut y_share: Option<Vec<u64>> = None;
+    let f = spec.field;
+    while let Ok(msg) = rx.recv() {
+        match msg {
+            ToWorker::LoadData { x, y } => {
+                x_share = x;
+                y_share = y;
+                // XLA backend: marshal the share once, off the hot path.
+                if let Err(e) = backend.prepare_data(&x_share) {
+                    eprintln!("worker {}: prepare_data failed: {e}", spec.id);
+                }
+            }
+            ToWorker::Step { iter, w } => {
+                let t0 = Instant::now();
+                if spec.fail_from_iter.map(|from| iter >= from).unwrap_or(false) {
+                    let _ = tx.send(StepResult {
+                        worker: spec.id,
+                        iter,
+                        data: Err("injected fault".to_string()),
+                        compute_secs: 0.0,
+                    });
+                    continue;
+                }
+                let data = match spec.op {
+                    WorkerOp::Logistic => backend.compute(&x_share, &w).map_err(|e| e.to_string()),
+                    WorkerOp::Linear => {
+                        Ok(linear_f(&f, &x_share, &w, y_share.as_deref(), spec.rows, spec.d))
+                    }
+                };
+                let compute_secs = t0.elapsed().as_secs_f64();
+                if tx
+                    .send(StepResult { worker: spec.id, iter, data, compute_secs })
+                    .is_err()
+                {
+                    return; // master gone
+                }
+            }
+            ToWorker::Shutdown => return,
+        }
+    }
+}
+
+/// Linear-regression worker computation: X̃ᵀ(X̃·w̃ − ỹ) over F_p
+/// (Remark 1; native only — the logistic path is the artifact-backed one).
+fn linear_f(
+    f: &PrimeField,
+    x: &[u64],
+    w: &[u64],
+    y: Option<&[u64]>,
+    rows: usize,
+    d: usize,
+) -> Vec<u64> {
+    use crate::compute::{matvec_mod, tr_matvec_mod};
+    let xw = matvec_mod(f, x, w, rows, d, 1, 0);
+    let resid: Vec<u64> = match y {
+        Some(ys) => xw.iter().zip(ys.iter()).map(|(&a, &b)| f.sub(a, b)).collect(),
+        None => xw,
+    };
+    tr_matvec_mod(f, x, &resid, rows, d)
+}
+
+impl Cluster {
+    /// Spawn one thread per spec. Fails if any backend fails to build.
+    pub fn spawn(specs: Vec<WorkerSpec>) -> Result<Self, ClusterError> {
+        let (results_tx, results_rx) = mpsc::channel();
+        let mut workers = Vec::with_capacity(specs.len());
+        let mut readies = Vec::with_capacity(specs.len());
+        for spec in specs {
+            let (tx, rx) = mpsc::channel();
+            let (ready_tx, ready_rx) = mpsc::channel();
+            let rtx = results_tx.clone();
+            let join = std::thread::Builder::new()
+                .name(format!("worker-{}", spec.id))
+                .spawn(move || worker_main(spec, rx, rtx, ready_tx))
+                .expect("spawn worker thread");
+            workers.push(WorkerHandle { tx, join: Some(join) });
+            readies.push(ready_rx);
+        }
+        for (i, ready) in readies.iter().enumerate() {
+            match ready.recv() {
+                Ok(Ok(())) => {}
+                Ok(Err(e)) => return Err(ClusterError::Backend(format!("worker {i}: {e}"))),
+                Err(_) => return Err(ClusterError::WorkerLost(i)),
+            }
+        }
+        Ok(Cluster { workers, results_rx })
+    }
+
+    pub fn n(&self) -> usize {
+        self.workers.len()
+    }
+
+    /// Deliver coded dataset shares (index = worker id). `y_shares` only
+    /// for the Linear op.
+    pub fn load_data(
+        &self,
+        x_shares: Vec<Vec<u64>>,
+        mut y_shares: Option<Vec<Vec<u64>>>,
+    ) -> Result<(), ClusterError> {
+        assert_eq!(x_shares.len(), self.workers.len());
+        for (i, x) in x_shares.into_iter().enumerate() {
+            let y = y_shares.as_mut().map(|ys| std::mem::take(&mut ys[i]));
+            self.workers[i]
+                .tx
+                .send(ToWorker::LoadData { x, y })
+                .map_err(|_| ClusterError::WorkerLost(i))?;
+        }
+        Ok(())
+    }
+
+    /// Send coded weights for iteration `iter` to every worker.
+    pub fn dispatch(&self, iter: u64, w_shares: Vec<Vec<u64>>) -> Result<(), ClusterError> {
+        assert_eq!(w_shares.len(), self.workers.len());
+        for (i, w) in w_shares.into_iter().enumerate() {
+            self.workers[i]
+                .tx
+                .send(ToWorker::Step { iter, w })
+                .map_err(|_| ClusterError::WorkerLost(i))?;
+        }
+        Ok(())
+    }
+
+    /// Collect all N results for `iter` (arrival order). The decode step
+    /// uses only the fastest R by *modeled* arrival time; collecting all N
+    /// keeps iterations in lock-step (the paper's workers likewise finish
+    /// the round — their result is just ignored past the threshold).
+    pub fn collect_all(&self, iter: u64) -> Result<Vec<StepResult>, ClusterError> {
+        let mut out = Vec::with_capacity(self.workers.len());
+        while out.len() < self.workers.len() {
+            let res = self
+                .results_rx
+                .recv()
+                .map_err(|_| ClusterError::Channel("results"))?;
+            if res.iter == iter {
+                out.push(res);
+            }
+            // Results from stale iterations (shouldn't happen in lock-step)
+            // are dropped.
+        }
+        Ok(out)
+    }
+}
+
+impl Drop for Cluster {
+    fn drop(&mut self) {
+        for w in &self.workers {
+            let _ = w.tx.send(ToWorker::Shutdown);
+        }
+        for w in &mut self.workers {
+            if let Some(j) = w.join.take() {
+                let _ = j.join();
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compute::WorkerComputation;
+    use crate::field::{PrimeField, PAPER_PRIME};
+
+    fn specs(n: usize, rows: usize, d: usize, op: WorkerOp) -> Vec<WorkerSpec> {
+        let f = PrimeField::new(PAPER_PRIME);
+        (0..n)
+            .map(|id| WorkerSpec {
+                id,
+                kind: BackendKind::Native,
+                artifact_dir: PathBuf::from("artifacts"),
+                field: f,
+                rows,
+                d,
+                coeffs: vec![3, 7],
+                op,
+                fail_from_iter: None,
+            })
+            .collect()
+    }
+
+    #[test]
+    fn cluster_computes_logistic_on_all_workers() {
+        let f = PrimeField::new(PAPER_PRIME);
+        let (n, rows, d) = (4, 2, 3);
+        let cluster = Cluster::spawn(specs(n, rows, d, WorkerOp::Logistic)).unwrap();
+        let x_shares: Vec<Vec<u64>> = (0..n)
+            .map(|i| (0..rows * d).map(|e| (i * 10 + e) as u64 % PAPER_PRIME).collect())
+            .collect();
+        cluster.load_data(x_shares.clone(), None).unwrap();
+        let w = vec![2u64, 4, 6];
+        cluster
+            .dispatch(0, (0..n).map(|_| w.clone()).collect())
+            .unwrap();
+        let mut results = cluster.collect_all(0).unwrap();
+        results.sort_by_key(|r| r.worker);
+        assert_eq!(results.len(), n);
+        let wc = WorkerComputation::new(f, rows, d, vec![3, 7]);
+        for (i, res) in results.iter().enumerate() {
+            assert_eq!(res.iter, 0);
+            assert!(res.compute_secs >= 0.0);
+            assert_eq!(res.data.as_ref().unwrap(), &wc.compute(&x_shares[i], &w));
+        }
+    }
+
+    #[test]
+    fn cluster_runs_multiple_iterations_in_lockstep() {
+        let n = 3;
+        let cluster = Cluster::spawn(specs(n, 2, 2, WorkerOp::Logistic)).unwrap();
+        cluster
+            .load_data(vec![vec![1, 2, 3, 4]; n], None)
+            .unwrap();
+        for iter in 0..5u64 {
+            cluster
+                .dispatch(iter, vec![vec![iter + 1, iter + 2]; n])
+                .unwrap();
+            let results = cluster.collect_all(iter).unwrap();
+            assert_eq!(results.len(), n);
+            assert!(results.iter().all(|r| r.iter == iter));
+        }
+    }
+
+    #[test]
+    fn linear_op_computes_residual_gradient() {
+        let f = PrimeField::new(PAPER_PRIME);
+        let (rows, d) = (2, 2);
+        let cluster = Cluster::spawn(specs(1, rows, d, WorkerOp::Linear)).unwrap();
+        let x = vec![1u64, 2, 3, 4];
+        let y = vec![5u64, 6];
+        cluster
+            .load_data(vec![x.clone()], Some(vec![y.clone()]))
+            .unwrap();
+        cluster.dispatch(0, vec![vec![1, 1]]).unwrap();
+        let results = cluster.collect_all(0).unwrap();
+        let got = results[0].data.as_ref().unwrap().clone();
+        // Xw = [3, 7]; resid = [-2, 1]; Xᵀresid = [1·-2+3·1, 2·-2+4·1] = [1, 0]
+        assert_eq!(got, vec![f.from_i64(1), f.from_i64(0)]);
+    }
+
+    #[test]
+    fn xla_backend_failure_surfaces_at_spawn() {
+        let mut s = specs(2, 2, 3, WorkerOp::Logistic);
+        for spec in s.iter_mut() {
+            spec.kind = BackendKind::Xla;
+            spec.artifact_dir = PathBuf::from("/definitely/not/here");
+        }
+        match Cluster::spawn(s) {
+            Err(ClusterError::Backend(_)) => {}
+            Err(other) => panic!("wrong error: {other:?}"),
+            Ok(_) => panic!("spawn should fail"),
+        }
+    }
+}

@@ -1,0 +1,342 @@
+//! LCC encoder (paper §3.2).
+//!
+//! The encoding matrix U ∈ F_p^{(K+T)×N} has column i equal to the Lagrange
+//! basis coefficients of the β points evaluated at α_i (eq. 12), so worker
+//! i's share is a fixed linear combination of the K data blocks and T
+//! masks: X̃_i = Σ_j U[j,i]·block_j. Weight shares exploit that the first K
+//! blocks are all W̄ (eq. 14): Σ_{j<K} U[j,i]·W̄ = s_i·W̄ with the column
+//! sums s_i precomputed — an O(K) → O(1) saving per entry that dominates
+//! the per-iteration encode cost (EXPERIMENTS.md §Perf).
+
+use super::{CodingParams, EvalPoints};
+use crate::field::{lagrange_coeffs, PrimeField};
+use crate::util::Rng;
+
+/// One worker's coded share of the dataset (or of the weights).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct EncodedShare {
+    /// Worker index (0-based) — identifies the α point.
+    pub worker: usize,
+    /// Row-major payload.
+    pub data: Vec<u64>,
+}
+
+/// Encoder for a fixed (field, params, points) session.
+#[derive(Debug, Clone)]
+pub struct Encoder {
+    pub field: PrimeField,
+    pub params: CodingParams,
+    pub points: EvalPoints,
+    /// U, stored column-major: `u[i]` is worker i's coefficient vector
+    /// (length K+T).
+    u_cols: Vec<Vec<u64>>,
+    /// Σ_{j<K} U[j,i] per worker — the replicated-secret shortcut.
+    top_sums: Vec<u64>,
+}
+
+impl Encoder {
+    pub fn new(field: PrimeField, params: CodingParams) -> Self {
+        let points = EvalPoints::standard(&field, params.k, params.t, params.n);
+        Self::with_points(field, params, points)
+    }
+
+    pub fn with_points(field: PrimeField, params: CodingParams, points: EvalPoints) -> Self {
+        assert_eq!(points.betas.len(), params.k + params.t);
+        assert_eq!(points.alphas.len(), params.n);
+        let u_cols: Vec<Vec<u64>> = points
+            .alphas
+            .iter()
+            .map(|&a| {
+                lagrange_coeffs(&field, &points.betas, a)
+                    .expect("standard points are distinct")
+            })
+            .collect();
+        let top_sums = u_cols
+            .iter()
+            .map(|col| col[..params.k].iter().fold(0u64, |acc, &c| field.add(acc, c)))
+            .collect();
+        Encoder { field, params, points, u_cols, top_sums }
+    }
+
+    /// Column i of the encoding matrix U (length K+T).
+    pub fn u_column(&self, worker: usize) -> &[u64] {
+        &self.u_cols[worker]
+    }
+
+    /// Encode the quantized dataset X̄ (row-major `m × d`, `m % K == 0`)
+    /// into N shares of `m/K × d` each. `rng` supplies the T uniform mask
+    /// blocks Z (drawn fresh — encode once per dataset).
+    pub fn encode_dataset(&self, xq: &[u64], m: usize, d: usize, rng: &mut Rng) -> Vec<EncodedShare> {
+        let (k, t, n) = (self.params.k, self.params.t, self.params.n);
+        assert_eq!(xq.len(), m * d);
+        assert!(m % k == 0, "m={m} must be divisible by K={k}");
+        let block = m / k * d;
+        let masks: Vec<Vec<u64>> = (0..t)
+            .map(|_| self.field.random_matrix(rng, m / k, d))
+            .collect();
+        (0..n)
+            .map(|w| EncodedShare {
+                worker: w,
+                data: self.combine_blocks(xq, block, &masks, w),
+            })
+            .collect()
+    }
+
+    /// Linear combination Σ_j U[j,w]·block_j over K data blocks + T masks.
+    ///
+    /// Hot loop of the Encode column: products of reduced elements are
+    /// < p² ≤ 2^52 and we sum K+T of them, so partial sums stay in u64
+    /// for `safe_chunk_len(p)` terms — reduce once per chunk of source
+    /// blocks instead of per multiply-add (≈2.5× on the 24-bit prime;
+    /// EXPERIMENTS.md §Perf).
+    fn combine_blocks(
+        &self,
+        xq: &[u64],
+        block: usize,
+        masks: &[Vec<u64>],
+        w: usize,
+    ) -> Vec<u64> {
+        let f = &self.field;
+        let p = f.modulus();
+        let k = self.params.k;
+        let col = &self.u_cols[w];
+        let chunk = crate::compute::safe_chunk_len(p);
+        let mut acc = vec![0u64; block];
+        let mut out = vec![0u64; block];
+        let mut pending = 0usize;
+        let fold = |acc: &mut Vec<u64>, out: &mut Vec<u64>, pending: &mut usize| {
+            for (o, a) in out.iter_mut().zip(acc.iter_mut()) {
+                *o = (*o + *a % p) % p;
+                *a = 0;
+            }
+            *pending = 0;
+        };
+        let sources = (0..k)
+            .map(|j| (col[j], &xq[j * block..(j + 1) * block]))
+            .chain(masks.iter().enumerate().map(|(j, m)| (col[k + j], m.as_slice())));
+        for (c, src) in sources {
+            if c == 0 {
+                continue;
+            }
+            for (a, &s) in acc.iter_mut().zip(src.iter()) {
+                *a = a.wrapping_add(c * s);
+            }
+            pending += 1;
+            if pending == chunk {
+                fold(&mut acc, &mut out, &mut pending);
+            }
+        }
+        if pending > 0 {
+            fold(&mut acc, &mut out, &mut pending);
+        }
+        out
+    }
+
+    /// Encode the quantized weight matrix W̄ (row-major `d × r`) into N
+    /// shares of the same shape (eq. 14). Fresh masks V each call — the
+    /// paper re-encodes every iteration precisely so intermediate weights
+    /// stay private.
+    pub fn encode_weights(&self, wq: &[u64], d: usize, r: usize, rng: &mut Rng) -> Vec<EncodedShare> {
+        let (k, t, n) = (self.params.k, self.params.t, self.params.n);
+        assert_eq!(wq.len(), d * r);
+        let f = self.field;
+        let masks: Vec<Vec<u64>> = (0..t)
+            .map(|_| f.random_matrix(rng, d, r))
+            .collect();
+        let p = f.modulus();
+        let chunk = crate::compute::safe_chunk_len(p);
+        (0..n)
+            .map(|w| {
+                let col = &self.u_cols[w];
+                let s = self.top_sums[w];
+                // Deferred reduction over 1 data term + T mask terms.
+                let mut acc: Vec<u64> = wq.iter().map(|&v| s * v).collect();
+                let mut out = vec![0u64; wq.len()];
+                let mut pending = 1usize;
+                for (j, mask) in masks.iter().enumerate() {
+                    let c = col[k + j];
+                    if c == 0 {
+                        continue;
+                    }
+                    for (a, &v) in acc.iter_mut().zip(mask.iter()) {
+                        *a = a.wrapping_add(c * v);
+                    }
+                    pending += 1;
+                    if pending == chunk {
+                        for (o, a) in out.iter_mut().zip(acc.iter_mut()) {
+                            *o = (*o + *a % p) % p;
+                            *a = 0;
+                        }
+                        pending = 0;
+                    }
+                }
+                if pending > 0 {
+                    for (o, a) in out.iter_mut().zip(acc.iter()) {
+                        *o = (*o + *a % p) % p;
+                    }
+                }
+                EncodedShare { worker: w, data: out }
+            })
+            .collect()
+    }
+
+    /// Bytes a dataset share occupies on the wire (u64 per element — the
+    /// network model uses this; a production deployment would pack to
+    /// ⌈log2 p⌉ bits, tracked as `packed_share_bytes`).
+    pub fn share_bytes(&self, m: usize, d: usize) -> u64 {
+        (m / self.params.k * d) as u64 * 8
+    }
+
+    /// Wire size with bit-packing to the field width.
+    pub fn packed_share_bytes(&self, m: usize, d: usize) -> u64 {
+        let bits = self.field.bits() as u64;
+        ((m / self.params.k * d) as u64 * bits).div_ceil(8)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::field::{eval_poly, interpolate, PAPER_PRIME};
+    use crate::util::proptest::check;
+
+    fn setup(n: usize, k: usize, t: usize) -> Encoder {
+        let f = PrimeField::new(PAPER_PRIME);
+        let params = CodingParams::new(n, k, t, 1).unwrap();
+        Encoder::new(f, params)
+    }
+
+    #[test]
+    fn share_is_lagrange_polynomial_evaluation() {
+        // Reconstruct u(z) from the shares' defining property: the encoder
+        // output at worker i must equal the interpolation polynomial
+        // through (β_j ↦ block_j / mask_j) evaluated at α_i.
+        let enc = setup(10, 2, 1);
+        let f = enc.field;
+        let mut rng = Rng::new(101);
+        let (m, d) = (4, 3); // K=2 blocks of 2×3
+        let xq = f.random_matrix(&mut rng, m, d);
+        // Deterministic masks via fixed seed: encode twice with same seed.
+        let shares = enc.encode_dataset(&xq, m, d, &mut Rng::new(7));
+        let shares2 = enc.encode_dataset(&xq, m, d, &mut Rng::new(7));
+        assert_eq!(shares, shares2, "deterministic given the rng");
+        // Interpolate each entry of the share polynomial from K+T shares…
+        // u has degree ≤ K+T-1 = 2, so any 3 α-evaluations determine it;
+        // check it passes through the data blocks at β_1, β_2.
+        let block = m / 2 * d;
+        for e in 0..block {
+            let pts: Vec<u64> = enc.points.alphas[..3].to_vec();
+            let vals: Vec<u64> = shares[..3].iter().map(|s| s.data[e]).collect();
+            let coeffs = interpolate(&f, &pts, &vals).unwrap();
+            assert_eq!(eval_poly(&f, &coeffs, enc.points.betas[0]), xq[e]);
+            assert_eq!(eval_poly(&f, &coeffs, enc.points.betas[1]), xq[block + e]);
+            // And all other shares are consistent evaluations.
+            for s in &shares[3..] {
+                assert_eq!(
+                    eval_poly(&f, &coeffs, enc.points.alphas[s.worker]),
+                    s.data[e]
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn weight_shares_interpolate_to_w_at_all_data_points() {
+        let enc = setup(13, 3, 1);
+        let f = enc.field;
+        let mut rng = Rng::new(55);
+        let (d, r) = (5, 1);
+        let wq = f.random_matrix(&mut rng, d, r);
+        let shares = enc.encode_weights(&wq, d, r, &mut rng);
+        for e in 0..d * r {
+            let npts = enc.params.k + enc.params.t; // deg v ≤ K+T-1
+            let pts: Vec<u64> = enc.points.alphas[..npts].to_vec();
+            let vals: Vec<u64> = shares[..npts].iter().map(|s| s.data[e]).collect();
+            let coeffs = interpolate(&f, &pts, &vals).unwrap();
+            for b in 0..enc.params.k {
+                assert_eq!(
+                    eval_poly(&f, &coeffs, enc.points.betas[b]),
+                    wq[e],
+                    "v(β_{b}) must equal W̄ (eq. 14)"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn fresh_masks_change_shares_but_not_decode_points() {
+        let enc = setup(10, 2, 1);
+        let f = enc.field;
+        let mut rng = Rng::new(77);
+        let wq = f.random_matrix(&mut rng, 4, 1);
+        let s1 = enc.encode_weights(&wq, 4, 1, &mut rng);
+        let s2 = enc.encode_weights(&wq, 4, 1, &mut rng);
+        assert_ne!(s1, s2, "fresh V must produce different shares");
+    }
+
+    #[test]
+    fn encoding_is_linear_property() {
+        // LCC is linear: encode(X + Y) = encode(X) + encode(Y) when the
+        // same masks are used (same rng seed).
+        let enc = setup(10, 2, 2);
+        let f = enc.field;
+        check("lcc-linearity", 20, move |rng| {
+            let (m, d) = (4, 2);
+            let x = f.random_matrix(rng, m, d);
+            let y = f.random_matrix(rng, m, d);
+            let xy: Vec<u64> = x.iter().zip(y.iter()).map(|(&a, &b)| f.add(a, b)).collect();
+            let seed = rng.next_u64();
+            let ex = enc.encode_dataset(&x, m, d, &mut Rng::new(seed));
+            // Zero masks for y-encoding so sums align: use a *zero* dataset
+            // encoding for mask cancellation instead — simpler: encode with
+            // same seed and compare against sum with one mask contribution
+            // doubled. To keep the property clean, test linearity on the
+            // mask-free part by encoding (x, masks M) and (y, masks M) and
+            // (x+y, masks 2M): construct via two different seeds is not
+            // linear, so here we verify instead:
+            //   enc(x, M) + enc(y, M) - enc(x+y, M) = enc(0, M).
+            let ey = enc.encode_dataset(&y, m, d, &mut Rng::new(seed));
+            let exy = enc.encode_dataset(&xy, m, d, &mut Rng::new(seed));
+            let zero = vec![0u64; m * d];
+            let e0 = enc.encode_dataset(&zero, m, d, &mut Rng::new(seed));
+            for w in 0..enc.params.n {
+                for e in 0..ex[w].data.len() {
+                    let lhs = f.sub(f.add(ex[w].data[e], ey[w].data[e]), exy[w].data[e]);
+                    if lhs != e0[w].data[e] {
+                        return Err(format!("worker {w} entry {e}"));
+                    }
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "divisible by K")]
+    fn rejects_ragged_partition() {
+        let enc = setup(10, 2, 1);
+        let xq = vec![0u64; 5 * 3]; // 5 rows not divisible by K=2
+        enc.encode_dataset(&xq, 5, 3, &mut Rng::new(1));
+    }
+
+    #[test]
+    fn wire_sizes() {
+        let enc = setup(10, 2, 1);
+        // m=8, d=4 → share 4×4 = 16 elements = 128 bytes raw.
+        assert_eq!(enc.share_bytes(8, 4), 128);
+        // packed at 24 bits: 16·24/8 = 48 bytes.
+        assert_eq!(enc.packed_share_bytes(8, 4), 48);
+    }
+
+    #[test]
+    fn top_sums_match_direct_sum() {
+        let enc = setup(13, 3, 2);
+        let f = enc.field;
+        for w in 0..enc.params.n {
+            let direct = enc.u_cols[w][..3]
+                .iter()
+                .fold(0u64, |acc, &c| f.add(acc, c));
+            assert_eq!(enc.top_sums[w], direct);
+        }
+    }
+}

@@ -1,0 +1,57 @@
+//! Lagrange coded computing (paper §3.2 & §3.4; Yu et al., 2019).
+//!
+//! The master partitions the quantized dataset into K blocks, picks K+T
+//! distinct points β and N distinct points α (disjoint from the β's), and
+//! evaluates the degree-(K+T−1) Lagrange polynomial through
+//! (β_1..β_K ↦ data blocks, β_{K+1}..β_{K+T} ↦ uniform random masks) at
+//! each α_i to obtain worker i's coded share. Any T shares are jointly
+//! uniform (the bottom T×T submatrix of the encoding matrix is MDS), so T
+//! colluding workers learn nothing; any `(2r+1)(K+T−1)+1` worker *results*
+//! determine the composed polynomial h(z) = f(u(z), v(z)) by interpolation,
+//! and the true sub-results are its values at the β's.
+
+pub mod decoder;
+mod encoder;
+mod params;
+
+pub use decoder::{DecodeError, Decoder, WorkerResult};
+pub use encoder::{EncodedShare, Encoder};
+pub use params::{CodingParams, ParamError};
+
+use crate::field::PrimeField;
+
+/// The β (data/mask) and α (worker) evaluation points for a session.
+#[derive(Debug, Clone)]
+pub struct EvalPoints {
+    pub betas: Vec<u64>,
+    pub alphas: Vec<u64>,
+}
+
+impl EvalPoints {
+    /// Standard layout: β = 1..K+T, α = K+T+1..K+T+N. All distinct, and
+    /// α ∩ β = ∅ as the scheme requires.
+    pub fn standard(field: &PrimeField, k: usize, t: usize, n: usize) -> Self {
+        let all = field.distinct_points(k + t + n);
+        EvalPoints {
+            betas: all[..k + t].to_vec(),
+            alphas: all[k + t..].to_vec(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::field::PAPER_PRIME;
+
+    #[test]
+    fn standard_points_disjoint() {
+        let f = PrimeField::new(PAPER_PRIME);
+        let pts = EvalPoints::standard(&f, 4, 2, 10);
+        assert_eq!(pts.betas.len(), 6);
+        assert_eq!(pts.alphas.len(), 10);
+        for a in &pts.alphas {
+            assert!(!pts.betas.contains(a));
+        }
+    }
+}

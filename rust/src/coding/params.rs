@@ -1,0 +1,157 @@
+//! Session parameter algebra (Theorem 1 and §5 "CodedPrivateML parameters").
+
+/// (N, K, T, r) for one CodedPrivateML session.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct CodingParams {
+    /// Number of workers.
+    pub n: usize,
+    /// Parallelization: dataset split into K blocks, each worker stores a
+    /// 1/K fraction (coded).
+    pub k: usize,
+    /// Privacy threshold: any T colluding workers learn nothing.
+    pub t: usize,
+    /// Sigmoid polynomial degree.
+    pub r: usize,
+}
+
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum ParamError {
+    /// N < (2r+1)(K+T-1)+1 — not enough workers to decode.
+    InsufficientWorkers { need: usize, have: usize },
+    /// K, T, r must be ≥ 1.
+    Degenerate(&'static str),
+}
+
+impl std::fmt::Display for ParamError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ParamError::InsufficientWorkers { need, have } => write!(
+                f,
+                "recovery threshold {need} exceeds worker count {have}: \
+                 need N ≥ (2r+1)(K+T-1)+1 (Theorem 1)"
+            ),
+            ParamError::Degenerate(what) => write!(f, "parameter {what} must be ≥ 1"),
+        }
+    }
+}
+
+impl std::error::Error for ParamError {}
+
+impl CodingParams {
+    pub fn new(n: usize, k: usize, t: usize, r: usize) -> Result<Self, ParamError> {
+        if k == 0 {
+            return Err(ParamError::Degenerate("K"));
+        }
+        if t == 0 {
+            return Err(ParamError::Degenerate("T"));
+        }
+        if r == 0 {
+            return Err(ParamError::Degenerate("r"));
+        }
+        let p = CodingParams { n, k, t, r };
+        let need = p.recovery_threshold();
+        if n < need {
+            return Err(ParamError::InsufficientWorkers { need, have: n });
+        }
+        Ok(p)
+    }
+
+    /// Minimum number of worker results needed to decode:
+    /// (2r+1)(K+T−1)+1 (Theorem 1).
+    pub fn recovery_threshold(&self) -> usize {
+        (2 * self.r + 1) * (self.k + self.t - 1) + 1
+    }
+
+    /// Stragglers tolerated: N − recovery threshold.
+    pub fn straggler_slack(&self) -> usize {
+        self.n - self.recovery_threshold()
+    }
+
+    /// Case 1 (§5): maximum parallelization — K = ⌊(N−1)/(2r+1)⌋, T = 1.
+    pub fn case1(n: usize, r: usize) -> Result<Self, ParamError> {
+        let k = ((n - 1) / (2 * r + 1)).max(1);
+        Self::new(n, k, 1, r)
+    }
+
+    /// Case 2 (§5): equal parallelization & privacy — for r=1 the paper's
+    /// K = T = ⌊(N+2)/6⌋; generalized to ⌊(N + 2r) / (2(2r+1))⌋ which
+    /// reduces to the paper's formula at r=1.
+    pub fn case2(n: usize, r: usize) -> Result<Self, ParamError> {
+        let kt = ((n + 2 * r) / (2 * (2 * r + 1))).max(1);
+        Self::new(n, kt, kt, r)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn threshold_formula() {
+        let p = CodingParams::new(40, 13, 1, 1).unwrap();
+        assert_eq!(p.recovery_threshold(), 3 * 13 + 1); // 40
+        assert_eq!(p.straggler_slack(), 0);
+        let p = CodingParams::new(40, 7, 7, 1).unwrap();
+        assert_eq!(p.recovery_threshold(), 3 * 13 + 1);
+    }
+
+    #[test]
+    fn case1_matches_paper_table() {
+        // Paper: K = ⌊(N−1)/3⌋, T = 1 at r=1.
+        for (n, k) in [(5usize, 1usize), (10, 3), (25, 8), (40, 13)] {
+            let p = CodingParams::case1(n, 1).unwrap();
+            assert_eq!((p.k, p.t), (k, 1), "n={n}");
+            assert!(p.recovery_threshold() <= n);
+        }
+    }
+
+    #[test]
+    fn case2_matches_paper_formula() {
+        // Paper: K = T = ⌊(N+2)/6⌋ at r=1.
+        for (n, kt) in [(5usize, 1usize), (10, 2), (25, 4), (40, 7)] {
+            let p = CodingParams::case2(n, 1).unwrap();
+            assert_eq!((p.k, p.t), (kt, kt), "n={n}");
+            assert!(p.recovery_threshold() <= n);
+        }
+    }
+
+    #[test]
+    fn case_selection_valid_for_r2() {
+        // r=2 needs N ≥ 6 even at K=T=1 (threshold 5(K+T-1)+1).
+        for n in [6usize, 10, 25, 40] {
+            let p1 = CodingParams::case1(n, 2).unwrap();
+            assert!(p1.recovery_threshold() <= n);
+            let p2 = CodingParams::case2(n, 2).unwrap();
+            assert!(p2.recovery_threshold() <= n, "n={n} {p2:?}");
+        }
+        // And below that it reports the right error.
+        assert!(matches!(
+            CodingParams::case1(5, 2),
+            Err(ParamError::InsufficientWorkers { need: 6, have: 5 })
+        ));
+    }
+
+    #[test]
+    fn rejects_insufficient_workers() {
+        let err = CodingParams::new(9, 3, 1, 1).unwrap_err();
+        assert_eq!(err, ParamError::InsufficientWorkers { need: 10, have: 9 });
+    }
+
+    #[test]
+    fn rejects_degenerate() {
+        assert!(matches!(CodingParams::new(10, 0, 1, 1), Err(ParamError::Degenerate("K"))));
+        assert!(matches!(CodingParams::new(10, 1, 0, 1), Err(ParamError::Degenerate("T"))));
+        assert!(matches!(CodingParams::new(10, 1, 1, 0), Err(ParamError::Degenerate("r"))));
+    }
+
+    #[test]
+    fn privacy_parallelism_tradeoff_scales_linearly() {
+        // Remark 2: as N grows, K (case 1) and T (case 2) grow linearly.
+        let k40 = CodingParams::case1(40, 1).unwrap().k;
+        let k80 = CodingParams::case1(80, 1).unwrap().k;
+        assert!(k80 >= 2 * k40 - 1);
+        let t40 = CodingParams::case2(40, 1).unwrap().t;
+        let t80 = CodingParams::case2(80, 1).unwrap().t;
+        assert!(t80 >= 2 * t40 - 1);
+    }
+}

@@ -1,0 +1,202 @@
+//! Modular matrix–vector kernels.
+//!
+//! Accumulation strategy: products of two reduced elements are < p² and
+//! p ≤ 2^31, so partial sums stay in u64 for `safe_chunk_len(p)` terms;
+//! we reduce mod p once per chunk instead of per multiply–add. For the
+//! paper's 24-bit prime that is one reduction every 2^16 terms — the inner
+//! loop is pure integer MACs, which is what makes the native backend
+//! competitive with the XLA artifact (see EXPERIMENTS.md §Perf).
+
+use crate::field::PrimeField;
+
+/// Number of p²-bounded terms that can accumulate in a u64 without
+/// overflow: floor((2^64 − 1) / (p−1)²) bounded to ≥ 1.
+pub fn safe_chunk_len(p: u64) -> usize {
+    let p2 = (p - 1) as u128 * (p - 1) as u128;
+    let max = u64::MAX as u128 / p2;
+    max.max(1).min(usize::MAX as u128) as usize
+}
+
+/// `out[i] = Σ_k x[i,k] · w[k*stride + col] mod p` — multiply the row-major
+/// `rows × d` matrix by column `col` of a row-major `d × stride` matrix.
+pub fn matvec_mod(
+    f: &PrimeField,
+    x: &[u64],
+    w: &[u64],
+    rows: usize,
+    d: usize,
+    stride: usize,
+    col: usize,
+) -> Vec<u64> {
+    assert_eq!(x.len(), rows * d);
+    assert!(w.len() >= d * stride);
+    assert!(col < stride);
+    let p = f.modulus();
+    let chunk = safe_chunk_len(p);
+    let mut out = Vec::with_capacity(rows);
+    for row in 0..rows {
+        let xrow = &x[row * d..(row + 1) * d];
+        let mut acc: u64 = 0;
+        let mut k = 0;
+        while k < d {
+            let end = (k + chunk).min(d);
+            let mut partial: u64 = 0;
+            for kk in k..end {
+                partial = partial.wrapping_add(xrow[kk] * w[kk * stride + col]);
+            }
+            acc = (acc + partial % p) % p;
+            k = end;
+        }
+        out.push(acc);
+    }
+    out
+}
+
+/// `out[j] = Σ_i x[i,j] · g[i] mod p` — Xᵀ·g without materializing the
+/// transpose: row-major streaming with per-column u64 accumulators and a
+/// chunked reduction every `safe_chunk_len` rows.
+pub fn tr_matvec_mod(f: &PrimeField, x: &[u64], g: &[u64], rows: usize, d: usize) -> Vec<u64> {
+    assert_eq!(x.len(), rows * d);
+    assert_eq!(g.len(), rows);
+    let p = f.modulus();
+    let chunk = safe_chunk_len(p);
+    let mut acc = vec![0u64; d];
+    let mut out = vec![0u64; d];
+    let mut pending = 0usize;
+    for row in 0..rows {
+        let gi = g[row];
+        let xrow = &x[row * d..(row + 1) * d];
+        for (a, &xv) in acc.iter_mut().zip(xrow.iter()) {
+            *a = a.wrapping_add(xv * gi);
+        }
+        pending += 1;
+        if pending == chunk {
+            for (o, a) in out.iter_mut().zip(acc.iter_mut()) {
+                *o = (*o + *a % p) % p;
+                *a = 0;
+            }
+            pending = 0;
+        }
+    }
+    if pending > 0 {
+        for (o, a) in out.iter_mut().zip(acc.iter()) {
+            *o = (*o + *a % p) % p;
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::field::{PrimeField, PAPER_PRIME, PRIME_26, PRIME_31};
+    use crate::util::proptest::check;
+
+    #[test]
+    fn chunk_len_bounds() {
+        // 24-bit prime: (p-1)^2 ≈ 2^48 → chunk ≈ 2^16.
+        let c24 = safe_chunk_len(PAPER_PRIME);
+        assert!(c24 >= 1 << 15 && c24 <= 1 << 17, "c24={c24}");
+        // 31-bit: (p-1)^2 ≈ 2^62 → chunk among {4, 5, ...} small.
+        let c31 = safe_chunk_len(PRIME_31);
+        assert!(c31 >= 4 && c31 < 16, "c31={c31}");
+        assert!(safe_chunk_len(3) >= 1);
+    }
+
+    fn naive_matvec(p: u64, x: &[u64], wcol: &[u64], rows: usize, d: usize) -> Vec<u64> {
+        (0..rows)
+            .map(|i| {
+                let mut acc = 0u128;
+                for k in 0..d {
+                    acc += x[i * d + k] as u128 * wcol[k] as u128;
+                }
+                (acc % p as u128) as u64
+            })
+            .collect()
+    }
+
+    #[test]
+    fn matvec_matches_naive_all_primes() {
+        for &p in &[PAPER_PRIME, PRIME_26, PRIME_31, 97] {
+            let f = PrimeField::new(p);
+            check(&format!("matvec-{p}"), 30, move |rng| {
+                let rows = 1 + rng.below_usize(8);
+                let d = 1 + rng.below_usize(50);
+                let x = f.random_matrix(rng, rows, d);
+                let w = f.random_matrix(rng, d, 1);
+                let got = matvec_mod(&f, &x, &w, rows, d, 1, 0);
+                let want = naive_matvec(p, &x, &w, rows, d);
+                if got != want {
+                    return Err(format!("p={p} rows={rows} d={d}"));
+                }
+                Ok(())
+            });
+        }
+    }
+
+    #[test]
+    fn matvec_strided_column_selection() {
+        let f = PrimeField::new(97);
+        // 2×2 X, W has 3 columns; pick column 2.
+        let x = vec![1, 2, 3, 4];
+        let w = vec![
+            10, 20, 30, // row 0 of W
+            40, 50, 60, // row 1
+        ];
+        let got = matvec_mod(&f, &x, &w, 2, 2, 3, 2);
+        // col2 = [30, 60]: [1·30+2·60, 3·30+4·60] = [150, 330] mod 97 = [53, 39]
+        assert_eq!(got, vec![53, 39]);
+    }
+
+    #[test]
+    fn tr_matvec_matches_naive() {
+        for &p in &[PAPER_PRIME, PRIME_31] {
+            let f = PrimeField::new(p);
+            check(&format!("tr-matvec-{p}"), 30, move |rng| {
+                let rows = 1 + rng.below_usize(40);
+                let d = 1 + rng.below_usize(12);
+                let x = f.random_matrix(rng, rows, d);
+                let g = f.random_matrix(rng, rows, 1);
+                let got = tr_matvec_mod(&f, &x, &g, rows, d);
+                let mut want = vec![0u128; d];
+                for i in 0..rows {
+                    for j in 0..d {
+                        want[j] += x[i * d + j] as u128 * g[i] as u128;
+                    }
+                }
+                let want: Vec<u64> = want.iter().map(|&v| (v % p as u128) as u64).collect();
+                if got != want {
+                    return Err(format!("p={p} rows={rows} d={d}"));
+                }
+                Ok(())
+            });
+        }
+    }
+
+    #[test]
+    fn tr_matvec_exercises_chunk_boundary() {
+        // Force multiple reduction chunks with the 31-bit prime (chunk ~4–8)
+        // and rows larger than several chunks.
+        let f = PrimeField::new(PRIME_31);
+        let rows = 61; // not a multiple of the chunk length
+        let d = 3;
+        let x: Vec<u64> = (0..rows * d).map(|i| (f.modulus() - 1) - i as u64).collect();
+        let g: Vec<u64> = (0..rows).map(|i| (f.modulus() - 1) - (7 * i) as u64).collect();
+        let got = tr_matvec_mod(&f, &x, &g, rows, d);
+        let mut want = vec![0u128; d];
+        for i in 0..rows {
+            for j in 0..d {
+                want[j] += x[i * d + j] as u128 * g[i] as u128;
+            }
+        }
+        let want: Vec<u64> = want.iter().map(|&v| (v % f.modulus() as u128) as u64).collect();
+        assert_eq!(got, want);
+    }
+
+    #[test]
+    fn empty_dims_are_safe() {
+        let f = PrimeField::new(97);
+        assert_eq!(tr_matvec_mod(&f, &[], &[], 0, 0), Vec::<u64>::new());
+        assert_eq!(matvec_mod(&f, &[], &[1], 0, 1, 1, 0), Vec::<u64>::new());
+    }
+}

@@ -1,0 +1,223 @@
+//! The worker-side computation (paper eq. 17 & 20), native backend.
+//!
+//! Each worker evaluates, entirely in F_p,
+//!
+//! ```text
+//!   f(X̃, W̃) = X̃ᵀ · ḡ(X̃, W̃),    ḡ = Σ_{i=0}^{r} c̄_i ⊙ Π_{j≤i} (X̃ · w̃_j)
+//! ```
+//!
+//! a degree-(2r+1) polynomial in its inputs. The same structure is used on
+//! true data, Shamir shares, and Lagrange-coded data — that indifference is
+//! what makes LCC decoding work.
+//!
+//! This module is the **native** implementation: portable rust, bit-exact
+//! with the Pallas/XLA artifact (the python test-suite checks the kernel
+//! against `ref.py`, and `rust/tests/backend_equiv.rs` checks the artifact
+//! against this module). It is also the fallback for shapes missing from
+//! the AOT manifest.
+
+mod matmul;
+
+pub use matmul::{matvec_mod, tr_matvec_mod, safe_chunk_len};
+
+use crate::field::PrimeField;
+
+/// Parameters of the worker computation.
+#[derive(Debug, Clone)]
+pub struct WorkerComputation {
+    pub field: PrimeField,
+    /// Rows of the (coded) data block this worker holds.
+    pub rows: usize,
+    /// Feature dimension d.
+    pub d: usize,
+    /// Sigmoid polynomial degree r (number of weight quantizations).
+    pub r: usize,
+    /// Field-quantized polynomial coefficients c̄_0..c̄_r.
+    pub coeffs: Vec<u64>,
+}
+
+impl WorkerComputation {
+    pub fn new(field: PrimeField, rows: usize, d: usize, coeffs: Vec<u64>) -> Self {
+        assert!(coeffs.len() >= 2, "need at least a degree-1 polynomial");
+        let r = coeffs.len() - 1;
+        WorkerComputation { field, rows, d, r, coeffs }
+    }
+
+    /// Evaluate ḡ(X̃, W̃) — one field element per row.
+    ///
+    /// `x` is row-major rows×d; `w` is row-major d×r (column j = j-th
+    /// weight quantization).
+    pub fn g_bar(&self, x: &[u64], w: &[u64]) -> Vec<u64> {
+        let f = &self.field;
+        assert_eq!(x.len(), self.rows * self.d);
+        assert_eq!(w.len(), self.d * self.r);
+        // u_j = X̃ · w̃_j for each j — computed as one pass per column.
+        let mut dots: Vec<Vec<u64>> = Vec::with_capacity(self.r);
+        for j in 0..self.r {
+            dots.push(matvec_mod(f, x, w, self.rows, self.d, self.r, j));
+        }
+        // ḡ = c̄_0 + Σ_i c̄_i · Π_{j<i} dots[j]  (elementwise over rows)
+        let mut g = vec![self.coeffs[0]; self.rows];
+        let mut prod = vec![1u64; self.rows];
+        for i in 1..=self.r {
+            let d_i = &dots[i - 1];
+            let ci = self.coeffs[i];
+            for row in 0..self.rows {
+                prod[row] = f.mul(prod[row], d_i[row]);
+                g[row] = f.add(g[row], f.mul(ci, prod[row]));
+            }
+        }
+        g
+    }
+
+    /// The full worker function f(X̃, W̃) = X̃ᵀ ḡ(X̃, W̃) ∈ F_p^d.
+    pub fn compute(&self, x: &[u64], w: &[u64]) -> Vec<u64> {
+        let g = self.g_bar(x, w);
+        tr_matvec_mod(&self.field, x, &g, self.rows, self.d)
+    }
+
+    /// Total degree of f in its inputs — determines the recovery threshold.
+    pub fn degree(&self) -> usize {
+        2 * self.r + 1
+    }
+
+    /// Field multiplications per evaluation (cost model for the scheduler).
+    pub fn flop_estimate(&self) -> u64 {
+        // r row-dots + transpose-dot + elementwise polynomial.
+        (self.r as u64 + 1) * (self.rows as u64) * (self.d as u64)
+            + 2 * (self.r as u64) * (self.rows as u64)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::field::{PrimeField, PAPER_PRIME};
+    use crate::quant::{phi, phi_inv};
+    use crate::util::proptest::check;
+
+    fn field() -> PrimeField {
+        PrimeField::new(PAPER_PRIME)
+    }
+
+    /// Slow reference: compute f over signed integers (no modular
+    /// arithmetic) then embed. Valid while magnitudes stay small.
+    fn reference_f(
+        f: &PrimeField,
+        x: &[i64],
+        w: &[i64],
+        coeffs: &[i64],
+        rows: usize,
+        d: usize,
+        r: usize,
+    ) -> Vec<u64> {
+        let mut g = vec![0i128; rows];
+        for row in 0..rows {
+            let mut dots = vec![0i128; r];
+            for j in 0..r {
+                for k in 0..d {
+                    dots[j] += x[row * d + k] as i128 * w[k * r + j] as i128;
+                }
+            }
+            let mut acc = coeffs[0] as i128;
+            let mut prod = 1i128;
+            for i in 1..=r {
+                prod *= dots[i - 1];
+                acc += coeffs[i] as i128 * prod;
+            }
+            g[row] = acc;
+        }
+        let mut out = vec![0i128; d];
+        for row in 0..rows {
+            for k in 0..d {
+                out[k] += x[row * d + k] as i128 * g[row];
+            }
+        }
+        out.iter()
+            .map(|&v| {
+                let m = v.rem_euclid(f.modulus() as i128);
+                m as u64
+            })
+            .collect()
+    }
+
+    #[test]
+    fn matches_integer_reference_small() {
+        let f = field();
+        check("worker-f-vs-int-ref", 50, move |rng| {
+            let rows = 1 + rng.below_usize(6);
+            let d = 1 + rng.below_usize(8);
+            let r = 1 + rng.below_usize(2);
+            let xi: Vec<i64> = (0..rows * d).map(|_| rng.below(9) as i64 - 4).collect();
+            let wi: Vec<i64> = (0..d * r).map(|_| rng.below(9) as i64 - 4).collect();
+            let ci: Vec<i64> = (0..=r).map(|_| rng.below(9) as i64 - 4).collect();
+            let x: Vec<u64> = xi.iter().map(|&v| phi(&f, v)).collect();
+            let w: Vec<u64> = wi.iter().map(|&v| phi(&f, v)).collect();
+            let c: Vec<u64> = ci.iter().map(|&v| phi(&f, v)).collect();
+            let wc = WorkerComputation::new(f, rows, d, c);
+            let got = wc.compute(&x, &w);
+            let want = reference_f(&f, &xi, &wi, &ci, rows, d, r);
+            if got != want {
+                return Err(format!(
+                    "rows={rows} d={d} r={r}: {got:?} vs {want:?}"
+                ));
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn g_bar_constant_when_higher_coeffs_zero() {
+        let f = field();
+        let rows = 4;
+        let d = 3;
+        let c = vec![phi(&f, 7), 0];
+        let wc = WorkerComputation::new(f, rows, d, c);
+        let x = vec![1u64; rows * d];
+        let w = vec![2u64; d];
+        assert_eq!(wc.g_bar(&x, &w), vec![7u64; rows]);
+    }
+
+    #[test]
+    fn degree_and_threshold_algebra() {
+        let f = field();
+        let wc = WorkerComputation::new(f, 8, 4, vec![1, 2]);
+        assert_eq!(wc.degree(), 3); // r=1 → 2r+1 = 3
+        let wc2 = WorkerComputation::new(f, 8, 4, vec![1, 2, 3]);
+        assert_eq!(wc2.degree(), 5);
+    }
+
+    #[test]
+    fn compute_linear_case_is_xt_c0_plus_c1_xw() {
+        // r=1: f = X̄ᵀ(c0·1 + c1·(X̄w)) — verify against direct formula.
+        let f = field();
+        let rows = 3;
+        let d = 2;
+        let x_i = [1i64, 2, 3, -1, 0, 2];
+        let w_i = [2i64, -3];
+        let (c0, c1) = (5i64, 2i64);
+        let x: Vec<u64> = x_i.iter().map(|&v| phi(&f, v)).collect();
+        let w: Vec<u64> = w_i.iter().map(|&v| phi(&f, v)).collect();
+        let wc = WorkerComputation::new(f, rows, d, vec![phi(&f, c0), phi(&f, c1)]);
+        let out = wc.compute(&x, &w);
+        // Manual: Xw = [1·2+2·-3, 3·2+(-1)(-3), 0·2+2·-3] = [-4, 9, -6]
+        // g = 5 + 2·Xw = [-3, 23, -7]
+        // Xᵀg = [1·-3+3·23+0·-7, 2·-3+(-1)·23+2·-7] = [66, -43]
+        assert_eq!(phi_inv(&f, out[0]), 66);
+        assert_eq!(phi_inv(&f, out[1]), -43);
+    }
+
+    #[test]
+    #[should_panic(expected = "degree-1")]
+    fn rejects_degree_zero() {
+        WorkerComputation::new(field(), 1, 1, vec![1]);
+    }
+
+    #[test]
+    fn flop_estimate_monotone_in_shape() {
+        let f = field();
+        let small = WorkerComputation::new(f, 10, 10, vec![1, 2]).flop_estimate();
+        let big = WorkerComputation::new(f, 20, 10, vec![1, 2]).flop_estimate();
+        assert!(big > small);
+    }
+}

@@ -1,0 +1,16 @@
+//! The CodedPrivateML master (paper Algorithm 1).
+//!
+//! Orchestrates the full training loop over the simulated [`crate::cluster`]:
+//! quantize → Lagrange-encode → dispatch → collect the fastest R results →
+//! interpolation-decode → dequantize → gradient update, with the
+//! encode/comm/comp timing breakdown the paper reports in Tables 1–6.
+
+mod config;
+mod report;
+mod session;
+mod trace;
+
+pub use config::{CodedMlConfig, CompMode, ConfigError};
+pub use report::{IterationMetrics, TimingBreakdown, TrainReport};
+pub use session::{CodedMlSession, TrainError};
+pub use trace::Tracer;

@@ -1,0 +1,137 @@
+//! Training reports: the paper's timing breakdown plus convergence curves.
+
+use crate::util::json::{obj, Json};
+
+/// The Encode / Comm. / Comp. / Total columns of Tables 1–6.
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct TimingBreakdown {
+    /// Dataset + per-iteration weight encoding and secret sharing (s).
+    pub encode_s: f64,
+    /// Modeled network time, master↔workers (s).
+    pub comm_s: f64,
+    /// Worker computation (modeled parallel) + master decode (s).
+    pub comp_s: f64,
+}
+
+impl TimingBreakdown {
+    pub fn total(&self) -> f64 {
+        self.encode_s + self.comm_s + self.comp_s
+    }
+
+    /// A paper-style table row.
+    pub fn row(&self, label: &str) -> String {
+        format!(
+            "| {label:<24} | {:>8.2} | {:>8.2} | {:>8.2} | {:>9.2} |",
+            self.encode_s,
+            self.comm_s,
+            self.comp_s,
+            self.total()
+        )
+    }
+}
+
+/// Per-iteration convergence metrics.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct IterationMetrics {
+    pub iter: usize,
+    /// Cross-entropy on the (quantized) training set.
+    pub train_loss: f64,
+    /// Test accuracy, if a test set was supplied.
+    pub test_accuracy: Option<f64>,
+}
+
+/// The outcome of a training run.
+#[derive(Debug, Clone, Default)]
+pub struct TrainReport {
+    pub breakdown: TimingBreakdown,
+    /// Master-side decode seconds (included in `breakdown.comp_s`).
+    pub decode_s: f64,
+    pub iterations: Vec<IterationMetrics>,
+    /// Final weights (real domain).
+    pub weights: Vec<f64>,
+    /// Decoder cache (hits, misses).
+    pub decode_cache: (u64, u64),
+    /// Recovery threshold used.
+    pub recovery_threshold: usize,
+    /// Bytes moved master→workers and workers→master (modeled).
+    pub bytes_sent: u64,
+    pub bytes_received: u64,
+}
+
+impl TrainReport {
+    pub fn final_loss(&self) -> Option<f64> {
+        self.iterations.last().map(|m| m.train_loss)
+    }
+
+    pub fn final_accuracy(&self) -> Option<f64> {
+        self.iterations.last().and_then(|m| m.test_accuracy)
+    }
+
+    /// Machine-readable JSON (consumed by the reproduce harness).
+    pub fn to_json(&self) -> Json {
+        obj(&[
+            ("encode_s", Json::Num(self.breakdown.encode_s)),
+            ("comm_s", Json::Num(self.breakdown.comm_s)),
+            ("comp_s", Json::Num(self.breakdown.comp_s)),
+            ("total_s", Json::Num(self.breakdown.total())),
+            ("decode_s", Json::Num(self.decode_s)),
+            ("recovery_threshold", Json::Num(self.recovery_threshold as f64)),
+            ("bytes_sent", Json::Num(self.bytes_sent as f64)),
+            ("bytes_received", Json::Num(self.bytes_received as f64)),
+            (
+                "loss_curve",
+                Json::Arr(self.iterations.iter().map(|m| Json::Num(m.train_loss)).collect()),
+            ),
+            (
+                "accuracy_curve",
+                Json::Arr(
+                    self.iterations
+                        .iter()
+                        .map(|m| m.test_accuracy.map(Json::Num).unwrap_or(Json::Null))
+                        .collect(),
+                ),
+            ),
+        ])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn total_is_sum() {
+        let b = TimingBreakdown { encode_s: 1.0, comm_s: 2.0, comp_s: 3.5 };
+        assert_eq!(b.total(), 6.5);
+        let row = b.row("CodedPrivateML (Case 1)");
+        assert!(row.contains("6.50"), "{row}");
+    }
+
+    #[test]
+    fn report_json_round_trips() {
+        let rep = TrainReport {
+            breakdown: TimingBreakdown { encode_s: 1.0, comm_s: 0.5, comp_s: 2.0 },
+            iterations: vec![
+                IterationMetrics { iter: 0, train_loss: 0.6, test_accuracy: Some(0.8) },
+                IterationMetrics { iter: 1, train_loss: 0.4, test_accuracy: None },
+            ],
+            recovery_threshold: 10,
+            ..Default::default()
+        };
+        let j = rep.to_json();
+        let parsed = Json::parse(&j.to_string()).unwrap();
+        assert_eq!(parsed.get("total_s").unwrap().as_f64(), Some(3.5));
+        let curve = parsed.get("loss_curve").unwrap().as_arr().unwrap();
+        assert_eq!(curve.len(), 2);
+        assert_eq!(parsed.get("accuracy_curve").unwrap().as_arr().unwrap()[1], Json::Null);
+    }
+
+    #[test]
+    fn final_metrics() {
+        let mut rep = TrainReport::default();
+        assert_eq!(rep.final_loss(), None);
+        rep.iterations.push(IterationMetrics { iter: 0, train_loss: 0.3, test_accuracy: Some(0.9) });
+        assert_eq!(rep.final_loss(), Some(0.3));
+        assert_eq!(rep.final_accuracy(), Some(0.9));
+    }
+}

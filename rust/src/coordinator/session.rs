@@ -1,0 +1,632 @@
+//! The training session — paper Algorithm 1 end to end.
+
+use std::time::Instant;
+
+use super::config::{CodedMlConfig, CompMode, ConfigError};
+use super::report::{IterationMetrics, TimingBreakdown, TrainReport};
+use crate::cluster::{Cluster, ClusterError, StepResult, WorkerSpec};
+use crate::cluster::worker::WorkerOp;
+use crate::coding::{CodingParams, DecodeError, Decoder, Encoder};
+use crate::coding::decoder::WorkerResult;
+use crate::data::Dataset;
+use crate::field::PrimeField;
+use crate::model::{matvec, max_eig_xtx, tr_matvec, LogisticRegression};
+use crate::quant::{DatasetQuantizer, Dequantizer, WeightQuantizer};
+use crate::sigmoid::{fit_sigmoid_with, SigmoidPoly};
+use crate::util::{Rng, Stopwatch};
+
+/// Errors surfaced during training.
+#[derive(Debug)]
+pub enum TrainError {
+    Config(ConfigError),
+    Cluster(ClusterError),
+    Decode(DecodeError),
+    /// More workers failed than the straggler slack allows.
+    TooManyFailures { ok: usize, need: usize },
+}
+
+impl std::fmt::Display for TrainError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            TrainError::Config(e) => write!(f, "{e}"),
+            TrainError::Cluster(e) => write!(f, "{e}"),
+            TrainError::Decode(e) => write!(f, "{e}"),
+            TrainError::TooManyFailures { ok, need } => {
+                write!(f, "only {ok} workers produced results, need {need}")
+            }
+        }
+    }
+}
+
+impl std::error::Error for TrainError {}
+
+impl From<ConfigError> for TrainError {
+    fn from(e: ConfigError) -> Self {
+        TrainError::Config(e)
+    }
+}
+impl From<ClusterError> for TrainError {
+    fn from(e: ClusterError) -> Self {
+        TrainError::Cluster(e)
+    }
+}
+impl From<DecodeError> for TrainError {
+    fn from(e: DecodeError) -> Self {
+        TrainError::Decode(e)
+    }
+}
+
+/// A live CodedPrivateML training session: cluster spawned, dataset
+/// encoded and secret-shared, ready to iterate.
+pub struct CodedMlSession {
+    cfg: CodedMlConfig,
+    field: PrimeField,
+    params: CodingParams,
+    encoder: Encoder,
+    decoder: Decoder,
+    cluster: Cluster,
+    poly: SigmoidPoly,
+    wquant: WeightQuantizer,
+    dequant: Dequantizer,
+    /// Quantized dataset (field form, kept for ground-truth tests).
+    pub xbar: Vec<u64>,
+    /// Dequantized dataset — the X̄ the convergence theorem is stated on.
+    xbar_real: Vec<f64>,
+    /// X̄ᵀy, precomputed (the master holds y; eq. 19 subtracts it after
+    /// decoding X̄ᵀḡ).
+    xbar_t_y: Vec<f64>,
+    y: Vec<f64>,
+    /// Current weights (real domain).
+    pub w: Vec<f64>,
+    pub eta: f64,
+    m: usize,
+    d: usize,
+    rows: usize,
+    rng: Rng,
+    /// Independent stream for straggler delays so the timing simulation
+    /// never perturbs masks or stochastic quantization (the fastest-R
+    /// *subset* may differ, but LCC decoding is exact for any subset, so
+    /// the training trajectory is invariant — tested below).
+    straggle_rng: Rng,
+    // timers
+    t_encode: Stopwatch,
+    t_comm: Stopwatch,
+    t_comp: Stopwatch,
+    t_decode: Stopwatch,
+    bytes_sent: u64,
+    bytes_received: u64,
+    iter: u64,
+    tracer: super::trace::Tracer,
+}
+
+impl CodedMlSession {
+    /// Build the session: fit the sigmoid polynomial, quantize + encode +
+    /// secret-share the dataset, spawn the cluster. The dataset is trimmed
+    /// to a multiple of K rows.
+    pub fn new(cfg: CodedMlConfig, train: &Dataset) -> Result<Self, TrainError> {
+        let params = cfg.coding_params()?;
+        let field = cfg.field();
+        let ds = train.take_rows_multiple_of(train.m, params.k);
+        let (m, d) = (ds.m, ds.d);
+        let rows = m / params.k;
+
+        // Budget check (warn or error per config).
+        let rep = cfg.validate(m, ds.max_abs_x())?;
+        if !rep.ok() {
+            eprintln!(
+                "warning: overflow budget utilization {:.2} > 1 — decoded \
+                 gradients may wrap; consider k>{}, smaller l_c, or a larger prime",
+                rep.utilization, params.k
+            );
+        }
+
+        // Sigmoid polynomial (real + field forms).
+        let poly = fit_sigmoid_with(cfg.fit_method, cfg.r as u32, cfg.fit_range);
+        let field_coeffs = poly.field_coeffs(&field, cfg.lx, cfg.lw, cfg.lc);
+
+        let mut rng = Rng::new(cfg.seed);
+        let straggle_rng = Rng::new(cfg.seed ^ 0x5742_4751_4c45);
+
+        let mut t_encode = Stopwatch::new();
+        let mut t_comm = Stopwatch::new();
+
+        // Quantize + encode + secret-share the dataset (one-time).
+        let xq = DatasetQuantizer::new(field, cfg.lx);
+        let (xbar, shares) = {
+            let mut out = None;
+            t_encode.time(|| {
+                let xbar = xq.quantize(&ds.x);
+                let encoder = Encoder::new(field, params);
+                let shares = encoder.encode_dataset(&xbar, m, d, &mut rng);
+                out = Some((xbar, shares));
+            });
+            out.unwrap()
+        };
+        let encoder = Encoder::new(field, params);
+        let decoder = Decoder::new(field, params, encoder.points.clone());
+
+        // Model the dataset broadcast (optionally bit-packed on the wire).
+        let share_bytes = if cfg.packed_wire {
+            encoder.packed_share_bytes(m, d)
+        } else {
+            encoder.share_bytes(m, d)
+        };
+        t_comm.add_seconds(cfg.net.fanout_time(params.n, share_bytes));
+        let bytes_sent = share_bytes * params.n as u64;
+
+        // Spawn workers & deliver shares.
+        let specs: Vec<WorkerSpec> = (0..params.n)
+            .map(|id| WorkerSpec {
+                id,
+                kind: cfg.backend,
+                artifact_dir: cfg.artifact_dir.clone(),
+                field,
+                rows,
+                d,
+                coeffs: field_coeffs.clone(),
+                op: WorkerOp::Logistic,
+                // Chaos hook: the first `chaos_failures` workers die at
+                // `chaos_from_iter` (resilience tests).
+                fail_from_iter: (id < cfg.chaos_failures).then_some(cfg.chaos_from_iter),
+            })
+            .collect();
+        let cluster = Cluster::spawn(specs)?;
+        cluster.load_data(shares.into_iter().map(|s| s.data).collect(), None)?;
+
+        // Real-domain views the master needs.
+        let xbar_real: Vec<f64> = xbar.iter().map(|&q| xq.dequantize_entry(q)).collect();
+        let xbar_t_y = tr_matvec(&xbar_real, &ds.y, m, d);
+
+        // Step size: η = 1/L (Lemma 2, scaled by 1/m like the cost).
+        let eta = cfg.eta.unwrap_or_else(|| {
+            let l = 0.25 * max_eig_xtx(&xbar_real, m, d, 30) / m as f64;
+            if l > 0.0 {
+                1.0 / l
+            } else {
+                1.0
+            }
+        });
+
+        let wquant = WeightQuantizer::new(field, cfg.lw, cfg.r as u32);
+        let dequant = Dequantizer::new(field, cfg.lx, cfg.lw, cfg.lc, cfg.r as u32);
+
+        Ok(CodedMlSession {
+            cfg,
+            field,
+            params,
+            encoder,
+            decoder,
+            cluster,
+            poly,
+            wquant,
+            dequant,
+            xbar,
+            xbar_real,
+            xbar_t_y,
+            y: ds.y.clone(),
+            w: vec![0.0; d],
+            eta,
+            m,
+            d,
+            rows,
+            rng,
+            straggle_rng,
+            t_encode,
+            t_comm,
+            t_comp: Stopwatch::new(),
+            t_decode: Stopwatch::new(),
+            bytes_sent,
+            bytes_received: 0,
+            iter: 0,
+            tracer: super::trace::Tracer::disabled(),
+        })
+    }
+
+    /// Attach a tracer (JSONL per-phase events; see [`super::Tracer`]).
+    pub fn set_tracer(&mut self, tracer: super::trace::Tracer) {
+        self.tracer = tracer;
+    }
+
+    /// Access collected in-memory trace events (tests/diagnostics).
+    pub fn tracer(&self) -> &super::trace::Tracer {
+        &self.tracer
+    }
+
+    pub fn params(&self) -> CodingParams {
+        self.params
+    }
+
+    /// Wire size of `count` field elements under the configured framing
+    /// (raw u64 or bit-packed to the field width — util::bitpack).
+    fn wire_bytes(&self, count: usize) -> u64 {
+        if self.cfg.packed_wire {
+            crate::util::bitpack::packed_len(count, self.field.bits()) as u64
+        } else {
+            (count * 8) as u64
+        }
+    }
+
+    pub fn dims(&self) -> (usize, usize) {
+        (self.m, self.d)
+    }
+
+    /// The sigmoid polynomial in use (diagnostics / ablations).
+    pub fn sigmoid_poly(&self) -> &SigmoidPoly {
+        &self.poly
+    }
+
+    /// One full Algorithm-1 iteration; returns the decoded real-domain
+    /// X̄ᵀḡ (before the gradient update) for inspection.
+    pub fn step(&mut self) -> Result<Vec<f64>, TrainError> {
+        let need = self.params.recovery_threshold();
+        let (n, d, r) = (self.params.n, self.d, self.cfg.r);
+
+        // (1) Quantize weights (r independent stochastic draws) + encode
+        //     with fresh masks — both count as encode time.
+        let w_shares = {
+            let mut out = None;
+            let rng = &mut self.rng;
+            let (wquant, encoder, w) = (&self.wquant, &self.encoder, &self.w);
+            self.t_encode.time(|| {
+                let wq = wquant.quantize(w, rng);
+                out = Some(encoder.encode_weights(&wq, d, r, rng));
+            });
+            out.unwrap()
+        };
+
+        // (2) Master → workers: W̃ shares.
+        let wbytes = self.wire_bytes(d * r);
+        self.t_comm.add_seconds(self.cfg.net.fanout_time(n, wbytes));
+        self.bytes_sent += wbytes * n as u64;
+        self.cluster
+            .dispatch(self.iter, w_shares.into_iter().map(|s| s.data).collect())?;
+
+        // (3) Collect everyone, model arrival = compute + straggle, keep
+        //     the fastest R.
+        let t_wall = Instant::now();
+        let mut results = self.cluster.collect_all(self.iter)?;
+        let wall = t_wall.elapsed().as_secs_f64();
+
+        let mut arrivals: Vec<(f64, StepResult)> = results
+            .drain(..)
+            .filter_map(|res| match &res.data {
+                Ok(_) => {
+                    let delay = self.cfg.straggler.sample(&mut self.straggle_rng, res.compute_secs);
+                    Some((res.compute_secs + delay, res))
+                }
+                Err(msg) => {
+                    eprintln!("worker {} failed: {msg}", res.worker);
+                    None
+                }
+            })
+            .collect();
+        if arrivals.len() < need {
+            return Err(TrainError::TooManyFailures { ok: arrivals.len(), need });
+        }
+        arrivals.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
+        arrivals.truncate(need);
+
+        let iter_comp = match self.cfg.comp_mode {
+            CompMode::ModeledParallel => arrivals.last().unwrap().0,
+            CompMode::Wall => wall,
+        };
+        self.t_comp.add_seconds(iter_comp);
+        if self.tracer.enabled() {
+            use crate::util::json::Json;
+            let used: Vec<Json> = arrivals
+                .iter()
+                .map(|(_, r)| Json::Num(r.worker as f64))
+                .collect();
+            self.tracer.event(
+                "collect",
+                self.iter,
+                &[
+                    ("comp_modeled_s", Json::Num(iter_comp)),
+                    ("wall_s", Json::Num(wall)),
+                    ("fastest", Json::Arr(used)),
+                ],
+            );
+        }
+
+        // (4) Workers → master: R result vectors.
+        let rbytes = self.wire_bytes(d);
+        self.t_comm.add_seconds(self.cfg.net.fanin_time(need, rbytes));
+        self.bytes_received += rbytes * need as u64;
+
+        // (5) Decode the K sub-gradients and dequantize per block
+        //     (per-block dequantization keeps the overflow budget at m/K
+        //     rows — DESIGN.md §Numeric design).
+        let worker_results: Vec<WorkerResult> = arrivals
+            .into_iter()
+            .map(|(_, res)| WorkerResult { worker: res.worker, data: res.data.unwrap() })
+            .collect();
+        let mut xtg_real = vec![0.0f64; d];
+        {
+            let decoder = &mut self.decoder;
+            let dequant = &self.dequant;
+            let mut decoded = None;
+            self.t_decode.time(|| {
+                decoded = Some(decoder.decode(&worker_results, d));
+            });
+            let blocks = decoded.unwrap()?;
+            for block in blocks {
+                for (acc, &q) in xtg_real.iter_mut().zip(block.iter()) {
+                    *acc += dequant.dequantize_entry(q);
+                }
+            }
+        }
+
+        // (6) Gradient update (eq. 19): w ← w − η/m (X̄ᵀḡ − X̄ᵀy).
+        for ((w, &xtg), &xty) in self.w.iter_mut().zip(xtg_real.iter()).zip(self.xbar_t_y.iter()) {
+            *w -= self.eta / self.m as f64 * (xtg - xty);
+        }
+
+        if self.tracer.enabled() {
+            use crate::util::json::Json;
+            self.tracer.event(
+                "step",
+                self.iter,
+                &[
+                    ("encode_total_s", Json::Num(self.t_encode.seconds())),
+                    ("comm_total_s", Json::Num(self.t_comm.seconds())),
+                    ("decode_total_s", Json::Num(self.t_decode.seconds())),
+                ],
+            );
+        }
+        self.iter += 1;
+        Ok(xtg_real)
+    }
+
+    /// Cross-entropy of the current weights on the quantized training set
+    /// (the quantity Theorem 1 bounds).
+    pub fn train_loss(&self) -> f64 {
+        let ds = Dataset::new(
+            self.xbar_real.clone(),
+            self.y.clone(),
+            self.m,
+            self.d,
+            "quantized-train",
+        );
+        LogisticRegression::with_weights(self.w.clone()).loss(&ds)
+    }
+
+    /// Accuracy of the current weights on a held-out set.
+    pub fn accuracy(&self, test: &Dataset) -> f64 {
+        LogisticRegression::with_weights(self.w.clone()).accuracy(test)
+    }
+
+    /// Run `iters` iterations, recording loss (and accuracy when a test
+    /// set is given) each iteration.
+    pub fn train(&mut self, iters: usize, test: Option<&Dataset>) -> Result<TrainReport, TrainError> {
+        let mut iterations = Vec::with_capacity(iters);
+        for it in 0..iters {
+            self.step()?;
+            iterations.push(IterationMetrics {
+                iter: it,
+                train_loss: self.train_loss(),
+                test_accuracy: test.map(|ts| self.accuracy(ts)),
+            });
+        }
+        Ok(self.report(iterations))
+    }
+
+    /// Estimated sigmoid input range actually seen (diagnostics for
+    /// choosing `fit_range`).
+    pub fn activation_range(&self) -> (f64, f64) {
+        let z = matvec(&self.xbar_real, &self.w, self.m, self.d);
+        crate::util::stats::min_max(&z)
+    }
+
+    fn report(&mut self, iterations: Vec<IterationMetrics>) -> TrainReport {
+        TrainReport {
+            breakdown: TimingBreakdown {
+                encode_s: self.t_encode.seconds(),
+                comm_s: self.t_comm.seconds(),
+                // Master decode counts as computation.
+                comp_s: self.t_comp.seconds() + self.t_decode.seconds(),
+            },
+            decode_s: self.t_decode.seconds(),
+            iterations,
+            weights: self.w.clone(),
+            decode_cache: self.decoder.cache_stats(),
+            recovery_threshold: self.params.recovery_threshold(),
+            bytes_sent: self.bytes_sent,
+            bytes_received: self.bytes_received,
+        }
+    }
+}
+
+impl std::fmt::Debug for CodedMlSession {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("CodedMlSession")
+            .field("params", &self.params)
+            .field("m", &self.m)
+            .field("d", &self.d)
+            .field("rows", &self.rows)
+            .field("iter", &self.iter)
+            .field("backend", &self.cfg.backend)
+            .field("field", &self.field.modulus())
+            .finish()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::{NetworkModel, StragglerModel};
+    use crate::data::synthetic_3v7;
+
+    fn quick_cfg(n: usize, k: usize, t: usize) -> CodedMlConfig {
+        CodedMlConfig {
+            n,
+            k,
+            t,
+            straggler: StragglerModel::none(),
+            net: NetworkModel::free(),
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn session_trains_and_loss_decreases() {
+        let train = synthetic_3v7(120, 1);
+        let test = synthetic_3v7(60, 2);
+        let mut sess = CodedMlSession::new(quick_cfg(10, 3, 1), &train).unwrap();
+        let l0 = sess.train_loss();
+        let report = sess.train(10, Some(&test)).unwrap();
+        let lf = report.final_loss().unwrap();
+        assert!(lf < l0 * 0.8, "loss {l0} → {lf}");
+        assert!(report.final_accuracy().unwrap() > 0.8);
+        assert_eq!(report.iterations.len(), 10);
+        assert_eq!(report.recovery_threshold, 10);
+        assert!(report.breakdown.encode_s > 0.0);
+        assert!(report.breakdown.comp_s > 0.0);
+    }
+
+    #[test]
+    fn private_training_matches_quantized_plaintext_gradient() {
+        // One step of CodedPrivateML must equal the plaintext update
+        // computed with the same quantized data and the same stochastic
+        // weight draws — here w₀ = 0 makes the quantization of w
+        // deterministic (all zeros), so the check is exact-in-expectation
+        // with zero variance at step 1.
+        let train = synthetic_3v7(60, 3);
+        let cfg = quick_cfg(10, 3, 1);
+        let mut sess = CodedMlSession::new(cfg.clone(), &train).unwrap();
+        let eta = sess.eta;
+        let xtg = sess.step().unwrap();
+
+        // Plaintext: with w=0 every w̄ column is 0, so X̄w̄ = 0 and
+        // ḡ = c̄₀/2^l — i.e. ĝ(0) after dequantization.
+        let g0 = sess.sigmoid_poly().eval(0.0);
+        // decoded X̄ᵀḡ ≈ X̄ᵀ·(ḡ(0)·1) entrywise (exactly: quantized c̄₀).
+        let ds = train.take_rows_multiple_of(60, 3);
+        let xq = crate::quant::DatasetQuantizer::new(cfg.field(), cfg.lx);
+        let xbar = xq.quantize(&ds.x);
+        let xbar_real: Vec<f64> = xbar.iter().map(|&q| xq.dequantize_entry(q)).collect();
+        let ones_g: Vec<f64> = vec![g0; ds.m];
+        let expect = crate::model::tr_matvec(&xbar_real, &ones_g, ds.m, ds.d);
+        for (a, b) in xtg.iter().zip(expect.iter()) {
+            // c̄₀ rounding introduces ≤ 2^-(lc + r(lx+lw)) per-row error,
+            // times Σ|X̄| per column; keep a generous bound.
+            assert!((a - b).abs() < 1.0 + b.abs() * 0.01, "{a} vs {b}");
+        }
+        // And the weight moved in the -gradient direction.
+        let grad_dir: Vec<f64> = sess.w.clone();
+        let manual: Vec<f64> = {
+            let xty = crate::model::tr_matvec(&xbar_real, &ds.y, ds.m, ds.d);
+            expect
+                .iter()
+                .zip(xty.iter())
+                .map(|(&xg, &xy)| -eta / ds.m as f64 * (xg - xy))
+                .collect()
+        };
+        for (a, b) in grad_dir.iter().zip(manual.iter()) {
+            assert!((a - b).abs() < 1e-3 + b.abs() * 0.02, "{a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn straggling_does_not_change_results_only_timing() {
+        let train = synthetic_3v7(60, 5);
+        let mut cfg_a = quick_cfg(12, 3, 1);
+        cfg_a.iters = 3;
+        let mut cfg_b = cfg_a.clone();
+        cfg_b.straggler = StragglerModel { shift: 0.5, rate: 2.0, relative: true };
+        // Same seed → same masks/quantizations; decode is exact either way.
+        let mut sa = CodedMlSession::new(cfg_a, &train).unwrap();
+        let mut sb = CodedMlSession::new(cfg_b, &train).unwrap();
+        let ra = sa.train(3, None).unwrap();
+        let rb = sb.train(3, None).unwrap();
+        for (wa, wb) in ra.weights.iter().zip(rb.weights.iter()) {
+            assert!((wa - wb).abs() < 1e-12, "{wa} vs {wb}");
+        }
+    }
+
+    #[test]
+    fn tracer_records_phases() {
+        let train = synthetic_3v7(60, 25);
+        let mut sess = CodedMlSession::new(quick_cfg(10, 3, 1), &train).unwrap();
+        sess.set_tracer(crate::coordinator::Tracer::memory());
+        sess.step().unwrap();
+        sess.step().unwrap();
+        let events = sess.tracer().events();
+        // Two iterations × (collect + step).
+        assert_eq!(events.len(), 4);
+        assert_eq!(events[0].get("event").unwrap().as_str(), Some("collect"));
+        let fastest = events[0].get("fastest").unwrap().as_arr().unwrap();
+        assert_eq!(fastest.len(), 10, "threshold-many workers recorded");
+        assert!(events[1].get("encode_total_s").unwrap().as_f64().unwrap() > 0.0);
+    }
+
+    #[test]
+    fn packed_wire_reduces_bytes_not_results() {
+        let train = synthetic_3v7(60, 23);
+        let raw_cfg = quick_cfg(10, 3, 1);
+        let mut packed_cfg = raw_cfg.clone();
+        packed_cfg.packed_wire = true;
+        let mut raw = CodedMlSession::new(raw_cfg, &train).unwrap();
+        let mut packed = CodedMlSession::new(packed_cfg, &train).unwrap();
+        let r_raw = raw.train(3, None).unwrap();
+        let r_packed = packed.train(3, None).unwrap();
+        assert_eq!(r_raw.weights, r_packed.weights, "framing must not change math");
+        // 24-bit prime packs 64-bit words 8/3x smaller (± rounding).
+        let ratio = r_raw.bytes_sent as f64 / r_packed.bytes_sent as f64;
+        assert!((ratio - 64.0 / 24.0).abs() < 0.05, "ratio={ratio}");
+    }
+
+    #[test]
+    fn chebyshev_fit_session_trains() {
+        let train = synthetic_3v7(120, 24);
+        let mut cfg = quick_cfg(10, 3, 1);
+        cfg.fit_method = crate::sigmoid::FitMethod::Chebyshev;
+        let mut sess = CodedMlSession::new(cfg, &train).unwrap();
+        let report = sess.train(10, None).unwrap();
+        assert!(report.final_loss().unwrap() < report.iterations[0].train_loss);
+    }
+
+    #[test]
+    fn degree2_session_trains() {
+        // r=2: two independent weight quantizations, degree-5 worker
+        // polynomial, recovery threshold 5(K+T-1)+1.
+        let train = synthetic_3v7(120, 21);
+        let test = synthetic_3v7(120, 22);
+        let cfg = CodedMlConfig {
+            n: 11,
+            k: 2,
+            t: 1,
+            r: 2,
+            p: crate::field::PRIME_26, // r=2 scale needs the bigger budget
+            straggler: StragglerModel::none(),
+            net: NetworkModel::free(),
+            ..Default::default()
+        };
+        let mut sess = CodedMlSession::new(cfg, &train).unwrap();
+        assert_eq!(sess.params().recovery_threshold(), 11);
+        let report = sess.train(12, Some(&test)).unwrap();
+        assert!(report.final_accuracy().unwrap() > 0.8, "{report:?}");
+        assert!(report.final_loss().unwrap() < report.iterations[0].train_loss);
+    }
+
+    #[test]
+    fn report_accounts_bytes() {
+        let train = synthetic_3v7(40, 7);
+        let mut sess = CodedMlSession::new(quick_cfg(10, 2, 1), &train).unwrap();
+        let rep = sess.train(2, None).unwrap();
+        let (m, d) = sess.dims();
+        // dataset: N shares of (m/K)·d u64 + 2 iterations of N·d·r u64.
+        let expect_sent = (10 * (m / 2) * d * 8 + 2 * 10 * d * 8) as u64;
+        assert_eq!(rep.bytes_sent, expect_sent);
+        // received: 2 iterations × threshold(=7? K+T-1=2 → 3·2+1=7) × d.
+        assert_eq!(rep.recovery_threshold, 7);
+        assert_eq!(rep.bytes_received, (2 * 7 * d * 8) as u64);
+    }
+
+    #[test]
+    fn linear_regression_threshold_reuse() {
+        // CodingParams algebra is shared; the Linear op is exercised in
+        // cluster::worker tests and examples/linear_regression.rs.
+        let p = CodingParams::new(10, 3, 1, 1).unwrap();
+        assert_eq!(p.recovery_threshold(), 10);
+    }
+}

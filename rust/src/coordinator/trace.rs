@@ -1,0 +1,118 @@
+//! Structured session tracing: one JSONL event per phase per iteration,
+//! for post-hoc analysis (`codedml train --trace run.jsonl`). This is the
+//! observability a deployment needs to see *where* an iteration went slow
+//! (encode vs dispatch vs straggle vs decode) without attaching a profiler.
+
+use std::fs::File;
+use std::io::{BufWriter, Write as _};
+use std::path::Path;
+
+use crate::util::json::{obj, Json};
+
+/// A sink for trace events (JSONL file, or in-memory for tests).
+#[derive(Debug)]
+pub enum TraceSink {
+    Disabled,
+    File(BufWriter<File>),
+    Memory(Vec<Json>),
+}
+
+/// Session tracer.
+#[derive(Debug)]
+pub struct Tracer {
+    sink: TraceSink,
+}
+
+impl Tracer {
+    pub fn disabled() -> Self {
+        Tracer { sink: TraceSink::Disabled }
+    }
+
+    pub fn memory() -> Self {
+        Tracer { sink: TraceSink::Memory(Vec::new()) }
+    }
+
+    pub fn file(path: &Path) -> std::io::Result<Self> {
+        Ok(Tracer { sink: TraceSink::File(BufWriter::new(File::create(path)?)) })
+    }
+
+    pub fn enabled(&self) -> bool {
+        !matches!(self.sink, TraceSink::Disabled)
+    }
+
+    /// Emit one event.
+    pub fn event(&mut self, kind: &str, iter: u64, fields: &[(&str, Json)]) {
+        if let TraceSink::Disabled = self.sink {
+            return;
+        }
+        let mut all = vec![
+            ("event", Json::Str(kind.to_string())),
+            ("iter", Json::Num(iter as f64)),
+        ];
+        all.extend(fields.iter().cloned());
+        let record = obj(&all);
+        match &mut self.sink {
+            TraceSink::Disabled => {}
+            TraceSink::File(w) => {
+                let _ = writeln!(w, "{}", record.to_string());
+            }
+            TraceSink::Memory(v) => v.push(record),
+        }
+    }
+
+    /// In-memory events (tests).
+    pub fn events(&self) -> &[Json] {
+        match &self.sink {
+            TraceSink::Memory(v) => v,
+            _ => &[],
+        }
+    }
+
+    pub fn flush(&mut self) {
+        if let TraceSink::File(w) = &mut self.sink {
+            let _ = w.flush();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn disabled_is_free_and_empty() {
+        let mut t = Tracer::disabled();
+        assert!(!t.enabled());
+        t.event("step", 0, &[("x", Json::Num(1.0))]);
+        assert!(t.events().is_empty());
+    }
+
+    #[test]
+    fn memory_collects_events() {
+        let mut t = Tracer::memory();
+        t.event("encode", 3, &[("seconds", Json::Num(0.5))]);
+        t.event("decode", 3, &[("blocks", Json::Num(4.0))]);
+        assert_eq!(t.events().len(), 2);
+        assert_eq!(t.events()[0].get("event").unwrap().as_str(), Some("encode"));
+        assert_eq!(t.events()[1].get("iter").unwrap().as_f64(), Some(3.0));
+    }
+
+    #[test]
+    fn file_sink_writes_jsonl() {
+        let path = std::env::temp_dir().join(format!("trace_{}.jsonl", std::process::id()));
+        {
+            let mut t = Tracer::file(&path).unwrap();
+            t.event("step", 0, &[("comp_s", Json::Num(0.25))]);
+            t.event("step", 1, &[("comp_s", Json::Num(0.5))]);
+            t.flush();
+        }
+        let text = std::fs::read_to_string(&path).unwrap();
+        let lines: Vec<&str> = text.lines().collect();
+        assert_eq!(lines.len(), 2);
+        for l in lines {
+            let v = Json::parse(l).unwrap();
+            assert!(v.get("event").is_some());
+        }
+        std::fs::remove_file(&path).unwrap();
+    }
+}

@@ -1,0 +1,214 @@
+//! MNIST IDX loader.
+//!
+//! Parses the classic `train-images-idx3-ubyte` / `train-labels-idx1-ubyte`
+//! files (optionally the t10k pair for the test split), filters digits
+//! 3 and 7, normalizes pixels to [0, 1], and relabels 3 ↦ 1, 7 ↦ 0 — the
+//! binary task of the paper's Figure 3. Used when `MNIST_DIR` is set;
+//! otherwise [`super::synthetic_3v7`] is the offline substitute.
+
+use std::fs;
+use std::path::Path;
+
+use super::Dataset;
+
+#[derive(Debug)]
+pub enum MnistError {
+    Io(std::io::Error),
+    BadMagic { file: String, got: u32 },
+    Truncated(String),
+    CountMismatch { images: usize, labels: usize },
+    NotEnough { want: usize, have: usize },
+}
+
+impl std::fmt::Display for MnistError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            MnistError::Io(e) => write!(f, "io: {e}"),
+            MnistError::BadMagic { file, got } => write!(f, "{file}: bad magic {got:#x}"),
+            MnistError::Truncated(file) => write!(f, "{file}: truncated"),
+            MnistError::CountMismatch { images, labels } => {
+                write!(f, "{images} images vs {labels} labels")
+            }
+            MnistError::NotEnough { want, have } => {
+                write!(f, "need {want} 3/7 samples, file has {have}")
+            }
+        }
+    }
+}
+
+impl std::error::Error for MnistError {}
+
+impl From<std::io::Error> for MnistError {
+    fn from(e: std::io::Error) -> Self {
+        MnistError::Io(e)
+    }
+}
+
+fn read_u32(buf: &[u8], at: usize, file: &str) -> Result<u32, MnistError> {
+    buf.get(at..at + 4)
+        .map(|b| u32::from_be_bytes([b[0], b[1], b[2], b[3]]))
+        .ok_or_else(|| MnistError::Truncated(file.to_string()))
+}
+
+/// Parse an IDX3 image file → (images as flat rows of d pixels, d).
+pub(crate) fn parse_idx3(buf: &[u8], file: &str) -> Result<(Vec<Vec<u8>>, usize), MnistError> {
+    let magic = read_u32(buf, 0, file)?;
+    if magic != 0x0000_0803 {
+        return Err(MnistError::BadMagic { file: file.to_string(), got: magic });
+    }
+    let n = read_u32(buf, 4, file)? as usize;
+    let rows = read_u32(buf, 8, file)? as usize;
+    let cols = read_u32(buf, 12, file)? as usize;
+    let d = rows * cols;
+    let body = buf.get(16..).ok_or_else(|| MnistError::Truncated(file.to_string()))?;
+    if body.len() < n * d {
+        return Err(MnistError::Truncated(file.to_string()));
+    }
+    Ok(((0..n).map(|i| body[i * d..(i + 1) * d].to_vec()).collect(), d))
+}
+
+/// Parse an IDX1 label file.
+pub(crate) fn parse_idx1(buf: &[u8], file: &str) -> Result<Vec<u8>, MnistError> {
+    let magic = read_u32(buf, 0, file)?;
+    if magic != 0x0000_0801 {
+        return Err(MnistError::BadMagic { file: file.to_string(), got: magic });
+    }
+    let n = read_u32(buf, 4, file)? as usize;
+    let body = buf.get(8..).ok_or_else(|| MnistError::Truncated(file.to_string()))?;
+    if body.len() < n {
+        return Err(MnistError::Truncated(file.to_string()));
+    }
+    Ok(body[..n].to_vec())
+}
+
+fn load_pair(dir: &Path, images: &str, labels: &str) -> Result<(Vec<Vec<u8>>, Vec<u8>, usize), MnistError> {
+    let ibuf = fs::read(dir.join(images))?;
+    let lbuf = fs::read(dir.join(labels))?;
+    let (imgs, d) = parse_idx3(&ibuf, images)?;
+    let labs = parse_idx1(&lbuf, labels)?;
+    if imgs.len() != labs.len() {
+        return Err(MnistError::CountMismatch { images: imgs.len(), labels: labs.len() });
+    }
+    Ok((imgs, labs, d))
+}
+
+fn filter_3v7(imgs: &[Vec<u8>], labs: &[u8], want: usize, d: usize, source: &str) -> Result<Dataset, MnistError> {
+    let mut x = Vec::with_capacity(want * d);
+    let mut y = Vec::with_capacity(want);
+    for (img, &lab) in imgs.iter().zip(labs.iter()) {
+        if y.len() == want {
+            break;
+        }
+        let label = match lab {
+            3 => 1.0,
+            7 => 0.0,
+            _ => continue,
+        };
+        x.extend(img.iter().map(|&px| px as f64 / 255.0));
+        y.push(label);
+    }
+    if y.len() < want {
+        return Err(MnistError::NotEnough { want, have: y.len() });
+    }
+    Ok(Dataset::new(x, y, want, d, source))
+}
+
+/// Load train/test 3-vs-7 datasets from an MNIST directory. The test split
+/// comes from the t10k files when present, otherwise from the tail of the
+/// training files.
+pub fn load_mnist_3v7(dir: &str, train_m: usize, test_m: usize) -> Result<(Dataset, Dataset), MnistError> {
+    let dir = Path::new(dir);
+    let (imgs, labs, d) = load_pair(dir, "train-images-idx3-ubyte", "train-labels-idx1-ubyte")?;
+    let train = filter_3v7(&imgs, &labs, train_m, d, "mnist-3v7")?;
+    let test = if dir.join("t10k-images-idx3-ubyte").exists() {
+        let (ti, tl, _) = load_pair(dir, "t10k-images-idx3-ubyte", "t10k-labels-idx1-ubyte")?;
+        filter_3v7(&ti, &tl, test_m, d, "mnist-3v7-test")?
+    } else {
+        let mut ri: Vec<Vec<u8>> = imgs;
+        let mut rl = labs;
+        ri.reverse();
+        rl.reverse();
+        filter_3v7(&ri, &rl, test_m, d, "mnist-3v7-test")?
+    };
+    Ok((train, test))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Build a tiny valid IDX pair in memory.
+    fn fake_idx(n: usize, side: usize) -> (Vec<u8>, Vec<u8>) {
+        let mut img = vec![];
+        img.extend_from_slice(&0x0803u32.to_be_bytes());
+        img.extend_from_slice(&(n as u32).to_be_bytes());
+        img.extend_from_slice(&(side as u32).to_be_bytes());
+        img.extend_from_slice(&(side as u32).to_be_bytes());
+        for i in 0..n * side * side {
+            img.push((i % 251) as u8);
+        }
+        let mut lab = vec![];
+        lab.extend_from_slice(&0x0801u32.to_be_bytes());
+        lab.extend_from_slice(&(n as u32).to_be_bytes());
+        for i in 0..n {
+            lab.push(if i % 2 == 0 { 3 } else { 7 });
+        }
+        (img, lab)
+    }
+
+    #[test]
+    fn parses_valid_idx() {
+        let (img, lab) = fake_idx(6, 4);
+        let (imgs, d) = parse_idx3(&img, "t").unwrap();
+        assert_eq!(imgs.len(), 6);
+        assert_eq!(d, 16);
+        let labs = parse_idx1(&lab, "t").unwrap();
+        assert_eq!(labs, vec![3, 7, 3, 7, 3, 7]);
+    }
+
+    #[test]
+    fn rejects_bad_magic() {
+        let (mut img, _) = fake_idx(2, 4);
+        img[3] = 0x99;
+        assert!(matches!(parse_idx3(&img, "t"), Err(MnistError::BadMagic { .. })));
+    }
+
+    #[test]
+    fn rejects_truncated() {
+        let (img, _) = fake_idx(2, 4);
+        assert!(matches!(
+            parse_idx3(&img[..20], "t"),
+            Err(MnistError::Truncated(_))
+        ));
+        assert!(matches!(parse_idx1(&[0, 0], "t"), Err(MnistError::Truncated(_))));
+    }
+
+    #[test]
+    fn end_to_end_via_tempdir() {
+        let dir = std::env::temp_dir().join(format!("mnist_test_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let (img, lab) = fake_idx(20, 28);
+        std::fs::write(dir.join("train-images-idx3-ubyte"), &img).unwrap();
+        std::fs::write(dir.join("train-labels-idx1-ubyte"), &lab).unwrap();
+        let (train, test) = load_mnist_3v7(dir.to_str().unwrap(), 8, 4).unwrap();
+        assert_eq!(train.m, 8);
+        assert_eq!(train.d, 784);
+        assert_eq!(test.m, 4);
+        assert!(train.x.iter().all(|&v| (0.0..=1.0).contains(&v)));
+        // 3 ↦ 1, 7 ↦ 0, alternating in the fake file.
+        assert_eq!(train.y[0], 1.0);
+        assert_eq!(train.y[1], 0.0);
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn not_enough_samples_error() {
+        let (img, lab) = fake_idx(4, 4);
+        let (imgs, d) = parse_idx3(&img, "t").unwrap();
+        let labs = parse_idx1(&lab, "t").unwrap();
+        assert!(matches!(
+            filter_3v7(&imgs, &labs, 10, d, "t"),
+            Err(MnistError::NotEnough { want: 10, have: 4 })
+        ));
+    }
+}

@@ -1,0 +1,151 @@
+//! Datasets: the MNIST 3-vs-7 task of §5, with a synthetic surrogate when
+//! the real IDX files are absent (this environment is offline; see
+//! DESIGN.md §Substitutions).
+
+mod mnist;
+mod synth;
+
+pub use mnist::{load_mnist_3v7, MnistError};
+pub use synth::synthetic_3v7;
+
+/// A dense binary-classification dataset.
+#[derive(Debug, Clone)]
+pub struct Dataset {
+    /// Row-major m×d features.
+    pub x: Vec<f64>,
+    /// Labels in {0.0, 1.0}, length m.
+    pub y: Vec<f64>,
+    pub m: usize,
+    pub d: usize,
+    /// Provenance, e.g. "mnist-3v7" or "synthetic-3v7".
+    pub source: String,
+}
+
+impl Dataset {
+    pub fn new(x: Vec<f64>, y: Vec<f64>, m: usize, d: usize, source: &str) -> Self {
+        assert_eq!(x.len(), m * d);
+        assert_eq!(y.len(), m);
+        assert!(y.iter().all(|&v| v == 0.0 || v == 1.0));
+        Dataset { x, y, m, d, source: source.to_string() }
+    }
+
+    /// Largest absolute feature value (drives the overflow budget).
+    pub fn max_abs_x(&self) -> f64 {
+        self.x.iter().fold(0.0f64, |acc, &v| acc.max(v.abs()))
+    }
+
+    /// Duplicate features d → 2d (the paper's footnote 1: "To have a larger
+    /// dataset we duplicate the MNIST dataset", giving d = 1568).
+    pub fn duplicate_features(&self) -> Dataset {
+        let d2 = self.d * 2;
+        let mut x = Vec::with_capacity(self.m * d2);
+        for i in 0..self.m {
+            let row = &self.x[i * self.d..(i + 1) * self.d];
+            x.extend_from_slice(row);
+            x.extend_from_slice(row);
+        }
+        Dataset::new(x, self.y.clone(), self.m, d2, &format!("{}-dup", self.source))
+    }
+
+    /// Truncate (or keep) to the first `m` rows, rounding down so `m` is a
+    /// multiple of `k` (LCC needs K equal blocks).
+    pub fn take_rows_multiple_of(&self, m: usize, k: usize) -> Dataset {
+        let m = (m.min(self.m) / k) * k;
+        assert!(m > 0, "dataset too small for K={k}");
+        Dataset::new(
+            self.x[..m * self.d].to_vec(),
+            self.y[..m].to_vec(),
+            m,
+            self.d,
+            &self.source,
+        )
+    }
+
+    /// Split into (train, test) at `train_m` rows.
+    pub fn split(&self, train_m: usize) -> (Dataset, Dataset) {
+        assert!(train_m < self.m);
+        let train = Dataset::new(
+            self.x[..train_m * self.d].to_vec(),
+            self.y[..train_m].to_vec(),
+            train_m,
+            self.d,
+            &self.source,
+        );
+        let test_m = self.m - train_m;
+        let test = Dataset::new(
+            self.x[train_m * self.d..].to_vec(),
+            self.y[train_m..].to_vec(),
+            test_m,
+            self.d,
+            &self.source,
+        );
+        (train, test)
+    }
+}
+
+/// Load the paper's dataset: real MNIST if `MNIST_DIR` is set and parses,
+/// otherwise the synthetic surrogate. Returns (train, test).
+pub fn paper_dataset(train_m: usize, test_m: usize, seed: u64) -> (Dataset, Dataset) {
+    if let Ok(dir) = std::env::var("MNIST_DIR") {
+        match load_mnist_3v7(&dir, train_m, test_m) {
+            Ok(pair) => return pair,
+            Err(e) => eprintln!("MNIST_DIR set but unusable ({e}); using synthetic surrogate"),
+        }
+    }
+    let full = synthetic_3v7(train_m + test_m, seed);
+    full.split(train_m)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn duplicate_features_doubles_d() {
+        let ds = synthetic_3v7(10, 1);
+        let dup = ds.duplicate_features();
+        assert_eq!(dup.d, ds.d * 2);
+        assert_eq!(dup.m, ds.m);
+        // Row content is the row twice.
+        for i in 0..ds.m {
+            let orig = &ds.x[i * ds.d..(i + 1) * ds.d];
+            let two = &dup.x[i * dup.d..(i + 1) * dup.d];
+            assert_eq!(&two[..ds.d], orig);
+            assert_eq!(&two[ds.d..], orig);
+        }
+    }
+
+    #[test]
+    fn take_rows_rounds_to_block_multiple() {
+        let ds = synthetic_3v7(100, 2);
+        let cut = ds.take_rows_multiple_of(95, 8);
+        assert_eq!(cut.m, 88);
+        assert_eq!(cut.d, ds.d);
+    }
+
+    #[test]
+    fn split_partitions_rows() {
+        let ds = synthetic_3v7(50, 3);
+        let (tr, te) = ds.split(40);
+        assert_eq!(tr.m, 40);
+        assert_eq!(te.m, 10);
+        assert_eq!(tr.x.len(), 40 * ds.d);
+        assert_eq!(te.y.len(), 10);
+    }
+
+    #[test]
+    #[should_panic]
+    fn rejects_mislabeled() {
+        Dataset::new(vec![0.0; 4], vec![0.5, 1.0], 2, 2, "bad");
+    }
+
+    #[test]
+    fn paper_dataset_falls_back_to_synthetic() {
+        // (MNIST_DIR unset in tests.)
+        let (tr, te) = paper_dataset(64, 16, 7);
+        assert_eq!(tr.m, 64);
+        assert_eq!(te.m, 16);
+        assert_eq!(tr.d, 784);
+        assert!(tr.source.contains("synthetic"));
+    }
+}

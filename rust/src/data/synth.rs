@@ -1,0 +1,198 @@
+//! Synthetic 3-vs-7 surrogate dataset.
+//!
+//! Offline stand-in for MNIST (DESIGN.md §Substitutions): two smooth
+//! 28×28 class prototypes — a stylized "3" and "7" drawn with thick
+//! strokes — plus per-sample amplitude jitter, translation, and pixel
+//! noise. Pixels live in [0, 1] like normalized MNIST; plaintext logistic
+//! regression reaches the same ≈95–96% accuracy regime at 25 iterations,
+//! which is the property Figures 3–4 depend on. Runtime-scaling
+//! experiments only depend on (m, d), which match exactly.
+
+use super::Dataset;
+use crate::util::Rng;
+
+const SIDE: usize = 28;
+const D: usize = SIDE * SIDE;
+
+/// Rasterize a polyline with a thick soft brush into a SIDE×SIDE canvas.
+fn draw(canvas: &mut [f64], pts: &[(f64, f64)], thickness: f64) {
+    let steps = 160;
+    for seg in pts.windows(2) {
+        let (x0, y0) = seg[0];
+        let (x1, y1) = seg[1];
+        for s in 0..=steps {
+            let t = s as f64 / steps as f64;
+            let cx = x0 + (x1 - x0) * t;
+            let cy = y0 + (y1 - y0) * t;
+            let lo_r = (cy - 2.0 * thickness).floor().max(0.0) as usize;
+            let hi_r = (cy + 2.0 * thickness).ceil().min(SIDE as f64 - 1.0) as usize;
+            let lo_c = (cx - 2.0 * thickness).floor().max(0.0) as usize;
+            let hi_c = (cx + 2.0 * thickness).ceil().min(SIDE as f64 - 1.0) as usize;
+            for rr in lo_r..=hi_r {
+                for cc in lo_c..=hi_c {
+                    let dist2 = (rr as f64 - cy).powi(2) + (cc as f64 - cx).powi(2);
+                    let v = (-dist2 / (thickness * thickness)).exp();
+                    let cell = &mut canvas[rr * SIDE + cc];
+                    *cell = (*cell + v).min(1.0);
+                }
+            }
+        }
+    }
+}
+
+/// Class prototype for digit "3".
+fn proto3() -> Vec<f64> {
+    let mut c = vec![0.0; D];
+    // Two stacked arcs approximated by polylines.
+    draw(
+        &mut c,
+        &[(8.0, 6.0), (18.0, 5.0), (20.0, 9.0), (14.0, 13.0)],
+        1.3,
+    );
+    draw(
+        &mut c,
+        &[(14.0, 13.0), (21.0, 16.0), (19.0, 21.0), (8.0, 22.0)],
+        1.3,
+    );
+    c
+}
+
+/// Class prototype for digit "7".
+fn proto7() -> Vec<f64> {
+    let mut c = vec![0.0; D];
+    draw(&mut c, &[(7.0, 6.0), (21.0, 6.0)], 1.3); // top bar
+    draw(&mut c, &[(21.0, 6.0), (12.0, 22.0)], 1.3); // diagonal
+    draw(&mut c, &[(11.0, 14.0), (18.0, 14.0)], 1.0); // crossbar
+    c
+}
+
+/// Translate a canvas by integer (dr, dc), zero-filling.
+fn shift(src: &[f64], dr: i64, dc: i64) -> Vec<f64> {
+    let mut out = vec![0.0; D];
+    for r in 0..SIDE as i64 {
+        for c in 0..SIDE as i64 {
+            let (sr, sc) = (r - dr, c - dc);
+            if (0..SIDE as i64).contains(&sr) && (0..SIDE as i64).contains(&sc) {
+                out[(r * SIDE as i64 + c) as usize] = src[(sr * SIDE as i64 + sc) as usize];
+            }
+        }
+    }
+    out
+}
+
+/// Generate `m` samples (alternating labels), d = 784, pixels in [0, 1].
+/// Label 1 ↦ digit 3, label 0 ↦ digit 7 (binary task of Figure 3).
+///
+/// Difficulty is tuned so plaintext logistic regression lands in the
+/// paper's ≈95–97% regime at 25 iterations rather than saturating: per-
+/// sample translation, amplitude jitter, pixel noise, a random occlusion
+/// patch, and a small rate of ambiguous samples (a blend of both
+/// prototypes — MNIST's hard 3s-that-look-like-7s).
+pub fn synthetic_3v7(m: usize, seed: u64) -> Dataset {
+    let p3 = proto3();
+    let p7 = proto7();
+    let mut rng = Rng::new(seed ^ 0x3A7);
+    let mut x = Vec::with_capacity(m * D);
+    let mut y = Vec::with_capacity(m);
+    for i in 0..m {
+        let label = (i % 2) as u64;
+        let (own, other) = if label == 1 { (&p3, &p7) } else { (&p7, &p3) };
+        let dr = rng.below(7) as i64 - 3;
+        let dc = rng.below(7) as i64 - 3;
+        let shifted = shift(own, dr, dc);
+        let amp = rng.range_f64(0.65, 1.0);
+        // ~5% ambiguous samples blend in a dose of the other class.
+        let blend = if rng.bernoulli(0.05) { rng.range_f64(0.40, 0.65) } else { 0.0 };
+        // Random occlusion patch (sensor dropout / heavy stroke overlap).
+        let (pr, pc) = (rng.below_usize(SIDE - 5), rng.below_usize(SIDE - 5));
+        let start = x.len();
+        for (idx, (&v, &o)) in shifted.iter().zip(other.iter()).enumerate() {
+            let noise = rng.range_f64(-0.07, 0.07);
+            let mixed = v * (1.0 - blend) + o * blend;
+            let (r, c) = (idx / SIDE, idx % SIDE);
+            let occluded = r >= pr && r < pr + 5 && c >= pc && c < pc + 5;
+            let px = if occluded { 0.0 } else { (mixed * amp + noise).clamp(0.0, 1.0) };
+            x.push(px);
+        }
+        debug_assert_eq!(x.len() - start, D);
+        y.push(label as f64);
+    }
+    Dataset::new(x, y, m, D, "synthetic-3v7")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::LogisticRegression;
+
+    #[test]
+    fn shapes_and_range() {
+        let ds = synthetic_3v7(20, 1);
+        assert_eq!(ds.m, 20);
+        assert_eq!(ds.d, 784);
+        assert!(ds.x.iter().all(|&v| (0.0..=1.0).contains(&v)));
+        assert!(ds.max_abs_x() <= 1.0);
+        // Balanced labels.
+        let ones: usize = ds.y.iter().filter(|&&v| v == 1.0).count();
+        assert_eq!(ones, 10);
+    }
+
+    #[test]
+    fn deterministic_per_seed() {
+        let a = synthetic_3v7(8, 42);
+        let b = synthetic_3v7(8, 42);
+        assert_eq!(a.x, b.x);
+        let c = synthetic_3v7(8, 43);
+        assert_ne!(a.x, c.x);
+    }
+
+    #[test]
+    fn class_means_are_separated() {
+        // Per-sample jitter is large by design; what must hold is that the
+        // *class mean images* are well separated — that is what a linear
+        // model exploits.
+        let ds = synthetic_3v7(100, 3);
+        let mut mean0 = vec![0.0f64; ds.d];
+        let mut mean1 = vec![0.0f64; ds.d];
+        let (mut n0, mut n1) = (0.0, 0.0);
+        for i in 0..ds.m {
+            let row = &ds.x[i * ds.d..(i + 1) * ds.d];
+            if ds.y[i] == 0.0 {
+                n0 += 1.0;
+                for (m, &v) in mean0.iter_mut().zip(row) {
+                    *m += v;
+                }
+            } else {
+                n1 += 1.0;
+                for (m, &v) in mean1.iter_mut().zip(row) {
+                    *m += v;
+                }
+            }
+        }
+        let sep: f64 = mean0
+            .iter()
+            .zip(mean1.iter())
+            .map(|(a, b)| (a / n0 - b / n1).powi(2))
+            .sum::<f64>()
+            .sqrt();
+        assert!(sep > 3.0, "class-mean separation {sep}");
+    }
+
+    #[test]
+    fn plaintext_lr_reaches_paper_accuracy_regime() {
+        // The surrogate must land logistic regression in the ≈95% range
+        // within 25 iterations — the property Figures 3/4 rely on.
+        let train = synthetic_3v7(256, 11);
+        let test = synthetic_3v7(256, 12);
+        let mut lr = LogisticRegression::new(train.d);
+        let eta = lr.lipschitz_lr(&train);
+        for _ in 0..25 {
+            lr.step(&train, eta);
+        }
+        let acc = lr.accuracy(&test);
+        // Paper regime ≈95%; the surrogate's ambiguous-sample rate gives
+        // ±3% seed variance, so gate at 90 and cap at 99.5 (must not
+        // saturate — that would make Figure 3 meaningless).
+        assert!((0.90..=0.995).contains(&acc), "accuracy={acc}");
+    }
+}

@@ -1,0 +1,27 @@
+//! Prime-field arithmetic and polynomial algebra over F_p.
+//!
+//! Everything CodedPrivateML computes on the workers lives in F_p for a
+//! prime `p` small enough that products of two elements fit in an i64 dot
+//! product without intermediate reduction (see `PrimeField::MAX_XLA_BITS`).
+//! The paper's default is p = 15485863, the largest 24-bit prime.
+
+mod poly;
+mod prime;
+
+pub use poly::{
+    eval_poly, interpolate, lagrange_basis_at, lagrange_coeffs, InterpolationError,
+};
+pub use prime::PrimeField;
+
+/// The paper's field: largest prime below 2^24 used in its 64-bit
+/// implementation (§5, "CodedPrivateML parameters").
+pub const PAPER_PRIME: u64 = 15_485_863;
+
+/// A larger 26-bit prime giving ~4x more dynamic range at decode while still
+/// safe for i64 accumulation over ≤ 2048-column dot products (see
+/// `PrimeField::check_dot_safe`). Used by the d=1568 paper-scale configs.
+pub const PRIME_26: u64 = 67_108_859;
+
+/// 31-bit prime for native-backend headroom experiments (not XLA-safe for
+/// long dots; `check_dot_safe` enforces the limit).
+pub const PRIME_31: u64 = 2_147_483_647;

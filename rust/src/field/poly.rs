@@ -1,0 +1,292 @@
+//! Polynomial evaluation and Lagrange interpolation over F_p.
+//!
+//! The decode step of CodedPrivateML interpolates the degree-
+//! `(2r+1)(K+T-1)` polynomial `h(z) = f(u(z), v(z))` from the evaluations
+//! `h(α_i)` returned by the fastest workers, then evaluates it at the
+//! dataset points `β_k` (§3.4). Because `h` is vector-valued (one scalar
+//! polynomial per gradient coordinate), interpolation is expressed as a
+//! *coefficient vector*: `h(β) = Σ_i λ_i · h(α_i)` with the λ_i computed
+//! once per (worker subset, β) pair — turning decode into a dense
+//! matrix-vector product.
+
+use super::prime::PrimeField;
+
+/// Error from interpolation setup.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum InterpolationError {
+    /// Two evaluation points coincide.
+    DuplicatePoint(u64),
+    /// Need at least one point.
+    Empty,
+}
+
+impl std::fmt::Display for InterpolationError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            InterpolationError::DuplicatePoint(x) => {
+                write!(f, "duplicate interpolation point {x}")
+            }
+            InterpolationError::Empty => write!(f, "no interpolation points"),
+        }
+    }
+}
+
+impl std::error::Error for InterpolationError {}
+
+/// Evaluate a polynomial given coefficients `[c_0, c_1, ...]` (ascending)
+/// at `z` via Horner's rule.
+pub fn eval_poly(f: &PrimeField, coeffs: &[u64], z: u64) -> u64 {
+    let mut acc = 0u64;
+    for &c in coeffs.iter().rev() {
+        acc = f.add(f.mul(acc, z), c);
+    }
+    acc
+}
+
+/// Lagrange basis coefficients λ_i for evaluating at `target`, given
+/// interpolation points `points`:  L(target) = Σ λ_i · values_i where
+/// λ_i = Π_{j≠i} (target − x_j) / (x_i − x_j).
+///
+/// Uses the product formula with batch inversion: O(n) inversions total.
+pub fn lagrange_coeffs(
+    f: &PrimeField,
+    points: &[u64],
+    target: u64,
+) -> Result<Vec<u64>, InterpolationError> {
+    let n = points.len();
+    if n == 0 {
+        return Err(InterpolationError::Empty);
+    }
+    // Detect duplicates (n is small — tens of workers — so O(n^2) is fine
+    // and avoids allocating a hash set).
+    for i in 0..n {
+        for j in i + 1..n {
+            if points[i] == points[j] {
+                return Err(InterpolationError::DuplicatePoint(points[i]));
+            }
+        }
+    }
+    // If target coincides with a point, the basis is an indicator.
+    if let Some(k) = points.iter().position(|&x| x == target) {
+        let mut out = vec![0u64; n];
+        out[k] = 1;
+        return Ok(out);
+    }
+    // full = Π_j (target − x_j)
+    let diffs_t: Vec<u64> = points.iter().map(|&x| f.sub(target, x)).collect();
+    let mut full = 1u64;
+    for &d in &diffs_t {
+        full = f.mul(full, d);
+    }
+    // denom_i = (target − x_i) · Π_{j≠i} (x_i − x_j)
+    let mut denoms = Vec::with_capacity(n);
+    for i in 0..n {
+        let mut d = diffs_t[i];
+        for j in 0..n {
+            if j != i {
+                d = f.mul(d, f.sub(points[i], points[j]));
+            }
+        }
+        denoms.push(d);
+    }
+    let inv_denoms = f.batch_inv(&denoms);
+    Ok(inv_denoms.iter().map(|&inv_d| f.mul(full, inv_d)).collect())
+}
+
+/// Evaluate the interpolating polynomial through `(points_i, values_i)` at
+/// `target` directly.
+pub fn lagrange_basis_at(
+    f: &PrimeField,
+    points: &[u64],
+    values: &[u64],
+    target: u64,
+) -> Result<u64, InterpolationError> {
+    assert_eq!(points.len(), values.len());
+    let lam = lagrange_coeffs(f, points, target)?;
+    let mut acc = 0u64;
+    for (l, v) in lam.iter().zip(values.iter()) {
+        acc = f.add(acc, f.mul(*l, *v));
+    }
+    Ok(acc)
+}
+
+/// Full interpolation: recover the coefficient vector (ascending, length n)
+/// of the unique degree-< n polynomial through the given points. O(n^2).
+///
+/// The training loop never needs explicit coefficients (it uses
+/// [`lagrange_coeffs`]); this is used by tests and the privacy audit to
+/// verify degrees.
+pub fn interpolate(
+    f: &PrimeField,
+    points: &[u64],
+    values: &[u64],
+) -> Result<Vec<u64>, InterpolationError> {
+    assert_eq!(points.len(), values.len());
+    let n = points.len();
+    if n == 0 {
+        return Err(InterpolationError::Empty);
+    }
+    for i in 0..n {
+        for j in i + 1..n {
+            if points[i] == points[j] {
+                return Err(InterpolationError::DuplicatePoint(points[i]));
+            }
+        }
+    }
+    // Newton's divided differences in F_p.
+    let mut coef = values.to_vec(); // divided-difference table, in place
+    for level in 1..n {
+        for i in (level..n).rev() {
+            let num = f.sub(coef[i], coef[i - 1]);
+            let den = f.sub(points[i], points[i - level]);
+            coef[i] = f.mul(num, f.inv(den));
+        }
+    }
+    // Expand Newton form to monomial coefficients.
+    let mut out = vec![0u64; n];
+    for i in (0..n).rev() {
+        // out = out * (z - x_i) + coef[i]
+        let mut next = vec![0u64; n];
+        for k in (0..n - 1).rev() {
+            // shift: next[k+1] += out[k]
+            next[k + 1] = f.add(next[k + 1], out[k]);
+        }
+        for k in 0..n {
+            let minus = f.mul(out[k], points[i]);
+            next[k] = f.sub(next[k], minus);
+        }
+        next[0] = f.add(next[0], coef[i]);
+        out = next;
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::field::PAPER_PRIME;
+    use crate::util::proptest::check;
+    use crate::util::Rng;
+
+    fn field() -> PrimeField {
+        PrimeField::new(PAPER_PRIME)
+    }
+
+    #[test]
+    fn eval_poly_horner() {
+        let f = field();
+        // 3 + 2z + z^2 at z=5 → 3 + 10 + 25 = 38
+        assert_eq!(eval_poly(&f, &[3, 2, 1], 5), 38);
+        assert_eq!(eval_poly(&f, &[], 5), 0);
+        assert_eq!(eval_poly(&f, &[7], 12345), 7);
+    }
+
+    #[test]
+    fn interpolation_recovers_random_polynomials() {
+        let f = field();
+        check("interp-roundtrip", 100, move |rng| {
+            let deg = rng.below_usize(12);
+            let coeffs: Vec<u64> = (0..=deg).map(|_| f.random(rng)).collect();
+            let n = deg + 1;
+            let points = f.distinct_points(n + rng.below_usize(4));
+            let values: Vec<u64> = points.iter().map(|&x| eval_poly(&f, &coeffs, x)).collect();
+            // Interpolate from exactly n points.
+            let got = interpolate(&f, &points[..n], &values[..n]).unwrap();
+            if got != coeffs {
+                return Err(format!("coeffs mismatch: {got:?} vs {coeffs:?}"));
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn lagrange_coeffs_match_direct_eval() {
+        let f = field();
+        check("lagrange-eval", 100, move |rng| {
+            let n = 1 + rng.below_usize(16);
+            let coeffs: Vec<u64> = (0..n).map(|_| f.random(rng)).collect();
+            let points = f.distinct_points(n);
+            let values: Vec<u64> = points.iter().map(|&x| eval_poly(&f, &coeffs, x)).collect();
+            let target = f.random(rng);
+            let via_basis = lagrange_basis_at(&f, &points, &values, target).unwrap();
+            let direct = eval_poly(&f, &coeffs, target);
+            if via_basis != direct {
+                return Err(format!("{via_basis} != {direct} (n={n}, target={target})"));
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn basis_at_interpolation_point_is_indicator() {
+        let f = field();
+        let points = f.distinct_points(6);
+        let lam = lagrange_coeffs(&f, &points, points[3]).unwrap();
+        assert_eq!(lam, vec![0, 0, 0, 1, 0, 0]);
+    }
+
+    #[test]
+    fn basis_sums_to_one() {
+        // Σ_i L_i(z) = 1 for any z (interpolating the constant 1).
+        let f = field();
+        check("basis-partition-of-unity", 50, move |rng| {
+            let n = 1 + rng.below_usize(20);
+            let points = f.distinct_points(n);
+            let target = f.random(rng);
+            let lam = lagrange_coeffs(&f, &points, target).unwrap();
+            let sum = lam.iter().fold(0u64, |acc, &l| f.add(acc, l));
+            if sum != 1 {
+                return Err(format!("sum={sum}"));
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn duplicate_points_rejected() {
+        let f = field();
+        let err = lagrange_coeffs(&f, &[1, 2, 2], 5).unwrap_err();
+        assert_eq!(err, InterpolationError::DuplicatePoint(2));
+        let err = interpolate(&f, &[3, 3], &[1, 2]).unwrap_err();
+        assert_eq!(err, InterpolationError::DuplicatePoint(3));
+    }
+
+    #[test]
+    fn empty_rejected() {
+        let f = field();
+        assert_eq!(lagrange_coeffs(&f, &[], 5).unwrap_err(), InterpolationError::Empty);
+        assert_eq!(interpolate(&f, &[], &[]).unwrap_err(), InterpolationError::Empty);
+    }
+
+    #[test]
+    fn degree_of_product_polynomial() {
+        // Sanity for the recovery-threshold algebra: if u and v have degree
+        // K+T-1, then f(u,v) with deg(f)=2r+1 has degree (2r+1)(K+T-1).
+        // Emulate with scalar polynomials: h(z) = u(z)^2 · v(z).
+        let f = field();
+        let mut rng = Rng::new(77);
+        let kt = 4; // K+T-1 = 3
+        let u: Vec<u64> = (0..kt).map(|_| f.random(&mut rng)).collect();
+        let v: Vec<u64> = (0..kt).map(|_| f.random(&mut rng)).collect();
+        let deg_h = 3 * (kt - 1);
+        let points = f.distinct_points(deg_h + 1);
+        let values: Vec<u64> = points
+            .iter()
+            .map(|&z| {
+                let uz = eval_poly(&f, &u, z);
+                let vz = eval_poly(&f, &v, z);
+                f.mul(f.mul(uz, uz), vz)
+            })
+            .collect();
+        let coeffs = interpolate(&f, &points, &values).unwrap();
+        // Highest coefficient index with nonzero value == deg_h (generic).
+        let top = coeffs.iter().rposition(|&c| c != 0).unwrap();
+        assert_eq!(top, deg_h);
+        // And evaluation matches everywhere else.
+        for z in 100..110u64 {
+            let uz = eval_poly(&f, &u, z);
+            let vz = eval_poly(&f, &v, z);
+            assert_eq!(eval_poly(&f, &coeffs, z), f.mul(f.mul(uz, uz), vz));
+        }
+    }
+}

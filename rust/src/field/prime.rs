@@ -1,0 +1,389 @@
+//! F_p scalar arithmetic.
+//!
+//! Elements are `u64` in `[0, p)`. The modulus is a runtime value (one
+//! training session may use the paper's 24-bit prime while a headroom
+//! experiment uses a 31-bit one), so `PrimeField` is a small copyable
+//! context passed where needed rather than a const generic.
+
+use crate::util::Rng;
+
+/// Arithmetic context for the prime field F_p.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct PrimeField {
+    p: u64,
+}
+
+impl PrimeField {
+    /// Largest modulus (in bits) for which the XLA int64 path may skip
+    /// intermediate reductions: products are < 2^(2·bits) and we accumulate
+    /// up to 2048 of them, so 2·bits + 11 ≤ 63 → bits ≤ 26.
+    pub const MAX_XLA_BITS: u32 = 26;
+
+    /// Create a field context. `p` must be an odd prime > 2; this is
+    /// checked (trial division — our moduli are ≤ 31 bits so this is cheap
+    /// and only runs at configuration time).
+    pub fn new(p: u64) -> Self {
+        assert!(p > 2 && is_prime(p), "modulus {p} is not an odd prime");
+        assert!(p < (1 << 31), "modulus {p} too large (max 31 bits)");
+        PrimeField { p }
+    }
+
+    #[inline(always)]
+    pub fn modulus(&self) -> u64 {
+        self.p
+    }
+
+    /// Number of bits in the modulus.
+    pub fn bits(&self) -> u32 {
+        64 - self.p.leading_zeros()
+    }
+
+    /// True if the i64 XLA dot-product path is safe for `dot_len`-element
+    /// dots without intermediate reduction.
+    pub fn check_dot_safe(&self, dot_len: usize) -> bool {
+        // sum of dot_len products each < p^2 must stay below 2^63.
+        let p2 = (self.p as u128) * (self.p as u128);
+        p2.checked_mul(dot_len as u128)
+            .map(|v| v < (1u128 << 63))
+            .unwrap_or(false)
+    }
+
+    #[inline(always)]
+    pub fn reduce_u128(&self, x: u128) -> u64 {
+        (x % self.p as u128) as u64
+    }
+
+    /// Reduce a signed integer into `[0, p)` (two's-complement embedding φ).
+    #[inline(always)]
+    pub fn from_i64(&self, x: i64) -> u64 {
+        let m = x.rem_euclid(self.p as i64);
+        m as u64
+    }
+
+    /// Map back to a signed representative in `(-(p-1)/2, (p-1)/2]` (φ⁻¹).
+    #[inline(always)]
+    pub fn to_i64(&self, x: u64) -> i64 {
+        debug_assert!(x < self.p);
+        if x <= (self.p - 1) / 2 {
+            x as i64
+        } else {
+            x as i64 - self.p as i64
+        }
+    }
+
+    #[inline(always)]
+    pub fn add(&self, a: u64, b: u64) -> u64 {
+        debug_assert!(a < self.p && b < self.p);
+        let s = a + b;
+        if s >= self.p {
+            s - self.p
+        } else {
+            s
+        }
+    }
+
+    #[inline(always)]
+    pub fn sub(&self, a: u64, b: u64) -> u64 {
+        debug_assert!(a < self.p && b < self.p);
+        if a >= b {
+            a - b
+        } else {
+            a + self.p - b
+        }
+    }
+
+    #[inline(always)]
+    pub fn neg(&self, a: u64) -> u64 {
+        debug_assert!(a < self.p);
+        if a == 0 {
+            0
+        } else {
+            self.p - a
+        }
+    }
+
+    #[inline(always)]
+    pub fn mul(&self, a: u64, b: u64) -> u64 {
+        debug_assert!(a < self.p && b < self.p);
+        // p < 2^31 so the product fits in u64 without u128.
+        (a * b) % self.p
+    }
+
+    /// Modular exponentiation (square-and-multiply).
+    pub fn pow(&self, mut base: u64, mut exp: u64) -> u64 {
+        debug_assert!(base < self.p);
+        let mut acc = 1u64;
+        while exp > 0 {
+            if exp & 1 == 1 {
+                acc = self.mul(acc, base);
+            }
+            base = self.mul(base, base);
+            exp >>= 1;
+        }
+        acc
+    }
+
+    /// Multiplicative inverse via Fermat's little theorem. Panics on 0.
+    #[inline]
+    pub fn inv(&self, a: u64) -> u64 {
+        assert!(a != 0, "division by zero in F_{}", self.p);
+        self.pow(a, self.p - 2)
+    }
+
+    /// Batch inversion (Montgomery's trick): one `inv` + 3(n-1) muls.
+    /// All inputs must be nonzero.
+    pub fn batch_inv(&self, xs: &[u64]) -> Vec<u64> {
+        if xs.is_empty() {
+            return Vec::new();
+        }
+        let n = xs.len();
+        let mut prefix = vec![0u64; n];
+        let mut acc = 1u64;
+        for (i, &x) in xs.iter().enumerate() {
+            assert!(x != 0, "batch_inv: zero at index {i}");
+            prefix[i] = acc;
+            acc = self.mul(acc, x);
+        }
+        let mut inv_acc = self.inv(acc);
+        let mut out = vec![0u64; n];
+        for i in (0..n).rev() {
+            out[i] = self.mul(inv_acc, prefix[i]);
+            inv_acc = self.mul(inv_acc, xs[i]);
+        }
+        out
+    }
+
+    /// Uniformly random field element.
+    #[inline]
+    pub fn random(&self, rng: &mut Rng) -> u64 {
+        rng.field_element(self.p)
+    }
+
+    /// Uniformly random matrix (row-major `rows × cols`).
+    pub fn random_matrix(&self, rng: &mut Rng, rows: usize, cols: usize) -> Vec<u64> {
+        (0..rows * cols).map(|_| self.random(rng)).collect()
+    }
+
+    /// `count` distinct evaluation points. CodedPrivateML needs K+T betas
+    /// plus N alphas, all distinct; we simply use 1..=count (p is vastly
+    /// larger than any N+K+T we run).
+    pub fn distinct_points(&self, count: usize) -> Vec<u64> {
+        assert!((count as u64) < self.p, "not enough field elements");
+        (1..=count as u64).collect()
+    }
+}
+
+/// Deterministic Miller–Rabin for u64 (valid for all 64-bit inputs with
+/// this witness set).
+pub fn is_prime(n: u64) -> bool {
+    if n < 2 {
+        return false;
+    }
+    for &sp in &[2u64, 3, 5, 7, 11, 13, 17, 19, 23, 29, 31, 37] {
+        if n == sp {
+            return true;
+        }
+        if n % sp == 0 {
+            return false;
+        }
+    }
+    let mut d = n - 1;
+    let mut s = 0u32;
+    while d % 2 == 0 {
+        d /= 2;
+        s += 1;
+    }
+    'witness: for &a in &[2u64, 3, 5, 7, 11, 13, 17, 19, 23, 29, 31, 37] {
+        let mut x = pow_mod(a % n, d, n);
+        if x == 1 || x == n - 1 {
+            continue;
+        }
+        for _ in 0..s - 1 {
+            x = mul_mod(x, x, n);
+            if x == n - 1 {
+                continue 'witness;
+            }
+        }
+        return false;
+    }
+    true
+}
+
+fn mul_mod(a: u64, b: u64, m: u64) -> u64 {
+    ((a as u128 * b as u128) % m as u128) as u64
+}
+
+fn pow_mod(mut b: u64, mut e: u64, m: u64) -> u64 {
+    let mut acc = 1u64;
+    b %= m;
+    while e > 0 {
+        if e & 1 == 1 {
+            acc = mul_mod(acc, b, m);
+        }
+        b = mul_mod(b, b, m);
+        e >>= 1;
+    }
+    acc
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::field::{PAPER_PRIME, PRIME_26, PRIME_31};
+    use crate::util::proptest::check;
+
+    #[test]
+    fn named_primes_are_prime() {
+        assert!(is_prime(PAPER_PRIME));
+        assert!(is_prime(PRIME_26));
+        assert!(is_prime(PRIME_31));
+        // Bit widths are what the overflow analysis assumes. (The paper
+        // calls 15485863 "the largest prime with 24 bits", which is
+        // actually the 1,000,000th prime — e.g. 15485867 is a larger
+        // 24-bit prime — but we keep the paper's value for fidelity.)
+        assert_eq!(PrimeField::new(PAPER_PRIME).bits(), 24);
+        assert_eq!(PrimeField::new(PRIME_26).bits(), 26);
+        assert!(is_prime(15_485_867), "the paper's maximality claim is wrong");
+        // PRIME_26 *is* maximal below 2^26.
+        for q in PRIME_26 + 1..1u64 << 26 {
+            assert!(!is_prime(q), "{q} is a larger 26-bit prime");
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "not an odd prime")]
+    fn rejects_composite_modulus() {
+        PrimeField::new(15_485_862);
+    }
+
+    #[test]
+    fn dot_safety_boundaries() {
+        let f24 = PrimeField::new(PAPER_PRIME);
+        let f26 = PrimeField::new(PRIME_26);
+        let f31 = PrimeField::new(PRIME_31);
+        assert!(f24.check_dot_safe(2048));
+        assert!(f26.check_dot_safe(2048));
+        assert!(!f31.check_dot_safe(2048));
+        assert!(f31.check_dot_safe(1));
+    }
+
+    #[test]
+    fn phi_round_trip() {
+        let f = PrimeField::new(PAPER_PRIME);
+        for x in [-1000i64, -1, 0, 1, 42, 7_000_000, -7_000_000] {
+            assert_eq!(f.to_i64(f.from_i64(x)), x, "x={x}");
+        }
+    }
+
+    #[test]
+    fn field_axioms_property() {
+        let f = PrimeField::new(PAPER_PRIME);
+        check("field-axioms", 500, move |rng| {
+            let a = f.random(rng);
+            let b = f.random(rng);
+            let c = f.random(rng);
+            // commutativity
+            if f.add(a, b) != f.add(b, a) {
+                return Err("add not commutative".into());
+            }
+            if f.mul(a, b) != f.mul(b, a) {
+                return Err("mul not commutative".into());
+            }
+            // associativity
+            if f.add(f.add(a, b), c) != f.add(a, f.add(b, c)) {
+                return Err("add not associative".into());
+            }
+            if f.mul(f.mul(a, b), c) != f.mul(a, f.mul(b, c)) {
+                return Err("mul not associative".into());
+            }
+            // distributivity
+            if f.mul(a, f.add(b, c)) != f.add(f.mul(a, b), f.mul(a, c)) {
+                return Err("not distributive".into());
+            }
+            // inverses
+            if f.add(a, f.neg(a)) != 0 {
+                return Err("additive inverse broken".into());
+            }
+            if a != 0 && f.mul(a, f.inv(a)) != 1 {
+                return Err("multiplicative inverse broken".into());
+            }
+            // sub consistency
+            if f.sub(a, b) != f.add(a, f.neg(b)) {
+                return Err("sub != add(neg)".into());
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn pow_matches_repeated_mul() {
+        let f = PrimeField::new(97);
+        for base in 0..97u64 {
+            let mut acc = 1u64;
+            for e in 0..10u64 {
+                assert_eq!(f.pow(base, e), acc);
+                acc = f.mul(acc, base);
+            }
+        }
+    }
+
+    #[test]
+    fn fermat_little_theorem() {
+        let f = PrimeField::new(PAPER_PRIME);
+        let mut rng = Rng::new(5);
+        for _ in 0..20 {
+            let a = 1 + rng.below(f.modulus() - 1);
+            assert_eq!(f.pow(a, f.modulus() - 1), 1);
+        }
+    }
+
+    #[test]
+    fn batch_inv_matches_single() {
+        let f = PrimeField::new(PAPER_PRIME);
+        check("batch-inv", 50, move |rng| {
+            let n = 1 + rng.below_usize(64);
+            let xs: Vec<u64> = (0..n).map(|_| 1 + rng.below(f.modulus() - 1)).collect();
+            let batch = f.batch_inv(&xs);
+            for (i, (&x, &bx)) in xs.iter().zip(batch.iter()).enumerate() {
+                if f.inv(x) != bx {
+                    return Err(format!("mismatch at {i}"));
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn batch_inv_empty_ok() {
+        let f = PrimeField::new(97);
+        assert!(f.batch_inv(&[]).is_empty());
+    }
+
+    #[test]
+    #[should_panic(expected = "zero at index")]
+    fn batch_inv_rejects_zero() {
+        let f = PrimeField::new(97);
+        f.batch_inv(&[3, 0, 5]);
+    }
+
+    #[test]
+    fn distinct_points_are_distinct_nonzero() {
+        let f = PrimeField::new(97);
+        let pts = f.distinct_points(40);
+        assert_eq!(pts.len(), 40);
+        let mut sorted = pts.clone();
+        sorted.sort_unstable();
+        sorted.dedup();
+        assert_eq!(sorted.len(), 40);
+        assert!(pts.iter().all(|&x| x != 0 && x < 97));
+    }
+
+    #[test]
+    fn random_matrix_shape_and_range() {
+        let f = PrimeField::new(PAPER_PRIME);
+        let mut rng = Rng::new(9);
+        let m = f.random_matrix(&mut rng, 7, 11);
+        assert_eq!(m.len(), 77);
+        assert!(m.iter().all(|&x| x < f.modulus()));
+    }
+}

@@ -1,0 +1,42 @@
+//! # CodedPrivateML
+//!
+//! A reproduction of *CodedPrivateML: A Fast and Privacy-Preserving
+//! Framework for Distributed Machine Learning* (So, Güler, Avestimehr,
+//! Mohassel, 2019) as a three-layer rust + JAX + Pallas stack.
+//!
+//! The library trains a logistic (or linear) regression model on a
+//! master + N workers cluster while keeping both the dataset and the
+//! per-iteration model weights information-theoretically private against
+//! any T colluding workers:
+//!
+//! 1. [`quant`] — stochastic quantization between ℝ and the prime field F_p,
+//! 2. [`coding`] — Lagrange coded computing (LCC) secret sharing,
+//! 3. [`sigmoid`] — polynomial approximation of the sigmoid so the worker
+//!    computation is a polynomial the master can decode by interpolation,
+//! 4. [`coordinator`] — the Algorithm-1 training loop over a simulated
+//!    [`cluster`] with straggler injection and a network cost model,
+//! 5. [`mpc`] — the BGW/Shamir baseline the paper compares against,
+//! 6. [`runtime`] — PJRT execution of the AOT-compiled JAX/Pallas worker
+//!    kernel (`artifacts/*.hlo.txt`), with a bit-exact native fallback in
+//!    [`compute`].
+//!
+//! See `DESIGN.md` for the experiment index and `EXPERIMENTS.md` for
+//! paper-vs-measured results.
+
+pub mod cli;
+pub mod cluster;
+pub mod coding;
+pub mod compute;
+pub mod coordinator;
+pub mod data;
+pub mod field;
+pub mod model;
+pub mod mpc;
+pub mod quant;
+pub mod reproduce;
+pub mod runtime;
+pub mod sigmoid;
+pub mod util;
+
+pub use coordinator::{CodedMlConfig, CodedMlSession, TrainReport};
+pub use field::PrimeField;

@@ -1,0 +1,1 @@
+fn main() { std::process::exit(codedml::cli::run()); }

@@ -1,0 +1,94 @@
+//! Linear regression — Remark 1/3: CodedPrivateML applies with minor
+//! modifications (the "activation" is the identity, already a degree-1
+//! polynomial, so no sigmoid approximation error term).
+
+use super::{matvec, max_eig_xtx, tr_matvec};
+
+/// Plaintext least-squares linear regression trained by gradient descent.
+#[derive(Debug, Clone)]
+pub struct LinearRegression {
+    pub w: Vec<f64>,
+}
+
+impl LinearRegression {
+    pub fn new(d: usize) -> Self {
+        LinearRegression { w: vec![0.0; d] }
+    }
+
+    /// Mean squared error ½·mean((Xw − y)²).
+    pub fn loss(&self, x: &[f64], y: &[f64], m: usize, d: usize) -> f64 {
+        let z = matvec(x, &self.w, m, d);
+        z.iter()
+            .zip(y.iter())
+            .map(|(&zi, &yi)| (zi - yi) * (zi - yi))
+            .sum::<f64>()
+            / (2.0 * m as f64)
+    }
+
+    /// ∇ = (1/m) Xᵀ(Xw − y).
+    pub fn gradient(&self, x: &[f64], y: &[f64], m: usize, d: usize) -> Vec<f64> {
+        let z = matvec(x, &self.w, m, d);
+        let resid: Vec<f64> = z.iter().zip(y.iter()).map(|(&zi, &yi)| zi - yi).collect();
+        let mut g = tr_matvec(x, &resid, m, d);
+        for e in g.iter_mut() {
+            *e /= m as f64;
+        }
+        g
+    }
+
+    pub fn step(&mut self, x: &[f64], y: &[f64], m: usize, d: usize, eta: f64) {
+        let g = self.gradient(x, y, m, d);
+        for (w, gi) in self.w.iter_mut().zip(g.iter()) {
+            *w -= eta * gi;
+        }
+    }
+
+    /// Safe constant step size 1/L with L = max eig(XᵀX)/m.
+    pub fn lipschitz_lr(&self, x: &[f64], m: usize, d: usize) -> f64 {
+        let l = max_eig_xtx(x, m, d, 30) / m as f64;
+        if l <= 0.0 {
+            1.0
+        } else {
+            1.0 / l
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    #[test]
+    fn recovers_planted_linear_model() {
+        let mut rng = Rng::new(3);
+        let (m, d) = (64, 4);
+        let w_true = [1.5, -2.0, 0.5, 3.0];
+        let mut x = Vec::with_capacity(m * d);
+        let mut y = Vec::with_capacity(m);
+        for _ in 0..m {
+            let row: Vec<f64> = (0..d).map(|_| rng.range_f64(-1.0, 1.0)).collect();
+            y.push(row.iter().zip(w_true.iter()).map(|(a, b)| a * b).sum());
+            x.extend(row);
+        }
+        let mut lin = LinearRegression::new(d);
+        let eta = lin.lipschitz_lr(&x, m, d);
+        for _ in 0..500 {
+            lin.step(&x, &y, m, d, eta);
+        }
+        for (got, want) in lin.w.iter().zip(w_true.iter()) {
+            assert!((got - want).abs() < 1e-6, "{got} vs {want}");
+        }
+        assert!(lin.loss(&x, &y, m, d) < 1e-10);
+    }
+
+    #[test]
+    fn gradient_zero_at_optimum() {
+        // y = 2x exactly; w = 2 ⇒ gradient 0.
+        let x = [1.0, 2.0, 3.0];
+        let y = [2.0, 4.0, 6.0];
+        let lin = LinearRegression { w: vec![2.0] };
+        let g = lin.gradient(&x, &y, 3, 1);
+        assert!(g[0].abs() < 1e-12);
+    }
+}

@@ -1,0 +1,149 @@
+//! Conventional logistic regression (paper eq. 1–3), full-batch GD.
+
+use super::{matvec, max_eig_xtx, tr_matvec};
+use crate::data::Dataset;
+use crate::sigmoid::sigmoid;
+
+/// Plaintext logistic regression model.
+#[derive(Debug, Clone)]
+pub struct LogisticRegression {
+    pub w: Vec<f64>,
+}
+
+impl LogisticRegression {
+    /// Zero-initialized weights (the paper's runs start near zero).
+    pub fn new(d: usize) -> Self {
+        LogisticRegression { w: vec![0.0; d] }
+    }
+
+    pub fn with_weights(w: Vec<f64>) -> Self {
+        LogisticRegression { w }
+    }
+
+    /// Cross-entropy cost C(w) (eq. 1), clipped for numerical safety.
+    pub fn loss(&self, ds: &Dataset) -> f64 {
+        let z = matvec(&ds.x, &self.w, ds.m, ds.d);
+        let mut acc = 0.0;
+        for (zi, &yi) in z.iter().zip(ds.y.iter()) {
+            let p = sigmoid(*zi).clamp(1e-12, 1.0 - 1e-12);
+            acc += -yi * p.ln() - (1.0 - yi) * (1.0 - p).ln();
+        }
+        acc / ds.m as f64
+    }
+
+    /// ∇C(w) = (1/m) Xᵀ (g(Xw) − y) (eq. 3).
+    pub fn gradient(&self, ds: &Dataset) -> Vec<f64> {
+        let z = matvec(&ds.x, &self.w, ds.m, ds.d);
+        let resid: Vec<f64> = z
+            .iter()
+            .zip(ds.y.iter())
+            .map(|(&zi, &yi)| sigmoid(zi) - yi)
+            .collect();
+        let mut g = tr_matvec(&ds.x, &resid, ds.m, ds.d);
+        for e in g.iter_mut() {
+            *e /= ds.m as f64;
+        }
+        g
+    }
+
+    /// One gradient-descent step with rate `eta`.
+    pub fn step(&mut self, ds: &Dataset, eta: f64) {
+        let g = self.gradient(ds);
+        for (w, gi) in self.w.iter_mut().zip(g.iter()) {
+            *w -= eta * gi;
+        }
+    }
+
+    /// Theorem-1 step size η = 1/L, L = ¼ max eig(XᵀX)/m.
+    ///
+    /// (Lemma 2 states L = ¼‖X‖₂² for the *unnormalized* sum; our cost is
+    /// the 1/m-scaled eq. (1), so L scales by 1/m as well.)
+    pub fn lipschitz_lr(&self, ds: &Dataset) -> f64 {
+        let l = 0.25 * max_eig_xtx(&ds.x, ds.m, ds.d, 30) / ds.m as f64;
+        if l <= 0.0 {
+            1.0
+        } else {
+            1.0 / l
+        }
+    }
+
+    /// Classification accuracy at threshold 0.5.
+    pub fn accuracy(&self, ds: &Dataset) -> f64 {
+        let z = matvec(&ds.x, &self.w, ds.m, ds.d);
+        let correct = z
+            .iter()
+            .zip(ds.y.iter())
+            .filter(|(&zi, &yi)| (sigmoid(zi) >= 0.5) == (yi == 1.0))
+            .count();
+        correct as f64 / ds.m as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synthetic_3v7;
+    use crate::data::Dataset;
+
+    fn toy() -> Dataset {
+        // Linearly separable 1-D task.
+        let x = vec![-2.0, -1.5, -1.0, 1.0, 1.5, 2.0];
+        let y = vec![0.0, 0.0, 0.0, 1.0, 1.0, 1.0];
+        Dataset::new(x, y, 6, 1, "toy")
+    }
+
+    #[test]
+    fn loss_at_zero_weights_is_ln2() {
+        let lr = LogisticRegression::new(1);
+        assert!((lr.loss(&toy()) - std::f64::consts::LN_2).abs() < 1e-12);
+    }
+
+    #[test]
+    fn gradient_descent_decreases_loss_monotonically() {
+        let ds = toy();
+        let mut lr = LogisticRegression::new(1);
+        let eta = lr.lipschitz_lr(&ds);
+        let mut prev = lr.loss(&ds);
+        for _ in 0..50 {
+            lr.step(&ds, eta);
+            let cur = lr.loss(&ds);
+            assert!(cur <= prev + 1e-12, "loss increased {prev} → {cur}");
+            prev = cur;
+        }
+        assert!(lr.accuracy(&ds) == 1.0);
+        assert!(lr.w[0] > 0.0);
+    }
+
+    #[test]
+    fn gradient_matches_finite_differences() {
+        let ds = synthetic_3v7(16, 5);
+        let mut lr = LogisticRegression::new(ds.d);
+        // Non-trivial point.
+        for (i, w) in lr.w.iter_mut().enumerate() {
+            *w = ((i % 7) as f64 - 3.0) * 0.01;
+        }
+        let g = lr.gradient(&ds);
+        let eps = 1e-6;
+        for &idx in &[0usize, 100, 405, 783] {
+            let mut plus = lr.clone();
+            plus.w[idx] += eps;
+            let mut minus = lr.clone();
+            minus.w[idx] -= eps;
+            let fd = (plus.loss(&ds) - minus.loss(&ds)) / (2.0 * eps);
+            assert!(
+                (fd - g[idx]).abs() < 1e-6,
+                "idx {idx}: fd={fd} analytic={}",
+                g[idx]
+            );
+        }
+    }
+
+    #[test]
+    fn accuracy_of_perfect_and_anti_model() {
+        let ds = toy();
+        let good = LogisticRegression::with_weights(vec![5.0]);
+        assert_eq!(good.accuracy(&ds), 1.0);
+        let bad = LogisticRegression::with_weights(vec![-5.0]);
+        assert_eq!(bad.accuracy(&ds), 0.0);
+    }
+}

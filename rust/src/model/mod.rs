@@ -1,0 +1,85 @@
+//! Plaintext (non-private) models — the "conventional logistic regression"
+//! baseline of Figures 3–4 and the correctness oracle for the private
+//! training loop.
+
+mod linear;
+mod logistic;
+mod persist;
+
+pub use linear::LinearRegression;
+pub use logistic::LogisticRegression;
+pub use persist::{PersistError, SavedModel};
+
+/// Dense matrix–vector product: y = X·w for row-major X (m×d).
+pub fn matvec(x: &[f64], w: &[f64], m: usize, d: usize) -> Vec<f64> {
+    assert_eq!(x.len(), m * d);
+    assert_eq!(w.len(), d);
+    (0..m)
+        .map(|i| {
+            let row = &x[i * d..(i + 1) * d];
+            row.iter().zip(w.iter()).map(|(a, b)| a * b).sum()
+        })
+        .collect()
+}
+
+/// Xᵀ·v for row-major X (m×d), v length m.
+pub fn tr_matvec(x: &[f64], v: &[f64], m: usize, d: usize) -> Vec<f64> {
+    assert_eq!(x.len(), m * d);
+    assert_eq!(v.len(), m);
+    let mut out = vec![0.0; d];
+    for i in 0..m {
+        let vi = v[i];
+        let row = &x[i * d..(i + 1) * d];
+        for (o, &xv) in out.iter_mut().zip(row.iter()) {
+            *o += xv * vi;
+        }
+    }
+    out
+}
+
+/// Power iteration estimate of the largest eigenvalue of XᵀX — used for the
+/// Lipschitz step size η = 1/L with L = ¼ max eig(X̄ᵀX̄) (Lemma 2).
+pub fn max_eig_xtx(x: &[f64], m: usize, d: usize, iters: usize) -> f64 {
+    let mut v = vec![1.0f64; d];
+    let mut lambda = 0.0;
+    for _ in 0..iters {
+        let xv = matvec(x, &v, m, d);
+        let mut nv = tr_matvec(x, &xv, m, d);
+        let norm = nv.iter().map(|a| a * a).sum::<f64>().sqrt();
+        if norm < 1e-30 {
+            return 0.0;
+        }
+        for e in nv.iter_mut() {
+            *e /= norm;
+        }
+        lambda = norm;
+        v = nv;
+    }
+    lambda
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn matvec_and_transpose() {
+        let x = [1.0, 2.0, 3.0, 4.0, 5.0, 6.0]; // 3×2
+        let w = [1.0, -1.0];
+        assert_eq!(matvec(&x, &w, 3, 2), vec![-1.0, -1.0, -1.0]);
+        let v = [1.0, 1.0, 1.0];
+        assert_eq!(tr_matvec(&x, &v, 3, 2), vec![9.0, 12.0]);
+    }
+
+    #[test]
+    fn power_iteration_known_matrix() {
+        // X = I₂ → XᵀX = I, max eig 1.
+        let x = [1.0, 0.0, 0.0, 1.0];
+        let l = max_eig_xtx(&x, 2, 2, 50);
+        assert!((l - 1.0).abs() < 1e-9, "l={l}");
+        // X = diag(2, 1) → max eig of XᵀX = 4.
+        let x = [2.0, 0.0, 0.0, 1.0];
+        let l = max_eig_xtx(&x, 2, 2, 100);
+        assert!((l - 4.0).abs() < 1e-6, "l={l}");
+    }
+}

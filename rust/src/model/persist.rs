@@ -1,0 +1,137 @@
+//! Model persistence: save/load trained weights + training metadata as
+//! JSON, so `codedml train --save-model m.json` output can be served or
+//! resumed later (`--load-model`).
+
+use std::path::Path;
+
+use crate::util::json::{obj, Json};
+
+/// A persisted model.
+#[derive(Debug, Clone, PartialEq)]
+pub struct SavedModel {
+    pub weights: Vec<f64>,
+    /// "logistic" | "linear".
+    pub kind: String,
+    /// Free-form provenance (dataset source, iterations, seed...).
+    pub meta: Vec<(String, String)>,
+}
+
+#[derive(Debug)]
+pub enum PersistError {
+    Io(std::io::Error),
+    Parse(String),
+}
+
+impl std::fmt::Display for PersistError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            PersistError::Io(e) => write!(f, "io: {e}"),
+            PersistError::Parse(e) => write!(f, "parse: {e}"),
+        }
+    }
+}
+
+impl std::error::Error for PersistError {}
+
+impl SavedModel {
+    pub fn new(kind: &str, weights: Vec<f64>) -> Self {
+        SavedModel { weights, kind: kind.to_string(), meta: Vec::new() }
+    }
+
+    pub fn with_meta(mut self, key: &str, value: impl ToString) -> Self {
+        self.meta.push((key.to_string(), value.to_string()));
+        self
+    }
+
+    pub fn to_json(&self) -> Json {
+        obj(&[
+            ("format", Json::Str("codedml-model-v1".into())),
+            ("kind", Json::Str(self.kind.clone())),
+            (
+                "meta",
+                Json::Obj(
+                    self.meta
+                        .iter()
+                        .map(|(k, v)| (k.clone(), Json::Str(v.clone())))
+                        .collect(),
+                ),
+            ),
+            (
+                "weights",
+                Json::Arr(self.weights.iter().map(|&w| Json::Num(w)).collect()),
+            ),
+        ])
+    }
+
+    pub fn from_json(j: &Json) -> Result<Self, PersistError> {
+        if j.get("format").and_then(Json::as_str) != Some("codedml-model-v1") {
+            return Err(PersistError::Parse("not a codedml-model-v1 file".into()));
+        }
+        let kind = j
+            .get("kind")
+            .and_then(Json::as_str)
+            .ok_or_else(|| PersistError::Parse("missing kind".into()))?
+            .to_string();
+        let weights = j
+            .get("weights")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| PersistError::Parse("missing weights".into()))?
+            .iter()
+            .map(|v| v.as_f64().ok_or_else(|| PersistError::Parse("non-numeric weight".into())))
+            .collect::<Result<Vec<f64>, _>>()?;
+        let meta = j
+            .get("meta")
+            .and_then(Json::as_obj)
+            .map(|o| {
+                o.iter()
+                    .filter_map(|(k, v)| v.as_str().map(|s| (k.clone(), s.to_string())))
+                    .collect()
+            })
+            .unwrap_or_default();
+        Ok(SavedModel { weights, kind, meta })
+    }
+
+    pub fn save(&self, path: &Path) -> Result<(), PersistError> {
+        std::fs::write(path, self.to_json().to_string()).map_err(PersistError::Io)
+    }
+
+    pub fn load(path: &Path) -> Result<Self, PersistError> {
+        let text = std::fs::read_to_string(path).map_err(PersistError::Io)?;
+        let j = Json::parse(&text).map_err(|e| PersistError::Parse(e.to_string()))?;
+        Self::from_json(&j)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn json_round_trip() {
+        let m = SavedModel::new("logistic", vec![0.5, -1.25, 3.0])
+            .with_meta("iters", 25)
+            .with_meta("source", "synthetic-3v7");
+        let j = m.to_json();
+        let back = SavedModel::from_json(&j).unwrap();
+        assert_eq!(back, m);
+    }
+
+    #[test]
+    fn file_round_trip() {
+        let path = std::env::temp_dir().join(format!("model_{}.json", std::process::id()));
+        let m = SavedModel::new("linear", vec![1.0; 8]);
+        m.save(&path).unwrap();
+        let back = SavedModel::load(&path).unwrap();
+        assert_eq!(back, m);
+        std::fs::remove_file(&path).unwrap();
+    }
+
+    #[test]
+    fn rejects_foreign_files() {
+        let j = Json::parse(r#"{"format": "something-else"}"#).unwrap();
+        assert!(matches!(SavedModel::from_json(&j), Err(PersistError::Parse(_))));
+        let j = Json::parse(r#"{"format": "codedml-model-v1", "kind": "logistic", "weights": [1, "x"]}"#)
+            .unwrap();
+        assert!(SavedModel::from_json(&j).is_err());
+    }
+}

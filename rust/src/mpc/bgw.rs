@@ -1,0 +1,616 @@
+//! BGW-style private gradient descent (paper Appendix A.5).
+//!
+//! Front end identical to CodedPrivateML (quantization + sigmoid
+//! polynomial); the back end is Shamir sharing with one vectorized
+//! degree-reduction (resharing) round per multiplication level. The final
+//! X̄ᵀḡ multiplication is reconstructed directly at degree 2T — the
+//! standard trick that saves the last resharing round.
+//!
+//! Simulation notes: all N workers execute identical local computations,
+//! so the protocol runs them serially and attributes `serial/N` seconds as
+//! per-worker parallel compute, then applies the straggler model as a
+//! *max* over workers (BGW waits for everyone — MPC gets no fastest-R
+//! discount, which is one of the two reasons CodedPrivateML wins Figure 2;
+//! the other is the K-fold smaller per-worker data).
+
+use std::time::Instant;
+
+use super::shamir::ShamirScheme;
+use crate::cluster::{NetworkModel, StragglerModel};
+use crate::coordinator::{IterationMetrics, TimingBreakdown, TrainReport};
+use crate::data::Dataset;
+use crate::field::PrimeField;
+use crate::model::{max_eig_xtx, tr_matvec, LogisticRegression};
+use crate::quant::{DatasetQuantizer, Dequantizer, WeightQuantizer};
+use crate::sigmoid::fit_sigmoid;
+use crate::util::{Rng, Stopwatch};
+
+#[derive(Debug)]
+pub enum BgwError {
+    /// Degree-2T reconstruction needs N ≥ 2T+1.
+    TooFewWorkers { n: usize, t: usize },
+    /// Dataset empty after trimming.
+    EmptyData,
+}
+
+impl std::fmt::Display for BgwError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            BgwError::TooFewWorkers { n, t } => {
+                write!(f, "BGW needs N ≥ 2T+1 (N={n}, T={t})")
+            }
+            BgwError::EmptyData => write!(f, "empty dataset"),
+        }
+    }
+}
+
+impl std::error::Error for BgwError {}
+
+/// Protocol statistics of a BGW run (timing lives in the TrainReport).
+#[derive(Debug, Clone, Default)]
+pub struct BgwReport {
+    pub resharing_rounds: u64,
+    pub bytes_worker_to_worker: u64,
+    pub bytes_master_to_worker: u64,
+    pub bytes_worker_to_master: u64,
+}
+
+/// The BGW private-training protocol driver.
+pub struct BgwGradientProtocol {
+    scheme: ShamirScheme,
+    field: PrimeField,
+    n: usize,
+    t: usize,
+    m: usize,
+    d: usize,
+    r: usize,
+    /// Field-quantized sigmoid coefficients.
+    coeffs: Vec<u64>,
+    /// Per-worker share of the full quantized dataset (m×d each!).
+    x_shares: Vec<Vec<u64>>,
+    /// Dequantized X̄ and X̄ᵀy at the master (same as CodedPrivateML).
+    xbar_real: Vec<f64>,
+    xbar_t_y: Vec<f64>,
+    y: Vec<f64>,
+    pub w: Vec<f64>,
+    pub eta: f64,
+    wquant: WeightQuantizer,
+    dequant: Dequantizer,
+    net: NetworkModel,
+    straggler: StragglerModel,
+    rng: Rng,
+    /// Independent stream for straggler delays (never perturbs the
+    /// protocol's own randomness — same rationale as the LCC session).
+    straggle_rng: Rng,
+    // timers
+    t_encode: Stopwatch,
+    t_comm: Stopwatch,
+    t_comp: Stopwatch,
+    report: BgwReport,
+    /// Precomputed Lagrange-at-0 coefficients for degree-2T reconstruction.
+    recon_2t: Vec<u64>,
+    /// Precomputed reduction coefficients (degree 2T over 2T+1 workers).
+    reduction: Vec<u64>,
+}
+
+/// Configuration is intentionally a subset of [`crate::CodedMlConfig`] —
+/// same quantization scales so comparisons are apples-to-apples.
+pub struct BgwConfig {
+    pub n: usize,
+    pub t: usize,
+    pub r: usize,
+    pub p: u64,
+    pub lx: u32,
+    pub lw: u32,
+    pub lc: u32,
+    pub fit_range: f64,
+    pub eta: Option<f64>,
+    pub seed: u64,
+    pub net: NetworkModel,
+    pub straggler: StragglerModel,
+}
+
+impl Default for BgwConfig {
+    fn default() -> Self {
+        BgwConfig {
+            n: 10,
+            t: 1,
+            r: 1,
+            p: crate::field::PAPER_PRIME,
+            lx: 2,
+            lw: 4,
+            lc: 3,
+            fit_range: 5.0,
+            eta: None,
+            seed: 42,
+            net: NetworkModel::default(),
+            straggler: StragglerModel::default(),
+        }
+    }
+}
+
+impl BgwConfig {
+    /// The paper's note: BGW tolerates up to T = ⌊(N−1)/2⌋ collusions.
+    pub fn max_privacy(n: usize) -> Self {
+        BgwConfig { n, t: (n - 1) / 2, ..Default::default() }
+    }
+}
+
+impl BgwGradientProtocol {
+    /// Share the dataset among the workers (the protocol's expensive
+    /// one-time "encode" phase) and set up the iteration machinery.
+    pub fn new(cfg: BgwConfig, train: &Dataset) -> Result<Self, BgwError> {
+        if cfg.n < 2 * cfg.t + 1 {
+            return Err(BgwError::TooFewWorkers { n: cfg.n, t: cfg.t });
+        }
+        if train.m == 0 {
+            return Err(BgwError::EmptyData);
+        }
+        let field = PrimeField::new(cfg.p);
+        let (m, d) = (train.m, train.d);
+        let scheme = ShamirScheme::new(field, cfg.n, cfg.t);
+        let mut rng = Rng::new(cfg.seed ^ 0xB6);
+
+        let poly = fit_sigmoid(cfg.r as u32, cfg.fit_range, 201);
+        let coeffs = poly.field_coeffs(&field, cfg.lx, cfg.lw, cfg.lc);
+
+        let mut t_encode = Stopwatch::new();
+        let mut t_comm = Stopwatch::new();
+        let mut report = BgwReport::default();
+
+        // Quantize + Shamir-share the whole dataset to every worker.
+        let xq = DatasetQuantizer::new(field, cfg.lx);
+        let mut xbar = Vec::new();
+        let mut x_shares: Vec<Vec<u64>> = Vec::new();
+        t_encode.time(|| {
+            xbar = xq.quantize(&train.x);
+            x_shares = share_matrix(&scheme, &xbar, &mut rng);
+        });
+        // Master → each worker: the full m×d share.
+        let bytes = (m * d * 8) as u64;
+        t_comm.add_seconds(cfg.net.fanout_time(cfg.n, bytes));
+        report.bytes_master_to_worker += bytes * cfg.n as u64;
+
+        let xbar_real: Vec<f64> = xbar.iter().map(|&q| xq.dequantize_entry(q)).collect();
+        let xbar_t_y = tr_matvec(&xbar_real, &train.y, m, d);
+        let eta = cfg.eta.unwrap_or_else(|| {
+            let l = 0.25 * max_eig_xtx(&xbar_real, m, d, 30) / m as f64;
+            if l > 0.0 {
+                1.0 / l
+            } else {
+                1.0
+            }
+        });
+
+        let recon_2t = scheme.reduction_coeffs(2 * cfg.t);
+        let reduction = recon_2t.clone();
+
+        Ok(BgwGradientProtocol {
+            scheme,
+            field,
+            n: cfg.n,
+            t: cfg.t,
+            m,
+            d,
+            r: cfg.r,
+            coeffs,
+            x_shares,
+            xbar_real,
+            xbar_t_y,
+            y: train.y.clone(),
+            w: vec![0.0; d],
+            eta,
+            wquant: WeightQuantizer::new(field, cfg.lw, cfg.r as u32),
+            dequant: Dequantizer::new(field, cfg.lx, cfg.lw, cfg.lc, cfg.r as u32),
+            net: cfg.net,
+            straggler: cfg.straggler,
+            straggle_rng: Rng::new(cfg.seed ^ 0x5742_4751_4c45),
+            rng,
+            t_encode,
+            t_comm,
+            t_comp: Stopwatch::new(),
+            report,
+            recon_2t,
+            reduction,
+        })
+    }
+
+    /// One multi-round BGW iteration; returns decoded real-domain X̄ᵀḡ.
+    pub fn step(&mut self) -> Vec<f64> {
+        let f = self.field;
+        let (n, m, d, r) = (self.n, self.m, self.d, self.r);
+        let p = f.modulus();
+        let chunk = crate::compute::safe_chunk_len(p);
+
+        // (1) Master: quantize + Shamir-share W̄ (encode time).
+        let w_shares: Vec<Vec<u64>> = {
+            let mut out = None;
+            let (wquant, scheme, w, rng) = (&self.wquant, &self.scheme, &self.w, &mut self.rng);
+            self.t_encode.time(|| {
+                let wq = wquant.quantize(w, rng);
+                out = Some(share_matrix(scheme, &wq, rng));
+            });
+            out.unwrap()
+        };
+        let wbytes = (d * r * 8) as u64;
+        self.t_comm.add_seconds(self.net.fanout_time(n, wbytes));
+        self.report.bytes_master_to_worker += wbytes * n as u64;
+
+        // (2) Each worker: u_j = X_sh · w_sh_j  (degree-2T sharing of X̄w̄_j).
+        // Serial-over-workers; attribute serial/N as per-worker time.
+        let t0 = Instant::now();
+        let mut u: Vec<Vec<u64>> = Vec::with_capacity(n); // per worker, m×r (row-major)
+        for i in 0..n {
+            let xs = &self.x_shares[i];
+            let ws = &w_shares[i];
+            let mut ui = vec![0u64; m * r];
+            for j in 0..r {
+                let col = crate::compute::matvec_mod(&f, xs, ws, m, d, r, j);
+                for (row, &v) in col.iter().enumerate() {
+                    ui[row * r + j] = v;
+                }
+            }
+            u.push(ui);
+        }
+        self.account_parallel_compute(t0.elapsed().as_secs_f64());
+
+        // (3) Degree reduction of the m·r values (one vectorized round).
+        let u = self.reshare_round(u);
+
+        // (4) ḡ on shares: g = c̄₀ + Σ_i c̄_i Π_{j≤i} u_j, reducing degree
+        //     after each elementwise product level.
+        let t0 = Instant::now();
+        let mut g: Vec<Vec<u64>> = (0..n).map(|_| vec![self.coeffs[0]; m]).collect();
+        let mut prod: Vec<Vec<u64>> = u
+            .iter()
+            .map(|ui| (0..m).map(|row| ui[row * r]).collect())
+            .collect();
+        for i in 0..n {
+            for row in 0..m {
+                g[i][row] = f.add(g[i][row], f.mul(self.coeffs[1], prod[i][row]));
+            }
+        }
+        self.account_parallel_compute(t0.elapsed().as_secs_f64());
+        for level in 2..=r {
+            // prod ∘ u_level — a share×share product: degree 2T, reshare.
+            let t0 = Instant::now();
+            for i in 0..n {
+                for row in 0..m {
+                    prod[i][row] = f.mul(prod[i][row], u[i][row * r + (level - 1)]);
+                }
+            }
+            self.account_parallel_compute(t0.elapsed().as_secs_f64());
+            prod = self.reshare_round(prod);
+            let t0 = Instant::now();
+            for i in 0..n {
+                for row in 0..m {
+                    g[i][row] = f.add(g[i][row], f.mul(self.coeffs[level], prod[i][row]));
+                }
+            }
+            self.account_parallel_compute(t0.elapsed().as_secs_f64());
+        }
+
+        // (5) f_sh = X_shᵀ · g_sh — degree 2T; master reconstructs
+        //     directly from 2T+1 workers (no final resharing).
+        let t0 = Instant::now();
+        let mut f_shares: Vec<Vec<u64>> = Vec::with_capacity(n);
+        for i in 0..n {
+            f_shares.push(crate::compute::tr_matvec_mod(&f, &self.x_shares[i], &g[i], m, d));
+        }
+        self.account_parallel_compute(t0.elapsed().as_secs_f64());
+
+        let fbytes = (d * 8) as u64;
+        self.t_comm.add_seconds(self.net.fanin_time(2 * self.t + 1, fbytes));
+        self.report.bytes_worker_to_master += fbytes * (2 * self.t + 1) as u64;
+
+        // Master: reconstruct at degree 2T with precomputed coefficients.
+        let t0 = Instant::now();
+        let mut xtg = vec![0u64; d];
+        {
+            let lam = &self.recon_2t;
+            let mut acc = vec![0u64; d];
+            let mut pending = 0usize;
+            for (i, l) in lam.iter().enumerate() {
+                for (a, &v) in acc.iter_mut().zip(f_shares[i].iter()) {
+                    *a = a.wrapping_add(l * v);
+                }
+                pending += 1;
+                if pending == chunk {
+                    for (o, a) in xtg.iter_mut().zip(acc.iter_mut()) {
+                        *o = (*o + *a % p) % p;
+                        *a = 0;
+                    }
+                    pending = 0;
+                }
+            }
+            if pending > 0 {
+                for (o, a) in xtg.iter_mut().zip(acc.iter()) {
+                    *o = (*o + *a % p) % p;
+                }
+            }
+        }
+        self.t_comp.add_seconds(t0.elapsed().as_secs_f64());
+
+        // (6) Dequantize + update, identical to CodedPrivateML's master.
+        let xtg_real: Vec<f64> = xtg.iter().map(|&q| self.dequant.dequantize_entry(q)).collect();
+        for ((w, &xg), &xy) in self.w.iter_mut().zip(xtg_real.iter()).zip(self.xbar_t_y.iter()) {
+            *w -= self.eta / m as f64 * (xg - xy);
+        }
+        xtg_real
+    }
+
+    /// One vectorized degree-reduction round over per-worker value vectors.
+    ///
+    /// Each worker re-shares every value with a fresh degree-T polynomial;
+    /// worker j's new share is Σ_i λ_i·subshare_{i→j} over the first 2T+1
+    /// senders. Compute is measured (serial/N attributed per worker); the
+    /// all-to-all traffic is modeled.
+    fn reshare_round(&mut self, values: Vec<Vec<u64>>) -> Vec<Vec<u64>> {
+        let f = self.field;
+        let n = self.n;
+        let len = values[0].len();
+        let senders = 2 * self.t + 1;
+
+        let t0 = Instant::now();
+        let mut new_shares: Vec<Vec<u64>> = vec![vec![0u64; len]; n];
+        // For each sender i among the first 2T+1, share its vector and
+        // accumulate λ_i·subshare into every receiver.
+        for i in 0..senders {
+            let lam_i = self.reduction[i];
+            // Fresh degree-T sharing of each value (vectorized).
+            let sub = share_matrix(&self.scheme, &values[i], &mut self.rng);
+            for j in 0..n {
+                let dst = &mut new_shares[j];
+                for (dv, &sv) in dst.iter_mut().zip(sub[j].iter()) {
+                    *dv = f.add(*dv, f.mul(lam_i, sv));
+                }
+            }
+        }
+        self.account_parallel_compute(t0.elapsed().as_secs_f64());
+
+        // Traffic: each of the 2T+1 senders sends N−1 messages of len·8
+        // bytes (its own subshare stays local). Senders transmit in
+        // parallel; the round takes one sender's fanout time.
+        let bytes = (len * 8) as u64;
+        self.t_comm.add_seconds(self.net.fanout_time(n - 1, bytes));
+        self.report.bytes_worker_to_worker += bytes * (senders as u64) * (n as u64 - 1);
+        self.report.resharing_rounds += 1;
+        new_shares
+    }
+
+    /// Convert measured serial-over-workers seconds into modeled parallel
+    /// time: serial/N inflated by the straggler *max* over N workers.
+    fn account_parallel_compute(&mut self, serial: f64) {
+        let per_worker = serial / self.n as f64;
+        let mut worst = per_worker;
+        for _ in 0..self.n {
+            let delayed = per_worker + self.straggler.sample(&mut self.straggle_rng, per_worker);
+            worst = worst.max(delayed);
+        }
+        self.t_comp.add_seconds(worst);
+    }
+
+    /// Train like the CodedPrivateML session (same metrics).
+    pub fn train(&mut self, iters: usize, test: Option<&Dataset>) -> TrainReport {
+        let mut iterations = Vec::with_capacity(iters);
+        for it in 0..iters {
+            self.step();
+            let train_ds = Dataset::new(
+                self.xbar_real.clone(),
+                self.y.clone(),
+                self.m,
+                self.d,
+                "quantized-train",
+            );
+            let model = LogisticRegression::with_weights(self.w.clone());
+            iterations.push(IterationMetrics {
+                iter: it,
+                train_loss: model.loss(&train_ds),
+                test_accuracy: test.map(|ts| model.accuracy(ts)),
+            });
+        }
+        TrainReport {
+            breakdown: TimingBreakdown {
+                encode_s: self.t_encode.seconds(),
+                comm_s: self.t_comm.seconds(),
+                comp_s: self.t_comp.seconds(),
+            },
+            decode_s: 0.0,
+            iterations,
+            weights: self.w.clone(),
+            decode_cache: (0, 0),
+            recovery_threshold: 2 * self.t + 1,
+            bytes_sent: self.report.bytes_master_to_worker,
+            bytes_received: self.report.bytes_worker_to_master,
+        }
+    }
+
+    pub fn protocol_report(&self) -> &BgwReport {
+        &self.report
+    }
+
+    /// Ground truth for tests: reconstruct the plaintext X̄w̄ᵀ-style value
+    /// a set of shares encodes.
+    #[cfg(test)]
+    fn reconstruct_vec(&self, shares: &[Vec<u64>], deg: usize) -> Vec<u64> {
+        let idx: Vec<usize> = (0..deg + 1).collect();
+        (0..shares[0].len())
+            .map(|e| {
+                let picked: Vec<u64> = idx.iter().map(|&i| shares[i][e]).collect();
+                self.scheme.reconstruct_deg(&idx, &picked, deg)
+            })
+            .collect()
+    }
+}
+
+/// Shamir-share a flat vector of field elements; returns per-worker share
+/// vectors. Vectorized: powers of the evaluation points are precomputed
+/// once, so sharing costs (T+1)·N muls per element.
+fn share_matrix(scheme: &ShamirScheme, values: &[u64], rng: &mut Rng) -> Vec<Vec<u64>> {
+    let f = &scheme.field;
+    let n = scheme.n();
+    let t = scheme.t;
+    // powers[i][k] = x_i^k for k in 0..=T
+    let powers: Vec<Vec<u64>> = scheme
+        .points
+        .iter()
+        .map(|&x| {
+            let mut row = Vec::with_capacity(t + 1);
+            let mut acc = 1u64;
+            for _ in 0..=t {
+                row.push(acc);
+                acc = f.mul(acc, x);
+            }
+            row
+        })
+        .collect();
+    let mut out = vec![vec![0u64; values.len()]; n];
+    let mut coeffs = vec![0u64; t]; // random part a_1..a_T
+    let p = f.modulus();
+    // Deferred reduction: T+1 products < p² ≤ 2^52 sum safely in u64 for
+    // any realistic T (chunked otherwise) — one % per share instead of
+    // per term (§Perf).
+    let chunk = crate::compute::safe_chunk_len(p);
+    for (e, &s) in values.iter().enumerate() {
+        for c in coeffs.iter_mut() {
+            *c = f.random(rng);
+        }
+        for i in 0..n {
+            let pw = &powers[i];
+            let mut acc = 0u64;
+            let mut total = s;
+            for (chunk_idx, (&c, &pwk)) in coeffs.iter().zip(pw[1..].iter()).enumerate() {
+                acc = acc.wrapping_add(c * pwk);
+                if (chunk_idx + 1) % chunk == 0 {
+                    total = (total + acc % p) % p;
+                    acc = 0;
+                }
+            }
+            out[i][e] = (total + acc % p) % p;
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::{NetworkModel, StragglerModel};
+    use crate::data::synthetic_3v7;
+    use crate::field::PAPER_PRIME;
+
+    fn quiet_cfg(n: usize, t: usize, r: usize) -> BgwConfig {
+        BgwConfig {
+            n,
+            t,
+            r,
+            net: NetworkModel::free(),
+            straggler: StragglerModel::none(),
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn share_matrix_reconstructs() {
+        let f = PrimeField::new(PAPER_PRIME);
+        let scheme = ShamirScheme::new(f, 5, 2);
+        let mut rng = Rng::new(1);
+        let values = [7u64, 0, 123456];
+        let shares = share_matrix(&scheme, &values, &mut rng);
+        for (e, &v) in values.iter().enumerate() {
+            let idx = [0usize, 2, 4];
+            let picked: Vec<u64> = idx.iter().map(|&i| shares[i][e]).collect();
+            assert_eq!(scheme.reconstruct(&idx, &picked), v);
+        }
+    }
+
+    #[test]
+    fn bgw_gradient_matches_codedprivateml_master_math() {
+        // The BGW step with the same seed-independent plaintext inputs
+        // must produce the same decoded X̄ᵀḡ as direct plaintext
+        // evaluation of the quantized computation with the same W̄ draws.
+        // With w = 0 the weight quantization is deterministic (zeros), so
+        // the decoded value must be exactly X̄ᵀ(c̄₀·1) dequantized.
+        let train = synthetic_3v7(24, 2);
+        let mut proto = BgwGradientProtocol::new(quiet_cfg(7, 2, 1), &train).unwrap();
+        let xtg = proto.step();
+        // Plaintext expectation.
+        let f = PrimeField::new(PAPER_PRIME);
+        let xq = DatasetQuantizer::new(f, 2);
+        let xbar = xq.quantize(&train.x);
+        let poly = fit_sigmoid(1, 5.0, 201);
+        let coeffs = poly.field_coeffs(&f, 2, 4, 3);
+        let g = vec![coeffs[0]; train.m];
+        let want_field = crate::compute::tr_matvec_mod(&f, &xbar, &g, train.m, train.d);
+        let dq = Dequantizer::new(f, 2, 4, 3, 1);
+        for (got, &wq) in xtg.iter().zip(want_field.iter()) {
+            let want = dq.dequantize_entry(wq);
+            assert!((got - want).abs() < 1e-9, "{got} vs {want}");
+        }
+    }
+
+    #[test]
+    fn bgw_training_converges_like_plaintext() {
+        let train = synthetic_3v7(96, 4);
+        let test = synthetic_3v7(96, 9);
+        let mut proto = BgwGradientProtocol::new(quiet_cfg(7, 2, 1), &train).unwrap();
+        let report = proto.train(15, Some(&test));
+        assert_eq!(report.iterations.len(), 15);
+        let l0 = report.iterations[0].train_loss;
+        let lf = report.final_loss().unwrap();
+        assert!(lf < l0, "loss {l0} → {lf}");
+        assert!(report.final_accuracy().unwrap() > 0.8);
+        // One resharing round per iteration at r=1.
+        assert_eq!(proto.protocol_report().resharing_rounds, 15);
+    }
+
+    #[test]
+    fn bgw_r2_uses_more_rounds() {
+        let train = synthetic_3v7(16, 5);
+        let mut proto = BgwGradientProtocol::new(quiet_cfg(9, 2, 2), &train).unwrap();
+        proto.step();
+        assert_eq!(proto.protocol_report().resharing_rounds, 2);
+    }
+
+    #[test]
+    fn rejects_too_few_workers() {
+        let train = synthetic_3v7(8, 1);
+        assert!(matches!(
+            BgwGradientProtocol::new(quiet_cfg(4, 2, 1), &train),
+            Err(BgwError::TooFewWorkers { .. })
+        ));
+    }
+
+    #[test]
+    fn worker_storage_is_full_dataset() {
+        // The decisive cost asymmetry vs LCC: every worker stores m×d.
+        let train = synthetic_3v7(12, 3);
+        let proto = BgwGradientProtocol::new(quiet_cfg(5, 1, 1), &train).unwrap();
+        for s in &proto.x_shares {
+            assert_eq!(s.len(), train.m * train.d);
+        }
+    }
+
+    #[test]
+    fn reshare_preserves_secret_and_reduces_degree() {
+        let train = synthetic_3v7(8, 6);
+        let mut proto = BgwGradientProtocol::new(quiet_cfg(7, 2, 1), &train).unwrap();
+        // Build a degree-2T sharing by multiplying two fresh sharings.
+        let f = proto.field;
+        let scheme = proto.scheme.clone();
+        let mut rng = Rng::new(33);
+        let a = [5u64, 1000];
+        let b = [3u64, 200000];
+        let sa = share_matrix(&scheme, &a, &mut rng);
+        let sb = share_matrix(&scheme, &b, &mut rng);
+        let prod: Vec<Vec<u64>> = sa
+            .iter()
+            .zip(sb.iter())
+            .map(|(ra, rb)| ra.iter().zip(rb.iter()).map(|(&x, &y)| f.mul(x, y)).collect())
+            .collect();
+        let reduced = proto.reshare_round(prod);
+        // Now reconstructable at degree T (T+1 = 3 shares).
+        let got = proto.reconstruct_vec(&reduced, 2);
+        assert_eq!(got, vec![15, f.mul(1000, 200000)]);
+    }
+}

@@ -1,0 +1,19 @@
+//! The MPC baseline: BGW-style gradient computation over Shamir shares
+//! (paper §5 and Appendix A.5).
+//!
+//! The same quantization and sigmoid-polynomial front end as
+//! CodedPrivateML, but secret sharing is Shamir's scheme: every worker
+//! stores a share of the **whole** dataset (size m×d — no 1/K
+//! parallelization gain), additions are local, and every multiplication
+//! level requires a degree-reduction *resharing round* in which each
+//! worker sends a share to every other worker (N·(N−1) messages). Those
+//! two facts are exactly why CodedPrivateML wins Figure 2, and this
+//! implementation reproduces them faithfully with vectorized resharing
+//! (one round per multiplication level, as in the paper's "faster
+//! vectorized form").
+
+mod bgw;
+mod shamir;
+
+pub use bgw::{BgwConfig, BgwError, BgwGradientProtocol, BgwReport};
+pub use shamir::ShamirScheme;

@@ -1,0 +1,189 @@
+//! Shamir secret sharing over F_p (Shamir 1979).
+//!
+//! A secret s becomes shares P(x_i) of a uniformly random degree-T
+//! polynomial with P(0) = s; any T+1 shares reconstruct by Lagrange
+//! interpolation at 0 and any T reveal nothing.
+
+use crate::field::{lagrange_coeffs, PrimeField};
+use crate::util::Rng;
+
+/// Sharing context: field, threshold T, and the workers' evaluation
+/// points x_1..x_N (distinct, nonzero).
+#[derive(Debug, Clone)]
+pub struct ShamirScheme {
+    pub field: PrimeField,
+    pub t: usize,
+    pub points: Vec<u64>,
+}
+
+impl ShamirScheme {
+    pub fn new(field: PrimeField, n: usize, t: usize) -> Self {
+        assert!(t < n, "need more than T workers to reconstruct");
+        ShamirScheme { field, t, points: field.distinct_points(n) }
+    }
+
+    pub fn n(&self) -> usize {
+        self.points.len()
+    }
+
+    /// Share one secret: returns N shares.
+    pub fn share(&self, secret: u64, rng: &mut Rng) -> Vec<u64> {
+        let f = &self.field;
+        // P(z) = secret + a_1 z + ... + a_T z^T
+        let coeffs: Vec<u64> = std::iter::once(secret)
+            .chain((0..self.t).map(|_| f.random(rng)))
+            .collect();
+        self.points
+            .iter()
+            .map(|&x| crate::field::eval_poly(f, &coeffs, x))
+            .collect()
+    }
+
+    /// Share a vector of secrets: returns per-worker share vectors
+    /// (worker-major: out[i][j] = share of secret j at worker i).
+    pub fn share_vec(&self, secrets: &[u64], rng: &mut Rng) -> Vec<Vec<u64>> {
+        let n = self.n();
+        let mut out = vec![vec![0u64; secrets.len()]; n];
+        for (j, &s) in secrets.iter().enumerate() {
+            let shares = self.share(s, rng);
+            for i in 0..n {
+                out[i][j] = shares[i];
+            }
+        }
+        out
+    }
+
+    /// Reconstruct from shares at the given worker indices (need ≥ T+1,
+    /// or ≥ deg+1 for a degree-`deg` sharing, e.g. 2T after one
+    /// unreduced multiplication).
+    pub fn reconstruct_deg(&self, idx: &[usize], shares: &[u64], deg: usize) -> u64 {
+        assert!(idx.len() == shares.len());
+        assert!(idx.len() >= deg + 1, "need {} shares, have {}", deg + 1, idx.len());
+        let f = &self.field;
+        let pts: Vec<u64> = idx[..deg + 1].iter().map(|&i| self.points[i]).collect();
+        let lam = lagrange_coeffs(f, &pts, 0).expect("distinct points");
+        lam.iter()
+            .zip(shares.iter())
+            .fold(0u64, |acc, (&l, &s)| f.add(acc, f.mul(l, s)))
+    }
+
+    /// Reconstruct a degree-T sharing.
+    pub fn reconstruct(&self, idx: &[usize], shares: &[u64]) -> u64 {
+        self.reconstruct_deg(idx, shares, self.t)
+    }
+
+    /// Lagrange-at-zero coefficients for the *full* worker set at a given
+    /// degree — used by the degree-reduction step.
+    pub fn reduction_coeffs(&self, deg: usize) -> Vec<u64> {
+        let pts: Vec<u64> = self.points[..deg + 1].to_vec();
+        lagrange_coeffs(&self.field, &pts, 0).expect("distinct points")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::field::PAPER_PRIME;
+    use crate::util::proptest::check;
+
+    fn scheme(n: usize, t: usize) -> ShamirScheme {
+        ShamirScheme::new(PrimeField::new(PAPER_PRIME), n, t)
+    }
+
+    #[test]
+    fn share_reconstruct_roundtrip() {
+        let s = scheme(7, 2);
+        check("shamir-roundtrip", 100, move |rng| {
+            let secret = s.field.random(rng);
+            let shares = s.share(secret, rng);
+            // Any T+1 = 3 of the 7 shares reconstruct.
+            let idx = rng.sample_indices(7, 3);
+            let picked: Vec<u64> = idx.iter().map(|&i| shares[i]).collect();
+            if s.reconstruct(&idx, &picked) != secret {
+                return Err(format!("secret {secret} not reconstructed"));
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn t_shares_are_uniform() {
+        // Statistical: fix two different secrets; the marginal of any
+        // single share must look uniform — compare first-share histograms
+        // over a coarse partition.
+        let s = scheme(5, 2);
+        let mut rng = Rng::new(9);
+        let buckets = 8;
+        let mut h0 = vec![0usize; buckets];
+        let mut h1 = vec![0usize; buckets];
+        let trials = 8000;
+        for _ in 0..trials {
+            let sh0 = s.share(0, &mut rng);
+            let sh1 = s.share(12345, &mut rng);
+            h0[(sh0[0] as u128 * buckets as u128 / PAPER_PRIME as u128) as usize] += 1;
+            h1[(sh1[0] as u128 * buckets as u128 / PAPER_PRIME as u128) as usize] += 1;
+        }
+        let expected = trials as f64 / buckets as f64;
+        for b in 0..buckets {
+            assert!((h0[b] as f64 - expected).abs() < 5.0 * expected.sqrt(), "h0[{b}]={}", h0[b]);
+            assert!((h1[b] as f64 - expected).abs() < 5.0 * expected.sqrt(), "h1[{b}]={}", h1[b]);
+        }
+    }
+
+    #[test]
+    fn shares_are_additively_homomorphic() {
+        let s = scheme(6, 2);
+        check("shamir-additive", 50, move |rng| {
+            let (a, b) = (s.field.random(rng), s.field.random(rng));
+            let sa = s.share(a, rng);
+            let sb = s.share(b, rng);
+            let sum: Vec<u64> = sa.iter().zip(sb.iter()).map(|(&x, &y)| s.field.add(x, y)).collect();
+            let idx = [0, 2, 5];
+            let picked: Vec<u64> = idx.iter().map(|&i| sum[i]).collect();
+            if s.reconstruct(&idx, &picked) != s.field.add(a, b) {
+                return Err("sum share mismatch".into());
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn product_shares_reconstruct_at_double_degree() {
+        let s = scheme(7, 2);
+        check("shamir-mult-degree", 50, move |rng| {
+            let (a, b) = (s.field.random(rng), s.field.random(rng));
+            let sa = s.share(a, rng);
+            let sb = s.share(b, rng);
+            let prod: Vec<u64> = sa.iter().zip(sb.iter()).map(|(&x, &y)| s.field.mul(x, y)).collect();
+            // Degree 2T = 4 sharing: need 5 shares.
+            let idx: Vec<usize> = (0..5).collect();
+            let picked: Vec<u64> = idx.iter().map(|&i| prod[i]).collect();
+            if s.reconstruct_deg(&idx, &picked, 4) != s.field.mul(a, b) {
+                return Err("product mismatch".into());
+            }
+            // And T+1 shares of the product polynomial are NOT enough.
+            let idx3: Vec<usize> = (0..3).collect();
+            let picked3: Vec<u64> = idx3.iter().map(|&i| prod[i]).collect();
+            if s.reconstruct(&idx3, &picked3) == s.field.mul(a, b) {
+                // (possible by chance with prob 1/p — treat as failure)
+                return Err("degree-2T product reconstructed at degree T".into());
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn share_vec_layout() {
+        let s = scheme(4, 1);
+        let mut rng = Rng::new(5);
+        let secrets = [10u64, 20, 30];
+        let shares = s.share_vec(&secrets, &mut rng);
+        assert_eq!(shares.len(), 4);
+        assert_eq!(shares[0].len(), 3);
+        for (j, &sec) in secrets.iter().enumerate() {
+            let idx = [1, 3];
+            let picked: Vec<u64> = idx.iter().map(|&i| shares[i][j]).collect();
+            assert_eq!(s.reconstruct(&idx, &picked), sec);
+        }
+    }
+}

@@ -1,0 +1,170 @@
+//! Overflow budget analysis.
+//!
+//! The decoded field value Σ_k X̄_kᵀ ḡ(X̄_k, W̄) is only meaningful if its
+//! *integer* value (over ℤ, before reduction mod p) stays within
+//! ±(p-1)/2 so that the two's-complement map φ⁻¹ is exact (paper §3.1:
+//! "prime p should be large enough ... to avoid wrap-around"). The paper
+//! asserts its parameter choice avoids overflow but gives no tool to check
+//! one; this module computes the worst-case bound from the data statistics
+//! and session parameters, so misconfiguration is a startup error instead
+//! of silently corrupted gradients.
+
+use crate::field::PrimeField;
+
+/// Inputs to the overflow analysis.
+#[derive(Debug, Clone, Copy)]
+pub struct OverflowBudget {
+    /// Field modulus.
+    pub p: u64,
+    /// max |X_ij| of the *real* dataset.
+    pub max_abs_x: f64,
+    /// Rows per partition (m / K) — decode dequantizes per partition.
+    pub rows_per_block: usize,
+    /// Dataset scale bits.
+    pub lx: u32,
+    /// Weight scale bits.
+    pub lw: u32,
+    /// Coefficient scale bits.
+    pub lc: u32,
+    /// Sigmoid polynomial degree.
+    pub r: u32,
+    /// Bound on |ĝ(z)| over the clipped activation range; the fit keeps the
+    /// polynomial within [0,1]-ish, we default to 2.0 for slack.
+    pub max_abs_g: f64,
+}
+
+/// Result of the analysis.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct BudgetReport {
+    /// Worst-case |integer value| of one decoded sub-gradient entry.
+    pub worst_case: f64,
+    /// The wrap-around threshold (p-1)/2.
+    pub limit: f64,
+    /// worst_case / limit — must be < 1 for exact decoding.
+    pub utilization: f64,
+}
+
+impl BudgetReport {
+    pub fn ok(&self) -> bool {
+        self.utilization < 1.0
+    }
+}
+
+impl OverflowBudget {
+    pub fn analyze(&self) -> BudgetReport {
+        // One decoded entry is Σ_{i ∈ block} X̄_int[i,j] · ḡ_int[i] with
+        //   |X̄_int| ≤ 2^lx · max|X| + 0.5   (deterministic rounding)
+        //   |ḡ_int| ≤ 2^{lc + r(lx+lw)} · max|ĝ| + slack
+        // summed over rows_per_block rows.
+        let x_int = (1u64 << self.lx) as f64 * self.max_abs_x + 0.5;
+        let g_scale = (1u64 << (self.lc + self.r * (self.lx + self.lw))) as f64;
+        let g_int = g_scale * self.max_abs_g;
+        let worst = x_int * g_int * self.rows_per_block as f64;
+        let limit = (self.p - 1) as f64 / 2.0;
+        BudgetReport {
+            worst_case: worst,
+            limit,
+            utilization: worst / limit,
+        }
+    }
+
+    /// Convenience: analyze against a field context.
+    pub fn for_field(field: &PrimeField, max_abs_x: f64, rows_per_block: usize,
+                     lx: u32, lw: u32, lc: u32, r: u32) -> BudgetReport {
+        OverflowBudget {
+            p: field.modulus(),
+            max_abs_x,
+            rows_per_block,
+            lx,
+            lw,
+            lc,
+            r,
+            max_abs_g: 2.0,
+        }
+        .analyze()
+    }
+
+    /// Largest rows_per_block that keeps utilization under `headroom`
+    /// (< 1.0). Useful for choosing K.
+    pub fn max_block_rows(&self, headroom: f64) -> usize {
+        let mut probe = *self;
+        probe.rows_per_block = 1;
+        let per_row = probe.analyze().worst_case;
+        let limit = (self.p - 1) as f64 / 2.0 * headroom;
+        (limit / per_row).floor().max(0.0) as usize
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::field::{PAPER_PRIME, PRIME_26};
+
+    fn base() -> OverflowBudget {
+        OverflowBudget {
+            p: PAPER_PRIME,
+            max_abs_x: 1.0,
+            rows_per_block: 1024,
+            lx: 2,
+            lw: 4,
+            lc: 0,
+            r: 1,
+            max_abs_g: 1.0,
+        }
+    }
+
+    #[test]
+    fn paper_parameters_fit_per_block() {
+        // Paper params, K=13 blocks of 12396/13 ≈ 954 rows: must fit.
+        let mut b = base();
+        b.rows_per_block = 954;
+        let rep = b.analyze();
+        assert!(rep.ok(), "utilization={}", rep.utilization);
+    }
+
+    #[test]
+    fn whole_dataset_single_block_overflows_at_paper_prime() {
+        // Demonstrates why the decoder dequantizes per block: all 12396
+        // rows in one block with l_c=3 would exceed the 24-bit budget.
+        let mut b = base();
+        b.rows_per_block = 12396;
+        b.lc = 3;
+        let rep = b.analyze();
+        assert!(!rep.ok(), "should overflow, utilization={}", rep.utilization);
+        // The 26-bit prime restores the margin at moderate K.
+        b.p = PRIME_26;
+        b.rows_per_block = 954;
+        assert!(b.analyze().ok());
+    }
+
+    #[test]
+    fn utilization_scales_linearly_with_rows() {
+        let mut b = base();
+        b.rows_per_block = 100;
+        let u1 = b.analyze().utilization;
+        b.rows_per_block = 200;
+        let u2 = b.analyze().utilization;
+        assert!((u2 / u1 - 2.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn max_block_rows_is_consistent() {
+        let b = base();
+        let rows = b.max_block_rows(0.9);
+        assert!(rows > 0);
+        let mut probe = b;
+        probe.rows_per_block = rows;
+        assert!(probe.analyze().utilization <= 0.9 + 1e-9);
+        probe.rows_per_block = rows * 2;
+        assert!(probe.analyze().utilization > 0.9);
+    }
+
+    #[test]
+    fn lc_increases_worst_case() {
+        let mut b = base();
+        let w0 = b.analyze().worst_case;
+        b.lc = 3;
+        let w3 = b.analyze().worst_case;
+        assert!((w3 / w0 - 8.0).abs() < 1e-9);
+    }
+}

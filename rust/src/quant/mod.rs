@@ -1,0 +1,135 @@
+//! Quantization between ℝ and F_p (paper §3.1) plus the overflow budget
+//! checker.
+//!
+//! - Dataset: deterministic rounding at scale 2^l_x, embedded by φ (eq. 6).
+//! - Weights: `r` *independent stochastic* quantizations at scale 2^l_w
+//!   (eq. 8–10) — independence is what makes the worker-side polynomial
+//!   ḡ an unbiased estimator (Lemma 1) and hence training converge.
+//! - Decode: Q_p⁻¹ (eq. 24) with total scale l = l_c + l_x + r(l_x+l_w);
+//!   the explicit coefficient scale l_c is our generalization (DESIGN.md
+//!   §Numeric design — l_c=0 reproduces the paper's formula but truncates
+//!   the leading sigmoid coefficient to an integer).
+
+mod budget;
+mod quantizer;
+
+pub use budget::{BudgetReport, OverflowBudget};
+pub use quantizer::{
+    dequant_scale_bits, DatasetQuantizer, Dequantizer, WeightQuantizer,
+};
+
+use crate::field::PrimeField;
+
+/// Deterministic round-half-up (paper eq. 5).
+#[inline]
+pub fn round_half_up(x: f64) -> i64 {
+    let fl = x.floor();
+    if x - fl < 0.5 {
+        fl as i64
+    } else {
+        fl as i64 + 1
+    }
+}
+
+/// Stochastic rounding (paper §3.1): unbiased, E[round(x)] = x.
+#[inline]
+pub fn round_stochastic(x: f64, rng: &mut crate::util::Rng) -> i64 {
+    let fl = x.floor();
+    let frac = x - fl;
+    if rng.f64() < frac {
+        fl as i64 + 1
+    } else {
+        fl as i64
+    }
+}
+
+/// φ: embed a signed integer into F_p by two's complement (paper eq. 7).
+/// Panics in debug if |x| ≥ p/2 (the caller must respect the budget).
+#[inline]
+pub fn phi(f: &PrimeField, x: i64) -> u64 {
+    debug_assert!(
+        (x.unsigned_abs()) <= (f.modulus() - 1) / 2,
+        "phi: |{x}| exceeds field range"
+    );
+    f.from_i64(x)
+}
+
+/// φ⁻¹: back to the signed representative (paper eq. 25).
+#[inline]
+pub fn phi_inv(f: &PrimeField, x: u64) -> i64 {
+    f.to_i64(x)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::field::PAPER_PRIME;
+    use crate::util::proptest::check;
+    use crate::util::Rng;
+
+    #[test]
+    fn round_half_up_matches_eq5() {
+        assert_eq!(round_half_up(1.4), 1);
+        assert_eq!(round_half_up(1.5), 2);
+        assert_eq!(round_half_up(-1.4), -1);
+        assert_eq!(round_half_up(-1.5), -1); // floor(-1.5) = -2; -1.5-(-2)=0.5 → +1
+        assert_eq!(round_half_up(-1.6), -2);
+        assert_eq!(round_half_up(0.0), 0);
+    }
+
+    #[test]
+    fn stochastic_rounding_unbiased() {
+        let mut rng = Rng::new(31);
+        let x = 2.3f64;
+        let n = 100_000;
+        let mean: f64 =
+            (0..n).map(|_| round_stochastic(x, &mut rng) as f64).sum::<f64>() / n as f64;
+        assert!((mean - x).abs() < 0.01, "mean={mean}");
+        // Negative side too.
+        let x = -0.75;
+        let mean: f64 =
+            (0..n).map(|_| round_stochastic(x, &mut rng) as f64).sum::<f64>() / n as f64;
+        assert!((mean - x).abs() < 0.01, "mean={mean}");
+    }
+
+    #[test]
+    fn stochastic_rounding_integer_is_exact() {
+        let mut rng = Rng::new(33);
+        for x in [-3.0, 0.0, 5.0] {
+            for _ in 0..100 {
+                assert_eq!(round_stochastic(x, &mut rng) as f64, x);
+            }
+        }
+    }
+
+    #[test]
+    fn phi_phi_inv_roundtrip_property() {
+        let f = PrimeField::new(PAPER_PRIME);
+        check("phi-roundtrip", 200, move |rng| {
+            let half = ((f.modulus() - 1) / 2) as i64;
+            let x = rng.below(2 * half as u64 + 1) as i64 - half;
+            if phi_inv(&f, phi(&f, x)) != x {
+                return Err(format!("x={x}"));
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn phi_is_additive_homomorphism_within_range() {
+        let f = PrimeField::new(PAPER_PRIME);
+        check("phi-additive", 200, move |rng| {
+            let a = rng.below(1000) as i64 - 500;
+            let b = rng.below(1000) as i64 - 500;
+            let sum_field = f.add(phi(&f, a), phi(&f, b));
+            if phi_inv(&f, sum_field) != a + b {
+                return Err(format!("a={a} b={b}"));
+            }
+            let prod_field = f.mul(phi(&f, a), phi(&f, b));
+            if phi_inv(&f, prod_field) != a * b {
+                return Err(format!("mul a={a} b={b}"));
+            }
+            Ok(())
+        });
+    }
+}

@@ -1,0 +1,216 @@
+//! Matrix/vector quantizers and the dequantizer Q_p⁻¹.
+
+use super::{phi, phi_inv, round_half_up, round_stochastic};
+use crate::field::PrimeField;
+use crate::util::Rng;
+
+/// Total dequantization scale (bits): l = l_c + l_x + r·(l_x + l_w).
+/// With l_c = 0 this is the paper's l = l_x + r(l_x + l_w) (eq. 24).
+pub fn dequant_scale_bits(lx: u32, lw: u32, lc: u32, r: u32) -> u32 {
+    lc + lx + r * (lx + lw)
+}
+
+/// Deterministic dataset quantizer X → X̄ (paper eq. 6).
+#[derive(Debug, Clone, Copy)]
+pub struct DatasetQuantizer {
+    pub field: PrimeField,
+    /// Scale exponent l_x.
+    pub lx: u32,
+}
+
+impl DatasetQuantizer {
+    pub fn new(field: PrimeField, lx: u32) -> Self {
+        DatasetQuantizer { field, lx }
+    }
+
+    /// Quantize a real matrix (row-major) into field elements.
+    pub fn quantize(&self, x: &[f64]) -> Vec<u64> {
+        let scale = (1u64 << self.lx) as f64;
+        x.iter()
+            .map(|&v| phi(&self.field, round_half_up(scale * v)))
+            .collect()
+    }
+
+    /// The real value represented by a quantized entry.
+    pub fn dequantize_entry(&self, q: u64) -> f64 {
+        phi_inv(&self.field, q) as f64 / (1u64 << self.lx) as f64
+    }
+
+    /// Largest |x| the field can hold at this scale: (p-1)/2^(l_x+1)
+    /// (paper §3.1's domain bound).
+    pub fn max_abs_value(&self) -> f64 {
+        (self.field.modulus() - 1) as f64 / (1u64 << (self.lx + 1)) as f64
+    }
+}
+
+/// Stochastic weight quantizer producing the r independent quantizations
+/// W̄ = [w̄^(t),1 ... w̄^(t),r] (paper eq. 9–10).
+#[derive(Debug, Clone, Copy)]
+pub struct WeightQuantizer {
+    pub field: PrimeField,
+    /// Scale exponent l_w.
+    pub lw: u32,
+    /// Number of independent quantizations == sigmoid polynomial degree r.
+    pub r: u32,
+}
+
+impl WeightQuantizer {
+    pub fn new(field: PrimeField, lw: u32, r: u32) -> Self {
+        assert!(r >= 1, "need at least one quantization (r >= 1)");
+        WeightQuantizer { field, lw, r }
+    }
+
+    /// Quantize `w` (length d) into a row-major d × r matrix whose j-th
+    /// column is the j-th independent stochastic quantization.
+    pub fn quantize(&self, w: &[f64], rng: &mut Rng) -> Vec<u64> {
+        let d = w.len();
+        let r = self.r as usize;
+        let scale = (1u64 << self.lw) as f64;
+        let mut out = vec![0u64; d * r];
+        for (i, &wi) in w.iter().enumerate() {
+            for j in 0..r {
+                out[i * r + j] = phi(&self.field, round_stochastic(scale * wi, rng));
+            }
+        }
+        out
+    }
+
+    /// Dequantize one column back to reals (used by tests/diagnostics).
+    pub fn dequantize_column(&self, wq: &[u64], d: usize, col: usize) -> Vec<f64> {
+        let r = self.r as usize;
+        (0..d)
+            .map(|i| phi_inv(&self.field, wq[i * r + col]) as f64 / (1u64 << self.lw) as f64)
+            .collect()
+    }
+}
+
+/// Q_p⁻¹ — converts decoded field vectors back to reals at the combined
+/// scale (paper eq. 24).
+#[derive(Debug, Clone, Copy)]
+pub struct Dequantizer {
+    pub field: PrimeField,
+    /// Total scale bits l.
+    pub l: u32,
+}
+
+impl Dequantizer {
+    pub fn new(field: PrimeField, lx: u32, lw: u32, lc: u32, r: u32) -> Self {
+        Dequantizer { field, l: dequant_scale_bits(lx, lw, lc, r) }
+    }
+
+    #[inline]
+    pub fn dequantize_entry(&self, q: u64) -> f64 {
+        phi_inv(&self.field, q) as f64 / (1u64 << self.l) as f64
+    }
+
+    pub fn dequantize(&self, qs: &[u64]) -> Vec<f64> {
+        qs.iter().map(|&q| self.dequantize_entry(q)).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::field::{PrimeField, PAPER_PRIME};
+    use crate::util::proptest::check;
+    use crate::util::Rng;
+
+    fn field() -> PrimeField {
+        PrimeField::new(PAPER_PRIME)
+    }
+
+    #[test]
+    fn dataset_quantize_dequantize_error_bound() {
+        let q = DatasetQuantizer::new(field(), 2);
+        check("dataset-quant-error", 100, move |rng| {
+            let x: Vec<f64> = (0..32).map(|_| rng.range_f64(-1.0, 1.0)).collect();
+            let xq = q.quantize(&x);
+            for (&orig, &quant) in x.iter().zip(xq.iter()) {
+                let back = q.dequantize_entry(quant);
+                // Max rounding error is half a quantum = 2^-(lx+1).
+                if (back - orig).abs() > 0.5 / 4.0 + 1e-12 {
+                    return Err(format!("orig={orig} back={back}"));
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn dataset_quantizer_exact_on_grid() {
+        let q = DatasetQuantizer::new(field(), 3);
+        // Values on the 2^-3 grid are represented exactly.
+        let x = [0.125, -0.5, 1.0, -2.875, 0.0];
+        let xq = q.quantize(&x);
+        for (&orig, &quant) in x.iter().zip(xq.iter()) {
+            assert_eq!(q.dequantize_entry(quant), orig);
+        }
+    }
+
+    #[test]
+    fn weight_quantizer_shape_and_independence() {
+        let wq = WeightQuantizer::new(field(), 4, 2);
+        let mut rng = Rng::new(41);
+        let w: Vec<f64> = (0..16).map(|_| rng.range_f64(-0.5, 0.5)).collect();
+        let q = wq.quantize(&w, &mut rng);
+        assert_eq!(q.len(), 16 * 2);
+        // The two columns should differ somewhere (independent stochastic
+        // draws; probability of full agreement is astronomically small for
+        // off-grid values).
+        let col0 = wq.dequantize_column(&q, 16, 0);
+        let col1 = wq.dequantize_column(&q, 16, 1);
+        assert_ne!(col0, col1);
+    }
+
+    #[test]
+    fn weight_quantizer_unbiased_per_entry() {
+        let f = field();
+        let wq = WeightQuantizer::new(f, 4, 1);
+        let mut rng = Rng::new(43);
+        let w = [0.3125f64, -0.17, 0.049];
+        let trials = 20_000;
+        let mut sums = [0.0f64; 3];
+        for _ in 0..trials {
+            let q = wq.quantize(&w, &mut rng);
+            for i in 0..3 {
+                sums[i] += phi_inv(&f, q[i]) as f64 / 16.0;
+            }
+        }
+        for i in 0..3 {
+            let mean = sums[i] / trials as f64;
+            assert!(
+                (mean - w[i]).abs() < 0.005,
+                "entry {i}: mean={mean} want {}",
+                w[i]
+            );
+        }
+    }
+
+    #[test]
+    fn dequant_scale_matches_paper_when_lc_zero() {
+        // Paper: l = l_x + r(l_x + l_w); ours with l_c = 0 must agree.
+        assert_eq!(dequant_scale_bits(2, 4, 0, 1), 2 + 1 * 6);
+        assert_eq!(dequant_scale_bits(2, 4, 0, 2), 2 + 2 * 6);
+        // And the generalization adds l_c.
+        assert_eq!(dequant_scale_bits(2, 4, 3, 1), 3 + 2 + 6);
+    }
+
+    #[test]
+    fn dequantizer_scales_correctly() {
+        let f = field();
+        let dq = Dequantizer::new(f, 2, 4, 0, 1); // l = 8
+        let v = phi(&f, 256); // represents 1.0
+        assert_eq!(dq.dequantize_entry(v), 1.0);
+        let v = phi(&f, -128); // represents -0.5
+        assert_eq!(dq.dequantize_entry(v), -0.5);
+        assert_eq!(dq.dequantize(&[phi(&f, 512), phi(&f, 0)]), vec![2.0, 0.0]);
+    }
+
+    #[test]
+    fn max_abs_value_honours_domain_bound() {
+        let q = DatasetQuantizer::new(field(), 2);
+        let bound = q.max_abs_value();
+        // p ≥ 2^(lx+1) · max|X| + 1 (paper §3.1) rearranged.
+        assert!((bound - (PAPER_PRIME - 1) as f64 / 8.0).abs() < 1e-9);
+    }
+}

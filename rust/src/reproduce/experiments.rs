@@ -1,0 +1,477 @@
+//! The ten experiments: Figure 2, Tables 1–3, Figures 3–4 (convergence),
+//! Figure 5 and Tables 4–6 (smaller dataset).
+
+use super::runner::{run_cpml, run_mpc, run_plaintext, ExpParams, TABLE_HEADER};
+use crate::util::json::{obj, Json};
+
+/// Descriptor for one paper artifact.
+pub struct Experiment {
+    pub id: &'static str,
+    pub paper_ref: &'static str,
+    pub what: &'static str,
+}
+
+pub const EXPERIMENTS: &[Experiment] = &[
+    Experiment { id: "fig2", paper_ref: "Figure 2", what: "training time vs N, d=1568: MPC vs CPML Case 1/2" },
+    Experiment { id: "table1", paper_ref: "Table 1", what: "runtime breakdown, N=40, d=1568" },
+    Experiment { id: "table2", paper_ref: "Table 2", what: "runtime breakdown, N=10, d=1568" },
+    Experiment { id: "table3", paper_ref: "Table 3", what: "runtime breakdown, N=25, d=1568" },
+    Experiment { id: "fig3", paper_ref: "Figure 3", what: "test accuracy vs iteration: CPML vs conventional LR" },
+    Experiment { id: "fig4", paper_ref: "Figure 4 (A.6.2)", what: "cross-entropy vs iteration: CPML vs conventional LR" },
+    Experiment { id: "fig5", paper_ref: "Figure 5 (A.6.3)", what: "training time vs N, d=784" },
+    Experiment { id: "table4", paper_ref: "Table 4", what: "runtime breakdown, N=10, d=784" },
+    Experiment { id: "table5", paper_ref: "Table 5", what: "runtime breakdown, N=25, d=784" },
+    Experiment { id: "table6", paper_ref: "Table 6", what: "runtime breakdown, N=40, d=784" },
+    Experiment {
+        id: "ablation-r",
+        paper_ref: "beyond paper",
+        what: "sigmoid degree r ∈ {1, 2}: accuracy vs recovery threshold",
+    },
+    Experiment {
+        id: "ablation-lc",
+        paper_ref: "beyond paper",
+        what: "coefficient scale l_c ∈ {0(paper), 1, 3, 5}: accuracy + budget",
+    },
+    Experiment {
+        id: "ablation-straggler",
+        paper_ref: "beyond paper",
+        what: "straggler intensity vs fastest-R benefit (slack sweep)",
+    },
+    Experiment {
+        id: "ablation-wire",
+        paper_ref: "beyond paper",
+        what: "raw u64 vs bit-packed wire framing: comm time and bytes",
+    },
+];
+
+/// Rendered experiment: human-readable text + machine-readable JSON.
+#[derive(Debug)]
+pub struct ExperimentOutput {
+    pub id: String,
+    pub text: String,
+    pub json: Json,
+}
+
+/// The paper's numbers for speedup-shape comparison (total seconds).
+/// (paper Table 1–6 totals; used only to report expected *shape*.)
+fn paper_totals(d: usize, n: usize) -> Option<(f64, f64, f64)> {
+    // (MPC, CPML case1, CPML case2)
+    match (d, n) {
+        (1568, 10) => Some((1001.53, 303.13, 465.52)),
+        (1568, 25) => Some((1818.63, 144.77, 295.68)),
+        (1568, 40) => Some((4304.60, 126.20, 222.50)),
+        (784, 10) => Some((204.86, 62.23, 96.70)),
+        (784, 25) => Some((484.09, 38.87, 72.39)),
+        (784, 40) => Some((1194.12, 45.58, 76.81)),
+        _ => None,
+    }
+}
+
+fn breakdown_table(n: usize, d: usize, params: &ExpParams) -> Result<(String, Json), String> {
+    let mpc = run_mpc(n, params, false)?;
+    let c1 = run_cpml(n, 1, params, false)?;
+    let c2 = run_cpml(n, 2, params, false)?;
+    let mut text = String::new();
+    text.push_str(&format!(
+        "Breakdown of the total run time with N={n} workers, d={d}, m≈{}×paper, {} iterations\n",
+        params.scale, params.iters
+    ));
+    text.push_str(TABLE_HEADER);
+    text.push('\n');
+    for row in [&mpc, &c1, &c2] {
+        text.push_str(&row.table_row());
+        text.push('\n');
+    }
+    let speed1 = mpc.total_s / c1.total_s;
+    let speed2 = mpc.total_s / c2.total_s;
+    text.push_str(&format!(
+        "speedup vs MPC: Case 1 {speed1:.1}x, Case 2 {speed2:.1}x\n"
+    ));
+    if let Some((pm, p1, p2)) = paper_totals(d, n) {
+        text.push_str(&format!(
+            "paper shape at this (N, d): MPC/Case1 {:.1}x, MPC/Case2 {:.1}x \
+             (absolute seconds not comparable — simulated testbed)\n",
+            pm / p1,
+            pm / p2
+        ));
+    }
+    let json = obj(&[
+        ("n", Json::Num(n as f64)),
+        ("d", Json::Num(d as f64)),
+        ("mpc", mpc.report.to_json()),
+        ("cpml_case1", c1.report.to_json()),
+        ("cpml_case2", c2.report.to_json()),
+        ("speedup_case1", Json::Num(speed1)),
+        ("speedup_case2", Json::Num(speed2)),
+    ]);
+    Ok((text, json))
+}
+
+fn training_time_figure(d: usize, params: &ExpParams) -> Result<(String, Json), String> {
+    let ns = [5usize, 10, 25, 40];
+    let mut text = String::new();
+    text.push_str(&format!(
+        "Total training time vs N (d={d}, m≈{}×paper, {} iters)\n",
+        params.scale, params.iters
+    ));
+    text.push_str("|   N | MPC total (s) | CPML Case 1 (s) | CPML Case 2 (s) | speedup C1 | speedup C2 |\n");
+    text.push_str("|-----|---------------|-----------------|-----------------|------------|------------|\n");
+    let mut rows = Vec::new();
+    for &n in &ns {
+        let mpc = run_mpc(n, params, false)?;
+        let c1 = run_cpml(n, 1, params, false)?;
+        let c2 = run_cpml(n, 2, params, false)?;
+        text.push_str(&format!(
+            "| {n:>3} | {:>13.2} | {:>15.2} | {:>15.2} | {:>9.1}x | {:>9.1}x |\n",
+            mpc.total_s,
+            c1.total_s,
+            c2.total_s,
+            mpc.total_s / c1.total_s,
+            mpc.total_s / c2.total_s
+        ));
+        rows.push(obj(&[
+            ("n", Json::Num(n as f64)),
+            ("mpc_total", Json::Num(mpc.total_s)),
+            ("cpml1_total", Json::Num(c1.total_s)),
+            ("cpml2_total", Json::Num(c2.total_s)),
+        ]));
+    }
+    text.push_str(
+        "expected shape (paper): MPC grows with N; CPML shrinks (Case 1 below Case 2); \
+         speedup expands with N.\n",
+    );
+    Ok((text, Json::Arr(rows)))
+}
+
+fn ascii_curve(label: &str, values: &[f64], lo: f64, hi: f64) -> String {
+    let width = 50usize;
+    let mut out = format!("{label}\n");
+    for (i, &v) in values.iter().enumerate() {
+        let frac = ((v - lo) / (hi - lo)).clamp(0.0, 1.0);
+        let bars = (frac * width as f64).round() as usize;
+        out.push_str(&format!("iter {i:>2} {v:>8.4} |{}\n", "#".repeat(bars)));
+    }
+    out
+}
+
+fn convergence_figures(accuracy: bool, params: &ExpParams) -> Result<(String, Json), String> {
+    // CPML Case 2, N=40 per the paper's Figure 3/4 caption. (Ablations
+    // showed the accuracy gap vs conventional LR is dominated by the
+    // degree-1 sigmoid approximation, not quantization: raising l_c or
+    // l_w moves the final accuracy by <0.3% — see EXPERIMENTS.md.)
+    let cpml = cpml_with(params, 40, |_| {})?;
+    let (plain_loss, plain_acc) = run_plaintext(params);
+    let mut text = String::new();
+    if accuracy {
+        let cpml_acc: Vec<f64> = cpml
+            .iterations
+            .iter()
+            .map(|m| m.test_accuracy.unwrap_or(f64::NAN))
+            .collect();
+        text.push_str(&format!(
+            "Test accuracy vs iteration (CPML Case 2, N=40, degree-1 sigmoid)\n\
+             final: CPML {:.2}%  conventional LR {:.2}%  (paper: 95.04% vs 95.98%)\n\n",
+            100.0 * cpml_acc.last().unwrap(),
+            100.0 * plain_acc.last().unwrap()
+        ));
+        text.push_str(&ascii_curve("CodedPrivateML accuracy", &cpml_acc, 0.4, 1.0));
+        text.push('\n');
+        text.push_str(&ascii_curve("Conventional LR accuracy", &plain_acc, 0.4, 1.0));
+        let json = obj(&[
+            ("cpml_accuracy", Json::Arr(cpml_acc.iter().map(|&v| Json::Num(v)).collect())),
+            ("plain_accuracy", Json::Arr(plain_acc.iter().map(|&v| Json::Num(v)).collect())),
+        ]);
+        Ok((text, json))
+    } else {
+        let cpml_loss: Vec<f64> = cpml.iterations.iter().map(|m| m.train_loss).collect();
+        let hi = cpml_loss
+            .first()
+            .copied()
+            .unwrap_or(0.7)
+            .max(plain_loss.first().copied().unwrap_or(0.7));
+        text.push_str(&format!(
+            "Cross-entropy vs iteration (CPML Case 2, N=40)\n\
+             final: CPML {:.4}  conventional LR {:.4}\n\n",
+            cpml_loss.last().unwrap(),
+            plain_loss.last().unwrap()
+        ));
+        text.push_str(&ascii_curve("CodedPrivateML loss", &cpml_loss, 0.0, hi));
+        text.push('\n');
+        text.push_str(&ascii_curve("Conventional LR loss", &plain_loss, 0.0, hi));
+        let json = obj(&[
+            ("cpml_loss", Json::Arr(cpml_loss.iter().map(|&v| Json::Num(v)).collect())),
+            ("plain_loss", Json::Arr(plain_loss.iter().map(|&v| Json::Num(v)).collect())),
+        ]);
+        Ok((text, json))
+    }
+}
+
+fn cpml_with(
+    params: &ExpParams,
+    n: usize,
+    tweak: impl FnOnce(&mut crate::coordinator::CodedMlConfig),
+) -> Result<crate::coordinator::TrainReport, String> {
+    use crate::coordinator::{CodedMlConfig, CodedMlSession};
+    let mut cfg = CodedMlConfig::case2(n, 1).map_err(|e| e.to_string())?;
+    cfg.iters = params.iters;
+    cfg.seed = params.seed;
+    cfg.backend = params.backend;
+    cfg.straggler = params.straggler;
+    cfg.net = params.net;
+    cfg.p = params.p;
+    cfg.strict_budget = true; // a wrapped gradient is a wrong experiment
+    tweak(&mut cfg);
+    let (train, test) = params.dataset();
+    let mut sess = CodedMlSession::new(cfg, &train).map_err(|e| e.to_string())?;
+    sess.train(params.iters, Some(&test)).map_err(|e| e.to_string())
+}
+
+/// Ablation: sigmoid polynomial degree r. r=2 costs a much larger
+/// recovery threshold ((2r+1) factor) for marginal accuracy — the reason
+/// the paper settles on r=1.
+fn ablation_r(params: &ExpParams) -> Result<(String, Json), String> {
+    use crate::coding::CodingParams;
+    let n = 25;
+    let mut text = String::from("| r | (K, T) | recovery threshold | final acc | total (s) |\n");
+    text.push_str("|---|--------|--------------------|-----------|-----------|\n");
+    let mut rows = Vec::new();
+    for r in [1usize, 2] {
+        let p = CodingParams::case2(n, r).map_err(|e| e.to_string())?;
+        let rep = cpml_with(params, n, |cfg| {
+            cfg.r = r;
+            cfg.k = p.k;
+            cfg.t = p.t;
+            // r=2 doubles the dequantization scale bits — the overflow
+            // budget only closes with coarser per-factor scales. Apply
+            // the same scales to r=1 so the comparison is fair.
+            cfg.lx = 1;
+            cfg.lw = 2;
+            cfg.lc = 2;
+        })?;
+        let acc = rep.final_accuracy().unwrap_or(f64::NAN);
+        text.push_str(&format!(
+            "| {r} | ({}, {}) | {:>18} | {:>8.4} | {:>9.2} |\n",
+            p.k,
+            p.t,
+            rep.recovery_threshold,
+            acc,
+            rep.breakdown.total()
+        ));
+        rows.push(obj(&[
+            ("r", Json::Num(r as f64)),
+            ("threshold", Json::Num(rep.recovery_threshold as f64)),
+            ("accuracy", Json::Num(acc)),
+            ("total_s", Json::Num(rep.breakdown.total())),
+        ]));
+    }
+    text.push_str("shape: r=2 buys little accuracy at this activation range but slashes K and T.\n");
+    Ok((text, Json::Arr(rows)))
+}
+
+/// Ablation: coefficient scale l_c. l_c = 0 is the paper's implicit
+/// choice — it truncates the degree-1 slope coefficient to 0 and training
+/// stalls, which is why this repo generalizes the dequantization scale.
+fn ablation_lc(params: &ExpParams) -> Result<(String, Json), String> {
+    let n = 10;
+    let mut text = String::from("| l_c | final loss | final acc | note |\n|-----|------------|-----------|------|\n");
+    let mut rows = Vec::new();
+    for lc in [0u32, 1, 3, 5] {
+        let rep = cpml_with(params, n, |cfg| cfg.lc = lc)?;
+        let loss = rep.final_loss().unwrap_or(f64::NAN);
+        let acc = rep.final_accuracy().unwrap_or(f64::NAN);
+        let note = if lc == 0 { "paper's formula: slope c̄₁ rounds to 0" } else { "" };
+        text.push_str(&format!("| {lc:>3} | {loss:>10.5} | {acc:>9.4} | {note} |\n"));
+        rows.push(obj(&[
+            ("lc", Json::Num(lc as f64)),
+            ("loss", Json::Num(loss)),
+            ("accuracy", Json::Num(acc)),
+        ]));
+    }
+    Ok((text, Json::Arr(rows)))
+}
+
+/// Ablation: straggler intensity. The fastest-R discount keeps the
+/// modeled iteration time near the straggle-free baseline until the
+/// slack (N − R) is exhausted.
+fn ablation_straggler(params: &ExpParams) -> Result<(String, Json), String> {
+    use crate::cluster::StragglerModel;
+    let n = 25; // case 2 at N=25: threshold 22, slack 3
+    let mut text =
+        String::from("| straggle mean (xcompute) | comp time (s) | vs none |\n|--------------------------|---------------|--------|\n");
+    let mut rows = Vec::new();
+    let mut base = None;
+    for rate in [f64::INFINITY, 5.0, 1.0, 0.25] {
+        let rep = cpml_with(params, n, |cfg| {
+            cfg.straggler = StragglerModel { shift: 0.0, rate, relative: true };
+        })?;
+        let comp = rep.breakdown.comp_s;
+        let b = *base.get_or_insert(comp);
+        let mean = if rate.is_finite() { format!("{:.2}", 1.0 / rate) } else { "0".into() };
+        text.push_str(&format!(
+            "| {mean:>24} | {comp:>13.3} | {:>5.2}x |\n",
+            comp / b
+        ));
+        rows.push(obj(&[
+            ("mean_rel_delay", Json::Num(if rate.is_finite() { 1.0 / rate } else { 0.0 })),
+            ("comp_s", Json::Num(comp)),
+        ]));
+    }
+    text.push_str("shape: waiting only for the fastest R absorbs the straggler tail.\n");
+    Ok((text, Json::Arr(rows)))
+}
+
+/// Ablation: wire framing. Bit-packing field elements to ⌈log₂ p⌉ bits
+/// shrinks the dominant one-time dataset broadcast (and every message)
+/// by 64/26 ≈ 2.46x at the harness prime, without touching the math.
+fn ablation_wire(params: &ExpParams) -> Result<(String, Json), String> {
+    let n = 10;
+    let mut text = String::from(
+        "| framing | comm (s) | bytes sent | final loss |\n|---------|----------|------------|------------|\n",
+    );
+    let mut rows = Vec::new();
+    let mut losses = Vec::new();
+    for packed in [false, true] {
+        let rep = cpml_with(params, n, |cfg| cfg.packed_wire = packed)?;
+        let label = if packed { "packed" } else { "raw u64" };
+        let loss = rep.final_loss().unwrap_or(f64::NAN);
+        losses.push(loss);
+        text.push_str(&format!(
+            "| {label:<7} | {:>8.3} | {:>10} | {loss:>10.5} |\n",
+            rep.breakdown.comm_s, rep.bytes_sent
+        ));
+        rows.push(obj(&[
+            ("packed", Json::Bool(packed)),
+            ("comm_s", Json::Num(rep.breakdown.comm_s)),
+            ("bytes_sent", Json::Num(rep.bytes_sent as f64)),
+            ("loss", Json::Num(loss)),
+        ]));
+    }
+    if (losses[0] - losses[1]).abs() > 1e-12 {
+        return Err("wire framing changed the training outcome".into());
+    }
+    text.push_str("framing is transparent to the protocol (identical loss).\n");
+    Ok((text, Json::Arr(rows)))
+}
+
+/// Run one experiment by id.
+pub fn run_experiment(id: &str, params: &ExpParams) -> Result<ExperimentOutput, String> {
+    let mut params = params.clone();
+    let (text, json) = match id {
+        "fig2" => training_time_figure(1568, &params)?,
+        "table1" => breakdown_table(40, 1568, &params)?,
+        "table2" => breakdown_table(10, 1568, &params)?,
+        "table3" => breakdown_table(25, 1568, &params)?,
+        "fig3" => {
+            params.d = 784; // accuracy experiments use the raw 3-vs-7 task
+            convergence_figures(true, &params)?
+        }
+        "fig4" => {
+            params.d = 784;
+            convergence_figures(false, &params)?
+        }
+        "fig5" => {
+            params.d = 784;
+            training_time_figure(784, &params)?
+        }
+        "table4" => {
+            params.d = 784;
+            breakdown_table(10, 784, &params)?
+        }
+        "table5" => {
+            params.d = 784;
+            breakdown_table(25, 784, &params)?
+        }
+        "table6" => {
+            params.d = 784;
+            breakdown_table(40, 784, &params)?
+        }
+        "ablation-r" => {
+            params.d = 784;
+            ablation_r(&params)?
+        }
+        "ablation-lc" => {
+            params.d = 784;
+            ablation_lc(&params)?
+        }
+        "ablation-straggler" => {
+            params.d = 784;
+            ablation_straggler(&params)?
+        }
+        "ablation-wire" => {
+            params.d = 784;
+            ablation_wire(&params)?
+        }
+        other => {
+            return Err(format!(
+                "unknown experiment '{other}'; available: {}",
+                EXPERIMENTS.iter().map(|e| e.id).collect::<Vec<_>>().join(", ")
+            ))
+        }
+    };
+    let exp = EXPERIMENTS.iter().find(|e| e.id == id).unwrap();
+    let mut full = format!("=== {} — {} ===\n{}\n", exp.paper_ref, exp.what, text);
+    full.push('\n');
+    Ok(ExperimentOutput {
+        id: id.to_string(),
+        text: full,
+        json: obj(&[("id", Json::Str(id.into())), ("data", json)]),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::{NetworkModel, StragglerModel};
+
+    fn micro() -> ExpParams {
+        ExpParams {
+            scale: 0.008,
+            iters: 2,
+            straggler: StragglerModel::none(),
+            net: NetworkModel::default(),
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn experiment_list_covers_all_paper_artifacts() {
+        let ids = super::super::list();
+        for want in ["fig2", "fig3", "fig4", "fig5", "table1", "table2", "table3", "table4", "table5", "table6"] {
+            assert!(ids.contains(&want), "missing {want}");
+        }
+    }
+
+    #[test]
+    fn unknown_experiment_errors_helpfully() {
+        let err = run_experiment("fig9", &micro()).unwrap_err();
+        assert!(err.contains("unknown experiment"), "{err}");
+        assert!(err.contains("fig2"));
+    }
+
+    #[test]
+    fn table_breakdown_runs_at_micro_scale() {
+        let out = run_experiment("table2", &micro()).unwrap();
+        assert!(out.text.contains("MPC approach"));
+        assert!(out.text.contains("CodedPrivateML (Case 1)"));
+        assert!(out.text.contains("speedup vs MPC"));
+        assert!(out.json.get("data").unwrap().get("speedup_case1").is_some());
+    }
+
+    #[test]
+    fn fig3_runs_at_micro_scale() {
+        let mut p = micro();
+        p.iters = 3;
+        let out = run_experiment("fig3", &p).unwrap();
+        assert!(out.text.contains("Test accuracy"));
+        let data = out.json.get("data").unwrap();
+        assert_eq!(data.get("cpml_accuracy").unwrap().as_arr().unwrap().len(), 3);
+    }
+
+    #[test]
+    fn ascii_curve_monotone_bars() {
+        let s = ascii_curve("x", &[0.0, 0.5, 1.0], 0.0, 1.0);
+        let lines: Vec<&str> = s.lines().collect();
+        assert!(lines[1].ends_with('|'));
+        assert!(lines[3].matches('#').count() > lines[2].matches('#').count());
+    }
+}

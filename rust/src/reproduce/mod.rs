@@ -1,0 +1,20 @@
+//! Experiment harness — regenerates every table and figure of the paper's
+//! evaluation (§5 and Appendix A.6). See DESIGN.md §Experiment index.
+//!
+//! Absolute seconds differ from the paper (their testbed is 40 EC2
+//! machines; ours is one host simulating them — DESIGN.md
+//! §Substitutions), so each experiment reports the *shape* the paper
+//! claims alongside the measured numbers: who wins, by what factor, and
+//! how the curves move with N. `--scale` shrinks m for quick runs;
+//! EXPERIMENTS.md records a full run.
+
+mod experiments;
+mod runner;
+
+pub use experiments::{run_experiment, ExperimentOutput, EXPERIMENTS};
+pub use runner::{run_cpml, run_mpc, run_plaintext, ExpParams, RunRow, TABLE_HEADER};
+
+/// All experiment ids, in paper order.
+pub fn list() -> Vec<&'static str> {
+    EXPERIMENTS.iter().map(|e| e.id).collect()
+}

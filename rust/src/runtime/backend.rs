@@ -1,0 +1,177 @@
+//! Worker compute backend selection.
+//!
+//! The coordinator ships workers a `Send`-able spec; each worker thread
+//! materializes its backend locally (the XLA runtime is intentionally
+//! thread-local, see [`super::client`]). Both backends are bit-exact —
+//! `rust/tests/backend_equiv.rs` asserts equality on every manifest shape.
+
+use std::path::PathBuf;
+
+use super::client::{XlaRuntime, XlaRuntimeError};
+use crate::compute::WorkerComputation;
+use crate::field::PrimeField;
+
+/// Which implementation executes f(X̃, W̃) on workers.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum BackendKind {
+    /// Pure-rust modular kernels (any shape).
+    Native,
+    /// AOT JAX/Pallas artifact via PJRT (shapes in the manifest).
+    Xla,
+}
+
+impl std::str::FromStr for BackendKind {
+    type Err = String;
+
+    fn from_str(s: &str) -> Result<Self, String> {
+        match s {
+            "native" => Ok(BackendKind::Native),
+            "xla" => Ok(BackendKind::Xla),
+            other => Err(format!("unknown backend '{other}' (native|xla)")),
+        }
+    }
+}
+
+/// A worker's compute engine. Constructed inside the worker thread.
+pub enum WorkerBackend {
+    Native(WorkerComputation),
+    Xla {
+        runtime: Box<XlaRuntime>,
+        field: PrimeField,
+        rows: usize,
+        d: usize,
+        coeffs: Vec<u64>,
+        /// The data share marshalled once (X̃ is iteration-invariant);
+        /// set by [`WorkerBackend::prepare_data`].
+        x_literal: std::cell::RefCell<Option<xla::Literal>>,
+    },
+}
+
+impl WorkerBackend {
+    /// Build a backend for a (rows × d) coded block with the given
+    /// field-quantized sigmoid coefficients.
+    pub fn create(
+        kind: BackendKind,
+        artifact_dir: &PathBuf,
+        field: PrimeField,
+        rows: usize,
+        d: usize,
+        coeffs: Vec<u64>,
+    ) -> Result<Self, XlaRuntimeError> {
+        match kind {
+            BackendKind::Native => Ok(WorkerBackend::Native(WorkerComputation::new(
+                field, rows, d, coeffs,
+            ))),
+            BackendKind::Xla => {
+                let runtime = Box::new(XlaRuntime::new(artifact_dir)?);
+                // Fail fast if the shape is missing from the manifest.
+                let r = coeffs.len() - 1;
+                runtime
+                    .manifest()
+                    .find_worker(rows, d, r, field.modulus())
+                    .ok_or(XlaRuntimeError::NoArtifact { what: "worker_f", rows, d, r })?;
+                Ok(WorkerBackend::Xla {
+                    runtime,
+                    field,
+                    rows,
+                    d,
+                    coeffs,
+                    x_literal: std::cell::RefCell::new(None),
+                })
+            }
+        }
+    }
+
+    /// One-time data delivery hook: the XLA backend marshals the share
+    /// into a literal here so the per-iteration path only marshals W̃.
+    pub fn prepare_data(&self, x: &[u64]) -> Result<(), XlaRuntimeError> {
+        if let WorkerBackend::Xla { rows, d, x_literal, .. } = self {
+            *x_literal.borrow_mut() = Some(XlaRuntime::matrix_literal(x, *rows, *d)?);
+        }
+        Ok(())
+    }
+
+    /// Evaluate f(X̃, W̃).
+    pub fn compute(&self, x: &[u64], w: &[u64]) -> Result<Vec<u64>, XlaRuntimeError> {
+        match self {
+            WorkerBackend::Native(wc) => Ok(wc.compute(x, w)),
+            WorkerBackend::Xla { runtime, field, rows, d, coeffs, x_literal } => {
+                if x_literal.borrow().is_none() {
+                    self.prepare_data(x)?;
+                }
+                let lit = x_literal.borrow();
+                runtime.worker_f_literal(
+                    lit.as_ref().unwrap(),
+                    w,
+                    coeffs,
+                    *rows,
+                    *d,
+                    field.modulus(),
+                )
+            }
+        }
+    }
+
+    pub fn kind(&self) -> BackendKind {
+        match self {
+            WorkerBackend::Native(_) => BackendKind::Native,
+            WorkerBackend::Xla { .. } => BackendKind::Xla,
+        }
+    }
+}
+
+impl std::fmt::Debug for WorkerBackend {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            WorkerBackend::Native(_) => write!(f, "WorkerBackend::Native"),
+            WorkerBackend::Xla { rows, d, .. } => {
+                write!(f, "WorkerBackend::Xla({rows}x{d})")
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::field::PAPER_PRIME;
+
+    #[test]
+    fn backend_kind_parses() {
+        assert_eq!("native".parse::<BackendKind>().unwrap(), BackendKind::Native);
+        assert_eq!("xla".parse::<BackendKind>().unwrap(), BackendKind::Xla);
+        assert!("tpu".parse::<BackendKind>().is_err());
+    }
+
+    #[test]
+    fn native_backend_computes() {
+        let f = PrimeField::new(PAPER_PRIME);
+        let be = WorkerBackend::create(
+            BackendKind::Native,
+            &PathBuf::from("/nonexistent"), // unused for native
+            f,
+            2,
+            3,
+            vec![1, 2],
+        )
+        .unwrap();
+        assert_eq!(be.kind(), BackendKind::Native);
+        let out = be.compute(&[1, 2, 3, 4, 5, 6], &[1, 1, 1]).unwrap();
+        assert_eq!(out.len(), 3);
+    }
+
+    #[test]
+    fn xla_backend_missing_dir_errors() {
+        let f = PrimeField::new(PAPER_PRIME);
+        let err = WorkerBackend::create(
+            BackendKind::Xla,
+            &PathBuf::from("/nonexistent"),
+            f,
+            2,
+            3,
+            vec![1, 2],
+        )
+        .unwrap_err();
+        assert!(matches!(err, XlaRuntimeError::Manifest(_)));
+    }
+}

@@ -1,0 +1,222 @@
+//! PJRT execution of AOT artifacts.
+//!
+//! One `XlaRuntime` owns a PJRT CPU client, the parsed manifest, and an
+//! executable cache (each `.hlo.txt` is parsed + compiled at most once per
+//! process). `XlaRuntime` is deliberately **not** `Send` — the underlying
+//! `xla::PjRtClient` is `Rc`-based — so each simulated worker thread that
+//! wants the XLA backend constructs its own runtime from a cheap
+//! [`super::backend::WorkerBackend`] spec, mirroring how real workers each
+//! own their accelerator runtime.
+
+use std::cell::RefCell;
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::rc::Rc;
+
+use super::manifest::{Manifest, ManifestError};
+
+#[derive(Debug)]
+pub enum XlaRuntimeError {
+    Manifest(ManifestError),
+    /// No artifact for the requested shape.
+    NoArtifact { what: &'static str, rows: usize, d: usize, r: usize },
+    /// Error from the xla crate (client, compile, execute).
+    Xla(String),
+    /// Result had an unexpected shape or type.
+    BadResult(String),
+}
+
+impl std::fmt::Display for XlaRuntimeError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            XlaRuntimeError::Manifest(e) => write!(f, "{e}"),
+            XlaRuntimeError::NoArtifact { what, rows, d, r } => write!(
+                f,
+                "no {what} artifact for rows={rows} d={d} r={r}; \
+                 add the shape to python/compile/shapes.py and re-run `make artifacts`, \
+                 or use the native backend"
+            ),
+            XlaRuntimeError::Xla(e) => write!(f, "xla: {e}"),
+            XlaRuntimeError::BadResult(e) => write!(f, "bad result: {e}"),
+        }
+    }
+}
+
+impl std::error::Error for XlaRuntimeError {}
+
+impl From<ManifestError> for XlaRuntimeError {
+    fn from(e: ManifestError) -> Self {
+        XlaRuntimeError::Manifest(e)
+    }
+}
+
+fn xerr(e: xla::Error) -> XlaRuntimeError {
+    XlaRuntimeError::Xla(e.to_string())
+}
+
+/// PJRT CPU runtime with executable cache.
+pub struct XlaRuntime {
+    client: xla::PjRtClient,
+    manifest: Manifest,
+    dir: PathBuf,
+    cache: RefCell<HashMap<PathBuf, Rc<xla::PjRtLoadedExecutable>>>,
+    compiles: RefCell<u64>,
+}
+
+impl XlaRuntime {
+    /// Create a runtime over an artifact directory (reads manifest.json).
+    pub fn new(artifact_dir: &Path) -> Result<Self, XlaRuntimeError> {
+        let manifest = Manifest::load(artifact_dir)?;
+        let client = xla::PjRtClient::cpu().map_err(xerr)?;
+        Ok(XlaRuntime {
+            client,
+            manifest,
+            dir: artifact_dir.to_path_buf(),
+            cache: RefCell::new(HashMap::new()),
+            compiles: RefCell::new(0),
+        })
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    pub fn artifact_dir(&self) -> &Path {
+        &self.dir
+    }
+
+    /// Number of PJRT compilations performed (observability: the request
+    /// path must not recompile — see EXPERIMENTS.md §Perf).
+    pub fn compile_count(&self) -> u64 {
+        *self.compiles.borrow()
+    }
+
+    fn executable(&self, path: &Path) -> Result<Rc<xla::PjRtLoadedExecutable>, XlaRuntimeError> {
+        if let Some(exe) = self.cache.borrow().get(path) {
+            return Ok(exe.clone());
+        }
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().ok_or_else(|| XlaRuntimeError::BadResult("non-utf8 path".into()))?,
+        )
+        .map_err(xerr)?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = Rc::new(self.client.compile(&comp).map_err(xerr)?);
+        *self.compiles.borrow_mut() += 1;
+        self.cache.borrow_mut().insert(path.to_path_buf(), exe.clone());
+        Ok(exe)
+    }
+
+    /// Execute the worker computation f(X̃, W̃) via the AOT artifact for
+    /// (rows, d, r, p). Field elements in/out as `u64 < p`.
+    pub fn worker_f(
+        &self,
+        x: &[u64],
+        w: &[u64],
+        coeffs: &[u64],
+        rows: usize,
+        d: usize,
+        p: u64,
+    ) -> Result<Vec<u64>, XlaRuntimeError> {
+        let lx = Self::matrix_literal(x, rows, d)?;
+        self.worker_f_literal(&lx, w, coeffs, rows, d, p)
+    }
+
+    /// Convert a field matrix into a device-ready literal. Workers call
+    /// this once on their (iteration-invariant) data share and reuse it —
+    /// the per-iteration hot path then only marshals the small W̃ panel
+    /// (EXPERIMENTS.md §Perf).
+    pub fn matrix_literal(x: &[u64], rows: usize, d: usize) -> Result<xla::Literal, XlaRuntimeError> {
+        assert_eq!(x.len(), rows * d);
+        let xi: Vec<i64> = x.iter().map(|&v| v as i64).collect();
+        xla::Literal::vec1(&xi)
+            .reshape(&[rows as i64, d as i64])
+            .map_err(xerr)
+    }
+
+    /// `worker_f` with a pre-marshalled X̃ literal.
+    pub fn worker_f_literal(
+        &self,
+        lx: &xla::Literal,
+        w: &[u64],
+        coeffs: &[u64],
+        rows: usize,
+        d: usize,
+        p: u64,
+    ) -> Result<Vec<u64>, XlaRuntimeError> {
+        let r = coeffs.len() - 1;
+        let entry = self
+            .manifest
+            .find_worker(rows, d, r, p)
+            .ok_or(XlaRuntimeError::NoArtifact { what: "worker_f", rows, d, r })?;
+        let exe = self.executable(&entry.path.clone())?;
+
+        let wi: Vec<i64> = w.iter().map(|&v| v as i64).collect();
+        let ci: Vec<i64> = coeffs.iter().map(|&v| v as i64).collect();
+        let lw = xla::Literal::vec1(&wi)
+            .reshape(&[d as i64, r as i64])
+            .map_err(xerr)?;
+        let lc = xla::Literal::vec1(&ci);
+
+        let result = exe.execute::<&xla::Literal>(&[lx, &lw, &lc]).map_err(xerr)?[0][0]
+            .to_literal_sync()
+            .map_err(xerr)?;
+        let out = result.to_tuple1().map_err(xerr)?;
+        let vals: Vec<i64> = out.to_vec().map_err(xerr)?;
+        if vals.len() != d {
+            return Err(XlaRuntimeError::BadResult(format!(
+                "worker_f returned {} values, expected {d}",
+                vals.len()
+            )));
+        }
+        Ok(vals.into_iter().map(|v| v as u64).collect())
+    }
+
+    /// Execute one plaintext LR gradient step via artifact; returns
+    /// (updated weights, loss).
+    pub fn lr_step(
+        &self,
+        x: &[f64],
+        y: &[f64],
+        w: &[f64],
+        eta: f64,
+        m: usize,
+        d: usize,
+    ) -> Result<(Vec<f64>, f64), XlaRuntimeError> {
+        let entry = self
+            .manifest
+            .find_lr_step(m, d)
+            .ok_or(XlaRuntimeError::NoArtifact { what: "lr_step", rows: m, d, r: 0 })?;
+        let exe = self.executable(&entry.path.clone())?;
+
+        let lx = xla::Literal::vec1(x)
+            .reshape(&[m as i64, d as i64])
+            .map_err(xerr)?;
+        let ly = xla::Literal::vec1(y);
+        let lw = xla::Literal::vec1(w);
+        let le = xla::Literal::scalar(eta);
+
+        let result = exe.execute::<xla::Literal>(&[lx, ly, lw, le]).map_err(xerr)?[0][0]
+            .to_literal_sync()
+            .map_err(xerr)?;
+        let (w_out, loss) = result.to_tuple2().map_err(xerr)?;
+        let w_new: Vec<f64> = w_out.to_vec().map_err(xerr)?;
+        let loss: f64 = loss.get_first_element().map_err(xerr)?;
+        if w_new.len() != d {
+            return Err(XlaRuntimeError::BadResult(format!(
+                "lr_step returned {} weights, expected {d}",
+                w_new.len()
+            )));
+        }
+        Ok((w_new, loss))
+    }
+}
+
+impl std::fmt::Debug for XlaRuntime {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("XlaRuntime")
+            .field("dir", &self.dir)
+            .field("artifacts", &self.manifest.entries.len())
+            .field("compiled", &self.cache.borrow().len())
+            .finish()
+    }
+}

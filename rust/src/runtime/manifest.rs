@@ -1,0 +1,222 @@
+//! Artifact manifest — the contract between `python/compile/aot.py` and
+//! the rust runtime.
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+use crate::util::json::Json;
+
+/// What a given artifact computes.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum ArtifactKind {
+    /// f(X̃, W̃) over F_p (the CodedPrivateML worker step).
+    WorkerF,
+    /// Plaintext logistic-regression GD step (f64).
+    LrStep,
+}
+
+/// One manifest entry.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ArtifactEntry {
+    pub kind: ArtifactKind,
+    pub name: String,
+    /// Path to the `.hlo.txt`, resolved relative to the manifest.
+    pub path: PathBuf,
+    /// worker_f: coded block rows (m/K); lr_step: batch rows m.
+    pub rows: usize,
+    pub d: usize,
+    /// worker_f only: sigmoid degree.
+    pub r: usize,
+    /// worker_f only: field prime baked into the kernel.
+    pub p: u64,
+}
+
+#[derive(Debug)]
+pub enum ManifestError {
+    Io(std::io::Error),
+    Parse(String),
+    MissingField { entry: usize, field: &'static str },
+}
+
+impl std::fmt::Display for ManifestError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ManifestError::Io(e) => write!(f, "manifest io: {e}"),
+            ManifestError::Parse(e) => write!(f, "manifest parse: {e}"),
+            ManifestError::MissingField { entry, field } => {
+                write!(f, "manifest entry {entry}: missing/invalid '{field}'")
+            }
+        }
+    }
+}
+
+impl std::error::Error for ManifestError {}
+
+/// Parsed manifest with shape indexes.
+#[derive(Debug, Clone, Default)]
+pub struct Manifest {
+    pub entries: Vec<ArtifactEntry>,
+    /// (rows, d, r, p) → entry index, for worker_f lookups.
+    worker_index: HashMap<(usize, usize, usize, u64), usize>,
+    /// (m, d) → entry index, for lr_step lookups.
+    lr_index: HashMap<(usize, usize), usize>,
+}
+
+impl Manifest {
+    /// Load `<dir>/manifest.json`.
+    pub fn load(dir: &Path) -> Result<Manifest, ManifestError> {
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path).map_err(ManifestError::Io)?;
+        Self::parse(&text, dir)
+    }
+
+    /// Parse manifest text; artifact paths resolve against `dir`.
+    pub fn parse(text: &str, dir: &Path) -> Result<Manifest, ManifestError> {
+        let root = Json::parse(text).map_err(|e| ManifestError::Parse(e.to_string()))?;
+        let arts = root
+            .get("artifacts")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| ManifestError::Parse("no 'artifacts' array".into()))?;
+        let mut m = Manifest::default();
+        for (i, a) in arts.iter().enumerate() {
+            let kind = match a.get("kind").and_then(Json::as_str) {
+                Some("worker_f") => ArtifactKind::WorkerF,
+                Some("lr_step") => ArtifactKind::LrStep,
+                _ => return Err(ManifestError::MissingField { entry: i, field: "kind" }),
+            };
+            let name = a
+                .get("name")
+                .and_then(Json::as_str)
+                .ok_or(ManifestError::MissingField { entry: i, field: "name" })?
+                .to_string();
+            let file = a
+                .get("file")
+                .and_then(Json::as_str)
+                .ok_or(ManifestError::MissingField { entry: i, field: "file" })?;
+            let d = a
+                .get("d")
+                .and_then(Json::as_usize)
+                .ok_or(ManifestError::MissingField { entry: i, field: "d" })?;
+            let entry = match kind {
+                ArtifactKind::WorkerF => ArtifactEntry {
+                    kind,
+                    name,
+                    path: dir.join(file),
+                    rows: a
+                        .get("rows")
+                        .and_then(Json::as_usize)
+                        .ok_or(ManifestError::MissingField { entry: i, field: "rows" })?,
+                    d,
+                    r: a
+                        .get("r")
+                        .and_then(Json::as_usize)
+                        .ok_or(ManifestError::MissingField { entry: i, field: "r" })?,
+                    p: a
+                        .get("p")
+                        .and_then(Json::as_u64)
+                        .ok_or(ManifestError::MissingField { entry: i, field: "p" })?,
+                },
+                ArtifactKind::LrStep => ArtifactEntry {
+                    kind,
+                    name,
+                    path: dir.join(file),
+                    rows: a
+                        .get("m")
+                        .and_then(Json::as_usize)
+                        .ok_or(ManifestError::MissingField { entry: i, field: "m" })?,
+                    d,
+                    r: 0,
+                    p: 0,
+                },
+            };
+            let idx = m.entries.len();
+            match kind {
+                ArtifactKind::WorkerF => {
+                    m.worker_index.insert((entry.rows, entry.d, entry.r, entry.p), idx);
+                }
+                ArtifactKind::LrStep => {
+                    m.lr_index.insert((entry.rows, entry.d), idx);
+                }
+            }
+            m.entries.push(entry);
+        }
+        Ok(m)
+    }
+
+    /// worker_f artifact for an exact (rows, d, r, p) shape.
+    pub fn find_worker(&self, rows: usize, d: usize, r: usize, p: u64) -> Option<&ArtifactEntry> {
+        self.worker_index.get(&(rows, d, r, p)).map(|&i| &self.entries[i])
+    }
+
+    /// lr_step artifact for (m, d).
+    pub fn find_lr_step(&self, m: usize, d: usize) -> Option<&ArtifactEntry> {
+        self.lr_index.get(&(m, d)).map(|&i| &self.entries[i])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"{
+      "version": 1, "prime": 15485863,
+      "artifacts": [
+        {"kind": "worker_f", "name": "w1", "file": "w1.hlo.txt",
+         "rows": 64, "d": 784, "r": 1, "p": 15485863, "block_rows": 32},
+        {"kind": "lr_step", "name": "l1", "file": "l1.hlo.txt",
+         "m": 256, "d": 784}
+      ]
+    }"#;
+
+    #[test]
+    fn parses_and_indexes() {
+        let m = Manifest::parse(SAMPLE, Path::new("/art")).unwrap();
+        assert_eq!(m.entries.len(), 2);
+        let w = m.find_worker(64, 784, 1, 15485863).unwrap();
+        assert_eq!(w.kind, ArtifactKind::WorkerF);
+        assert_eq!(w.path, Path::new("/art/w1.hlo.txt"));
+        assert!(m.find_worker(64, 784, 2, 15485863).is_none());
+        let l = m.find_lr_step(256, 784).unwrap();
+        assert_eq!(l.kind, ArtifactKind::LrStep);
+        assert!(m.find_lr_step(256, 10).is_none());
+    }
+
+    #[test]
+    fn missing_field_reported() {
+        let bad = r#"{"artifacts": [{"kind": "worker_f", "name": "x", "file": "f"}]}"#;
+        let err = Manifest::parse(bad, Path::new(".")).unwrap_err();
+        assert!(matches!(err, ManifestError::MissingField { field: "d", .. }), "{err}");
+    }
+
+    #[test]
+    fn rejects_bad_kind_and_garbage() {
+        let bad = r#"{"artifacts": [{"kind": "nope", "name": "x", "file": "f", "d": 1}]}"#;
+        assert!(matches!(
+            Manifest::parse(bad, Path::new(".")),
+            Err(ManifestError::MissingField { field: "kind", .. })
+        ));
+        assert!(matches!(
+            Manifest::parse("not json", Path::new(".")),
+            Err(ManifestError::Parse(_))
+        ));
+        assert!(matches!(
+            Manifest::parse("{}", Path::new(".")),
+            Err(ManifestError::Parse(_))
+        ));
+    }
+
+    #[test]
+    fn loads_real_manifest_when_built() {
+        // Integration with the actual `make artifacts` output, when present.
+        let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        if !dir.join("manifest.json").exists() {
+            eprintln!("skipping: artifacts not built");
+            return;
+        }
+        let m = Manifest::load(&dir).unwrap();
+        assert!(m.find_worker(64, 784, 1, 15485863).is_some());
+        for e in &m.entries {
+            assert!(e.path.exists(), "missing artifact file {:?}", e.path);
+        }
+    }
+}

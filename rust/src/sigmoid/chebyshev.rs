@@ -1,0 +1,103 @@
+//! Chebyshev-node polynomial fit of the sigmoid — an alternative to the
+//! paper's least-squares fit (§3.3).
+//!
+//! Least squares minimizes *average* error over the fit interval;
+//! interpolating at Chebyshev nodes approaches the minimax (worst-case)
+//! fit. For the degree-1 sigmoid approximation the worst case sits at the
+//! interval ends where LSQ error peaks (~0.16 over [-5,5]) — a
+//! worst-case-minded deployment may prefer trading RMS for max error.
+//! Exposed as `FitMethod::Chebyshev` in the session config; the ablation
+//! harness compares both.
+
+use super::sigmoid;
+
+/// Interpolate the sigmoid at the r+1 Chebyshev nodes of [-range, range],
+/// returning ascending monomial coefficients.
+pub fn fit_sigmoid_chebyshev(r: u32, range: f64) -> Vec<f64> {
+    let n = r as usize + 1;
+    // Chebyshev nodes x_k = cos((2k+1)π / 2n) scaled to the interval.
+    let nodes: Vec<f64> = (0..n)
+        .map(|k| range * ((2 * k + 1) as f64 * std::f64::consts::PI / (2 * n) as f64).cos())
+        .collect();
+    let values: Vec<f64> = nodes.iter().map(|&x| sigmoid(x)).collect();
+    // Newton divided differences → monomial coefficients (n ≤ 5, exact
+    // enough in f64).
+    let mut dd = values.clone();
+    for level in 1..n {
+        for i in (level..n).rev() {
+            dd[i] = (dd[i] - dd[i - 1]) / (nodes[i] - nodes[i - level]);
+        }
+    }
+    let mut coeffs = vec![0.0f64; n];
+    for i in (0..n).rev() {
+        // coeffs = coeffs·(x − nodes[i]) + dd[i]
+        let mut next = vec![0.0f64; n];
+        for k in (0..n - 1).rev() {
+            next[k + 1] += coeffs[k];
+        }
+        for k in 0..n {
+            next[k] -= coeffs[k] * nodes[i];
+        }
+        next[0] += dd[i];
+        coeffs = next;
+    }
+    coeffs
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sigmoid::{eval_real_poly, fit_sigmoid};
+
+    fn max_err(coeffs: &[f64], range: f64) -> f64 {
+        let mut worst = 0.0f64;
+        for i in 0..=1000 {
+            let z = -range + 2.0 * range * i as f64 / 1000.0;
+            worst = worst.max((eval_real_poly(coeffs, z) - sigmoid(z)).abs());
+        }
+        worst
+    }
+
+    #[test]
+    fn degree1_chebyshev_is_sane() {
+        let c = fit_sigmoid_chebyshev(1, 5.0);
+        assert_eq!(c.len(), 2);
+        assert!((c[0] - 0.5).abs() < 0.02, "c0={}", c[0]);
+        assert!(c[1] > 0.05 && c[1] < 0.25, "c1={}", c[1]);
+    }
+
+    #[test]
+    fn interpolates_exactly_at_nodes() {
+        let r = 3u32;
+        let range = 4.0;
+        let c = fit_sigmoid_chebyshev(r, range);
+        let n = r as usize + 1;
+        for k in 0..n {
+            let x = range * ((2 * k + 1) as f64 * std::f64::consts::PI / (2 * n) as f64).cos();
+            assert!(
+                (eval_real_poly(&c, x) - sigmoid(x)).abs() < 1e-12,
+                "node {k}"
+            );
+        }
+    }
+
+    #[test]
+    fn both_fits_have_comparable_worst_case() {
+        // Chebyshev interpolation bounds the minimax blow-up; for the
+        // near-linear sigmoid the two fits land in the same error regime
+        // (ratio < 2 either way) — the ablation harness reports both.
+        for r in [1u32, 3] {
+            let cheb = max_err(&fit_sigmoid_chebyshev(r, 5.0), 5.0);
+            let lsq = max_err(&fit_sigmoid(r, 5.0, 401).coeffs, 5.0);
+            assert!(cheb < 2.0 * lsq, "r={r}: cheb={cheb} lsq={lsq}");
+            assert!(lsq < 2.0 * cheb, "r={r}: cheb={cheb} lsq={lsq}");
+        }
+    }
+
+    #[test]
+    fn error_decreases_with_degree() {
+        let e1 = max_err(&fit_sigmoid_chebyshev(1, 4.0), 4.0);
+        let e3 = max_err(&fit_sigmoid_chebyshev(3, 4.0), 4.0);
+        assert!(e3 < e1, "{e3} vs {e1}");
+    }
+}

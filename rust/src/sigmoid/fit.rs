@@ -1,0 +1,144 @@
+//! Sigmoid → polynomial fit and its field-quantized form.
+
+use super::{eval_real_poly, lsq::polyfit, sigmoid};
+use crate::field::PrimeField;
+use crate::quant::{phi, round_half_up};
+
+/// A fitted degree-r polynomial approximation ĝ of the sigmoid over
+/// [-range, range], plus the field-quantized coefficients the workers use.
+#[derive(Debug, Clone)]
+pub struct SigmoidPoly {
+    /// Real coefficients c_0..c_r (ascending), eq. (15).
+    pub coeffs: Vec<f64>,
+    /// Fit interval half-width R.
+    pub range: f64,
+    /// Degree r.
+    pub r: u32,
+}
+
+/// Quality report of the fit.
+#[derive(Debug, Clone, Copy)]
+pub struct FitReport {
+    pub max_err: f64,
+    pub rms_err: f64,
+}
+
+/// Fit a degree-`r` polynomial to the sigmoid over `[-range, range]` with
+/// `samples` equispaced points (least squares, paper §3.3).
+pub fn fit_sigmoid(r: u32, range: f64, samples: usize) -> SigmoidPoly {
+    assert!(r >= 1 && samples > r as usize);
+    let xs: Vec<f64> = (0..samples)
+        .map(|i| -range + 2.0 * range * i as f64 / (samples - 1) as f64)
+        .collect();
+    let ys: Vec<f64> = xs.iter().map(|&x| sigmoid(x)).collect();
+    let coeffs = polyfit(&xs, &ys, r as usize).expect("sigmoid fit is well-conditioned");
+    SigmoidPoly { coeffs, range, r }
+}
+
+impl SigmoidPoly {
+    /// ĝ(z).
+    #[inline]
+    pub fn eval(&self, z: f64) -> f64 {
+        eval_real_poly(&self.coeffs, z)
+    }
+
+    /// Fit quality over the fit interval.
+    pub fn report(&self, samples: usize) -> FitReport {
+        let mut max_err = 0.0f64;
+        let mut sq = 0.0f64;
+        for i in 0..samples {
+            let z = -self.range + 2.0 * self.range * i as f64 / (samples - 1) as f64;
+            let e = (self.eval(z) - sigmoid(z)).abs();
+            max_err = max_err.max(e);
+            sq += e * e;
+        }
+        FitReport { max_err, rms_err: (sq / samples as f64).sqrt() }
+    }
+
+    /// Field-quantized coefficients for the worker computation.
+    ///
+    /// Term i of ḡ = Σ_i c̄_i Π_{j≤i}(X̄ w̄_j) carries data scale
+    /// 2^{i(l_x+l_w)}; to make all terms addable at the common scale
+    /// 2^{l_c + r(l_x+l_w)} the coefficient is stored as
+    ///   c̄_i = Round(2^{l_c + (r-i)(l_x+l_w)} · c_i)  ∈ F_p.
+    /// l_c = 0 reproduces the paper's eq. (24) scale; l_c > 0 preserves
+    /// precision of the top coefficient (DESIGN.md §Numeric design).
+    pub fn field_coeffs(&self, field: &PrimeField, lx: u32, lw: u32, lc: u32) -> Vec<u64> {
+        let r = self.r;
+        self.coeffs
+            .iter()
+            .enumerate()
+            .map(|(i, &c)| {
+                let shift = lc + (r - i as u32) * (lx + lw);
+                phi(field, round_half_up((1u64 << shift) as f64 * c))
+            })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::field::{PrimeField, PAPER_PRIME};
+    use crate::quant::phi_inv;
+
+    #[test]
+    fn degree1_fit_is_sane() {
+        let p = fit_sigmoid(1, 5.0, 201);
+        assert_eq!(p.coeffs.len(), 2);
+        // Sigmoid symmetric around (0, 0.5): intercept 0.5, positive slope.
+        assert!((p.coeffs[0] - 0.5).abs() < 1e-6, "c0={}", p.coeffs[0]);
+        assert!(p.coeffs[1] > 0.1 && p.coeffs[1] < 0.25, "c1={}", p.coeffs[1]);
+        let rep = p.report(400);
+        // A degree-1 LSQ fit over [-5,5] has max error ≈ 0.16 at the ends.
+        assert!(rep.max_err < 0.2, "max_err={}", rep.max_err);
+    }
+
+    #[test]
+    fn degree2_fit_degenerates_to_degree1() {
+        // Sigmoid minus 1/2 is odd, so the z^2 coefficient vanishes on a
+        // symmetric interval.
+        let p = fit_sigmoid(2, 5.0, 201);
+        assert!(p.coeffs[2].abs() < 1e-6, "c2={}", p.coeffs[2]);
+    }
+
+    #[test]
+    fn degree3_fit_is_more_accurate_than_degree1() {
+        let p1 = fit_sigmoid(1, 5.0, 201);
+        let p3 = fit_sigmoid(3, 5.0, 201);
+        assert!(p3.report(400).max_err < p1.report(400).max_err);
+    }
+
+    #[test]
+    fn fit_error_shrinks_with_degree_weierstrass() {
+        // Lemma 1's asymptotic-unbiasedness argument: ε(r) → 0.
+        let errs: Vec<f64> = [1u32, 3]
+            .iter()
+            .map(|&r| fit_sigmoid(r, 4.0, 301).report(500).rms_err)
+            .collect();
+        assert!(errs[1] < errs[0] * 0.6, "errs={errs:?}");
+    }
+
+    #[test]
+    fn field_coeffs_scale_correctly() {
+        let f = PrimeField::new(PAPER_PRIME);
+        let p = fit_sigmoid(1, 5.0, 201);
+        let (lx, lw, lc) = (2, 4, 3);
+        let fc = p.field_coeffs(&f, lx, lw, lc);
+        // c̄_0 = Round(2^{3+6}·c_0), c̄_1 = Round(2^3·c_1)
+        assert_eq!(phi_inv(&f, fc[0]), round_half_up(512.0 * p.coeffs[0]));
+        assert_eq!(phi_inv(&f, fc[1]), round_half_up(8.0 * p.coeffs[1]));
+        // With l_c = 3 the top coefficient survives quantization.
+        assert!(phi_inv(&f, fc[1]) >= 1);
+    }
+
+    #[test]
+    fn paper_lc0_truncates_top_coefficient() {
+        // Documents the failure mode our l_c generalization fixes: the
+        // paper's implicit l_c=0 rounds c_1 ≈ 0.15 to 0.
+        let f = PrimeField::new(PAPER_PRIME);
+        let p = fit_sigmoid(1, 5.0, 201);
+        let fc = p.field_coeffs(&f, 2, 4, 0);
+        assert_eq!(phi_inv(&f, fc[1]), 0);
+    }
+}

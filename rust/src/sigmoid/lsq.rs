@@ -1,0 +1,173 @@
+//! Dense least squares for polynomial fitting.
+//!
+//! Degree ≤ 4 and a few hundred sample points — normal equations with
+//! Gaussian elimination (partial pivoting) are more than accurate enough
+//! and keep this dependency-free.
+
+/// Solve `A x = b` for square `A` (row-major n×n) by Gaussian elimination
+/// with partial pivoting. Returns None if singular to working precision.
+pub fn solve_linear(a: &[f64], b: &[f64], n: usize) -> Option<Vec<f64>> {
+    assert_eq!(a.len(), n * n);
+    assert_eq!(b.len(), n);
+    let mut m = a.to_vec();
+    let mut rhs = b.to_vec();
+    for col in 0..n {
+        // Pivot.
+        let mut pivot = col;
+        let mut best = m[col * n + col].abs();
+        for row in col + 1..n {
+            let v = m[row * n + col].abs();
+            if v > best {
+                best = v;
+                pivot = row;
+            }
+        }
+        if best < 1e-12 {
+            return None;
+        }
+        if pivot != col {
+            for k in 0..n {
+                m.swap(col * n + k, pivot * n + k);
+            }
+            rhs.swap(col, pivot);
+        }
+        // Eliminate below.
+        let diag = m[col * n + col];
+        for row in col + 1..n {
+            let factor = m[row * n + col] / diag;
+            if factor == 0.0 {
+                continue;
+            }
+            for k in col..n {
+                m[row * n + k] -= factor * m[col * n + k];
+            }
+            rhs[row] -= factor * rhs[col];
+        }
+    }
+    // Back substitution.
+    let mut x = vec![0.0; n];
+    for row in (0..n).rev() {
+        let mut acc = rhs[row];
+        for k in row + 1..n {
+            acc -= m[row * n + k] * x[k];
+        }
+        x[row] = acc / m[row * n + row];
+    }
+    Some(x)
+}
+
+/// Least-squares fit of a degree-`deg` polynomial to samples `(xs, ys)`.
+/// Returns ascending coefficients. Uses the normal equations
+/// (VᵀV)c = Vᵀy on the Vandermonde matrix V.
+pub fn polyfit(xs: &[f64], ys: &[f64], deg: usize) -> Option<Vec<f64>> {
+    assert_eq!(xs.len(), ys.len());
+    let n = deg + 1;
+    if xs.len() < n {
+        return None;
+    }
+    // Accumulate VᵀV (Hankel structure: entries depend on power sums).
+    let mut power_sums = vec![0.0f64; 2 * deg + 1];
+    for &x in xs {
+        let mut p = 1.0;
+        for s in power_sums.iter_mut() {
+            *s += p;
+            p *= x;
+        }
+    }
+    let mut vtv = vec![0.0f64; n * n];
+    for i in 0..n {
+        for j in 0..n {
+            vtv[i * n + j] = power_sums[i + j];
+        }
+    }
+    let mut vty = vec![0.0f64; n];
+    for (&x, &y) in xs.iter().zip(ys.iter()) {
+        let mut p = 1.0;
+        for entry in vty.iter_mut() {
+            *entry += p * y;
+            p *= x;
+        }
+    }
+    solve_linear(&vtv, &vty, n)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sigmoid::eval_real_poly;
+    use crate::util::proptest::check;
+
+    #[test]
+    fn solves_identity() {
+        let a = [1.0, 0.0, 0.0, 1.0];
+        let b = [3.0, -4.0];
+        assert_eq!(solve_linear(&a, &b, 2).unwrap(), vec![3.0, -4.0]);
+    }
+
+    #[test]
+    fn solves_known_system() {
+        // 2x + y = 5; x - y = 1  →  x = 2, y = 1
+        let a = [2.0, 1.0, 1.0, -1.0];
+        let b = [5.0, 1.0];
+        let x = solve_linear(&a, &b, 2).unwrap();
+        assert!((x[0] - 2.0).abs() < 1e-12);
+        assert!((x[1] - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn rejects_singular() {
+        let a = [1.0, 2.0, 2.0, 4.0];
+        assert!(solve_linear(&a, &[1.0, 2.0], 2).is_none());
+    }
+
+    #[test]
+    fn pivoting_handles_zero_diagonal() {
+        // [[0,1],[1,0]] x = [2,3] → x = [3,2]
+        let a = [0.0, 1.0, 1.0, 0.0];
+        let x = solve_linear(&a, &[2.0, 3.0], 2).unwrap();
+        assert!((x[0] - 3.0).abs() < 1e-12);
+        assert!((x[1] - 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn polyfit_recovers_exact_polynomials() {
+        check("polyfit-exact", 50, |rng| {
+            let deg = rng.below_usize(4);
+            let coeffs: Vec<f64> = (0..=deg).map(|_| rng.range_f64(-2.0, 2.0)).collect();
+            let xs: Vec<f64> = (0..40).map(|i| -2.0 + i as f64 * 0.1).collect();
+            let ys: Vec<f64> = xs.iter().map(|&x| eval_real_poly(&coeffs, x)).collect();
+            let fit = polyfit(&xs, &ys, deg).ok_or("fit failed")?;
+            for (a, b) in fit.iter().zip(coeffs.iter()) {
+                if (a - b).abs() > 1e-8 {
+                    return Err(format!("{fit:?} vs {coeffs:?}"));
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn polyfit_requires_enough_points() {
+        assert!(polyfit(&[1.0], &[1.0], 1).is_none());
+    }
+
+    #[test]
+    fn polyfit_overdetermined_minimizes_residual() {
+        // Fit a line to noisy-ish data; residual of LSQ fit must be ≤
+        // residual of nearby perturbed lines.
+        let xs: Vec<f64> = (0..50).map(|i| i as f64 * 0.1).collect();
+        let ys: Vec<f64> = xs.iter().map(|&x| 1.0 + 0.5 * x + (x * 3.0).sin() * 0.01).collect();
+        let fit = polyfit(&xs, &ys, 1).unwrap();
+        let res = |c: &[f64]| -> f64 {
+            xs.iter()
+                .zip(ys.iter())
+                .map(|(&x, &y)| (eval_real_poly(c, x) - y).powi(2))
+                .sum()
+        };
+        let base = res(&fit);
+        for delta in [[0.01, 0.0], [0.0, 0.01], [-0.01, 0.0], [0.0, -0.01]] {
+            let perturbed = [fit[0] + delta[0], fit[1] + delta[1]];
+            assert!(res(&perturbed) >= base - 1e-12);
+        }
+    }
+}

@@ -1,0 +1,95 @@
+//! Polynomial approximation of the sigmoid (paper §3.3, eq. 15).
+//!
+//! The coefficients are obtained "by fitting the sigmoid function via least
+//! squares estimation" over a bounded activation range [-R, R] (the
+//! convergence proof constrains ‖w‖ ≤ R via Lemma 1's Weierstrass
+//! argument). This module provides the least-squares fit (normal equations
+//! + Gaussian elimination — the problem is tiny, degree ≤ 4), evaluation,
+//! and the field-quantized coefficient vector used by the workers.
+
+mod chebyshev;
+mod fit;
+mod lsq;
+
+pub use chebyshev::fit_sigmoid_chebyshev;
+pub use fit::{fit_sigmoid, FitReport, SigmoidPoly};
+pub use lsq::{polyfit, solve_linear};
+
+/// Which fitting strategy produces ĝ (paper: least squares; Chebyshev is
+/// the worst-case-minded alternative, see [`chebyshev`]).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FitMethod {
+    LeastSquares,
+    Chebyshev,
+}
+
+impl std::str::FromStr for FitMethod {
+    type Err = String;
+
+    fn from_str(s: &str) -> Result<Self, String> {
+        match s {
+            "lsq" | "least-squares" => Ok(FitMethod::LeastSquares),
+            "chebyshev" => Ok(FitMethod::Chebyshev),
+            other => Err(format!("unknown fit method '{other}' (lsq|chebyshev)")),
+        }
+    }
+}
+
+/// Fit with the chosen method.
+pub fn fit_sigmoid_with(method: FitMethod, r: u32, range: f64) -> SigmoidPoly {
+    match method {
+        FitMethod::LeastSquares => fit_sigmoid(r, range, 201),
+        FitMethod::Chebyshev => SigmoidPoly {
+            coeffs: fit_sigmoid_chebyshev(r, range),
+            range,
+            r,
+        },
+    }
+}
+
+/// The sigmoid g(z) = 1 / (1 + e^{-z}) (paper eq. 2).
+#[inline]
+pub fn sigmoid(z: f64) -> f64 {
+    if z >= 0.0 {
+        1.0 / (1.0 + (-z).exp())
+    } else {
+        let e = z.exp();
+        e / (1.0 + e)
+    }
+}
+
+/// Evaluate a real polynomial (ascending coefficients) by Horner.
+#[inline]
+pub fn eval_real_poly(coeffs: &[f64], z: f64) -> f64 {
+    coeffs.iter().rev().fold(0.0, |acc, &c| acc * z + c)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sigmoid_basic_values() {
+        assert!((sigmoid(0.0) - 0.5).abs() < 1e-15);
+        assert!((sigmoid(100.0) - 1.0).abs() < 1e-12);
+        assert!(sigmoid(-100.0).abs() < 1e-12);
+        // Symmetry g(-z) = 1 - g(z).
+        for z in [-3.0, -0.7, 0.1, 2.5] {
+            assert!((sigmoid(-z) - (1.0 - sigmoid(z))).abs() < 1e-14);
+        }
+    }
+
+    #[test]
+    fn sigmoid_numerically_stable_extremes() {
+        assert!(sigmoid(-800.0) >= 0.0);
+        assert!(sigmoid(800.0) <= 1.0);
+        assert!(!sigmoid(-800.0).is_nan());
+    }
+
+    #[test]
+    fn horner_eval() {
+        // 1 - 2z + 3z^2 at z = 2 → 1 - 4 + 12 = 9
+        assert_eq!(eval_real_poly(&[1.0, -2.0, 3.0], 2.0), 9.0);
+        assert_eq!(eval_real_poly(&[], 5.0), 0.0);
+    }
+}

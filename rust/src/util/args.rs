@@ -1,0 +1,133 @@
+//! Tiny CLI argument parser (`--key value`, `--flag`, positionals).
+
+use std::collections::BTreeMap;
+
+#[derive(Debug, Clone, Default)]
+pub struct Args {
+    pub positional: Vec<String>,
+    options: BTreeMap<String, String>,
+    flags: Vec<String>,
+    /// Keys consumed via get/flag — for unknown-option detection.
+    seen: std::cell::RefCell<Vec<String>>,
+}
+
+impl Args {
+    /// Parse a raw argv slice (without the program name). `--key value`
+    /// pairs become options; `--key` followed by another `--` or at the
+    /// end becomes a flag; everything else is positional.
+    pub fn parse(argv: &[String]) -> Args {
+        let mut out = Args::default();
+        let mut i = 0;
+        while i < argv.len() {
+            let a = &argv[i];
+            if let Some(key) = a.strip_prefix("--") {
+                let next_is_value = argv
+                    .get(i + 1)
+                    .map(|n| !n.starts_with("--"))
+                    .unwrap_or(false);
+                if next_is_value {
+                    out.options.insert(key.to_string(), argv[i + 1].clone());
+                    i += 2;
+                } else {
+                    out.flags.push(key.to_string());
+                    i += 1;
+                }
+            } else {
+                out.positional.push(a.clone());
+                i += 1;
+            }
+        }
+        out
+    }
+
+    pub fn from_env() -> Args {
+        let argv: Vec<String> = std::env::args().skip(1).collect();
+        Args::parse(&argv)
+    }
+
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.seen.borrow_mut().push(key.to_string());
+        self.options.get(key).map(|s| s.as_str())
+    }
+
+    pub fn flag(&self, key: &str) -> bool {
+        self.seen.borrow_mut().push(key.to_string());
+        self.flags.iter().any(|f| f == key)
+    }
+
+    /// Typed getters with defaults and error messages.
+    pub fn get_usize(&self, key: &str, default: usize) -> Result<usize, String> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|_| format!("--{key}: expected integer, got '{v}'")),
+        }
+    }
+
+    pub fn get_u64(&self, key: &str, default: u64) -> Result<u64, String> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|_| format!("--{key}: expected integer, got '{v}'")),
+        }
+    }
+
+    pub fn get_f64(&self, key: &str, default: f64) -> Result<f64, String> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|_| format!("--{key}: expected number, got '{v}'")),
+        }
+    }
+
+    /// Options that were provided but never consumed — typos.
+    pub fn unknown_options(&self) -> Vec<String> {
+        let seen = self.seen.borrow();
+        self.options
+            .keys()
+            .chain(self.flags.iter())
+            .filter(|k| !seen.contains(k))
+            .cloned()
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Args {
+        let argv: Vec<String> = s.split_whitespace().map(String::from).collect();
+        Args::parse(&argv)
+    }
+
+    #[test]
+    fn parses_mixed() {
+        let a = parse("reproduce fig2 --scale 0.1 --verbose --n 40");
+        assert_eq!(a.positional, vec!["reproduce", "fig2"]);
+        assert_eq!(a.get("scale"), Some("0.1"));
+        assert_eq!(a.get("n"), Some("40"));
+        assert!(a.flag("verbose"));
+        assert!(!a.flag("quiet"));
+    }
+
+    #[test]
+    fn typed_getters() {
+        let a = parse("--n 40 --eta 0.25");
+        assert_eq!(a.get_usize("n", 1).unwrap(), 40);
+        assert_eq!(a.get_f64("eta", 1.0).unwrap(), 0.25);
+        assert_eq!(a.get_usize("missing", 7).unwrap(), 7);
+        assert!(a.get_usize("eta", 0).is_err());
+    }
+
+    #[test]
+    fn unknown_options_detects_typos() {
+        let a = parse("--itres 5 --n 3");
+        let _ = a.get_usize("n", 1);
+        let _ = a.get_usize("iters", 25);
+        assert_eq!(a.unknown_options(), vec!["itres".to_string()]);
+    }
+
+    #[test]
+    fn trailing_flag() {
+        let a = parse("--json");
+        assert!(a.flag("json"));
+    }
+}

@@ -1,0 +1,124 @@
+//! Bit-packing of field elements for the wire.
+//!
+//! A share of F_p elements occupies ⌈log₂ p⌉ bits each when packed —
+//! 24 bits instead of 64 for the paper's prime, a 2.67x communication
+//! saving the modeled network can account for (`CodedMlConfig.packed_wire`).
+//! The codec is exact and round-trips any element < 2^width.
+
+/// Pack `values` (< 2^width each) into a little-endian bitstream.
+pub fn pack(values: &[u64], width: u32) -> Vec<u8> {
+    assert!((1..=64).contains(&width));
+    let total_bits = values.len() * width as usize;
+    let mut out = vec![0u8; total_bits.div_ceil(8)];
+    let mut bitpos = 0usize;
+    for &v in values {
+        debug_assert!(width == 64 || v < (1u64 << width), "value {v} exceeds {width} bits");
+        let mut remaining = width;
+        let mut val = v;
+        while remaining > 0 {
+            let byte = bitpos / 8;
+            let off = (bitpos % 8) as u32;
+            let take = (8 - off).min(remaining);
+            out[byte] |= ((val & ((1u64 << take) - 1)) as u8) << off;
+            val >>= take;
+            bitpos += take as usize;
+            remaining -= take;
+        }
+    }
+    out
+}
+
+/// Unpack `count` width-bit values from a bitstream produced by [`pack`].
+pub fn unpack(bytes: &[u8], width: u32, count: usize) -> Vec<u64> {
+    assert!((1..=64).contains(&width));
+    let needed_bits = count * width as usize;
+    assert!(
+        bytes.len() * 8 >= needed_bits,
+        "buffer too short: {} bits < {needed_bits}",
+        bytes.len() * 8
+    );
+    let mut out = Vec::with_capacity(count);
+    let mut bitpos = 0usize;
+    for _ in 0..count {
+        let mut v = 0u64;
+        let mut got = 0u32;
+        while got < width {
+            let byte = bitpos / 8;
+            let off = (bitpos % 8) as u32;
+            let take = (8 - off).min(width - got);
+            let bits = ((bytes[byte] >> off) as u64) & ((1u64 << take) - 1);
+            v |= bits << got;
+            got += take;
+            bitpos += take as usize;
+        }
+        out.push(v);
+    }
+    out
+}
+
+/// Bytes needed to pack `count` width-bit values.
+pub fn packed_len(count: usize, width: u32) -> usize {
+    (count * width as usize).div_ceil(8)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::proptest::check;
+
+    #[test]
+    fn round_trips_random_widths() {
+        check("bitpack-roundtrip", 100, |rng| {
+            let width = 1 + rng.below(63) as u32;
+            let n = rng.below_usize(50);
+            let mask = if width == 64 { u64::MAX } else { (1u64 << width) - 1 };
+            let values: Vec<u64> = (0..n).map(|_| rng.next_u64() & mask).collect();
+            let packed = pack(&values, width);
+            if packed.len() != packed_len(n, width) {
+                return Err("length mismatch".into());
+            }
+            let back = unpack(&packed, width, n);
+            if back != values {
+                return Err(format!("w={width} n={n}"));
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn paper_prime_packs_to_24_bits() {
+        let p = crate::field::PAPER_PRIME;
+        let values: Vec<u64> = vec![0, 1, p - 1, p / 2];
+        let packed = pack(&values, 24);
+        assert_eq!(packed.len(), 12); // 4 × 24 bits = 96 bits = 12 bytes
+        assert_eq!(unpack(&packed, 24, 4), values);
+    }
+
+    #[test]
+    fn width_64_round_trips_extremes() {
+        let values = [u64::MAX, 0, 1 << 63];
+        let packed = pack(&values, 64);
+        assert_eq!(unpack(&packed, 64, 3), values);
+    }
+
+    #[test]
+    fn empty_is_fine() {
+        assert!(pack(&[], 24).is_empty());
+        assert!(unpack(&[], 24, 0).is_empty());
+    }
+
+    #[test]
+    #[should_panic(expected = "buffer too short")]
+    fn unpack_checks_length() {
+        unpack(&[0u8; 2], 24, 2);
+    }
+
+    #[test]
+    fn cross_byte_boundaries_exact() {
+        // width 5: values straddle byte boundaries in every position.
+        let values: Vec<u64> = (0..32).map(|i| i % 32).collect();
+        let packed = pack(&values, 5);
+        assert_eq!(packed.len(), 20); // 160 bits
+        assert_eq!(unpack(&packed, 5, 32), values);
+    }
+}

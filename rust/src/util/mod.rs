@@ -1,0 +1,17 @@
+//! Small self-contained utilities: deterministic RNG, minimal JSON,
+//! timing/statistics helpers, and a property-testing harness.
+//!
+//! This build runs fully offline against a small vendored crate set, so the
+//! usual ecosystem crates (rand, serde, proptest, criterion) are hand-rolled
+//! here at the scale this project needs.
+
+pub mod args;
+pub mod bitpack;
+pub mod json;
+pub mod proptest;
+pub mod rng;
+pub mod stats;
+pub mod timer;
+
+pub use rng::Rng;
+pub use timer::Stopwatch;

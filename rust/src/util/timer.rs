@@ -1,0 +1,122 @@
+//! Wall-clock timing helpers used by the coordinator's per-phase breakdown
+//! (the Encode / Comm. / Comp. columns of Tables 1–6) and by the bench
+//! harness.
+
+use std::time::{Duration, Instant};
+
+/// A resettable stopwatch accumulating named spans.
+#[derive(Debug, Clone, Default)]
+pub struct Stopwatch {
+    total: Duration,
+    started: Option<InstantWrap>,
+}
+
+// Instant is not Default; wrap it so Stopwatch can derive Default.
+#[derive(Debug, Clone, Copy)]
+struct InstantWrap(Instant);
+
+impl Stopwatch {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Start (or restart) the current span.
+    pub fn start(&mut self) {
+        self.started = Some(InstantWrap(Instant::now()));
+    }
+
+    /// Stop the current span, folding it into the total. No-op if stopped.
+    pub fn stop(&mut self) {
+        if let Some(InstantWrap(t0)) = self.started.take() {
+            self.total += t0.elapsed();
+        }
+    }
+
+    /// Time a closure, accumulating its duration.
+    pub fn time<T>(&mut self, f: impl FnOnce() -> T) -> T {
+        let t0 = Instant::now();
+        let out = f();
+        self.total += t0.elapsed();
+        out
+    }
+
+    /// Accumulated seconds (running span excluded).
+    pub fn seconds(&self) -> f64 {
+        self.total.as_secs_f64()
+    }
+
+    /// Add an externally measured duration (e.g. modeled network time).
+    pub fn add_seconds(&mut self, s: f64) {
+        self.total += Duration::from_secs_f64(s.max(0.0));
+    }
+
+    pub fn reset(&mut self) {
+        self.total = Duration::ZERO;
+        self.started = None;
+    }
+}
+
+/// Measure a closure once, returning (result, seconds).
+pub fn timed<T>(f: impl FnOnce() -> T) -> (T, f64) {
+    let t0 = Instant::now();
+    let out = f();
+    (out, t0.elapsed().as_secs_f64())
+}
+
+/// Run a closure repeatedly for at least `min_seconds` (and at least
+/// `min_iters` times), returning the mean seconds per call. Used by the
+/// hand-rolled bench harness (criterion is unavailable offline).
+pub fn bench_seconds(min_seconds: f64, min_iters: u32, mut f: impl FnMut()) -> f64 {
+    // Warmup.
+    f();
+    let mut iters = 0u32;
+    let t0 = Instant::now();
+    loop {
+        f();
+        iters += 1;
+        let elapsed = t0.elapsed().as_secs_f64();
+        if iters >= min_iters && elapsed >= min_seconds {
+            return elapsed / iters as f64;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stopwatch_accumulates() {
+        let mut sw = Stopwatch::new();
+        sw.time(|| std::thread::sleep(Duration::from_millis(5)));
+        sw.time(|| std::thread::sleep(Duration::from_millis(5)));
+        assert!(sw.seconds() >= 0.009, "got {}", sw.seconds());
+    }
+
+    #[test]
+    fn stopwatch_start_stop() {
+        let mut sw = Stopwatch::new();
+        sw.start();
+        std::thread::sleep(Duration::from_millis(3));
+        sw.stop();
+        sw.stop(); // idempotent
+        assert!(sw.seconds() >= 0.002);
+        sw.reset();
+        assert_eq!(sw.seconds(), 0.0);
+    }
+
+    #[test]
+    fn add_seconds_folds_in() {
+        let mut sw = Stopwatch::new();
+        sw.add_seconds(1.5);
+        sw.add_seconds(-3.0); // clamped to 0
+        assert!((sw.seconds() - 1.5).abs() < 1e-9);
+    }
+
+    #[test]
+    fn timed_returns_value() {
+        let (v, s) = timed(|| 42);
+        assert_eq!(v, 42);
+        assert!(s >= 0.0);
+    }
+}

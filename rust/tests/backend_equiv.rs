@@ -1,0 +1,126 @@
+//! Integration: the AOT JAX/Pallas artifact and the native rust backend
+//! must agree bit-for-bit on every worker_f shape in the manifest.
+//!
+//! Requires `make artifacts`; tests skip (with a loud note) if the
+//! artifact directory is absent so `cargo test` stays runnable pre-build.
+
+use std::path::PathBuf;
+
+use codedml::compute::WorkerComputation;
+use codedml::field::PrimeField;
+use codedml::runtime::{ArtifactKind, XlaRuntime};
+use codedml::util::Rng;
+
+fn artifact_dir() -> Option<PathBuf> {
+    let dir = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if dir.join("manifest.json").exists() {
+        Some(dir)
+    } else {
+        eprintln!("SKIP: artifacts/ not built (run `make artifacts`)");
+        None
+    }
+}
+
+#[test]
+fn xla_equals_native_on_every_manifest_shape() {
+    let Some(dir) = artifact_dir() else { return };
+    let rt = XlaRuntime::new(&dir).expect("runtime");
+    let entries: Vec<_> = rt
+        .manifest()
+        .entries
+        .iter()
+        .filter(|e| e.kind == ArtifactKind::WorkerF)
+        .cloned()
+        .collect();
+    assert!(!entries.is_empty(), "manifest has no worker_f artifacts");
+    let mut rng = Rng::new(2024);
+    for e in entries {
+        let field = PrimeField::new(e.p);
+        let x = field.random_matrix(&mut rng, e.rows, e.d);
+        let w = field.random_matrix(&mut rng, e.d, e.r);
+        let coeffs: Vec<u64> = (0..=e.r).map(|_| field.random(&mut rng)).collect();
+
+        let xla_out = rt
+            .worker_f(&x, &w, &coeffs, e.rows, e.d, e.p)
+            .unwrap_or_else(|err| panic!("xla {}: {err}", e.name));
+        let native = WorkerComputation::new(field, e.rows, e.d, coeffs.clone());
+        let native_out = native.compute(&x, &w);
+        assert_eq!(xla_out, native_out, "mismatch on {}", e.name);
+    }
+}
+
+#[test]
+fn xla_executable_cache_prevents_recompilation() {
+    let Some(dir) = artifact_dir() else { return };
+    let rt = XlaRuntime::new(&dir).expect("runtime");
+    let e = rt
+        .manifest()
+        .find_worker(32, 64, 1, 15485863)
+        .expect("quickstart shape present")
+        .clone();
+    let field = PrimeField::new(e.p);
+    let mut rng = Rng::new(7);
+    let x = field.random_matrix(&mut rng, e.rows, e.d);
+    let w = field.random_matrix(&mut rng, e.d, e.r);
+    let c: Vec<u64> = (0..=e.r).map(|_| field.random(&mut rng)).collect();
+    for _ in 0..5 {
+        rt.worker_f(&x, &w, &c, e.rows, e.d, e.p).unwrap();
+    }
+    assert_eq!(rt.compile_count(), 1, "request path must not recompile");
+}
+
+#[test]
+fn lr_step_artifact_matches_native_model() {
+    let Some(dir) = artifact_dir() else { return };
+    let rt = XlaRuntime::new(&dir).expect("runtime");
+    let (m, d) = (256, 784);
+    if rt.manifest().find_lr_step(m, d).is_none() {
+        eprintln!("SKIP: lr_step artifact missing");
+        return;
+    }
+    let train = codedml::data::synthetic_3v7(m, 5);
+    let mut model = codedml::model::LogisticRegression::new(d);
+    let eta = 0.5;
+    let (w_xla, loss_xla) = rt.lr_step(&train.x, &train.y, &model.w, eta, m, d).unwrap();
+    // Native reference.
+    let loss_native = model.loss(&train);
+    model.step(&train, eta);
+    assert!((loss_xla - loss_native).abs() < 1e-9, "{loss_xla} vs {loss_native}");
+    for (a, b) in w_xla.iter().zip(model.w.iter()) {
+        assert!((a - b).abs() < 1e-9, "{a} vs {b}");
+    }
+}
+
+#[test]
+fn cluster_trains_with_xla_backend() {
+    let Some(dir) = artifact_dir() else { return };
+    // 64 rows/block × K=2 = 128 train rows at d=784 (artifact shape).
+    use codedml::cluster::{NetworkModel, StragglerModel};
+    use codedml::coordinator::{CodedMlConfig, CodedMlSession};
+    use codedml::runtime::BackendKind;
+    let train = codedml::data::synthetic_3v7(128, 3);
+    let cfg = CodedMlConfig {
+        n: 7,
+        k: 2,
+        t: 1,
+        backend: BackendKind::Xla,
+        artifact_dir: dir,
+        net: NetworkModel::free(),
+        straggler: StragglerModel::none(),
+        ..Default::default()
+    };
+    let mut sess = CodedMlSession::new(cfg.clone(), &train).unwrap();
+    let report = sess.train(5, None).unwrap();
+    assert!(report.final_loss().unwrap() < report.iterations[0].train_loss);
+
+    // And the trajectory matches the native backend exactly (same seed).
+    let cfg_native = CodedMlConfig {
+        backend: BackendKind::Native,
+        ..cfg
+    };
+    let mut sess_n = CodedMlSession::new(cfg_native, &train).unwrap();
+    let report_n = sess_n.train(5, None).unwrap();
+    for (a, b) in report.weights.iter().zip(report_n.weights.iter()) {
+        assert_eq!(a, b, "xla and native trajectories must be identical");
+    }
+}

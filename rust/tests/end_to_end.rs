@@ -1,0 +1,155 @@
+//! End-to-end integration: private training tracks plaintext training and
+//! hits the paper's accuracy regime; MPC baseline agrees with LCC on the
+//! model it produces; stragglers and failures are tolerated up to the
+//! design margins.
+
+use codedml::cluster::{NetworkModel, StragglerModel};
+use codedml::coordinator::{CodedMlConfig, CodedMlSession};
+use codedml::data::synthetic_3v7;
+use codedml::model::LogisticRegression;
+use codedml::mpc::{BgwConfig, BgwGradientProtocol};
+
+fn fast_cfg(n: usize, k: usize, t: usize) -> CodedMlConfig {
+    CodedMlConfig {
+        n,
+        k,
+        t,
+        net: NetworkModel::free(),
+        straggler: StragglerModel::none(),
+        ..Default::default()
+    }
+}
+
+/// Figure 3's claim at test scale: CPML accuracy ends within ~2% of
+/// conventional LR after 25 iterations.
+#[test]
+fn private_training_matches_conventional_lr_accuracy() {
+    let train = synthetic_3v7(240, 1);
+    let test = synthetic_3v7(120, 2);
+
+    // Conventional (plaintext, real sigmoid, no quantization).
+    let mut plain = LogisticRegression::new(train.d);
+    let eta = plain.lipschitz_lr(&train);
+    for _ in 0..25 {
+        plain.step(&train, eta);
+    }
+    let plain_acc = plain.accuracy(&test);
+
+    // CodedPrivateML, Case-2-style (K = T).
+    let mut sess = CodedMlSession::new(fast_cfg(13, 2, 2), &train).unwrap();
+    let report = sess.train(25, Some(&test)).unwrap();
+    let cpml_acc = report.final_accuracy().unwrap();
+
+    assert!(plain_acc >= 0.88, "plaintext should learn: {plain_acc}");
+    assert!(
+        cpml_acc > plain_acc - 0.03,
+        "CPML {cpml_acc} vs plaintext {plain_acc}"
+    );
+}
+
+/// Convergence (Figure 4): the CPML loss curve decreases and approaches
+/// the plaintext curve.
+#[test]
+fn loss_curve_tracks_plaintext() {
+    let train = synthetic_3v7(240, 7);
+    let mut sess = CodedMlSession::new(fast_cfg(10, 3, 1), &train).unwrap();
+    let report = sess.train(15, None).unwrap();
+    let losses: Vec<f64> = report.iterations.iter().map(|m| m.train_loss).collect();
+    // Non-increasing within tolerance (stochastic quantization noise).
+    for w in losses.windows(2) {
+        assert!(w[1] <= w[0] + 0.02, "loss bump {} → {}", w[0], w[1]);
+    }
+    assert!(losses.last().unwrap() < &0.45, "final loss {losses:?}");
+
+    let mut plain = LogisticRegression::new(train.d);
+    let ds = train.take_rows_multiple_of(train.m, 3);
+    let eta = plain.lipschitz_lr(&ds);
+    for _ in 0..15 {
+        plain.step(&ds, eta);
+    }
+    let plain_loss = plain.loss(&ds);
+    assert!(
+        (losses.last().unwrap() - plain_loss).abs() < 0.12,
+        "cpml {} vs plain {plain_loss}",
+        losses.last().unwrap()
+    );
+}
+
+/// LCC and BGW implement the *same* learning algorithm: with matching
+/// seeds and quantization parameters the two private protocols produce
+/// models of equal quality (not bit-equal — different mask streams — but
+/// statistically twins).
+#[test]
+fn mpc_and_lcc_produce_equivalent_models() {
+    let train = synthetic_3v7(120, 3);
+    let test = synthetic_3v7(60, 4);
+
+    let mut lcc = CodedMlSession::new(fast_cfg(10, 3, 1), &train).unwrap();
+    let lcc_rep = lcc.train(15, Some(&test)).unwrap();
+
+    let mut bgw = BgwGradientProtocol::new(
+        BgwConfig {
+            n: 10,
+            t: 1,
+            net: NetworkModel::free(),
+            straggler: StragglerModel::none(),
+            ..Default::default()
+        },
+        &train.take_rows_multiple_of(120, 3),
+    )
+    .unwrap();
+    let bgw_rep = bgw.train(15, Some(&test));
+
+    let la = lcc_rep.final_accuracy().unwrap();
+    let ba = bgw_rep.final_accuracy().unwrap();
+    assert!((la - ba).abs() < 0.05, "lcc {la} vs bgw {ba}");
+    let ll = lcc_rep.final_loss().unwrap();
+    let bl = bgw_rep.final_loss().unwrap();
+    assert!((ll - bl).abs() < 0.05, "lcc {ll} vs bgw {bl}");
+}
+
+/// Straggler slack: with N comfortably above the recovery threshold the
+/// session absorbs heavy straggling without touching the trajectory.
+#[test]
+fn heavy_straggling_only_slows_modeled_time() {
+    let train = synthetic_3v7(120, 9);
+    let mut cfg_fast = fast_cfg(13, 3, 1); // threshold 10, slack 3
+    cfg_fast.iters = 5;
+    let mut cfg_slow = cfg_fast.clone();
+    cfg_slow.straggler = StragglerModel { shift: 1.0, rate: 0.5, relative: true };
+
+    let mut fast = CodedMlSession::new(cfg_fast, &train).unwrap();
+    let mut slow = CodedMlSession::new(cfg_slow, &train).unwrap();
+    let rf = fast.train(5, None).unwrap();
+    let rs = slow.train(5, None).unwrap();
+    assert_eq!(rf.weights, rs.weights, "trajectory must be straggler-invariant");
+    assert!(
+        rs.breakdown.comp_s > rf.breakdown.comp_s,
+        "straggling must show up in modeled time: {} vs {}",
+        rs.breakdown.comp_s,
+        rf.breakdown.comp_s
+    );
+}
+
+/// The overflow budget warning fires but training still completes when
+/// non-strict; strict mode refuses to build the session.
+#[test]
+fn budget_enforcement_modes() {
+    let train = synthetic_3v7(240, 5);
+    let mut cfg = fast_cfg(10, 1, 2); // K=1: whole dataset in one block
+    cfg.lc = 8; // deliberately blow the budget
+    cfg.strict_budget = true;
+    assert!(CodedMlSession::new(cfg.clone(), &train).is_err());
+    cfg.strict_budget = false;
+    // Builds (with a warning) — decoding may wrap, which is the point.
+    let _ = CodedMlSession::new(cfg, &train).unwrap();
+}
+
+/// Recovery threshold arithmetic is enforced end to end: N below the
+/// threshold is rejected at session construction.
+#[test]
+fn insufficient_workers_rejected_end_to_end() {
+    let train = synthetic_3v7(60, 6);
+    let cfg = CodedMlConfig { n: 9, k: 3, t: 1, ..Default::default() };
+    assert!(CodedMlSession::new(cfg, &train).is_err());
+}

@@ -1,0 +1,60 @@
+//! Resilience: the recovery threshold is exactly the fault-tolerance
+//! boundary. Killing up to `N − R` workers mid-training must not change
+//! the *trajectory at all* (LCC decode is subset-invariant); killing one
+//! more must fail loudly, not corrupt gradients.
+
+use codedml::cluster::{NetworkModel, StragglerModel};
+use codedml::coordinator::{CodedMlConfig, CodedMlSession};
+use codedml::data::synthetic_3v7;
+
+fn base_cfg() -> CodedMlConfig {
+    CodedMlConfig {
+        n: 13, // threshold 3·3+1 = 10 → slack 3
+        k: 3,
+        t: 1,
+        net: NetworkModel::free(),
+        straggler: StragglerModel::none(),
+        ..Default::default()
+    }
+}
+
+#[test]
+fn surviving_within_slack_preserves_trajectory_exactly() {
+    let train = synthetic_3v7(120, 17);
+
+    let mut healthy = CodedMlSession::new(base_cfg(), &train).unwrap();
+    let ref_report = healthy.train(6, None).unwrap();
+
+    // Kill 3 workers (exactly the slack) from iteration 2 on.
+    let cfg = CodedMlConfig { chaos_failures: 3, chaos_from_iter: 2, ..base_cfg() };
+    let mut wounded = CodedMlSession::new(cfg, &train).unwrap();
+    let report = wounded.train(6, None).unwrap();
+
+    assert_eq!(
+        ref_report.weights, report.weights,
+        "trajectory must be identical with slack-many failures"
+    );
+}
+
+#[test]
+fn one_failure_beyond_slack_errors() {
+    let train = synthetic_3v7(120, 18);
+    let cfg = CodedMlConfig { chaos_failures: 4, chaos_from_iter: 1, ..base_cfg() };
+    let mut sess = CodedMlSession::new(cfg, &train).unwrap();
+    // First iteration fine; the second must report the shortage.
+    assert!(sess.step().is_ok());
+    let err = sess.step().unwrap_err();
+    let msg = err.to_string();
+    assert!(msg.contains("10"), "should mention the threshold: {msg}");
+}
+
+#[test]
+fn failures_from_start_with_zero_slack_fail_immediately() {
+    let train = synthetic_3v7(120, 19);
+    let mut cfg = base_cfg();
+    cfg.n = 10; // threshold 10 → zero slack
+    cfg.chaos_failures = 1;
+    cfg.chaos_from_iter = 0;
+    let mut sess = CodedMlSession::new(cfg, &train).unwrap();
+    assert!(sess.step().is_err());
+}

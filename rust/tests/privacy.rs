@@ -1,0 +1,183 @@
+//! Privacy properties (paper §4, Appendix A.4).
+//!
+//! Information-theoretic privacy cannot be "tested" directly, but its two
+//! load-bearing ingredients can:
+//!
+//! 1. **MDS structure** — the bottom T×T submatrices of the encoding
+//!    matrix U are invertible for every T-subset of workers, so the masks
+//!    Z/V fully randomize any T shares (the core of the A.4 proof).
+//! 2. **Statistical indistinguishability** — the distribution of any T
+//!    shares is the same whatever the dataset is; we check marginal
+//!    uniformity and dataset-independence empirically.
+//!
+//! Plus the negative control: K+T shares DO determine the data (decoding
+//! works), i.e. the threshold is tight.
+
+use codedml::coding::{CodingParams, Encoder};
+use codedml::field::{eval_poly, interpolate, PrimeField, PAPER_PRIME};
+use codedml::mpc::ShamirScheme;
+use codedml::util::Rng;
+
+/// Gaussian-elimination rank over F_p (test-local helper).
+fn rank(field: &PrimeField, mut m: Vec<Vec<u64>>) -> usize {
+    let rows = m.len();
+    if rows == 0 {
+        return 0;
+    }
+    let cols = m[0].len();
+    let mut rank = 0;
+    let mut col = 0;
+    while rank < rows && col < cols {
+        let pivot = (rank..rows).find(|&r| m[r][col] != 0);
+        match pivot {
+            None => {
+                col += 1;
+            }
+            Some(p) => {
+                m.swap(rank, p);
+                let inv = field.inv(m[rank][col]);
+                for c in col..cols {
+                    m[rank][c] = field.mul(m[rank][c], inv);
+                }
+                for r in 0..rows {
+                    if r != rank && m[r][col] != 0 {
+                        let factor = m[r][col];
+                        for c in col..cols {
+                            let sub = field.mul(factor, m[rank][c]);
+                            m[r][c] = field.sub(m[r][c], sub);
+                        }
+                    }
+                }
+                rank += 1;
+                col += 1;
+            }
+        }
+    }
+    rank
+}
+
+/// Every T-subset of U's bottom block is invertible (Lemma 2 of Yu et al.
+/// via A.4) — checked exhaustively for a moderate configuration.
+#[test]
+fn bottom_submatrix_is_mds_for_all_t_subsets() {
+    let field = PrimeField::new(PAPER_PRIME);
+    let (n, k, t) = (10usize, 2usize, 2usize);
+    let params = CodingParams::new(n, k, t, 1).unwrap();
+    let enc = Encoder::new(field, params);
+    for a in 0..n {
+        for b in a + 1..n {
+            let cols = [a, b];
+            let sub: Vec<Vec<u64>> = (0..t)
+                .map(|mask_row| {
+                    cols.iter()
+                        .map(|&w| enc.u_column(w)[k + mask_row])
+                        .collect()
+                })
+                .collect();
+            assert_eq!(rank(&field, sub), t, "singular bottom block for workers {a},{b}");
+        }
+    }
+}
+
+/// Any T coded shares look uniform regardless of the dataset: encode two
+/// very different datasets with fresh masks and compare the first share's
+/// histogram — both must match the uniform distribution.
+#[test]
+fn t_shares_are_dataset_independent_uniform() {
+    let field = PrimeField::new(PAPER_PRIME);
+    let params = CodingParams::new(7, 1, 2, 1).unwrap();
+    let enc = Encoder::new(field, params);
+    let (m, d) = (1usize, 16usize);
+    let zeros = vec![0u64; m * d];
+    let spikes: Vec<u64> = (0..m * d).map(|_| field.modulus() - 1).collect();
+
+    let buckets = 16;
+    let trials = 4000;
+    let mut h_zero = vec![0usize; buckets];
+    let mut h_spike = vec![0usize; buckets];
+    let mut rng = Rng::new(99);
+    for _ in 0..trials {
+        let sz = enc.encode_dataset(&zeros, m, d, &mut rng);
+        let ss = enc.encode_dataset(&spikes, m, d, &mut rng);
+        let bucket = |v: u64| (v as u128 * buckets as u128 / field.modulus() as u128) as usize;
+        h_zero[bucket(sz[3].data[0])] += 1;
+        h_spike[bucket(ss[3].data[0])] += 1;
+    }
+    let expected = trials as f64 / buckets as f64;
+    let tol = 5.0 * expected.sqrt();
+    for b in 0..buckets {
+        assert!((h_zero[b] as f64 - expected).abs() < tol, "zero[{b}]={}", h_zero[b]);
+        assert!((h_spike[b] as f64 - expected).abs() < tol, "spike[{b}]={}", h_spike[b]);
+    }
+}
+
+/// Tightness: K+T shares of the dataset polynomial DO determine the data
+/// (that is how decoding works), so the privacy threshold T is sharp.
+#[test]
+fn k_plus_t_shares_reveal_the_data() {
+    let field = PrimeField::new(PAPER_PRIME);
+    let (n, k, t) = (10, 2, 1);
+    let params = CodingParams::new(n, k, t, 1).unwrap();
+    let enc = Encoder::new(field, params);
+    let mut rng = Rng::new(5);
+    let (m, d) = (4, 3);
+    let xq = field.random_matrix(&mut rng, m, d);
+    let shares = enc.encode_dataset(&xq, m, d, &mut rng);
+    let block = m / k * d;
+    for e in 0..block {
+        let pts: Vec<u64> = enc.points.alphas[..k + t].to_vec();
+        let vals: Vec<u64> = shares[..k + t].iter().map(|s| s.data[e]).collect();
+        let coeffs = interpolate(&field, &pts, &vals).unwrap();
+        let recovered = eval_poly(&field, &coeffs, enc.points.betas[0]);
+        assert_eq!(recovered, xq[e], "entry {e} should be recoverable from K+T shares");
+    }
+}
+
+/// Weight shares re-randomize every iteration: observing the same worker
+/// across iterations reveals nothing about whether w changed (the Melis
+/// et al. leakage the paper closes by encoding W̄ too).
+#[test]
+fn weight_shares_rerandomize_across_iterations() {
+    let field = PrimeField::new(PAPER_PRIME);
+    let params = CodingParams::new(10, 3, 1, 1).unwrap();
+    let enc = Encoder::new(field, params);
+    let mut rng = Rng::new(11);
+    let wq = field.random_matrix(&mut rng, 8, 1);
+    let s1 = enc.encode_weights(&wq, 8, 1, &mut rng);
+    let s2 = enc.encode_weights(&wq, 8, 1, &mut rng);
+    assert_ne!(s1[0].data, s2[0].data);
+
+    let buckets = 8;
+    let trials = 4000;
+    let mut hist = vec![0usize; buckets];
+    for _ in 0..trials {
+        let s = enc.encode_weights(&wq, 8, 1, &mut rng);
+        let v = s[0].data[0];
+        hist[(v as u128 * buckets as u128 / field.modulus() as u128) as usize] += 1;
+    }
+    let expected = trials as f64 / buckets as f64;
+    for (b, &h) in hist.iter().enumerate() {
+        assert!((h as f64 - expected).abs() < 5.0 * expected.sqrt(), "bucket {b}: {h}");
+    }
+}
+
+/// The Shamir baseline has the same sharpness: T+1 shares reconstruct,
+/// and T shares are consistent with every candidate secret (perfect
+/// secrecy's combinatorial core).
+#[test]
+fn shamir_threshold_is_sharp() {
+    let field = PrimeField::new(PAPER_PRIME);
+    let scheme = ShamirScheme::new(field, 5, 2);
+    let mut rng = Rng::new(21);
+    let secret = 424242u64;
+    let shares = scheme.share(secret, &mut rng);
+    let idx = [0usize, 1, 2];
+    let picked: Vec<u64> = idx.iter().map(|&i| shares[i]).collect();
+    assert_eq!(scheme.reconstruct(&idx, &picked), secret);
+    for candidate in [0u64, 1, 999_999] {
+        let pts = vec![0, scheme.points[0], scheme.points[1]];
+        let vals = vec![candidate, shares[0], shares[1]];
+        let poly = interpolate(&field, &pts, &vals).unwrap();
+        assert!(poly.len() <= 3, "degree-2 polynomial exists for candidate {candidate}");
+    }
+}
