@@ -68,6 +68,7 @@ fn main() -> Result<(), Box<dyn std::error::Error>> {
             coeffs: vec![0, 1], // unused by the Linear op
             op: WorkerOp::Linear,
             fail_from_iter: None,
+            par: codedml::util::Parallelism::Serial,
         })
         .collect();
     let cluster = Cluster::spawn(specs)?;

@@ -1,0 +1,14 @@
+"""Test bootstrap: make the `compile` package importable without an
+install step.
+
+The python layer is deliberately not packaged (no setup.py/pyproject —
+it is an AOT compile-time tool, not a deployed library), so the tests
+add `python/` to sys.path themselves. Run from anywhere:
+
+    python -m pytest python/tests -q
+"""
+
+import pathlib
+import sys
+
+sys.path.insert(0, str(pathlib.Path(__file__).resolve().parents[1]))

@@ -8,6 +8,10 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
+
+# Optional in this offline image; the deterministic tests elsewhere still
+# cover the kernel when hypothesis is absent.
+pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st
 
 jax.config.update("jax_enable_x64", True)

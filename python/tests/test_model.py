@@ -3,6 +3,10 @@
 import jax
 import jax.numpy as jnp
 import numpy as np
+import pytest
+
+# Optional in this offline image (see test_kernel.py).
+pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st
 
 jax.config.update("jax_enable_x64", True)

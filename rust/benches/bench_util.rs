@@ -6,8 +6,19 @@
 //! ```text
 //! name                                 time/iter        throughput
 //! ```
+//!
+//! With `BENCH_JSON=1` in the environment, every reported row is also
+//! collected and written to `BENCH_<target>.json` by [`finish`] — machine-
+//! readable before/after records for perf work (e.g. the Barrett-vs-divide
+//! and serial-vs-parallel comparisons; see README.md § Benchmarks).
 
+#![allow(dead_code)] // each bench binary uses a subset of these helpers
+
+use std::sync::Mutex;
 use std::time::Instant;
+
+/// Rows collected for the JSON report: (name, secs/iter, work items/iter).
+static LOG: Mutex<Vec<(String, f64, Option<f64>)>> = Mutex::new(Vec::new());
 
 /// Time `f` for at least `min_secs` (and ≥ 3 iters); returns secs/iter.
 pub fn bench_secs(min_secs: f64, mut f: impl FnMut()) -> f64 {
@@ -27,6 +38,9 @@ pub fn bench_secs(min_secs: f64, mut f: impl FnMut()) -> f64 {
 /// Pretty-print one result row. `work` is optional items/op for
 /// throughput (e.g. field multiplications).
 pub fn report(name: &str, secs_per_iter: f64, work: Option<f64>) {
+    LOG.lock()
+        .expect("bench log poisoned")
+        .push((name.to_string(), secs_per_iter, work));
     let time = if secs_per_iter >= 1.0 {
         format!("{secs_per_iter:.3} s")
     } else if secs_per_iter >= 1e-3 {
@@ -47,6 +61,53 @@ pub fn report(name: &str, secs_per_iter: f64, work: Option<f64>) {
             println!("{name:<52} {time:>12}   {rate_s:>12}");
         }
         None => println!("{name:<52} {time:>12}"),
+    }
+}
+
+/// Print a derived speedup line (baseline / contender) and log it as a
+/// dimensionless row so the ratio lands in the JSON record too.
+pub fn report_speedup(name: &str, baseline_secs: f64, contender_secs: f64) {
+    let speedup = baseline_secs / contender_secs;
+    LOG.lock()
+        .expect("bench log poisoned")
+        .push((format!("{name} [speedup x]"), speedup, None));
+    println!("{name:<52} {speedup:>11.2}x");
+}
+
+/// If `BENCH_JSON` is set, write the collected rows to
+/// `BENCH_<target>.json` in the working directory. Call once at the end
+/// of each bench `main`.
+pub fn finish(target: &str) {
+    if std::env::var("BENCH_JSON").is_err() {
+        return;
+    }
+    let rows = LOG.lock().expect("bench log poisoned");
+    let mut out = String::from("{\n  \"rows\": [\n");
+    for (i, (name, secs, work)) in rows.iter().enumerate() {
+        let esc: String = name
+            .chars()
+            .flat_map(|c| match c {
+                '"' | '\\' => vec!['\\', c],
+                _ => vec![c],
+            })
+            .collect();
+        out.push_str(&format!(
+            "    {{\"name\": \"{esc}\", \"secs_per_iter\": {secs:e}"
+        ));
+        if let Some(w) = work {
+            out.push_str(&format!(", \"ops_per_sec\": {:e}", w / secs));
+        }
+        out.push('}');
+        if i + 1 < rows.len() {
+            out.push(',');
+        }
+        out.push('\n');
+    }
+    out.push_str("  ]\n}\n");
+    let path = format!("BENCH_{target}.json");
+    match std::fs::write(&path, out) {
+        Ok(()) => eprintln!("wrote {path}"),
+        Err(e) => eprintln!("warning: could not write {path}: {e}"),
     }
 }
 

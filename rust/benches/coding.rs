@@ -1,17 +1,23 @@
 //! Encode/decode benches — the "Encode" column of Tables 1–6 and the
-//! master's decode cost, at paper-relevant shapes.
+//! master's decode cost, at paper-relevant shapes; each shape is timed
+//! serial and with the thread pool (`--threads auto` equivalent) so the
+//! parallel speedup is recorded side by side.
 
 mod bench_util;
-use bench_util::{bench_secs, min_secs, report};
+use bench_util::{bench_secs, finish, min_secs, report, report_speedup};
 
 use codedml::coding::{CodingParams, Decoder, Encoder, WorkerResult};
 use codedml::field::{PrimeField, PAPER_PRIME};
-use codedml::util::Rng;
+use codedml::util::{Parallelism, Rng};
 
 fn main() {
     let f = PrimeField::new(PAPER_PRIME);
     let secs = min_secs();
-    println!("== coding (LCC encode / decode) ==");
+    let auto = Parallelism::Auto;
+    println!(
+        "== coding (LCC encode / decode; auto = {} threads) ==",
+        auto.threads()
+    );
 
     // Dataset encode at Case-1 shapes for N ∈ {10, 40} (scaled m).
     for (n, k, t, m, d) in [
@@ -20,28 +26,54 @@ fn main() {
         (40, 7, 7, 1239, 784),
     ] {
         let params = CodingParams::new(n, k, t, 1).unwrap();
-        let enc = Encoder::new(f, params);
         let mut rng = Rng::new(2);
         let m = (m / k) * k;
         let xq = f.random_matrix(&mut rng, m, d);
-        let tsec = bench_secs(secs, || {
-            std::hint::black_box(enc.encode_dataset(&xq, m, d, &mut rng));
-        });
         // Work: (K+T) muls per output element × N shares × block size.
         let work = (n * (m / k) * d * (k + t)) as f64;
-        report(&format!("encode_dataset N={n} K={k} T={t} m={m} d={d}"), tsec, Some(work));
+        let mut times = [0.0f64; 2];
+        for (i, par) in [Parallelism::Serial, auto].into_iter().enumerate() {
+            let enc = Encoder::new(f, params).with_parallelism(par);
+            let tsec = bench_secs(secs, || {
+                std::hint::black_box(enc.encode_dataset(&xq, m, d, &mut rng));
+            });
+            times[i] = tsec;
+            report(
+                &format!("encode_dataset N={n} K={k} T={t} m={m} d={d} [{par}]"),
+                tsec,
+                Some(work),
+            );
+        }
+        report_speedup(
+            &format!("encode_dataset N={n} K={k} T={t} parallel speedup"),
+            times[0],
+            times[1],
+        );
     }
 
     // Weight encode (per-iteration cost).
     for (n, k, t, d, r) in [(10usize, 3usize, 1usize, 1568usize, 1usize), (40, 7, 7, 1568, 1)] {
         let params = CodingParams::new(n, k, t, r).unwrap();
-        let enc = Encoder::new(f, params);
         let mut rng = Rng::new(3);
         let wq = f.random_matrix(&mut rng, d, r);
-        let tsec = bench_secs(secs, || {
-            std::hint::black_box(enc.encode_weights(&wq, d, r, &mut rng));
-        });
-        report(&format!("encode_weights N={n} K={k} T={t} d={d}"), tsec, Some((n * d * (t + 1)) as f64));
+        let mut times = [0.0f64; 2];
+        for (i, par) in [Parallelism::Serial, auto].into_iter().enumerate() {
+            let enc = Encoder::new(f, params).with_parallelism(par);
+            let tsec = bench_secs(secs, || {
+                std::hint::black_box(enc.encode_weights(&wq, d, r, &mut rng));
+            });
+            times[i] = tsec;
+            report(
+                &format!("encode_weights N={n} K={k} T={t} d={d} [{par}]"),
+                tsec,
+                Some((n * d * (t + 1)) as f64),
+            );
+        }
+        report_speedup(
+            &format!("encode_weights N={n} K={k} T={t} parallel speedup"),
+            times[0],
+            times[1],
+        );
     }
 
     // Decode at recovery-threshold sizes (cold = new subset, warm = cached).
@@ -53,14 +85,23 @@ fn main() {
         let results: Vec<WorkerResult> = (0..need)
             .map(|w| WorkerResult { worker: w, data: f.random_matrix(&mut rng, d, 1) })
             .collect();
-        let mut dec = Decoder::new(f, params, enc.points.clone());
-        let tsec = bench_secs(secs, || {
-            std::hint::black_box(dec.decode(&results, d).unwrap());
-        });
-        report(
-            &format!("decode warm-cache N={n} K={k} T={t} d={d} (R={need})"),
-            tsec,
-            Some((k * need * d) as f64),
+        let mut times = [0.0f64; 2];
+        for (i, par) in [Parallelism::Serial, auto].into_iter().enumerate() {
+            let mut dec = Decoder::new(f, params, enc.points.clone()).with_parallelism(par);
+            let tsec = bench_secs(secs, || {
+                std::hint::black_box(dec.decode(&results, d).unwrap());
+            });
+            times[i] = tsec;
+            report(
+                &format!("decode warm-cache N={n} K={k} T={t} d={d} (R={need}) [{par}]"),
+                tsec,
+                Some((k * need * d) as f64),
+            );
+        }
+        report_speedup(
+            &format!("decode warm-cache N={n} K={k} T={t} parallel speedup"),
+            times[0],
+            times[1],
         );
         // Cold path: rotate subsets so every decode misses the cache.
         let all: Vec<WorkerResult> = (0..n)
@@ -69,6 +110,7 @@ fn main() {
         let mut start = 0usize;
         let slack = n - need;
         if slack > 0 {
+            let mut dec = Decoder::new(f, params, enc.points.clone());
             let tsec = bench_secs(secs, || {
                 let subset: Vec<WorkerResult> = (0..need)
                     .map(|i| all[(start + i) % n].clone())
@@ -83,4 +125,6 @@ fn main() {
             );
         }
     }
+
+    finish("coding");
 }

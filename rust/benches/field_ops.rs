@@ -3,9 +3,9 @@
 //! loops of encode/decode — see EXPERIMENTS.md §Perf.
 
 mod bench_util;
-use bench_util::{bench_secs, min_secs, report};
+use bench_util::{bench_secs, finish, min_secs, report, report_speedup};
 
-use codedml::field::{eval_poly, interpolate, lagrange_coeffs, PrimeField, PAPER_PRIME};
+use codedml::field::{eval_poly, interpolate, lagrange_coeffs, PrimeField, PAPER_PRIME, PRIME_31};
 use codedml::util::Rng;
 
 fn main() {
@@ -13,6 +13,50 @@ fn main() {
     let mut rng = Rng::new(1);
     let secs = min_secs();
     println!("== field_ops (p = {}) ==", f.modulus());
+
+    // Barrett vs division-based reduction — the tentpole before/after.
+    // Same chain, one using the precomputed mul-high path (`mul`), one the
+    // hardware divide (`mul_divrem`).
+    for &p in &[PAPER_PRIME, PRIME_31] {
+        let fp = PrimeField::new(p);
+        let xs: Vec<u64> = (0..4096).map(|_| fp.random(&mut rng)).collect();
+        let t_barrett = bench_secs(secs, || {
+            let mut acc = 1u64;
+            for &x in &xs {
+                acc = fp.mul(acc, x);
+            }
+            std::hint::black_box(acc);
+        });
+        report(&format!("mul chain barrett (4096 elems, p={p})"), t_barrett, Some(4096.0));
+        let t_div = bench_secs(secs, || {
+            let mut acc = 1u64;
+            for &x in &xs {
+                acc = fp.mul_divrem(acc, x);
+            }
+            std::hint::black_box(acc);
+        });
+        report(&format!("mul chain divrem  (4096 elems, p={p})"), t_div, Some(4096.0));
+        report_speedup(&format!("barrett vs divrem mul (p={p})"), t_div, t_barrett);
+
+        let raw: Vec<u64> = (0..4096).map(|_| rng.next_u64()).collect();
+        let t_barrett = bench_secs(secs, || {
+            let mut acc = 0u64;
+            for &x in &raw {
+                acc = acc.wrapping_add(fp.reduce_u64(x));
+            }
+            std::hint::black_box(acc);
+        });
+        report(&format!("reduce_u64 barrett (4096 elems, p={p})"), t_barrett, Some(4096.0));
+        let t_div = bench_secs(secs, || {
+            let mut acc = 0u64;
+            for &x in &raw {
+                acc = acc.wrapping_add(fp.reduce_u64_divrem(x));
+            }
+            std::hint::black_box(acc);
+        });
+        report(&format!("reduce_u64 divrem  (4096 elems, p={p})"), t_div, Some(4096.0));
+        report_speedup(&format!("barrett vs divrem reduce (p={p})"), t_div, t_barrett);
+    }
 
     // Scalar multiply-add chain.
     let xs: Vec<u64> = (0..4096).map(|_| f.random(&mut rng)).collect();
@@ -64,4 +108,6 @@ fn main() {
         std::hint::black_box(eval_poly(&f, &coeffs, 12345));
     });
     report("eval_poly (deg 63)", t, Some(63.0));
+
+    finish("field_ops");
 }

@@ -3,12 +3,12 @@
 //! per-worker cost that dominates the paper's Comp. column.
 
 mod bench_util;
-use bench_util::{bench_secs, min_secs, report};
+use bench_util::{bench_secs, finish, min_secs, report, report_speedup};
 
 use codedml::compute::WorkerComputation;
 use codedml::field::PrimeField;
-use codedml::runtime::{ArtifactKind, XlaRuntime};
-use codedml::util::Rng;
+use codedml::runtime::{ArtifactKind, XlaRuntime, PJRT_AVAILABLE};
+use codedml::util::{Parallelism, Rng};
 use std::path::PathBuf;
 
 fn main() {
@@ -29,7 +29,10 @@ fn main() {
 
     let rt = {
         let dir = PathBuf::from("artifacts");
-        if dir.join("manifest.json").exists() {
+        if !PJRT_AVAILABLE {
+            eprintln!("pjrt feature not compiled in; native only");
+            None
+        } else if dir.join("manifest.json").exists() {
             match XlaRuntime::new(&dir) {
                 Ok(rt) => Some(rt),
                 Err(e) => {
@@ -54,7 +57,15 @@ fn main() {
         let t = bench_secs(secs, || {
             std::hint::black_box(wc.compute(&x, &w));
         });
-        report(&format!("native rows={rows} d={d} r={r}"), t, Some(work));
+        report(&format!("native rows={rows} d={d} r={r} [serial]"), t, Some(work));
+
+        let wc_par =
+            WorkerComputation::new(f, rows, d, coeffs.clone()).with_parallelism(Parallelism::Auto);
+        let t_par = bench_secs(secs, || {
+            std::hint::black_box(wc_par.compute(&x, &w));
+        });
+        report(&format!("native rows={rows} d={d} r={r} [auto]"), t_par, Some(work));
+        report_speedup(&format!("native rows={rows} d={d} r={r} parallel speedup"), t, t_par);
 
         if let Some(rt) = &rt {
             let has = rt
@@ -70,4 +81,6 @@ fn main() {
             }
         }
     }
+
+    finish("worker_compute");
 }

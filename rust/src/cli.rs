@@ -3,14 +3,20 @@
 //! ```text
 //! codedml train       [--n 10 --k 3 --t 1 --r 1 --case 1|2 --iters 25 --m 600
 //!                      --d 784 --dup --backend native|xla --seed 42
-//!                      --config cfg.json --json out.json]
-//! codedml mpc         [--n 10 --t 4 --iters 25 --m 600 --d 784]
+//!                      --threads serial|auto|<n> --config cfg.json --json out.json]
+//! codedml mpc         [--n 10 --t 4 --iters 25 --m 600 --d 784
+//!                      --threads serial|auto|<n>]
 //! codedml reproduce   <fig2|table1..6|fig3|fig4|fig5|all>
 //!                     [--scale 0.05 --iters 25 --json out.json --backend ...]
 //! codedml budget      [--m 12396 --k 13 --lx 2 --lw 4 --lc 3 --r 1 --p ...]
 //! codedml artifacts   [--dir artifacts]
 //! codedml list
 //! ```
+//!
+//! `--threads` bounds the thread pool used by the Lagrange encode, the
+//! per-worker matmuls, and the decode (`serial` = 1 thread, the default;
+//! `auto` = one per core; `<n>` = exactly n). Results are bit-identical at
+//! every setting — only wall-clock time changes.
 
 use std::path::PathBuf;
 
@@ -30,7 +36,12 @@ const USAGE: &str = "usage: codedml <train|mpc|reproduce|budget|artifacts|list> 
   reproduce  regenerate a paper table/figure (or 'all')
   budget     overflow-budget analysis for a parameter set
   artifacts  inspect the AOT artifact manifest
-  list       list reproducible experiments";
+  list       list reproducible experiments
+
+common options:
+  --threads serial|auto|<n>   thread pool for encode/compute/decode hot
+                              paths (default serial; results are identical
+                              at every setting, only wall-clock changes)";
 
 /// Entry point; returns the process exit code.
 pub fn run() -> i32 {
@@ -121,6 +132,9 @@ fn cmd_train(args: &Args) -> Result<(), String> {
     cfg.chaos_failures = args.get_usize("chaos-failures", 0)?;
     cfg.chaos_from_iter = args.get_u64("chaos-from-iter", 0)?;
     cfg.strict_budget = args.flag("strict-budget");
+    if let Some(t) = args.get("threads") {
+        cfg.parallelism = t.parse().map_err(|e: String| e)?;
+    }
     if let Some(path) = args.get("config") {
         let text = std::fs::read_to_string(path).map_err(|e| format!("read {path}: {e}"))?;
         cfg.apply_json(&text)?;
@@ -142,8 +156,8 @@ fn cmd_train(args: &Args) -> Result<(), String> {
 
     let iters = cfg.iters;
     println!(
-        "CodedPrivateML: N={} K={} T={} r={} p={} backend={:?} m={} d={} iters={}",
-        cfg.n, cfg.k, cfg.t, cfg.r, cfg.p, cfg.backend, train.m, train.d, iters
+        "CodedPrivateML: N={} K={} T={} r={} p={} backend={:?} m={} d={} iters={} threads={}",
+        cfg.n, cfg.k, cfg.t, cfg.r, cfg.p, cfg.backend, train.m, train.d, iters, cfg.parallelism
     );
     let mut sess = CodedMlSession::new(cfg, &train).map_err(|e| e.to_string())?;
     println!(
@@ -197,6 +211,10 @@ fn cmd_mpc(args: &Args) -> Result<(), String> {
             StragglerModel::none()
         } else {
             StragglerModel::default()
+        },
+        parallelism: match args.get("threads") {
+            Some(t) => t.parse().map_err(|e: String| e)?,
+            None => Default::default(),
         },
         ..Default::default()
     };
@@ -293,16 +311,22 @@ fn cmd_artifacts(args: &Args) -> Result<(), String> {
         );
     }
     // Smoke-execute the smallest worker artifact to prove the PJRT path.
+    // Non-fatal: a PJRT-less build (no `pjrt` feature) can still list
+    // manifests; it just cannot execute them.
     if let Some(e) = rt.manifest().find_worker(32, 64, 1, 15485863) {
         let f = crate::field::PrimeField::new(e.p);
         let mut rng = crate::util::Rng::new(1);
         let x = f.random_matrix(&mut rng, e.rows, e.d);
         let w = f.random_matrix(&mut rng, e.d, e.r);
         let c: Vec<u64> = (0..=e.r).map(|_| f.random(&mut rng)).collect();
-        let out = rt
-            .worker_f(&x, &w, &c, e.rows, e.d, e.p)
-            .map_err(|e| e.to_string())?;
-        println!("smoke-executed {}: output[0..4] = {:?}", e.name, &out[..4.min(out.len())]);
+        match rt.worker_f(&x, &w, &c, e.rows, e.d, e.p) {
+            Ok(out) => println!(
+                "smoke-executed {}: output[0..4] = {:?}",
+                e.name,
+                &out[..4.min(out.len())]
+            ),
+            Err(err) => eprintln!("warning: smoke execution skipped: {err}"),
+        }
     }
     Ok(())
 }
@@ -359,5 +383,19 @@ mod tests {
     fn train_rejects_bad_case() {
         let err = dispatch(&args("train --case 5")).unwrap_err();
         assert!(err.contains("case"));
+    }
+
+    #[test]
+    fn train_micro_run_parallel() {
+        assert!(dispatch(&args(
+            "train --n 10 --k 3 --t 1 --iters 1 --m 120 --threads 2 --no-straggle --free-net"
+        ))
+        .is_ok());
+    }
+
+    #[test]
+    fn train_rejects_bad_threads() {
+        let err = dispatch(&args("train --threads lots")).unwrap_err();
+        assert!(err.contains("thread count"), "{err}");
     }
 }

@@ -10,6 +10,7 @@ use std::time::Instant;
 
 use crate::runtime::{BackendKind, WorkerBackend};
 use crate::field::PrimeField;
+use crate::util::par::Parallelism;
 use std::path::PathBuf;
 
 /// What the worker computes each step.
@@ -37,6 +38,9 @@ pub struct WorkerSpec {
     /// Chaos hook: fail every step with iter ≥ this (crash-style fault
     /// injection for resilience tests; None = healthy).
     pub fail_from_iter: Option<u64>,
+    /// Intra-worker thread budget for the native matmul kernels (results
+    /// are bit-exact at any setting; see [`crate::util::par`]).
+    pub par: Parallelism,
 }
 
 enum ToWorker {
@@ -104,6 +108,7 @@ fn worker_main(
         spec.rows,
         spec.d,
         spec.coeffs.clone(),
+        spec.par,
     ) {
         Ok(b) => {
             let _ = ready.send(Ok(()));
@@ -140,9 +145,15 @@ fn worker_main(
                 }
                 let data = match spec.op {
                     WorkerOp::Logistic => backend.compute(&x_share, &w).map_err(|e| e.to_string()),
-                    WorkerOp::Linear => {
-                        Ok(linear_f(&f, &x_share, &w, y_share.as_deref(), spec.rows, spec.d))
-                    }
+                    WorkerOp::Linear => Ok(linear_f(
+                        &f,
+                        &x_share,
+                        &w,
+                        y_share.as_deref(),
+                        spec.rows,
+                        spec.d,
+                        spec.par,
+                    )),
                 };
                 let compute_secs = t0.elapsed().as_secs_f64();
                 if tx
@@ -166,14 +177,15 @@ fn linear_f(
     y: Option<&[u64]>,
     rows: usize,
     d: usize,
+    par: Parallelism,
 ) -> Vec<u64> {
-    use crate::compute::{matvec_mod, tr_matvec_mod};
-    let xw = matvec_mod(f, x, w, rows, d, 1, 0);
+    use crate::compute::{matvec_mod_par, tr_matvec_mod_par};
+    let xw = matvec_mod_par(f, x, w, rows, d, 1, 0, par);
     let resid: Vec<u64> = match y {
         Some(ys) => xw.iter().zip(ys.iter()).map(|(&a, &b)| f.sub(a, b)).collect(),
         None => xw,
     };
-    tr_matvec_mod(f, x, &resid, rows, d)
+    tr_matvec_mod_par(f, x, &resid, rows, d, par)
 }
 
 impl Cluster {
@@ -290,6 +302,7 @@ mod tests {
                 coeffs: vec![3, 7],
                 op,
                 fail_from_iter: None,
+                par: Parallelism::Serial,
             })
             .collect()
     }

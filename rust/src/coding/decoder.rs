@@ -15,6 +15,7 @@ use std::collections::HashMap;
 
 use super::{CodingParams, EvalPoints};
 use crate::field::{lagrange_coeffs, PrimeField};
+use crate::util::par::{par_ranges, Parallelism};
 
 /// Decoding failure.
 #[derive(Debug, Clone, PartialEq, Eq)]
@@ -64,11 +65,28 @@ pub struct Decoder {
     cache: HashMap<Vec<u32>, Vec<Vec<u64>>>,
     hits: u64,
     misses: u64,
+    /// Threads for the decode pass, split over output column chunks (the
+    /// combination per column is independent, so exact at any setting).
+    par: Parallelism,
 }
 
 impl Decoder {
     pub fn new(field: PrimeField, params: CodingParams, points: EvalPoints) -> Self {
-        Decoder { field, params, points, cache: HashMap::new(), hits: 0, misses: 0 }
+        Decoder {
+            field,
+            params,
+            points,
+            cache: HashMap::new(),
+            hits: 0,
+            misses: 0,
+            par: Parallelism::Serial,
+        }
+    }
+
+    /// Spread the decode combination across `par` threads.
+    pub fn with_parallelism(mut self, par: Parallelism) -> Self {
+        self.par = par;
+        self
     }
 
     /// (cache hits, misses) — perf observability.
@@ -126,38 +144,50 @@ impl Decoder {
         }
         let rows = &self.cache[&key];
 
-        let f = &self.field;
-        let out = rows
-            .iter()
-            .map(|lam| {
-                // h(β_k)[e] = Σ_i λ_i · result_i[e]; accumulate with the
-                // chunked-reduction trick from compute::matmul.
-                let p = f.modulus();
-                let chunk = crate::compute::safe_chunk_len(p);
-                let mut acc = vec![0u64; d];
-                let mut out_k = vec![0u64; d];
-                let mut pending = 0usize;
-                for (lam_i, r) in lam.iter().zip(ordered.iter()) {
-                    for (a, &v) in acc.iter_mut().zip(r.data.iter()) {
-                        *a = a.wrapping_add(lam_i * v);
-                    }
-                    pending += 1;
-                    if pending == chunk {
-                        for (o, a) in out_k.iter_mut().zip(acc.iter_mut()) {
-                            *o = (*o + *a % p) % p;
-                            *a = 0;
+        // h(β_k)[e] = Σ_i λ_i · result_i[e] — a K×R by R×d dense pass.
+        // Each output column is independent, so split the d columns into
+        // per-thread chunks; within a chunk, accumulate with the deferred
+        // Barrett reduction trick from compute::matmul.
+        let f = self.field;
+        let chunk = crate::compute::safe_chunk_len(f.modulus());
+        let col_parts = par_ranges(self.par, d, |_, cols| {
+            rows.iter()
+                .map(|lam| {
+                    let width = cols.len();
+                    let mut acc = vec![0u64; width];
+                    let mut out_k = vec![0u64; width];
+                    let mut pending = 0usize;
+                    for (lam_i, r) in lam.iter().zip(ordered.iter()) {
+                        let data = &r.data[cols.clone()];
+                        for (a, &v) in acc.iter_mut().zip(data.iter()) {
+                            *a = a.wrapping_add(lam_i * v);
                         }
-                        pending = 0;
+                        pending += 1;
+                        if pending == chunk {
+                            for (o, a) in out_k.iter_mut().zip(acc.iter_mut()) {
+                                *o = f.add(*o, f.reduce_u64(*a));
+                                *a = 0;
+                            }
+                            pending = 0;
+                        }
                     }
-                }
-                if pending > 0 {
-                    for (o, a) in out_k.iter_mut().zip(acc.iter()) {
-                        *o = (*o + *a % p) % p;
+                    if pending > 0 {
+                        for (o, a) in out_k.iter_mut().zip(acc.iter()) {
+                            *o = f.add(*o, f.reduce_u64(*a));
+                        }
                     }
-                }
-                out_k
-            })
-            .collect();
+                    out_k
+                })
+                .collect::<Vec<Vec<u64>>>()
+        });
+        // Stitch the column chunks back into K full-width blocks.
+        // (map, not vec![..; n]: cloning an empty Vec drops its capacity.)
+        let mut out: Vec<Vec<u64>> = (0..rows.len()).map(|_| Vec::with_capacity(d)).collect();
+        for part in col_parts {
+            for (k, piece) in part.into_iter().enumerate() {
+                out[k].extend(piece);
+            }
+        }
         Ok(out)
     }
 }
@@ -339,6 +369,27 @@ mod tests {
             .collect();
         dec.decode(&results2, 2).unwrap();
         assert_eq!(dec.cache_stats(), (1, 2));
+    }
+
+    #[test]
+    fn parallel_decode_is_bit_exact_with_serial() {
+        use crate::util::par::Parallelism;
+        let f = PrimeField::new(PAPER_PRIME);
+        let params = CodingParams::new(10, 3, 1, 1).unwrap();
+        let enc = Encoder::new(f, params);
+        let mut rng = Rng::new(31);
+        let d = 37; // not a multiple of typical chunk splits
+        let need = params.recovery_threshold();
+        let results: Vec<WorkerResult> = (0..need)
+            .map(|w| WorkerResult { worker: w, data: f.random_matrix(&mut rng, d, 1) })
+            .collect();
+        let mut serial = Decoder::new(f, params, enc.points.clone());
+        let want = serial.decode(&results, d).unwrap();
+        for threads in [2usize, 3, 8, 64] {
+            let mut dec = Decoder::new(f, params, enc.points.clone())
+                .with_parallelism(Parallelism::from_count(threads));
+            assert_eq!(dec.decode(&results, d).unwrap(), want, "threads={threads}");
+        }
     }
 
     #[test]

@@ -3,13 +3,14 @@
 //! The encoding matrix U ∈ F_p^{(K+T)×N} has column i equal to the Lagrange
 //! basis coefficients of the β points evaluated at α_i (eq. 12), so worker
 //! i's share is a fixed linear combination of the K data blocks and T
-//! masks: X̃_i = Σ_j U[j,i]·block_j. Weight shares exploit that the first K
-//! blocks are all W̄ (eq. 14): Σ_{j<K} U[j,i]·W̄ = s_i·W̄ with the column
+//! masks: `X̃_i = Σ_j U[j,i]·block_j`. Weight shares exploit that the first
+//! K blocks are all W̄ (eq. 14): `Σ_{j<K} U[j,i]·W̄ = s_i·W̄` with the column
 //! sums s_i precomputed — an O(K) → O(1) saving per entry that dominates
 //! the per-iteration encode cost (EXPERIMENTS.md §Perf).
 
 use super::{CodingParams, EvalPoints};
 use crate::field::{lagrange_coeffs, PrimeField};
+use crate::util::par::{par_map, Parallelism};
 use crate::util::Rng;
 
 /// One worker's coded share of the dataset (or of the weights).
@@ -30,8 +31,11 @@ pub struct Encoder {
     /// U, stored column-major: `u[i]` is worker i's coefficient vector
     /// (length K+T).
     u_cols: Vec<Vec<u64>>,
-    /// Σ_{j<K} U[j,i] per worker — the replicated-secret shortcut.
+    /// `Σ_{j<K} U[j,i]` per worker — the replicated-secret shortcut.
     top_sums: Vec<u64>,
+    /// Threads for the per-worker share columns (mask randomness is drawn
+    /// before fan-out, so shares are identical at any setting).
+    par: Parallelism,
 }
 
 impl Encoder {
@@ -55,7 +59,13 @@ impl Encoder {
             .iter()
             .map(|col| col[..params.k].iter().fold(0u64, |acc, &c| field.add(acc, c)))
             .collect();
-        Encoder { field, params, points, u_cols, top_sums }
+        Encoder { field, params, points, u_cols, top_sums, par: Parallelism::Serial }
+    }
+
+    /// Spread the N per-worker share computations across `par` threads.
+    pub fn with_parallelism(mut self, par: Parallelism) -> Self {
+        self.par = par;
+        self
     }
 
     /// Column i of the encoding matrix U (length K+T).
@@ -71,18 +81,18 @@ impl Encoder {
         assert_eq!(xq.len(), m * d);
         assert!(m % k == 0, "m={m} must be divisible by K={k}");
         let block = m / k * d;
+        // Masks are drawn before the fan-out so the RNG stream (and hence
+        // every share) is independent of the thread count.
         let masks: Vec<Vec<u64>> = (0..t)
             .map(|_| self.field.random_matrix(rng, m / k, d))
             .collect();
-        (0..n)
-            .map(|w| EncodedShare {
-                worker: w,
-                data: self.combine_blocks(xq, block, &masks, w),
-            })
-            .collect()
+        par_map(self.par, n, |w| EncodedShare {
+            worker: w,
+            data: self.combine_blocks(xq, block, &masks, w),
+        })
     }
 
-    /// Linear combination Σ_j U[j,w]·block_j over K data blocks + T masks.
+    /// Linear combination `Σ_j U[j,w]·block_j` over K data blocks + T masks.
     ///
     /// Hot loop of the Encode column: products of reduced elements are
     /// < p² ≤ 2^52 and we sum K+T of them, so partial sums stay in u64
@@ -106,7 +116,7 @@ impl Encoder {
         let mut pending = 0usize;
         let fold = |acc: &mut Vec<u64>, out: &mut Vec<u64>, pending: &mut usize| {
             for (o, a) in out.iter_mut().zip(acc.iter_mut()) {
-                *o = (*o + *a % p) % p;
+                *o = f.add(*o, f.reduce_u64(*a));
                 *a = 0;
             }
             *pending = 0;
@@ -137,47 +147,53 @@ impl Encoder {
     /// paper re-encodes every iteration precisely so intermediate weights
     /// stay private.
     pub fn encode_weights(&self, wq: &[u64], d: usize, r: usize, rng: &mut Rng) -> Vec<EncodedShare> {
-        let (k, t, n) = (self.params.k, self.params.t, self.params.n);
+        let (t, n) = (self.params.t, self.params.n);
         assert_eq!(wq.len(), d * r);
         let f = self.field;
+        // Fresh masks drawn before fan-out (thread-count independence).
         let masks: Vec<Vec<u64>> = (0..t)
             .map(|_| f.random_matrix(rng, d, r))
             .collect();
-        let p = f.modulus();
-        let chunk = crate::compute::safe_chunk_len(p);
-        (0..n)
-            .map(|w| {
-                let col = &self.u_cols[w];
-                let s = self.top_sums[w];
-                // Deferred reduction over 1 data term + T mask terms.
-                let mut acc: Vec<u64> = wq.iter().map(|&v| s * v).collect();
-                let mut out = vec![0u64; wq.len()];
-                let mut pending = 1usize;
-                for (j, mask) in masks.iter().enumerate() {
-                    let c = col[k + j];
-                    if c == 0 {
-                        continue;
-                    }
-                    for (a, &v) in acc.iter_mut().zip(mask.iter()) {
-                        *a = a.wrapping_add(c * v);
-                    }
-                    pending += 1;
-                    if pending == chunk {
-                        for (o, a) in out.iter_mut().zip(acc.iter_mut()) {
-                            *o = (*o + *a % p) % p;
-                            *a = 0;
-                        }
-                        pending = 0;
-                    }
+        par_map(self.par, n, |w| EncodedShare {
+            worker: w,
+            data: self.combine_weight_share(wq, &masks, w),
+        })
+    }
+
+    /// One worker's weight share: s_w·W̄ + Σ_j U[K+j,w]·V_j with deferred
+    /// Barrett reduction over 1 data term + T mask terms.
+    fn combine_weight_share(&self, wq: &[u64], masks: &[Vec<u64>], w: usize) -> Vec<u64> {
+        let f = &self.field;
+        let k = self.params.k;
+        let chunk = crate::compute::safe_chunk_len(f.modulus());
+        let col = &self.u_cols[w];
+        let s = self.top_sums[w];
+        let mut acc: Vec<u64> = wq.iter().map(|&v| s * v).collect();
+        let mut out = vec![0u64; wq.len()];
+        let mut pending = 1usize;
+        for (j, mask) in masks.iter().enumerate() {
+            let c = col[k + j];
+            if c == 0 {
+                continue;
+            }
+            for (a, &v) in acc.iter_mut().zip(mask.iter()) {
+                *a = a.wrapping_add(c * v);
+            }
+            pending += 1;
+            if pending == chunk {
+                for (o, a) in out.iter_mut().zip(acc.iter_mut()) {
+                    *o = f.add(*o, f.reduce_u64(*a));
+                    *a = 0;
                 }
-                if pending > 0 {
-                    for (o, a) in out.iter_mut().zip(acc.iter()) {
-                        *o = (*o + *a % p) % p;
-                    }
-                }
-                EncodedShare { worker: w, data: out }
-            })
-            .collect()
+                pending = 0;
+            }
+        }
+        if pending > 0 {
+            for (o, a) in out.iter_mut().zip(acc.iter()) {
+                *o = f.add(*o, f.reduce_u64(*a));
+            }
+        }
+        out
     }
 
     /// Bytes a dataset share occupies on the wire (u64 per element — the
@@ -326,6 +342,23 @@ mod tests {
         assert_eq!(enc.share_bytes(8, 4), 128);
         // packed at 24 bits: 16·24/8 = 48 bytes.
         assert_eq!(enc.packed_share_bytes(8, 4), 48);
+    }
+
+    #[test]
+    fn parallel_encode_is_bit_exact_with_serial() {
+        let enc = setup(13, 3, 2);
+        let f = enc.field;
+        let mut rng = Rng::new(123);
+        let (m, d) = (12, 7);
+        let xq = f.random_matrix(&mut rng, m, d);
+        let wq = f.random_matrix(&mut rng, d, 1);
+        let serial_x = enc.encode_dataset(&xq, m, d, &mut Rng::new(5));
+        let serial_w = enc.encode_weights(&wq, d, 1, &mut Rng::new(6));
+        for threads in [2usize, 4, 32] {
+            let penc = setup(13, 3, 2).with_parallelism(Parallelism::from_count(threads));
+            assert_eq!(penc.encode_dataset(&xq, m, d, &mut Rng::new(5)), serial_x);
+            assert_eq!(penc.encode_weights(&wq, d, 1, &mut Rng::new(6)), serial_w);
+        }
     }
 
     #[test]

@@ -2,12 +2,19 @@
 //!
 //! Accumulation strategy: products of two reduced elements are < p² and
 //! p ≤ 2^31, so partial sums stay in u64 for `safe_chunk_len(p)` terms;
-//! we reduce mod p once per chunk instead of per multiply–add. For the
-//! paper's 24-bit prime that is one reduction every 2^16 terms — the inner
+//! we reduce mod p once per chunk instead of per multiply–add, and the
+//! per-chunk fold itself is a Barrett reduction
+//! ([`PrimeField::reduce_u64`]) rather than a hardware divide. For the
+//! paper's 24-bit prime that is one mul-high every 2^16 terms — the inner
 //! loop is pure integer MACs, which is what makes the native backend
 //! competitive with the XLA artifact (see EXPERIMENTS.md §Perf).
+//!
+//! The `_par` variants split the row range over a scoped thread pool
+//! ([`crate::util::par`]); outputs are per-row (or merged with exact field
+//! adds), so results are bit-identical at every thread count.
 
 use crate::field::PrimeField;
+use crate::util::par::{par_ranges, Parallelism};
 
 /// Number of p²-bounded terms that can accumulate in a u64 without
 /// overflow: floor((2^64 − 1) / (p−1)²) bounded to ≥ 1.
@@ -15,6 +22,36 @@ pub fn safe_chunk_len(p: u64) -> usize {
     let p2 = (p - 1) as u128 * (p - 1) as u128;
     let max = u64::MAX as u128 / p2;
     max.max(1).min(usize::MAX as u128) as usize
+}
+
+/// Inner kernel of [`matvec_mod`] over a row range.
+fn matvec_rows(
+    f: &PrimeField,
+    x: &[u64],
+    w: &[u64],
+    row_range: std::ops::Range<usize>,
+    d: usize,
+    stride: usize,
+    col: usize,
+) -> Vec<u64> {
+    let chunk = safe_chunk_len(f.modulus());
+    let mut out = Vec::with_capacity(row_range.len());
+    for row in row_range {
+        let xrow = &x[row * d..(row + 1) * d];
+        let mut acc: u64 = 0;
+        let mut k = 0;
+        while k < d {
+            let end = (k + chunk).min(d);
+            let mut partial: u64 = 0;
+            for kk in k..end {
+                partial = partial.wrapping_add(xrow[kk] * w[kk * stride + col]);
+            }
+            acc = f.add(acc, f.reduce_u64(partial));
+            k = end;
+        }
+        out.push(acc);
+    }
+    out
 }
 
 /// `out[i] = Σ_k x[i,k] · w[k*stride + col] mod p` — multiply the row-major
@@ -28,42 +65,43 @@ pub fn matvec_mod(
     stride: usize,
     col: usize,
 ) -> Vec<u64> {
+    matvec_mod_par(f, x, w, rows, d, stride, col, Parallelism::Serial)
+}
+
+/// [`matvec_mod`] with the row range split across `par` threads. Each
+/// output row is computed independently, so the result is bit-identical
+/// to the serial kernel.
+#[allow(clippy::too_many_arguments)]
+pub fn matvec_mod_par(
+    f: &PrimeField,
+    x: &[u64],
+    w: &[u64],
+    rows: usize,
+    d: usize,
+    stride: usize,
+    col: usize,
+    par: Parallelism,
+) -> Vec<u64> {
     assert_eq!(x.len(), rows * d);
     assert!(w.len() >= d * stride);
     assert!(col < stride);
-    let p = f.modulus();
-    let chunk = safe_chunk_len(p);
-    let mut out = Vec::with_capacity(rows);
-    for row in 0..rows {
-        let xrow = &x[row * d..(row + 1) * d];
-        let mut acc: u64 = 0;
-        let mut k = 0;
-        while k < d {
-            let end = (k + chunk).min(d);
-            let mut partial: u64 = 0;
-            for kk in k..end {
-                partial = partial.wrapping_add(xrow[kk] * w[kk * stride + col]);
-            }
-            acc = (acc + partial % p) % p;
-            k = end;
-        }
-        out.push(acc);
-    }
-    out
+    par_ranges(par, rows, |_, range| matvec_rows(f, x, w, range, d, stride, col)).concat()
 }
 
-/// `out[j] = Σ_i x[i,j] · g[i] mod p` — Xᵀ·g without materializing the
-/// transpose: row-major streaming with per-column u64 accumulators and a
-/// chunked reduction every `safe_chunk_len` rows.
-pub fn tr_matvec_mod(f: &PrimeField, x: &[u64], g: &[u64], rows: usize, d: usize) -> Vec<u64> {
-    assert_eq!(x.len(), rows * d);
-    assert_eq!(g.len(), rows);
-    let p = f.modulus();
-    let chunk = safe_chunk_len(p);
+/// Inner kernel of [`tr_matvec_mod`] over a row range; returns a fully
+/// reduced length-`d` partial.
+fn tr_matvec_rows(
+    f: &PrimeField,
+    x: &[u64],
+    g: &[u64],
+    row_range: std::ops::Range<usize>,
+    d: usize,
+) -> Vec<u64> {
+    let chunk = safe_chunk_len(f.modulus());
     let mut acc = vec![0u64; d];
     let mut out = vec![0u64; d];
     let mut pending = 0usize;
-    for row in 0..rows {
+    for row in row_range {
         let gi = g[row];
         let xrow = &x[row * d..(row + 1) * d];
         for (a, &xv) in acc.iter_mut().zip(xrow.iter()) {
@@ -72,7 +110,7 @@ pub fn tr_matvec_mod(f: &PrimeField, x: &[u64], g: &[u64], rows: usize, d: usize
         pending += 1;
         if pending == chunk {
             for (o, a) in out.iter_mut().zip(acc.iter_mut()) {
-                *o = (*o + *a % p) % p;
+                *o = f.add(*o, f.reduce_u64(*a));
                 *a = 0;
             }
             pending = 0;
@@ -80,10 +118,42 @@ pub fn tr_matvec_mod(f: &PrimeField, x: &[u64], g: &[u64], rows: usize, d: usize
     }
     if pending > 0 {
         for (o, a) in out.iter_mut().zip(acc.iter()) {
-            *o = (*o + *a % p) % p;
+            *o = f.add(*o, f.reduce_u64(*a));
         }
     }
     out
+}
+
+/// `out[j] = Σ_i x[i,j] · g[i] mod p` — Xᵀ·g without materializing the
+/// transpose: row-major streaming with per-column u64 accumulators and a
+/// chunked Barrett reduction every `safe_chunk_len` rows.
+pub fn tr_matvec_mod(f: &PrimeField, x: &[u64], g: &[u64], rows: usize, d: usize) -> Vec<u64> {
+    tr_matvec_mod_par(f, x, g, rows, d, Parallelism::Serial)
+}
+
+/// [`tr_matvec_mod`] with the row range split across `par` threads; the
+/// per-thread partials (already reduced) are merged with exact field adds,
+/// so the result is bit-identical to the serial kernel.
+pub fn tr_matvec_mod_par(
+    f: &PrimeField,
+    x: &[u64],
+    g: &[u64],
+    rows: usize,
+    d: usize,
+    par: Parallelism,
+) -> Vec<u64> {
+    assert_eq!(x.len(), rows * d);
+    assert_eq!(g.len(), rows);
+    let partials = par_ranges(par, rows, |_, range| tr_matvec_rows(f, x, g, range, d));
+    partials
+        .into_iter()
+        .reduce(|mut merged, part| {
+            for (m, v) in merged.iter_mut().zip(part) {
+                *m = f.add(*m, v);
+            }
+            merged
+        })
+        .unwrap_or_else(|| vec![0u64; d])
 }
 
 #[cfg(test)]
@@ -198,5 +268,34 @@ mod tests {
         let f = PrimeField::new(97);
         assert_eq!(tr_matvec_mod(&f, &[], &[], 0, 0), Vec::<u64>::new());
         assert_eq!(matvec_mod(&f, &[], &[1], 0, 1, 1, 0), Vec::<u64>::new());
+        let par = Parallelism::from_count(4);
+        assert_eq!(tr_matvec_mod_par(&f, &[], &[], 0, 0, par), Vec::<u64>::new());
+        assert_eq!(matvec_mod_par(&f, &[], &[1], 0, 1, 1, 0, par), Vec::<u64>::new());
+    }
+
+    #[test]
+    fn parallel_kernels_are_bit_exact_with_serial() {
+        for &p in &[PAPER_PRIME, PRIME_31] {
+            let f = PrimeField::new(p);
+            check(&format!("par-matmul-{p}"), 20, move |rng| {
+                let rows = 1 + rng.below_usize(70);
+                let d = 1 + rng.below_usize(20);
+                let x = f.random_matrix(rng, rows, d);
+                let w = f.random_matrix(rng, d, 1);
+                let g = f.random_matrix(rng, rows, 1);
+                let serial_mv = matvec_mod(&f, &x, &w, rows, d, 1, 0);
+                let serial_tr = tr_matvec_mod(&f, &x, &g, rows, d);
+                for threads in [2usize, 3, 8, 128] {
+                    let par = Parallelism::from_count(threads);
+                    if matvec_mod_par(&f, &x, &w, rows, d, 1, 0, par) != serial_mv {
+                        return Err(format!("matvec p={p} rows={rows} threads={threads}"));
+                    }
+                    if tr_matvec_mod_par(&f, &x, &g, rows, d, par) != serial_tr {
+                        return Err(format!("tr_matvec p={p} rows={rows} threads={threads}"));
+                    }
+                }
+                Ok(())
+            });
+        }
     }
 }

@@ -18,9 +18,12 @@
 
 mod matmul;
 
-pub use matmul::{matvec_mod, tr_matvec_mod, safe_chunk_len};
+pub use matmul::{
+    matvec_mod, matvec_mod_par, safe_chunk_len, tr_matvec_mod, tr_matvec_mod_par,
+};
 
 use crate::field::PrimeField;
+use crate::util::par::Parallelism;
 
 /// Parameters of the worker computation.
 #[derive(Debug, Clone)]
@@ -34,13 +37,22 @@ pub struct WorkerComputation {
     pub r: usize,
     /// Field-quantized polynomial coefficients c̄_0..c̄_r.
     pub coeffs: Vec<u64>,
+    /// Intra-worker thread count for the matmul row blocks (bit-exact at
+    /// any setting; see [`crate::util::par`]).
+    pub par: Parallelism,
 }
 
 impl WorkerComputation {
     pub fn new(field: PrimeField, rows: usize, d: usize, coeffs: Vec<u64>) -> Self {
         assert!(coeffs.len() >= 2, "need at least a degree-1 polynomial");
         let r = coeffs.len() - 1;
-        WorkerComputation { field, rows, d, r, coeffs }
+        WorkerComputation { field, rows, d, r, coeffs, par: Parallelism::Serial }
+    }
+
+    /// Split the matmul row blocks across `par` threads.
+    pub fn with_parallelism(mut self, par: Parallelism) -> Self {
+        self.par = par;
+        self
     }
 
     /// Evaluate ḡ(X̃, W̃) — one field element per row.
@@ -51,10 +63,11 @@ impl WorkerComputation {
         let f = &self.field;
         assert_eq!(x.len(), self.rows * self.d);
         assert_eq!(w.len(), self.d * self.r);
-        // u_j = X̃ · w̃_j for each j — computed as one pass per column.
+        // u_j = X̃ · w̃_j for each j — computed as one pass per column,
+        // rows split across the worker's thread budget.
         let mut dots: Vec<Vec<u64>> = Vec::with_capacity(self.r);
         for j in 0..self.r {
-            dots.push(matvec_mod(f, x, w, self.rows, self.d, self.r, j));
+            dots.push(matvec_mod_par(f, x, w, self.rows, self.d, self.r, j, self.par));
         }
         // ḡ = c̄_0 + Σ_i c̄_i · Π_{j<i} dots[j]  (elementwise over rows)
         let mut g = vec![self.coeffs[0]; self.rows];
@@ -73,7 +86,7 @@ impl WorkerComputation {
     /// The full worker function f(X̃, W̃) = X̃ᵀ ḡ(X̃, W̃) ∈ F_p^d.
     pub fn compute(&self, x: &[u64], w: &[u64]) -> Vec<u64> {
         let g = self.g_bar(x, w);
-        tr_matvec_mod(&self.field, x, &g, self.rows, self.d)
+        tr_matvec_mod_par(&self.field, x, &g, self.rows, self.d, self.par)
     }
 
     /// Total degree of f in its inputs — determines the recovery threshold.

@@ -8,6 +8,7 @@ use crate::field::{PrimeField, PAPER_PRIME};
 use crate::quant::{BudgetReport, OverflowBudget};
 use crate::runtime::BackendKind;
 use crate::util::json::Json;
+use crate::util::par::Parallelism;
 
 /// How per-iteration computation time is attributed.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -97,6 +98,10 @@ pub struct CodedMlConfig {
     pub packed_wire: bool,
     /// How the sigmoid polynomial is fitted (least squares vs Chebyshev).
     pub fit_method: crate::sigmoid::FitMethod,
+    /// Thread budget for the encode / worker-matmul / decode hot paths
+    /// (CLI `--threads`, JSON `parallelism`). Results are bit-identical at
+    /// every setting — see [`crate::util::par`]; only wall-clock changes.
+    pub parallelism: Parallelism,
 }
 
 impl Default for CodedMlConfig {
@@ -124,6 +129,7 @@ impl Default for CodedMlConfig {
             chaos_from_iter: 0,
             packed_wire: false,
             fit_method: crate::sigmoid::FitMethod::LeastSquares,
+            parallelism: Parallelism::Serial,
         }
     }
 }
@@ -227,6 +233,15 @@ impl CodedMlConfig {
                 "packed_wire" => {
                     self.packed_wire = val.as_bool().ok_or("packed_wire: want bool")?
                 }
+                "parallelism" => {
+                    self.parallelism = if let Some(s) = val.as_str() {
+                        s.parse().map_err(|e: String| e)?
+                    } else if let Some(n) = val.as_u64() {
+                        Parallelism::from_count(n as usize)
+                    } else {
+                        return Err("parallelism: want integer or 'serial'/'auto'".into());
+                    }
+                }
                 "fit_method" => {
                     self.fit_method = val
                         .as_str()
@@ -280,7 +295,8 @@ mod tests {
         let mut cfg = CodedMlConfig::default();
         cfg.apply_json(
             r#"{"n": 16, "k": 4, "t": 1, "iters": 7, "backend": "native",
-                "eta": 0.5, "bandwidth": 1e9, "strict_budget": true}"#,
+                "eta": 0.5, "bandwidth": 1e9, "strict_budget": true,
+                "parallelism": "auto"}"#,
         )
         .unwrap();
         assert_eq!(cfg.n, 16);
@@ -289,6 +305,20 @@ mod tests {
         assert_eq!(cfg.eta, Some(0.5));
         assert_eq!(cfg.net.bandwidth, 1e9);
         assert!(cfg.strict_budget);
+        assert_eq!(cfg.parallelism, Parallelism::Auto);
+    }
+
+    #[test]
+    fn json_parallelism_accepts_counts_and_rejects_garbage() {
+        let mut cfg = CodedMlConfig::default();
+        cfg.apply_json(r#"{"parallelism": 4}"#).unwrap();
+        assert_eq!(cfg.parallelism, Parallelism::from_count(4));
+        cfg.apply_json(r#"{"parallelism": 0}"#).unwrap();
+        assert_eq!(cfg.parallelism, Parallelism::Auto);
+        cfg.apply_json(r#"{"parallelism": 1}"#).unwrap();
+        assert_eq!(cfg.parallelism, Parallelism::Serial);
+        assert!(cfg.apply_json(r#"{"parallelism": "many"}"#).is_err());
+        assert!(cfg.apply_json(r#"{"parallelism": true}"#).is_err());
     }
 
     #[test]

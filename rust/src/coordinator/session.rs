@@ -136,14 +136,15 @@ impl CodedMlSession {
             let mut out = None;
             t_encode.time(|| {
                 let xbar = xq.quantize(&ds.x);
-                let encoder = Encoder::new(field, params);
+                let encoder = Encoder::new(field, params).with_parallelism(cfg.parallelism);
                 let shares = encoder.encode_dataset(&xbar, m, d, &mut rng);
                 out = Some((xbar, shares));
             });
             out.unwrap()
         };
-        let encoder = Encoder::new(field, params);
-        let decoder = Decoder::new(field, params, encoder.points.clone());
+        let encoder = Encoder::new(field, params).with_parallelism(cfg.parallelism);
+        let decoder = Decoder::new(field, params, encoder.points.clone())
+            .with_parallelism(cfg.parallelism);
 
         // Model the dataset broadcast (optionally bit-packed on the wire).
         let share_bytes = if cfg.packed_wire {
@@ -168,6 +169,7 @@ impl CodedMlSession {
                 // Chaos hook: the first `chaos_failures` workers die at
                 // `chaos_from_iter` (resilience tests).
                 fail_from_iter: (id < cfg.chaos_failures).then_some(cfg.chaos_from_iter),
+                par: cfg.parallelism,
             })
             .collect();
         let cluster = Cluster::spawn(specs)?;

@@ -4,13 +4,39 @@
 //! training session may use the paper's 24-bit prime while a headroom
 //! experiment uses a 31-bit one), so `PrimeField` is a small copyable
 //! context passed where needed rather than a const generic.
+//!
+//! # Barrett reduction
+//!
+//! Every reduction goes through a precomputed Barrett context instead of a
+//! hardware divide: with `μ = ⌊2^64 / p⌋` computed once in [`PrimeField::new`],
+//! `x mod p` for any `u64` x is
+//!
+//! ```text
+//!   q = (x·μ) >> 64        (one 64×64→128 multiply, keep the high half)
+//!   r = x − q·p            (r ∈ [0, 2p) — see proof below)
+//!   if r ≥ p { r −= p }
+//! ```
+//!
+//! Writing `2^64 = μ·p + ρ` with `0 ≤ ρ < p`, we get
+//! `x·μ/2^64 = x/p − x·ρ/(p·2^64)` and the subtracted term is `< 1` for all
+//! `x < 2^64`, so `⌊x/p⌋ − 1 ≤ q ≤ ⌊x/p⌋` and a single conditional subtract
+//! finishes the job. One mul-high + one mul + one subtract replaces the
+//! 20–40 cycle `div` the old `%` emitted — this is the inner loop of every
+//! encode/compute/decode path, so it matters (see `rust/benches/field_ops.rs`
+//! for the measured before/after).
 
 use crate::util::Rng;
 
-/// Arithmetic context for the prime field F_p.
+/// Arithmetic context for the prime field F_p with a precomputed Barrett
+/// constant. Cheap to copy (three words) — pass it by value.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub struct PrimeField {
     p: u64,
+    /// Barrett constant ⌊2^64 / p⌋.
+    mu: u64,
+    /// 2^64 mod p — folds the high half of a u128 into the low in
+    /// [`PrimeField::reduce_u128`].
+    r64: u64,
 }
 
 impl PrimeField {
@@ -25,7 +51,12 @@ impl PrimeField {
     pub fn new(p: u64) -> Self {
         assert!(p > 2 && is_prime(p), "modulus {p} is not an odd prime");
         assert!(p < (1 << 31), "modulus {p} too large (max 31 bits)");
-        PrimeField { p }
+        // Barrett context: μ = ⌊2^64/p⌋ (fits u64 for p ≥ 3) and
+        // ρ = 2^64 mod p = 2^64 − μ·p.
+        let mu = ((1u128 << 64) / p as u128) as u64;
+        let r64 = ((1u128 << 64) - mu as u128 * p as u128) as u64;
+        debug_assert!((r64 as u128) < p as u128);
+        PrimeField { p, mu, r64 }
     }
 
     #[inline(always)]
@@ -48,9 +79,48 @@ impl PrimeField {
             .unwrap_or(false)
     }
 
+    /// Barrett-reduce any `u64` into `[0, p)`: mul-high + multiply +
+    /// at most one conditional subtract — no hardware division.
+    #[inline(always)]
+    pub fn reduce_u64(&self, x: u64) -> u64 {
+        let q = ((x as u128 * self.mu as u128) >> 64) as u64;
+        // q ≤ ⌊x/p⌋, so q·p ≤ x (no underflow) and r < 2p (see module docs).
+        let r = x - q.wrapping_mul(self.p);
+        if r >= self.p {
+            r - self.p
+        } else {
+            r
+        }
+    }
+
+    /// Reduce a `u128` into `[0, p)`. The common case (value < 2^64, e.g.
+    /// any product of two reduced elements) is a single Barrett pass; wider
+    /// values fold the high half through `2^64 mod p` first.
     #[inline(always)]
     pub fn reduce_u128(&self, x: u128) -> u64 {
-        (x % self.p as u128) as u64
+        if x < (1u128 << 64) {
+            self.reduce_u64(x as u64)
+        } else {
+            let hi = self.reduce_u64((x >> 64) as u64);
+            let lo = self.reduce_u64(x as u64);
+            // x ≡ hi·(2^64 mod p) + lo; hi·r64 < p² < 2^62 fits u64.
+            self.add(self.reduce_u64(hi * self.r64), lo)
+        }
+    }
+
+    /// Division-based `u64` reduction — the pre-Barrett path, kept as the
+    /// correctness oracle for property tests and the baseline for
+    /// `rust/benches/field_ops.rs`.
+    #[inline(always)]
+    pub fn reduce_u64_divrem(&self, x: u64) -> u64 {
+        x % self.p
+    }
+
+    /// Division-based multiply (baseline twin of [`PrimeField::mul`]).
+    #[inline(always)]
+    pub fn mul_divrem(&self, a: u64, b: u64) -> u64 {
+        debug_assert!(a < self.p && b < self.p);
+        (a * b) % self.p
     }
 
     /// Reduce a signed integer into `[0, p)` (two's-complement embedding φ).
@@ -105,8 +175,8 @@ impl PrimeField {
     #[inline(always)]
     pub fn mul(&self, a: u64, b: u64) -> u64 {
         debug_assert!(a < self.p && b < self.p);
-        // p < 2^31 so the product fits in u64 without u128.
-        (a * b) % self.p
+        // p < 2^31 so the product fits in u64 without u128; Barrett-reduce.
+        self.reduce_u64(a * b)
     }
 
     /// Modular exponentiation (square-and-multiply).
@@ -313,6 +383,65 @@ mod tests {
             }
             Ok(())
         });
+    }
+
+    /// The acceptance gate for the Barrett core: over every supported
+    /// modulus, the mul-high path is bit-exact with the division path for
+    /// random operands, the full u64/u128 reduction range, and the edge
+    /// values around 0, p, 2p, and the type maxima.
+    #[test]
+    fn barrett_matches_division_all_moduli() {
+        for &p in &[3u64, 5, 97, PAPER_PRIME, PRIME_26, PRIME_31] {
+            let f = PrimeField::new(p);
+            // Deterministic edge cases first.
+            let edges = [
+                0u64,
+                1,
+                p - 1,
+                p,
+                p + 1,
+                2 * p - 1,
+                2 * p,
+                (p - 1) * (p - 1),
+                u64::MAX,
+                u64::MAX - 1,
+            ];
+            for &x in &edges {
+                assert_eq!(f.reduce_u64(x), f.reduce_u64_divrem(x), "p={p} x={x}");
+            }
+            for &x in &[0u128, 1 << 64, u128::MAX, (u64::MAX as u128) + 1] {
+                assert_eq!(f.reduce_u128(x), (x % p as u128) as u64, "p={p} x={x}");
+            }
+            // Randomized sweep.
+            check(&format!("barrett-vs-div-{p}"), 500, move |rng| {
+                let x = rng.next_u64();
+                if f.reduce_u64(x) != f.reduce_u64_divrem(x) {
+                    return Err(format!("reduce_u64({x}) mismatch"));
+                }
+                let wide = (rng.next_u64() as u128) << 64 | rng.next_u64() as u128;
+                if f.reduce_u128(wide) != (wide % p as u128) as u64 {
+                    return Err(format!("reduce_u128({wide}) mismatch"));
+                }
+                let (a, b) = (f.random(rng), f.random(rng));
+                if f.mul(a, b) != f.mul_divrem(a, b) {
+                    return Err(format!("mul({a},{b}) mismatch"));
+                }
+                Ok(())
+            });
+        }
+    }
+
+    #[test]
+    fn barrett_constants_satisfy_invariants() {
+        for &p in &[3u64, 97, PAPER_PRIME, PRIME_26, PRIME_31] {
+            let f = PrimeField::new(p);
+            // 2^64 = μ·p + ρ with ρ < p, reconstructed exactly.
+            let mu = ((1u128 << 64) / p as u128) as u64;
+            let rho = ((1u128 << 64) - mu as u128 * p as u128) as u64;
+            assert!(rho < p, "p={p}");
+            assert_eq!(f.reduce_u64(u64::MAX), u64::MAX % p);
+            assert_eq!(f.reduce_u128(1u128 << 64), rho % p);
+        }
     }
 
     #[test]

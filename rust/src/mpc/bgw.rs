@@ -23,6 +23,7 @@ use crate::field::PrimeField;
 use crate::model::{max_eig_xtx, tr_matvec, LogisticRegression};
 use crate::quant::{DatasetQuantizer, Dequantizer, WeightQuantizer};
 use crate::sigmoid::fit_sigmoid;
+use crate::util::par::Parallelism;
 use crate::util::{Rng, Stopwatch};
 
 #[derive(Debug)]
@@ -91,6 +92,8 @@ pub struct BgwGradientProtocol {
     recon_2t: Vec<u64>,
     /// Precomputed reduction coefficients (degree 2T over 2T+1 workers).
     reduction: Vec<u64>,
+    /// Thread budget for the share matmuls.
+    par: Parallelism,
 }
 
 /// Configuration is intentionally a subset of [`crate::CodedMlConfig`] —
@@ -108,6 +111,9 @@ pub struct BgwConfig {
     pub seed: u64,
     pub net: NetworkModel,
     pub straggler: StragglerModel,
+    /// Threads for the per-worker share matmuls (timing attribution is
+    /// unchanged: measured serial time is still divided by N).
+    pub parallelism: Parallelism,
 }
 
 impl Default for BgwConfig {
@@ -125,6 +131,7 @@ impl Default for BgwConfig {
             seed: 42,
             net: NetworkModel::default(),
             straggler: StragglerModel::default(),
+            parallelism: Parallelism::Serial,
         }
     }
 }
@@ -212,6 +219,7 @@ impl BgwGradientProtocol {
             report,
             recon_2t,
             reduction,
+            par: cfg.parallelism,
         })
     }
 
@@ -219,8 +227,7 @@ impl BgwGradientProtocol {
     pub fn step(&mut self) -> Vec<f64> {
         let f = self.field;
         let (n, m, d, r) = (self.n, self.m, self.d, self.r);
-        let p = f.modulus();
-        let chunk = crate::compute::safe_chunk_len(p);
+        let chunk = crate::compute::safe_chunk_len(f.modulus());
 
         // (1) Master: quantize + Shamir-share W̄ (encode time).
         let w_shares: Vec<Vec<u64>> = {
@@ -245,7 +252,7 @@ impl BgwGradientProtocol {
             let ws = &w_shares[i];
             let mut ui = vec![0u64; m * r];
             for j in 0..r {
-                let col = crate::compute::matvec_mod(&f, xs, ws, m, d, r, j);
+                let col = crate::compute::matvec_mod_par(&f, xs, ws, m, d, r, j, self.par);
                 for (row, &v) in col.iter().enumerate() {
                     ui[row * r + j] = v;
                 }
@@ -295,7 +302,14 @@ impl BgwGradientProtocol {
         let t0 = Instant::now();
         let mut f_shares: Vec<Vec<u64>> = Vec::with_capacity(n);
         for i in 0..n {
-            f_shares.push(crate::compute::tr_matvec_mod(&f, &self.x_shares[i], &g[i], m, d));
+            f_shares.push(crate::compute::tr_matvec_mod_par(
+                &f,
+                &self.x_shares[i],
+                &g[i],
+                m,
+                d,
+                self.par,
+            ));
         }
         self.account_parallel_compute(t0.elapsed().as_secs_f64());
 
@@ -317,7 +331,7 @@ impl BgwGradientProtocol {
                 pending += 1;
                 if pending == chunk {
                     for (o, a) in xtg.iter_mut().zip(acc.iter_mut()) {
-                        *o = (*o + *a % p) % p;
+                        *o = f.add(*o, f.reduce_u64(*a));
                         *a = 0;
                     }
                     pending = 0;
@@ -325,7 +339,7 @@ impl BgwGradientProtocol {
             }
             if pending > 0 {
                 for (o, a) in xtg.iter_mut().zip(acc.iter()) {
-                    *o = (*o + *a % p) % p;
+                    *o = f.add(*o, f.reduce_u64(*a));
                 }
             }
         }
@@ -466,11 +480,10 @@ fn share_matrix(scheme: &ShamirScheme, values: &[u64], rng: &mut Rng) -> Vec<Vec
         .collect();
     let mut out = vec![vec![0u64; values.len()]; n];
     let mut coeffs = vec![0u64; t]; // random part a_1..a_T
-    let p = f.modulus();
     // Deferred reduction: T+1 products < p² ≤ 2^52 sum safely in u64 for
-    // any realistic T (chunked otherwise) — one % per share instead of
-    // per term (§Perf).
-    let chunk = crate::compute::safe_chunk_len(p);
+    // any realistic T (chunked otherwise) — one Barrett reduction per
+    // share instead of per term (§Perf).
+    let chunk = crate::compute::safe_chunk_len(f.modulus());
     for (e, &s) in values.iter().enumerate() {
         for c in coeffs.iter_mut() {
             *c = f.random(rng);
@@ -482,11 +495,11 @@ fn share_matrix(scheme: &ShamirScheme, values: &[u64], rng: &mut Rng) -> Vec<Vec
             for (chunk_idx, (&c, &pwk)) in coeffs.iter().zip(pw[1..].iter()).enumerate() {
                 acc = acc.wrapping_add(c * pwk);
                 if (chunk_idx + 1) % chunk == 0 {
-                    total = (total + acc % p) % p;
+                    total = f.add(total, f.reduce_u64(acc));
                     acc = 0;
                 }
             }
-            out[i][e] = (total + acc % p) % p;
+            out[i][e] = f.add(total, f.reduce_u64(acc));
         }
     }
     out

@@ -40,7 +40,7 @@ impl ShamirScheme {
     }
 
     /// Share a vector of secrets: returns per-worker share vectors
-    /// (worker-major: out[i][j] = share of secret j at worker i).
+    /// (worker-major: `out[i][j]` = share of secret j at worker i).
     pub fn share_vec(&self, secrets: &[u64], rng: &mut Rng) -> Vec<Vec<u64>> {
         let n = self.n();
         let mut out = vec![vec![0u64; secrets.len()]; n];

@@ -31,7 +31,7 @@ pub fn round_half_up(x: f64) -> i64 {
     }
 }
 
-/// Stochastic rounding (paper §3.1): unbiased, E[round(x)] = x.
+/// Stochastic rounding (paper §3.1): unbiased, `E[round(x)] = x`.
 #[inline]
 pub fn round_stochastic(x: f64, rng: &mut crate::util::Rng) -> i64 {
     let fl = x.floor();

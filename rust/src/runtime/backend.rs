@@ -7,9 +7,10 @@
 
 use std::path::PathBuf;
 
-use super::client::{XlaRuntime, XlaRuntimeError};
+use super::client::{XlaLiteral, XlaRuntime, XlaRuntimeError, PJRT_AVAILABLE};
 use crate::compute::WorkerComputation;
 use crate::field::PrimeField;
+use crate::util::par::Parallelism;
 
 /// Which implementation executes f(X̃, W̃) on workers.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -43,13 +44,14 @@ pub enum WorkerBackend {
         coeffs: Vec<u64>,
         /// The data share marshalled once (X̃ is iteration-invariant);
         /// set by [`WorkerBackend::prepare_data`].
-        x_literal: std::cell::RefCell<Option<xla::Literal>>,
+        x_literal: std::cell::RefCell<Option<XlaLiteral>>,
     },
 }
 
 impl WorkerBackend {
     /// Build a backend for a (rows × d) coded block with the given
-    /// field-quantized sigmoid coefficients.
+    /// field-quantized sigmoid coefficients. `par` bounds the intra-worker
+    /// thread count of the native kernels (the XLA runtime manages its own).
     pub fn create(
         kind: BackendKind,
         artifact_dir: &PathBuf,
@@ -57,12 +59,18 @@ impl WorkerBackend {
         rows: usize,
         d: usize,
         coeffs: Vec<u64>,
+        par: Parallelism,
     ) -> Result<Self, XlaRuntimeError> {
         match kind {
-            BackendKind::Native => Ok(WorkerBackend::Native(WorkerComputation::new(
-                field, rows, d, coeffs,
-            ))),
+            BackendKind::Native => Ok(WorkerBackend::Native(
+                WorkerComputation::new(field, rows, d, coeffs).with_parallelism(par),
+            )),
             BackendKind::Xla => {
+                // Fail fast before touching the artifact dir: no manifest
+                // state can make a PJRT-less build execute XLA.
+                if !PJRT_AVAILABLE {
+                    return Err(super::client::pjrt_unavailable());
+                }
                 let runtime = Box::new(XlaRuntime::new(artifact_dir)?);
                 // Fail fast if the shape is missing from the manifest.
                 let r = coeffs.len() - 1;
@@ -153,6 +161,7 @@ mod tests {
             2,
             3,
             vec![1, 2],
+            Parallelism::Serial,
         )
         .unwrap();
         assert_eq!(be.kind(), BackendKind::Native);
@@ -170,8 +179,15 @@ mod tests {
             2,
             3,
             vec![1, 2],
+            Parallelism::Serial,
         )
         .unwrap_err();
-        assert!(matches!(err, XlaRuntimeError::Manifest(_)));
+        if PJRT_AVAILABLE {
+            // With PJRT compiled in, the artifact dir is consulted first.
+            assert!(matches!(err, XlaRuntimeError::Manifest(_)));
+        } else {
+            // Without it, no artifact state matters: fail fast and say why.
+            assert!(matches!(err, XlaRuntimeError::Xla(_)), "{err}");
+        }
     }
 }

@@ -3,24 +3,43 @@
 //! One `XlaRuntime` owns a PJRT CPU client, the parsed manifest, and an
 //! executable cache (each `.hlo.txt` is parsed + compiled at most once per
 //! process). `XlaRuntime` is deliberately **not** `Send` — the underlying
-//! `xla::PjRtClient` is `Rc`-based — so each simulated worker thread that
-//! wants the XLA backend constructs its own runtime from a cheap
+//! PJRT client is `Rc`-based — so each simulated worker thread that wants
+//! the XLA backend constructs its own runtime from a cheap
 //! [`super::backend::WorkerBackend`] spec, mirroring how real workers each
 //! own their accelerator runtime.
+//!
+//! The PJRT path is compiled only with the `pjrt` cargo feature, which
+//! requires a vendored `xla` crate (this offline build has none). Without
+//! the feature, [`XlaRuntime`] still loads and indexes artifact manifests
+//! (so `codedml artifacts` works), but every execute path returns
+//! [`XlaRuntimeError::Xla`] and [`PJRT_AVAILABLE`] is `false`; the
+//! [`super::backend::WorkerBackend`] uses that constant to fail fast at
+//! worker spawn instead of mid-training.
 
-use std::cell::RefCell;
-use std::collections::HashMap;
 use std::path::{Path, PathBuf};
-use std::rc::Rc;
 
 use super::manifest::{Manifest, ManifestError};
+
+/// Whether this build carries the PJRT execution path (`pjrt` feature).
+pub const PJRT_AVAILABLE: bool = cfg!(feature = "pjrt");
+
+/// The one shared "not compiled in" error (stub execute paths and the
+/// backend's fail-fast check both return it).
+pub(crate) fn pjrt_unavailable() -> XlaRuntimeError {
+    XlaRuntimeError::Xla(
+        "PJRT execution not compiled into this build (enable the `pjrt` \
+         feature with a vendored `xla` crate); use --backend native"
+            .into(),
+    )
+}
 
 #[derive(Debug)]
 pub enum XlaRuntimeError {
     Manifest(ManifestError),
     /// No artifact for the requested shape.
     NoArtifact { what: &'static str, rows: usize, d: usize, r: usize },
-    /// Error from the xla crate (client, compile, execute).
+    /// Error from the PJRT layer (client, compile, execute) — or, in a
+    /// build without the `pjrt` feature, "not compiled in".
     Xla(String),
     /// Result had an unexpected shape or type.
     BadResult(String),
@@ -50,173 +69,283 @@ impl From<ManifestError> for XlaRuntimeError {
     }
 }
 
-fn xerr(e: xla::Error) -> XlaRuntimeError {
-    XlaRuntimeError::Xla(e.to_string())
-}
+#[cfg(feature = "pjrt")]
+mod imp {
+    use std::cell::RefCell;
+    use std::collections::HashMap;
+    use std::rc::Rc;
 
-/// PJRT CPU runtime with executable cache.
-pub struct XlaRuntime {
-    client: xla::PjRtClient,
-    manifest: Manifest,
-    dir: PathBuf,
-    cache: RefCell<HashMap<PathBuf, Rc<xla::PjRtLoadedExecutable>>>,
-    compiles: RefCell<u64>,
-}
+    use super::*;
 
-impl XlaRuntime {
-    /// Create a runtime over an artifact directory (reads manifest.json).
-    pub fn new(artifact_dir: &Path) -> Result<Self, XlaRuntimeError> {
-        let manifest = Manifest::load(artifact_dir)?;
-        let client = xla::PjRtClient::cpu().map_err(xerr)?;
-        Ok(XlaRuntime {
-            client,
-            manifest,
-            dir: artifact_dir.to_path_buf(),
-            cache: RefCell::new(HashMap::new()),
-            compiles: RefCell::new(0),
-        })
+    /// The device-buffer handle type workers cache their data share in.
+    pub type XlaLiteral = xla::Literal;
+
+    fn xerr(e: xla::Error) -> XlaRuntimeError {
+        XlaRuntimeError::Xla(e.to_string())
     }
 
-    pub fn manifest(&self) -> &Manifest {
-        &self.manifest
+    /// PJRT CPU runtime with executable cache.
+    pub struct XlaRuntime {
+        client: xla::PjRtClient,
+        manifest: Manifest,
+        dir: PathBuf,
+        cache: RefCell<HashMap<PathBuf, Rc<xla::PjRtLoadedExecutable>>>,
+        compiles: RefCell<u64>,
     }
 
-    pub fn artifact_dir(&self) -> &Path {
-        &self.dir
-    }
-
-    /// Number of PJRT compilations performed (observability: the request
-    /// path must not recompile — see EXPERIMENTS.md §Perf).
-    pub fn compile_count(&self) -> u64 {
-        *self.compiles.borrow()
-    }
-
-    fn executable(&self, path: &Path) -> Result<Rc<xla::PjRtLoadedExecutable>, XlaRuntimeError> {
-        if let Some(exe) = self.cache.borrow().get(path) {
-            return Ok(exe.clone());
+    impl XlaRuntime {
+        /// Create a runtime over an artifact directory (reads manifest.json).
+        pub fn new(artifact_dir: &Path) -> Result<Self, XlaRuntimeError> {
+            let manifest = Manifest::load(artifact_dir)?;
+            let client = xla::PjRtClient::cpu().map_err(xerr)?;
+            Ok(XlaRuntime {
+                client,
+                manifest,
+                dir: artifact_dir.to_path_buf(),
+                cache: RefCell::new(HashMap::new()),
+                compiles: RefCell::new(0),
+            })
         }
-        let proto = xla::HloModuleProto::from_text_file(
-            path.to_str().ok_or_else(|| XlaRuntimeError::BadResult("non-utf8 path".into()))?,
-        )
-        .map_err(xerr)?;
-        let comp = xla::XlaComputation::from_proto(&proto);
-        let exe = Rc::new(self.client.compile(&comp).map_err(xerr)?);
-        *self.compiles.borrow_mut() += 1;
-        self.cache.borrow_mut().insert(path.to_path_buf(), exe.clone());
-        Ok(exe)
-    }
 
-    /// Execute the worker computation f(X̃, W̃) via the AOT artifact for
-    /// (rows, d, r, p). Field elements in/out as `u64 < p`.
-    pub fn worker_f(
-        &self,
-        x: &[u64],
-        w: &[u64],
-        coeffs: &[u64],
-        rows: usize,
-        d: usize,
-        p: u64,
-    ) -> Result<Vec<u64>, XlaRuntimeError> {
-        let lx = Self::matrix_literal(x, rows, d)?;
-        self.worker_f_literal(&lx, w, coeffs, rows, d, p)
-    }
-
-    /// Convert a field matrix into a device-ready literal. Workers call
-    /// this once on their (iteration-invariant) data share and reuse it —
-    /// the per-iteration hot path then only marshals the small W̃ panel
-    /// (EXPERIMENTS.md §Perf).
-    pub fn matrix_literal(x: &[u64], rows: usize, d: usize) -> Result<xla::Literal, XlaRuntimeError> {
-        assert_eq!(x.len(), rows * d);
-        let xi: Vec<i64> = x.iter().map(|&v| v as i64).collect();
-        xla::Literal::vec1(&xi)
-            .reshape(&[rows as i64, d as i64])
-            .map_err(xerr)
-    }
-
-    /// `worker_f` with a pre-marshalled X̃ literal.
-    pub fn worker_f_literal(
-        &self,
-        lx: &xla::Literal,
-        w: &[u64],
-        coeffs: &[u64],
-        rows: usize,
-        d: usize,
-        p: u64,
-    ) -> Result<Vec<u64>, XlaRuntimeError> {
-        let r = coeffs.len() - 1;
-        let entry = self
-            .manifest
-            .find_worker(rows, d, r, p)
-            .ok_or(XlaRuntimeError::NoArtifact { what: "worker_f", rows, d, r })?;
-        let exe = self.executable(&entry.path.clone())?;
-
-        let wi: Vec<i64> = w.iter().map(|&v| v as i64).collect();
-        let ci: Vec<i64> = coeffs.iter().map(|&v| v as i64).collect();
-        let lw = xla::Literal::vec1(&wi)
-            .reshape(&[d as i64, r as i64])
-            .map_err(xerr)?;
-        let lc = xla::Literal::vec1(&ci);
-
-        let result = exe.execute::<&xla::Literal>(&[lx, &lw, &lc]).map_err(xerr)?[0][0]
-            .to_literal_sync()
-            .map_err(xerr)?;
-        let out = result.to_tuple1().map_err(xerr)?;
-        let vals: Vec<i64> = out.to_vec().map_err(xerr)?;
-        if vals.len() != d {
-            return Err(XlaRuntimeError::BadResult(format!(
-                "worker_f returned {} values, expected {d}",
-                vals.len()
-            )));
+        pub fn manifest(&self) -> &Manifest {
+            &self.manifest
         }
-        Ok(vals.into_iter().map(|v| v as u64).collect())
+
+        pub fn artifact_dir(&self) -> &Path {
+            &self.dir
+        }
+
+        /// Number of PJRT compilations performed (observability: the request
+        /// path must not recompile — see EXPERIMENTS.md §Perf).
+        pub fn compile_count(&self) -> u64 {
+            *self.compiles.borrow()
+        }
+
+        fn executable(&self, path: &Path) -> Result<Rc<xla::PjRtLoadedExecutable>, XlaRuntimeError> {
+            if let Some(exe) = self.cache.borrow().get(path) {
+                return Ok(exe.clone());
+            }
+            let proto = xla::HloModuleProto::from_text_file(
+                path.to_str().ok_or_else(|| XlaRuntimeError::BadResult("non-utf8 path".into()))?,
+            )
+            .map_err(xerr)?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = Rc::new(self.client.compile(&comp).map_err(xerr)?);
+            *self.compiles.borrow_mut() += 1;
+            self.cache.borrow_mut().insert(path.to_path_buf(), exe.clone());
+            Ok(exe)
+        }
+
+        /// Execute the worker computation f(X̃, W̃) via the AOT artifact for
+        /// (rows, d, r, p). Field elements in/out as `u64 < p`.
+        pub fn worker_f(
+            &self,
+            x: &[u64],
+            w: &[u64],
+            coeffs: &[u64],
+            rows: usize,
+            d: usize,
+            p: u64,
+        ) -> Result<Vec<u64>, XlaRuntimeError> {
+            let lx = Self::matrix_literal(x, rows, d)?;
+            self.worker_f_literal(&lx, w, coeffs, rows, d, p)
+        }
+
+        /// Convert a field matrix into a device-ready literal. Workers call
+        /// this once on their (iteration-invariant) data share and reuse it —
+        /// the per-iteration hot path then only marshals the small W̃ panel
+        /// (EXPERIMENTS.md §Perf).
+        pub fn matrix_literal(x: &[u64], rows: usize, d: usize) -> Result<XlaLiteral, XlaRuntimeError> {
+            assert_eq!(x.len(), rows * d);
+            let xi: Vec<i64> = x.iter().map(|&v| v as i64).collect();
+            xla::Literal::vec1(&xi)
+                .reshape(&[rows as i64, d as i64])
+                .map_err(xerr)
+        }
+
+        /// `worker_f` with a pre-marshalled X̃ literal.
+        pub fn worker_f_literal(
+            &self,
+            lx: &XlaLiteral,
+            w: &[u64],
+            coeffs: &[u64],
+            rows: usize,
+            d: usize,
+            p: u64,
+        ) -> Result<Vec<u64>, XlaRuntimeError> {
+            let r = coeffs.len() - 1;
+            let entry = self
+                .manifest
+                .find_worker(rows, d, r, p)
+                .ok_or(XlaRuntimeError::NoArtifact { what: "worker_f", rows, d, r })?;
+            let exe = self.executable(&entry.path.clone())?;
+
+            let wi: Vec<i64> = w.iter().map(|&v| v as i64).collect();
+            let ci: Vec<i64> = coeffs.iter().map(|&v| v as i64).collect();
+            let lw = xla::Literal::vec1(&wi)
+                .reshape(&[d as i64, r as i64])
+                .map_err(xerr)?;
+            let lc = xla::Literal::vec1(&ci);
+
+            let result = exe.execute::<&xla::Literal>(&[lx, &lw, &lc]).map_err(xerr)?[0][0]
+                .to_literal_sync()
+                .map_err(xerr)?;
+            let out = result.to_tuple1().map_err(xerr)?;
+            let vals: Vec<i64> = out.to_vec().map_err(xerr)?;
+            if vals.len() != d {
+                return Err(XlaRuntimeError::BadResult(format!(
+                    "worker_f returned {} values, expected {d}",
+                    vals.len()
+                )));
+            }
+            Ok(vals.into_iter().map(|v| v as u64).collect())
+        }
+
+        /// Execute one plaintext LR gradient step via artifact; returns
+        /// (updated weights, loss).
+        pub fn lr_step(
+            &self,
+            x: &[f64],
+            y: &[f64],
+            w: &[f64],
+            eta: f64,
+            m: usize,
+            d: usize,
+        ) -> Result<(Vec<f64>, f64), XlaRuntimeError> {
+            let entry = self
+                .manifest
+                .find_lr_step(m, d)
+                .ok_or(XlaRuntimeError::NoArtifact { what: "lr_step", rows: m, d, r: 0 })?;
+            let exe = self.executable(&entry.path.clone())?;
+
+            let lx = xla::Literal::vec1(x)
+                .reshape(&[m as i64, d as i64])
+                .map_err(xerr)?;
+            let ly = xla::Literal::vec1(y);
+            let lw = xla::Literal::vec1(w);
+            let le = xla::Literal::scalar(eta);
+
+            let result = exe.execute::<xla::Literal>(&[lx, ly, lw, le]).map_err(xerr)?[0][0]
+                .to_literal_sync()
+                .map_err(xerr)?;
+            let (w_out, loss) = result.to_tuple2().map_err(xerr)?;
+            let w_new: Vec<f64> = w_out.to_vec().map_err(xerr)?;
+            let loss: f64 = loss.get_first_element().map_err(xerr)?;
+            if w_new.len() != d {
+                return Err(XlaRuntimeError::BadResult(format!(
+                    "lr_step returned {} weights, expected {d}",
+                    w_new.len()
+                )));
+            }
+            Ok((w_new, loss))
+        }
     }
 
-    /// Execute one plaintext LR gradient step via artifact; returns
-    /// (updated weights, loss).
-    pub fn lr_step(
-        &self,
-        x: &[f64],
-        y: &[f64],
-        w: &[f64],
-        eta: f64,
-        m: usize,
-        d: usize,
-    ) -> Result<(Vec<f64>, f64), XlaRuntimeError> {
-        let entry = self
-            .manifest
-            .find_lr_step(m, d)
-            .ok_or(XlaRuntimeError::NoArtifact { what: "lr_step", rows: m, d, r: 0 })?;
-        let exe = self.executable(&entry.path.clone())?;
-
-        let lx = xla::Literal::vec1(x)
-            .reshape(&[m as i64, d as i64])
-            .map_err(xerr)?;
-        let ly = xla::Literal::vec1(y);
-        let lw = xla::Literal::vec1(w);
-        let le = xla::Literal::scalar(eta);
-
-        let result = exe.execute::<xla::Literal>(&[lx, ly, lw, le]).map_err(xerr)?[0][0]
-            .to_literal_sync()
-            .map_err(xerr)?;
-        let (w_out, loss) = result.to_tuple2().map_err(xerr)?;
-        let w_new: Vec<f64> = w_out.to_vec().map_err(xerr)?;
-        let loss: f64 = loss.get_first_element().map_err(xerr)?;
-        if w_new.len() != d {
-            return Err(XlaRuntimeError::BadResult(format!(
-                "lr_step returned {} weights, expected {d}",
-                w_new.len()
-            )));
+    impl std::fmt::Debug for XlaRuntime {
+        fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+            f.debug_struct("XlaRuntime")
+                .field("dir", &self.dir)
+                .field("artifacts", &self.manifest.entries.len())
+                .field("compiled", &self.cache.borrow().len())
+                .finish()
         }
-        Ok((w_new, loss))
     }
 }
 
-impl std::fmt::Debug for XlaRuntime {
-    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
-        f.debug_struct("XlaRuntime")
-            .field("dir", &self.dir)
-            .field("artifacts", &self.manifest.entries.len())
-            .field("compiled", &self.cache.borrow().len())
-            .finish()
+#[cfg(not(feature = "pjrt"))]
+mod imp {
+    use super::*;
+
+    /// Placeholder for the device-buffer type when PJRT is compiled out.
+    /// Never constructed — every path that would produce one errors first.
+    #[derive(Debug, Clone)]
+    pub struct XlaLiteral;
+
+    /// Manifest-only runtime: artifact inspection works, execution does not.
+    pub struct XlaRuntime {
+        manifest: Manifest,
+        dir: PathBuf,
+    }
+
+    fn unavailable<T>() -> Result<T, XlaRuntimeError> {
+        Err(super::pjrt_unavailable())
+    }
+
+    impl XlaRuntime {
+        /// Load the artifact manifest. Succeeds so `codedml artifacts` can
+        /// inspect manifests even in a PJRT-less build; execution errors.
+        pub fn new(artifact_dir: &Path) -> Result<Self, XlaRuntimeError> {
+            let manifest = Manifest::load(artifact_dir)?;
+            Ok(XlaRuntime { manifest, dir: artifact_dir.to_path_buf() })
+        }
+
+        pub fn manifest(&self) -> &Manifest {
+            &self.manifest
+        }
+
+        pub fn artifact_dir(&self) -> &Path {
+            &self.dir
+        }
+
+        /// Always 0 — nothing compiles in a PJRT-less build.
+        pub fn compile_count(&self) -> u64 {
+            0
+        }
+
+        pub fn worker_f(
+            &self,
+            _x: &[u64],
+            _w: &[u64],
+            _coeffs: &[u64],
+            _rows: usize,
+            _d: usize,
+            _p: u64,
+        ) -> Result<Vec<u64>, XlaRuntimeError> {
+            unavailable()
+        }
+
+        pub fn matrix_literal(
+            _x: &[u64],
+            _rows: usize,
+            _d: usize,
+        ) -> Result<XlaLiteral, XlaRuntimeError> {
+            unavailable()
+        }
+
+        pub fn worker_f_literal(
+            &self,
+            _lx: &XlaLiteral,
+            _w: &[u64],
+            _coeffs: &[u64],
+            _rows: usize,
+            _d: usize,
+            _p: u64,
+        ) -> Result<Vec<u64>, XlaRuntimeError> {
+            unavailable()
+        }
+
+        pub fn lr_step(
+            &self,
+            _x: &[f64],
+            _y: &[f64],
+            _w: &[f64],
+            _eta: f64,
+            _m: usize,
+            _d: usize,
+        ) -> Result<(Vec<f64>, f64), XlaRuntimeError> {
+            unavailable()
+        }
+    }
+
+    impl std::fmt::Debug for XlaRuntime {
+        fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+            f.debug_struct("XlaRuntime")
+                .field("dir", &self.dir)
+                .field("artifacts", &self.manifest.entries.len())
+                .field("pjrt", &"not compiled in")
+                .finish()
+        }
     }
 }
+
+pub use imp::{XlaLiteral, XlaRuntime};

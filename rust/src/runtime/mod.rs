@@ -1,12 +1,13 @@
 //! PJRT runtime: load AOT-compiled HLO-text artifacts and execute them on
 //! the request path, with zero Python.
 //!
-//! - [`manifest`] — parses `artifacts/manifest.json` written by
+//! - `manifest` — parses `artifacts/manifest.json` written by
 //!   `python/compile/aot.py` and indexes artifacts by shape.
-//! - [`client`] — wraps the `xla` crate: `PjRtClient::cpu()` →
-//!   `HloModuleProto::from_text_file` → `compile` → `execute`, with an
-//!   executable cache so each artifact is compiled once per process.
-//! - [`backend`] — the `WorkerBackend` the coordinator dispatches through:
+//! - `client` — wraps the PJRT layer behind the `pjrt` cargo feature:
+//!   client → HLO-text parse → compile → execute, with an executable
+//!   cache so each artifact is compiled once per process. Without the
+//!   feature ([`PJRT_AVAILABLE`] = false) it is manifest-only.
+//! - `backend` — the [`WorkerBackend`] the coordinator dispatches through:
 //!   `Native` (pure rust, any shape) or `Xla` (artifact, shapes in the
 //!   manifest), both bit-exact.
 
@@ -15,5 +16,5 @@ mod client;
 mod manifest;
 
 pub use backend::{BackendKind, WorkerBackend};
-pub use client::{XlaRuntime, XlaRuntimeError};
+pub use client::{XlaRuntime, XlaRuntimeError, PJRT_AVAILABLE};
 pub use manifest::{ArtifactEntry, ArtifactKind, Manifest, ManifestError};

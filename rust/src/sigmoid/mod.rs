@@ -16,7 +16,7 @@ pub use fit::{fit_sigmoid, FitReport, SigmoidPoly};
 pub use lsq::{polyfit, solve_linear};
 
 /// Which fitting strategy produces ĝ (paper: least squares; Chebyshev is
-/// the worst-case-minded alternative, see [`chebyshev`]).
+/// the worst-case-minded alternative, see [`fit_sigmoid_chebyshev`]).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum FitMethod {
     LeastSquares,

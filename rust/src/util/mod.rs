@@ -8,10 +8,12 @@
 pub mod args;
 pub mod bitpack;
 pub mod json;
+pub mod par;
 pub mod proptest;
 pub mod rng;
 pub mod stats;
 pub mod timer;
 
+pub use par::Parallelism;
 pub use rng::Rng;
 pub use timer::Stopwatch;

@@ -1,0 +1,188 @@
+//! Minimal fork–join parallelism on `std::thread::scope` (rayon is
+//! unavailable offline).
+//!
+//! The three embarrassingly-parallel stages of the pipeline — Lagrange
+//! encoding across workers, per-worker matmuls across row blocks, and
+//! decoding across output chunks — all reduce to "split an index range
+//! into contiguous chunks and run them on scoped threads". [`par_ranges`]
+//! is that primitive; [`par_map`] is the per-index convenience on top.
+//!
+//! **Bit-exactness.** Every call site partitions *independent* outputs
+//! (rows, workers, columns) or merges per-chunk partials with field adds,
+//! which are associative and exact — so results are identical for every
+//! [`Parallelism`] setting. `rust/tests/end_to_end.rs` asserts this on a
+//! full training run; mask/quantization randomness is always drawn
+//! *before* fan-out so RNG streams never depend on the thread count.
+
+use std::num::NonZeroUsize;
+use std::ops::Range;
+
+/// Degree of parallelism for the coding/compute hot paths.
+///
+/// Surfaced as the `parallelism` key of the JSON config and the
+/// `--threads serial|auto|<n>` CLI option ([`crate::coordinator::CodedMlConfig`]).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum Parallelism {
+    /// Single-threaded (the deterministic-overhead-free default).
+    #[default]
+    Serial,
+    /// One thread per available core (`std::thread::available_parallelism`).
+    Auto,
+    /// Exactly this many threads.
+    Threads(NonZeroUsize),
+}
+
+impl Parallelism {
+    /// Resolve to a concrete thread count (≥ 1).
+    pub fn threads(self) -> usize {
+        match self {
+            Parallelism::Serial => 1,
+            Parallelism::Auto => std::thread::available_parallelism()
+                .map(NonZeroUsize::get)
+                .unwrap_or(1),
+            Parallelism::Threads(n) => n.get(),
+        }
+    }
+
+    /// From a plain count: 0 → `Auto`, 1 → `Serial`, n → `Threads(n)`.
+    pub fn from_count(n: usize) -> Self {
+        match NonZeroUsize::new(n) {
+            None => Parallelism::Auto,
+            Some(nz) if nz.get() == 1 => Parallelism::Serial,
+            Some(nz) => Parallelism::Threads(nz),
+        }
+    }
+}
+
+impl std::str::FromStr for Parallelism {
+    type Err = String;
+
+    fn from_str(s: &str) -> Result<Self, String> {
+        match s {
+            "serial" => Ok(Parallelism::Serial),
+            "auto" => Ok(Parallelism::Auto),
+            _ => s
+                .parse::<usize>()
+                .map(Parallelism::from_count)
+                .map_err(|_| format!("bad thread count '{s}' (serial|auto|<n>)")),
+        }
+    }
+}
+
+impl std::fmt::Display for Parallelism {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            Parallelism::Serial => write!(f, "serial"),
+            Parallelism::Auto => write!(f, "auto"),
+            Parallelism::Threads(n) => write!(f, "{n}"),
+        }
+    }
+}
+
+/// Split `0..len` into at most `par.threads()` contiguous chunks and run
+/// `f(chunk_index, range)` on scoped threads, returning the results in
+/// chunk order. With one thread (or `len ≤ 1`) this is a direct call — no
+/// spawn overhead on the serial path.
+pub fn par_ranges<U, F>(par: Parallelism, len: usize, f: F) -> Vec<U>
+where
+    U: Send,
+    F: Fn(usize, Range<usize>) -> U + Sync,
+{
+    let threads = par.threads().min(len).max(1);
+    if threads <= 1 {
+        return vec![f(0, 0..len)];
+    }
+    let chunk = len.div_ceil(threads);
+    std::thread::scope(|scope| {
+        let f = &f;
+        let handles: Vec<_> = (0..threads)
+            .map(|i| {
+                let start = (i * chunk).min(len);
+                let end = ((i + 1) * chunk).min(len);
+                scope.spawn(move || f(i, start..end))
+            })
+            .collect();
+        handles
+            .into_iter()
+            .map(|h| h.join().expect("parallel chunk panicked"))
+            .collect()
+    })
+}
+
+/// Parallel index map: `(0..n).map(f)` with the iterations spread over
+/// [`par_ranges`] chunks; results come back in index order.
+pub fn par_map<U, F>(par: Parallelism, n: usize, f: F) -> Vec<U>
+where
+    U: Send,
+    F: Fn(usize) -> U + Sync,
+{
+    if n == 0 {
+        return Vec::new();
+    }
+    par_ranges(par, n, |_, range| range.map(&f).collect::<Vec<U>>())
+        .into_iter()
+        .flatten()
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn all_settings() -> Vec<Parallelism> {
+        vec![
+            Parallelism::Serial,
+            Parallelism::Auto,
+            Parallelism::from_count(2),
+            Parallelism::from_count(3),
+            Parallelism::from_count(64), // more threads than work
+        ]
+    }
+
+    #[test]
+    fn par_map_matches_serial_map_for_every_setting() {
+        let want: Vec<usize> = (0..97).map(|i| i * i).collect();
+        for par in all_settings() {
+            let got = par_map(par, 97, |i| i * i);
+            assert_eq!(got, want, "par={par}");
+        }
+    }
+
+    #[test]
+    fn par_ranges_covers_exactly_once_in_order() {
+        for par in all_settings() {
+            for len in [0usize, 1, 2, 5, 64, 65] {
+                let chunks = par_ranges(par, len, |_, r| r.collect::<Vec<usize>>());
+                let flat: Vec<usize> = chunks.into_iter().flatten().collect();
+                assert_eq!(flat, (0..len).collect::<Vec<_>>(), "par={par} len={len}");
+            }
+        }
+    }
+
+    #[test]
+    fn empty_input_is_safe() {
+        assert!(par_map(Parallelism::Auto, 0, |i| i).is_empty());
+    }
+
+    #[test]
+    fn parsing_and_display_round_trip() {
+        assert_eq!("serial".parse::<Parallelism>().unwrap(), Parallelism::Serial);
+        assert_eq!("auto".parse::<Parallelism>().unwrap(), Parallelism::Auto);
+        assert_eq!("0".parse::<Parallelism>().unwrap(), Parallelism::Auto);
+        assert_eq!("1".parse::<Parallelism>().unwrap(), Parallelism::Serial);
+        assert_eq!(
+            "8".parse::<Parallelism>().unwrap(),
+            Parallelism::Threads(NonZeroUsize::new(8).unwrap())
+        );
+        assert!("eight".parse::<Parallelism>().is_err());
+        assert_eq!(Parallelism::from_count(8).to_string(), "8");
+        assert_eq!(Parallelism::default(), Parallelism::Serial);
+    }
+
+    #[test]
+    fn thread_counts_resolve() {
+        assert_eq!(Parallelism::Serial.threads(), 1);
+        assert!(Parallelism::Auto.threads() >= 1);
+        assert_eq!(Parallelism::from_count(5).threads(), 5);
+    }
+}

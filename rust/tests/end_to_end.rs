@@ -131,6 +131,29 @@ fn heavy_straggling_only_slows_modeled_time() {
     );
 }
 
+/// The `--threads` knob changes wall-clock only: a full training run with
+/// the thread pool enabled is bit-identical to the serial run (masks and
+/// stochastic quantization are drawn before every fan-out, and all merges
+/// are exact field adds — see `util::par`).
+#[test]
+fn parallel_training_is_bit_exact_with_serial() {
+    use codedml::util::Parallelism;
+    let train = synthetic_3v7(120, 11);
+    let serial = {
+        let mut sess = CodedMlSession::new(fast_cfg(10, 3, 1), &train).unwrap();
+        sess.train(6, None).unwrap()
+    };
+    for par in [Parallelism::from_count(2), Parallelism::from_count(4), Parallelism::Auto] {
+        let mut cfg = fast_cfg(10, 3, 1);
+        cfg.parallelism = par;
+        let mut sess = CodedMlSession::new(cfg, &train).unwrap();
+        let report = sess.train(6, None).unwrap();
+        assert_eq!(report.weights, serial.weights, "par={par}");
+        assert_eq!(report.bytes_sent, serial.bytes_sent);
+        assert_eq!(report.bytes_received, serial.bytes_received);
+    }
+}
+
 /// The overflow budget warning fires but training still completes when
 /// non-strict; strict mode refuses to build the session.
 #[test]
