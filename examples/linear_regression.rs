@@ -2,138 +2,62 @@
 //!
 //! The worker computation becomes X̃ᵀ(X̃·w̃ − ỹ) — already a polynomial,
 //! so no sigmoid approximation is needed and the identity "activation"
-//! makes the gradient exactly unbiased. This example runs the coded
-//! pipeline by hand (encoder → Linear-op cluster → decoder) on a planted
-//! regression problem and compares against plaintext gradient descent.
+//! makes the gradient exactly unbiased. Since the `CodedObjective`
+//! refactor this is a first-class session: `CodedMlSession::new_linear`
+//! quantizes and secret-shares the labels, spawns Linear-op workers, and
+//! the streaming round engine decodes the fastest R responses per round.
 //!
 //! ```sh
 //! cargo run --release --example linear_regression
 //! ```
 
-use codedml::cluster::{Cluster, WorkerOp, WorkerSpec};
-use codedml::coding::{CodingParams, Decoder, Encoder, WorkerResult};
-use codedml::field::{PrimeField, PAPER_PRIME};
+use codedml::cluster::{NetworkModel, StragglerModel};
+use codedml::coordinator::{CodedMlConfig, CodedMlSession};
+use codedml::data::synthetic_planted_linear;
 use codedml::model::LinearRegression;
-use codedml::quant::{phi, round_half_up, DatasetQuantizer, Dequantizer, WeightQuantizer};
-use codedml::runtime::BackendKind;
-use codedml::util::Rng;
-use std::path::PathBuf;
 
 fn main() -> Result<(), Box<dyn std::error::Error>> {
-    let field = PrimeField::new(PAPER_PRIME);
-    let (n, k, t) = (10usize, 3usize, 1usize);
-    // Linear worker f = X̃ᵀ(X̃w̃ − ỹ) has degree 3 in the inputs — the
-    // same recovery threshold as logistic at r=1.
-    let params = CodingParams::new(n, k, t, 1)?;
-    println!("private linear regression: N={n} K={k} T={t}, threshold {}", params.recovery_threshold());
-
-    // Planted problem: y = X·w* with small integer-ish data.
-    let mut rng = Rng::new(31);
+    // Planted problem: y = X·w* with x ~ U[-1, 1].
     let (m, d) = (120usize, 8usize);
-    let w_star: Vec<f64> = (0..d).map(|i| (i as f64 - 3.5) * 0.15).collect();
-    let mut x = Vec::with_capacity(m * d);
-    let mut y = Vec::with_capacity(m);
-    for _ in 0..m {
-        let row: Vec<f64> = (0..d).map(|_| rng.range_f64(-1.0, 1.0)).collect();
-        y.push(row.iter().zip(&w_star).map(|(a, b)| a * b).sum::<f64>());
-        x.extend(row);
-    }
+    let (train, w_star) = synthetic_planted_linear(m, d, 31);
 
-    // Quantize. Labels share the dataset scale so X̄w̄ − ȳ... needs care:
-    // X̄w̄ carries scale l_x + l_w ⇒ quantize y at l_y = l_x + l_w.
-    let (lx, lw) = (4u32, 6u32);
-    let xq = DatasetQuantizer::new(field, lx);
-    let xbar = xq.quantize(&x);
-    let ly = lx + lw;
-    let ybar: Vec<u64> = y
-        .iter()
-        .map(|&v| phi(&field, round_half_up((1u64 << ly) as f64 * v)))
-        .collect();
+    // CodedMlConfig::linear() carries the Remark-1 scale choices: labels
+    // share the dataset scale chain (X̄w̄ carries l_x + l_w, so ȳ
+    // quantizes at l_y = l_x + l_w) and the decode scale is
+    // l_x + (l_x + l_w) — the logistic formula with l_c = 0, r = 1.
+    let cfg = CodedMlConfig {
+        n: 10,
+        k: 3,
+        t: 1,
+        net: NetworkModel::free(),
+        straggler: StragglerModel::none(),
+        ..CodedMlConfig::linear()
+    };
+    let mut sess = CodedMlSession::new_linear(cfg, &train)?;
+    println!(
+        "private linear regression: N=10 K=3 T=1, threshold {}",
+        sess.params().recovery_threshold()
+    );
 
-    // Encode X and y with the same Lagrange structure.
-    let encoder = Encoder::new(field, params);
-    let x_shares = encoder.encode_dataset(&xbar, m, d, &mut rng);
-    let y_shares = encoder.encode_dataset(&ybar, m, 1, &mut rng);
-
-    // Spawn Linear-op workers.
-    let rows = m / k;
-    let specs: Vec<WorkerSpec> = (0..n)
-        .map(|id| WorkerSpec {
-            id,
-            kind: BackendKind::Native,
-            artifact_dir: PathBuf::from("artifacts"),
-            field,
-            rows,
-            d,
-            coeffs: vec![0, 1], // unused by the Linear op
-            op: WorkerOp::Linear,
-            fail_from_iter: None,
-            par: codedml::util::Parallelism::Serial,
-        })
-        .collect();
-    let cluster = Cluster::spawn(specs)?;
-    cluster.load_data(
-        x_shares.into_iter().map(|s| s.data).collect(),
-        Some(y_shares.into_iter().map(|s| s.data).collect()),
-    )?;
-
-    let mut decoder = Decoder::new(field, params, encoder.points.clone());
-    let wquant = WeightQuantizer::new(field, lw, 1);
-    // f = X̄ᵀ(X̄w̄ − ȳ) carries scale l_x + (l_x + l_w).
-    let dequant = Dequantizer::new(field, lx, lw, 0, 1);
-
-    let mut w = vec![0.0f64; d];
+    // Plaintext twin for comparison.
     let mut plain = LinearRegression::new(d);
-    let eta = plain.lipschitz_lr(&x, m, d);
-    println!("iter | private loss | plaintext loss");
-    for iter in 0..30u64 {
-        let wq = wquant.quantize(&w, &mut rng);
-        let w_shares = encoder.encode_weights(&wq, d, 1, &mut rng);
-        cluster.dispatch(iter, w_shares.into_iter().map(|s| s.data).collect())?;
-        let results = cluster.collect_all(iter)?;
-        let worker_results: Vec<WorkerResult> = results
-            .into_iter()
-            .take(params.recovery_threshold())
-            .map(|r| WorkerResult { worker: r.worker, data: r.data.unwrap() })
-            .collect();
-        let blocks = decoder.decode(&worker_results, d)?;
-        let mut grad = vec![0.0f64; d];
-        for block in blocks {
-            for (g, &q) in grad.iter_mut().zip(block.iter()) {
-                *g += dequant.dequantize_entry(q);
-            }
-        }
-        for (wi, gi) in w.iter_mut().zip(grad.iter()) {
-            *wi -= eta / m as f64 * gi;
-        }
-        plain.step(&x, &y, m, d, eta);
+    let eta = sess.eta;
+    println!("iter | private MSE | plaintext MSE");
+    for iter in 0..30 {
+        sess.step()?;
+        plain.step(&train.x, &train.y, m, d, eta);
         if iter % 5 == 0 {
-            let private_loss = {
-                let model = LinearRegression { w: w.clone() };
-                model.loss(&x, &y, m, d)
-            };
             println!(
-                "{iter:>4} | {private_loss:>12.6} | {:>14.6}",
-                plain.loss(&x, &y, m, d)
+                "{iter:>4} | {:>11.6} | {:>13.6}",
+                sess.train_loss(),
+                plain.loss(&train.x, &train.y, m, d)
             );
         }
     }
 
-    let err: f64 = w
-        .iter()
-        .zip(&w_star)
-        .map(|(a, b)| (a - b) * (a - b))
-        .sum::<f64>()
-        .sqrt();
-    println!("\n‖w_private − w*‖ = {err:.4} (plaintext {:.4})", {
-        plain
-            .w
-            .iter()
-            .zip(&w_star)
-            .map(|(a, b)| (a - b) * (a - b))
-            .sum::<f64>()
-            .sqrt()
-    });
+    let err = LinearRegression::with_weights(sess.w.clone()).distance_to(&w_star);
+    let plain_err = plain.distance_to(&w_star);
+    println!("\n‖w_private − w*‖ = {err:.4} (plaintext {plain_err:.4})");
     if err > 0.15 {
         return Err(format!("private linear regression did not converge: err {err}").into());
     }

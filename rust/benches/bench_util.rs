@@ -17,8 +17,11 @@
 use std::sync::Mutex;
 use std::time::Instant;
 
-/// Rows collected for the JSON report: (name, secs/iter, work items/iter).
-static LOG: Mutex<Vec<(String, f64, Option<f64>)>> = Mutex::new(Vec::new());
+/// Rows collected for the JSON report:
+/// (name, value, work items/iter, is_metric). Timing rows carry secs/iter
+/// in `value`; metric rows (cache counters, ratios) carry a plain number
+/// and are emitted under a `value` key instead of `secs_per_iter`.
+static LOG: Mutex<Vec<(String, f64, Option<f64>, bool)>> = Mutex::new(Vec::new());
 
 /// Time `f` for at least `min_secs` (and ≥ 3 iters); returns secs/iter.
 pub fn bench_secs(min_secs: f64, mut f: impl FnMut()) -> f64 {
@@ -40,7 +43,7 @@ pub fn bench_secs(min_secs: f64, mut f: impl FnMut()) -> f64 {
 pub fn report(name: &str, secs_per_iter: f64, work: Option<f64>) {
     LOG.lock()
         .expect("bench log poisoned")
-        .push((name.to_string(), secs_per_iter, work));
+        .push((name.to_string(), secs_per_iter, work, false));
     let time = if secs_per_iter >= 1.0 {
         format!("{secs_per_iter:.3} s")
     } else if secs_per_iter >= 1e-3 {
@@ -70,8 +73,17 @@ pub fn report_speedup(name: &str, baseline_secs: f64, contender_secs: f64) {
     let speedup = baseline_secs / contender_secs;
     LOG.lock()
         .expect("bench log poisoned")
-        .push((format!("{name} [speedup x]"), speedup, None));
+        .push((format!("{name} [speedup x]"), speedup, None, true));
     println!("{name:<52} {speedup:>11.2}x");
+}
+
+/// Log a dimensionless metric (cache counters, drained-result counts…) so
+/// it lands in the JSON record alongside the timing rows.
+pub fn report_metric(name: &str, value: f64) {
+    LOG.lock()
+        .expect("bench log poisoned")
+        .push((name.to_string(), value, None, true));
+    println!("{name:<52} {value:>12.2}");
 }
 
 /// If `BENCH_JSON` is set, write the collected rows to
@@ -83,7 +95,7 @@ pub fn finish(target: &str) {
     }
     let rows = LOG.lock().expect("bench log poisoned");
     let mut out = String::from("{\n  \"rows\": [\n");
-    for (i, (name, secs, work)) in rows.iter().enumerate() {
+    for (i, (name, value, work, is_metric)) in rows.iter().enumerate() {
         let esc: String = name
             .chars()
             .flat_map(|c| match c {
@@ -91,11 +103,10 @@ pub fn finish(target: &str) {
                 _ => vec![c],
             })
             .collect();
-        out.push_str(&format!(
-            "    {{\"name\": \"{esc}\", \"secs_per_iter\": {secs:e}"
-        ));
+        let key = if *is_metric { "value" } else { "secs_per_iter" };
+        out.push_str(&format!("    {{\"name\": \"{esc}\", \"{key}\": {value:e}"));
         if let Some(w) = work {
-            out.push_str(&format!(", \"ops_per_sec\": {:e}", w / secs));
+            out.push_str(&format!(", \"ops_per_sec\": {:e}", w / value));
         }
         out.push('}');
         if i + 1 < rows.len() {

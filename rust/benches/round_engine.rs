@@ -1,0 +1,136 @@
+//! Round-engine bench: full collection vs early-exit wall time with one
+//! worker slowed ~10×, at straggler slack N − R = 3 ≥ 2.
+//!
+//! This measures the tentpole claim directly: with `collect_first(R)` the
+//! master's per-iteration wall time is gated by the fastest-R subset, not
+//! by the slow machine. `BENCH_JSON=1` also records the decoder's
+//! per-subset cache stats (early exit sees varying subsets → some cold
+//! decodes; full collection always feeds the same sorted-by-arrival pool).
+
+mod bench_util;
+use bench_util::{finish, report, report_metric, report_speedup};
+
+use std::path::PathBuf;
+use std::time::Instant;
+
+use codedml::cluster::{Cluster, WorkerOp, WorkerSpec};
+use codedml::coding::{CodingParams, Decoder, Encoder, WorkerResult};
+use codedml::field::{PrimeField, PAPER_PRIME};
+use codedml::runtime::BackendKind;
+use codedml::util::{Parallelism, Rng};
+
+fn specs(n: usize, rows: usize, d: usize, coeffs: &[u64], slow_ms: u64) -> Vec<WorkerSpec> {
+    let f = PrimeField::new(PAPER_PRIME);
+    (0..n)
+        .map(|id| WorkerSpec {
+            id,
+            kind: BackendKind::Native,
+            artifact_dir: PathBuf::from("artifacts"),
+            field: f,
+            rows,
+            d,
+            coeffs: coeffs.to_vec(),
+            op: WorkerOp::Logistic,
+            fail_from_iter: None,
+            // Worker 0 is the slow machine.
+            slow_ms: if id == 0 { slow_ms } else { 0 },
+            par: Parallelism::Serial,
+        })
+        .collect()
+}
+
+fn main() {
+    let f = PrimeField::new(PAPER_PRIME);
+    let (n, k, t) = (13usize, 3usize, 1usize);
+    let params = CodingParams::new(n, k, t, 1).unwrap();
+    let need = params.recovery_threshold();
+    assert!(n - need >= 2, "bench requires straggler slack ≥ 2");
+    let (rows, d) = (412usize, 784usize);
+    let m = rows * k;
+    let coeffs = vec![3u64, 7];
+    let iters = 20u64;
+
+    println!(
+        "== round_engine (N={n} K={k} T={t}, R={need}, slack {}) ==",
+        n - need
+    );
+
+    let mut rng = Rng::new(11);
+    let xq = f.random_matrix(&mut rng, m, d);
+    let enc = Encoder::new(f, params);
+    let x_shares: Vec<Vec<u64>> = enc
+        .encode_dataset(&xq, m, d, &mut rng)
+        .into_iter()
+        .map(|s| s.data)
+        .collect();
+    let w_shares: Vec<Vec<u64>> = enc
+        .encode_weights(&f.random_matrix(&mut rng, d, 1), d, 1, &mut rng)
+        .into_iter()
+        .map(|s| s.data)
+        .collect();
+
+    // Calibrate: time one healthy full round, then slow worker 0 by ~10×.
+    let calib = Cluster::spawn(specs(n, rows, d, &coeffs, 0)).unwrap();
+    calib.load_data(x_shares.clone(), None).unwrap();
+    calib.dispatch(0, w_shares.clone()).unwrap();
+    calib.collect_first(n, 0).unwrap(); // warmup
+    calib.dispatch(1, w_shares.clone()).unwrap();
+    let t0 = Instant::now();
+    calib.collect_first(n, 1).unwrap();
+    let healthy_round = t0.elapsed().as_secs_f64();
+    let slow_ms = ((healthy_round * 10.0 * 1e3).ceil() as u64).max(20);
+    drop(calib);
+    println!(
+        "healthy round {:.2} ms → slow worker pinned at {slow_ms} ms (~10x)",
+        healthy_round * 1e3
+    );
+
+    // One cluster per collection policy, identical shares and slowdown.
+    let mut times = [0.0f64; 2];
+    let mut cache_stats = [(0u64, 0u64); 2];
+    let mut late_total = 0usize;
+    for (mode, &collect_n) in [n, need].iter().enumerate() {
+        let label = if mode == 0 { "full collection (R=N)" } else { "early exit (fastest R)" };
+        let cluster = Cluster::spawn(specs(n, rows, d, &coeffs, slow_ms)).unwrap();
+        cluster.load_data(x_shares.clone(), None).unwrap();
+        let mut dec = Decoder::new(f, params, enc.points.clone());
+        // Warmup round (also primes the decoder cache once).
+        cluster.dispatch(0, w_shares.clone()).unwrap();
+        cluster.collect_first(collect_n, 0).unwrap();
+
+        let t0 = Instant::now();
+        for iter in 1..=iters {
+            cluster.dispatch(iter, w_shares.clone()).unwrap();
+            let round = cluster.collect_first(collect_n, iter).unwrap();
+            late_total += round.late_drained;
+            let results: Vec<WorkerResult> = round
+                .results
+                .iter()
+                .take(need)
+                .map(|r| WorkerResult { worker: r.worker, data: r.data.clone().unwrap() })
+                .collect();
+            std::hint::black_box(dec.decode(&results, d).unwrap());
+        }
+        let secs = t0.elapsed().as_secs_f64() / iters as f64;
+        times[mode] = secs;
+        cache_stats[mode] = dec.cache_stats();
+        report(
+            &format!("train round, 1 worker {slow_ms} ms slow [{label}]"),
+            secs,
+            None,
+        );
+    }
+
+    report_speedup(
+        "round_engine early-exit vs full collection",
+        times[0],
+        times[1],
+    );
+    report_metric("decode cache hits [full collection]", cache_stats[0].0 as f64);
+    report_metric("decode cache misses [full collection]", cache_stats[0].1 as f64);
+    report_metric("decode cache hits [early exit]", cache_stats[1].0 as f64);
+    report_metric("decode cache misses [early exit]", cache_stats[1].1 as f64);
+    report_metric("late results drained", late_total as f64);
+
+    finish("round_engine");
+}

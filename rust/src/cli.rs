@@ -1,17 +1,22 @@
 //! `codedml` command-line interface.
 //!
 //! ```text
-//! codedml train       [--n 10 --k 3 --t 1 --r 1 --case 1|2 --iters 25 --m 600
-//!                      --d 784 --dup --backend native|xla --seed 42
+//! codedml train       [--model logistic|linear --n 10 --k 3 --t 1 --r 1
+//!                      --case 1|2 --iters 25 --m 600 --d 784 --dup
+//!                      --batch-blocks 0 --backend native|xla --seed 42
 //!                      --threads serial|auto|<n> --config cfg.json --json out.json]
 //! codedml mpc         [--n 10 --t 4 --iters 25 --m 600 --d 784
 //!                      --threads serial|auto|<n>]
-//! codedml reproduce   <fig2|table1..6|fig3|fig4|fig5|all>
+//! codedml reproduce   <fig2|table1..6|fig3|fig4|fig5|linear|all>
 //!                     [--scale 0.05 --iters 25 --json out.json --backend ...]
 //! codedml budget      [--m 12396 --k 13 --lx 2 --lw 4 --lc 3 --r 1 --p ...]
 //! codedml artifacts   [--dir artifacts]
 //! codedml list
 //! ```
+//!
+//! `--model linear` trains coded linear regression (paper Remark 1) on a
+//! planted synthetic task — defaults shift to m=240, d=8, l_x=4, l_w=6,
+//! the 26-bit prime — and reports the recovery error ‖w − w*‖.
 //!
 //! `--threads` bounds the thread pool used by the Lagrange encode, the
 //! per-worker matmuls, and the decode (`serial` = 1 thread, the default;
@@ -21,8 +26,8 @@
 use std::path::PathBuf;
 
 use crate::cluster::{NetworkModel, StragglerModel};
-use crate::coordinator::{CodedMlConfig, CodedMlSession};
-use crate::data::{paper_dataset, synthetic_3v7};
+use crate::coordinator::{CodedMlConfig, CodedMlSession, ModelKind};
+use crate::data::{paper_dataset, synthetic_3v7, synthetic_planted_linear};
 use crate::mpc::{BgwConfig, BgwGradientProtocol};
 use crate::quant::OverflowBudget;
 use crate::reproduce::{self, run_experiment, ExpParams};
@@ -39,6 +44,8 @@ const USAGE: &str = "usage: codedml <train|mpc|reproduce|budget|artifacts|list> 
   list       list reproducible experiments
 
 common options:
+  --model logistic|linear     coded objective to train (default logistic;
+                              linear = paper Remark 1 on a planted task)
   --threads serial|auto|<n>   thread pool for encode/compute/decode hot
                               paths (default serial; results are identical
                               at every setting, only wall-clock changes)";
@@ -111,6 +118,17 @@ fn cmd_train(args: &Args) -> Result<(), String> {
             ..Default::default()
         },
     };
+    if let Some(model) = args.get("model") {
+        cfg.model = model.parse()?;
+    }
+    if cfg.model == ModelKind::Linear {
+        // Shift to the linear-tuned scale defaults (CodedMlConfig::linear);
+        // explicit --p/--lx/--lw/--lc below still win. Note this applies to
+        // the --model flag only — a --config file selecting "model":
+        // "linear" is taken as a complete specification of its scales.
+        let (n, k, t, r) = (cfg.n, cfg.k, cfg.t, cfg.r);
+        cfg = CodedMlConfig { n, k, t, r, ..CodedMlConfig::linear() };
+    }
     cfg.iters = args.get_usize("iters", 25)?;
     cfg.seed = args.get_u64("seed", 42)?;
     cfg.backend = parse_backend(args)?;
@@ -131,6 +149,9 @@ fn cmd_train(args: &Args) -> Result<(), String> {
     }
     cfg.chaos_failures = args.get_usize("chaos-failures", 0)?;
     cfg.chaos_from_iter = args.get_u64("chaos-from-iter", 0)?;
+    cfg.chaos_slow_workers = args.get_usize("chaos-slow-workers", 0)?;
+    cfg.chaos_slow_ms = args.get_u64("chaos-slow-ms", 0)?;
+    cfg.batch_blocks = args.get_usize("batch-blocks", 0)?;
     cfg.strict_budget = args.flag("strict-budget");
     if let Some(t) = args.get("threads") {
         cfg.parallelism = t.parse().map_err(|e: String| e)?;
@@ -143,6 +164,54 @@ fn cmd_train(args: &Args) -> Result<(), String> {
         cfg.artifact_dir = PathBuf::from(dir);
     }
 
+    match cfg.model {
+        ModelKind::Logistic => train_logistic(args, cfg),
+        ModelKind::Linear => train_linear(args, cfg),
+    }
+}
+
+fn train_banner(cfg: &CodedMlConfig, m: usize, d: usize) {
+    println!(
+        "CodedPrivateML ({}): N={} K={} T={} r={} p={} backend={:?} m={} d={} iters={} threads={}",
+        cfg.model, cfg.n, cfg.k, cfg.t, cfg.r, cfg.p, cfg.backend, m, d, cfg.iters, cfg.parallelism
+    );
+}
+
+fn print_report(report: &crate::coordinator::TrainReport) {
+    println!("{}", reproduce::TABLE_HEADER);
+    println!("{}", report.breakdown.row("CodedPrivateML"));
+    println!(
+        "decode cache: {} hits / {} misses; bytes sent {}, received {}; \
+         worker failures {}, late results drained {}",
+        report.decode_cache.0,
+        report.decode_cache.1,
+        report.bytes_sent,
+        report.bytes_received,
+        report.worker_failures,
+        report.late_results
+    );
+}
+
+fn save_model(
+    args: &Args,
+    name: &str,
+    report: &crate::coordinator::TrainReport,
+    source: &str,
+    iters: usize,
+) -> Result<(), String> {
+    if let Some(path) = args.get("save-model") {
+        crate::model::SavedModel::new(name, report.weights.clone())
+            .with_meta("iters", iters)
+            .with_meta("source", source)
+            .with_meta("final_accuracy", format!("{:?}", report.final_accuracy()))
+            .save(std::path::Path::new(path))
+            .map_err(|e| e.to_string())?;
+        eprintln!("saved model to {path}");
+    }
+    Ok(())
+}
+
+fn train_logistic(args: &Args, cfg: CodedMlConfig) -> Result<(), String> {
     let m = args.get_usize("m", 600)?;
     let d = args.get_usize("d", 784)?;
     let test_m = args.get_usize("test-m", (m / 6).max(30))?;
@@ -155,10 +224,7 @@ fn cmd_train(args: &Args) -> Result<(), String> {
     }
 
     let iters = cfg.iters;
-    println!(
-        "CodedPrivateML: N={} K={} T={} r={} p={} backend={:?} m={} d={} iters={} threads={}",
-        cfg.n, cfg.k, cfg.t, cfg.r, cfg.p, cfg.backend, train.m, train.d, iters, cfg.parallelism
-    );
+    train_banner(&cfg, train.m, train.d);
     let mut sess = CodedMlSession::new(cfg, &train).map_err(|e| e.to_string())?;
     println!(
         "recovery threshold {} (straggler slack {})",
@@ -173,15 +239,7 @@ fn cmd_train(args: &Args) -> Result<(), String> {
         eprintln!("tracing to {path}");
     }
     let report = sess.train(iters, Some(&test)).map_err(|e| e.to_string())?;
-    if let Some(path) = args.get("save-model") {
-        crate::model::SavedModel::new("logistic", report.weights.clone())
-            .with_meta("iters", iters)
-            .with_meta("source", &train.source)
-            .with_meta("final_accuracy", format!("{:?}", report.final_accuracy()))
-            .save(std::path::Path::new(path))
-            .map_err(|e| e.to_string())?;
-        eprintln!("saved model to {path}");
-    }
+    save_model(args, "logistic", &report, &train.source, iters)?;
     for it in &report.iterations {
         println!(
             "iter {:>3}  loss {:.5}  acc {:.4}",
@@ -190,12 +248,39 @@ fn cmd_train(args: &Args) -> Result<(), String> {
             it.test_accuracy.unwrap_or(f64::NAN)
         );
     }
-    println!("{}", reproduce::TABLE_HEADER);
-    println!("{}", report.breakdown.row("CodedPrivateML"));
+    print_report(&report);
+    maybe_write_json(args, &report.to_json())
+}
+
+fn train_linear(args: &Args, cfg: CodedMlConfig) -> Result<(), String> {
+    let m = args.get_usize("m", 240)?;
+    let d = args.get_usize("d", 8)?;
+    let (train, w_star) = synthetic_planted_linear(m, d, cfg.seed);
+
+    let iters = cfg.iters;
+    train_banner(&cfg, train.m, train.d);
+    let mut sess = CodedMlSession::new_linear(cfg, &train).map_err(|e| e.to_string())?;
     println!(
-        "decode cache: {} hits / {} misses; bytes sent {}, received {}",
-        report.decode_cache.0, report.decode_cache.1, report.bytes_sent, report.bytes_received
+        "recovery threshold {} (straggler slack {})",
+        sess.params().recovery_threshold(),
+        sess.params().straggler_slack()
     );
+    if let Some(path) = args.get("trace") {
+        sess.set_tracer(
+            crate::coordinator::Tracer::file(std::path::Path::new(path))
+                .map_err(|e| format!("trace {path}: {e}"))?,
+        );
+        eprintln!("tracing to {path}");
+    }
+    let report = sess.train(iters, None).map_err(|e| e.to_string())?;
+    save_model(args, "linear", &report, &train.source, iters)?;
+    for it in &report.iterations {
+        println!("iter {:>3}  mse {:.6}", it.iter, it.train_loss);
+    }
+    let err = crate::model::LinearRegression::with_weights(report.weights.clone())
+        .distance_to(&w_star);
+    println!("planted-model recovery error ‖w − w*‖ = {err:.4}");
+    print_report(&report);
     maybe_write_json(args, &report.to_json())
 }
 
@@ -383,6 +468,30 @@ mod tests {
     fn train_rejects_bad_case() {
         let err = dispatch(&args("train --case 5")).unwrap_err();
         assert!(err.contains("case"));
+    }
+
+    #[test]
+    fn train_micro_run_linear() {
+        assert!(dispatch(&args(
+            "train --model linear --n 10 --k 3 --t 1 --iters 2 --m 60 --d 6 \
+             --no-straggle --free-net"
+        ))
+        .is_ok());
+    }
+
+    #[test]
+    fn train_rejects_bad_model() {
+        let err = dispatch(&args("train --model svm")).unwrap_err();
+        assert!(err.contains("unknown model"), "{err}");
+    }
+
+    #[test]
+    fn train_micro_run_mini_batch() {
+        assert!(dispatch(&args(
+            "train --n 10 --k 3 --t 1 --iters 2 --m 120 --batch-blocks 1 \
+             --no-straggle --free-net"
+        ))
+        .is_ok());
     }
 
     #[test]

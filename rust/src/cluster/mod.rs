@@ -3,17 +3,25 @@
 //! The paper runs on Amazon EC2 (`m3.xlarge`, MPI4Py). Here each worker is
 //! an OS thread owning its own compute backend; messages are typed channel
 //! sends with byte accounting, and a [`NetworkModel`] converts bytes moved
-//! into modeled communication time (DESIGN.md §Substitutions). Straggling
-//! is injected with the shifted-exponential model standard in the coded-
-//! computing literature, and per-iteration computation time is the
-//! *modeled parallel* time — the R-th order statistic of per-worker
-//! (measured compute + sampled straggle) — which matches the paper's
-//! N-independent-machines semantics without requiring N physical hosts.
+//! into modeled communication time (DESIGN.md §Substitutions).
+//!
+//! Collection is **streaming**: [`Cluster::collect_first`] consumes
+//! results in actual arrival order and returns as soon as the fastest R
+//! usable ones land (the [`Round`] state machine); late results are
+//! drained on the next iteration, never decoded. Straggling is injected
+//! with the shifted-exponential model standard in the coded-computing
+//! literature (real slow machines are injected with
+//! [`WorkerSpec::slow_ms`]), and per-iteration *modeled* computation time
+//! is the R-th order statistic of per-worker (compute + sampled
+//! straggle) — the paper's N-independent-machines semantics without
+//! requiring N physical hosts.
 
 mod netmodel;
+pub mod round;
 mod straggler;
 pub mod worker;
 
 pub use netmodel::NetworkModel;
+pub use round::Round;
 pub use straggler::StragglerModel;
 pub use worker::{Cluster, ClusterError, StepResult, WorkerOp, WorkerSpec};

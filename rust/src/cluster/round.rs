@@ -1,0 +1,158 @@
+//! One iteration's streaming collection state.
+//!
+//! The master consumes [`StepResult`]s in the order they actually arrive
+//! on the shared results channel and declares the round complete as soon
+//! as the fastest `need` usable results have landed — it never waits for
+//! the remaining `N − need` workers. Anything still in flight from an
+//! earlier iteration is drained and discarded here (counted, never
+//! decoded), which is what lets a permanently slow worker fall behind
+//! without ever blocking or corrupting later iterations.
+
+use super::worker::StepResult;
+
+/// Collection state for a single iteration.
+#[derive(Debug)]
+pub struct Round {
+    /// Iteration this round collects for; results tagged with an earlier
+    /// iteration are stale leftovers and are dropped.
+    pub iter: u64,
+    /// Results required before the round completes (the LCC recovery
+    /// threshold R — decoding needs exactly this many).
+    pub need: usize,
+    /// Workers that were dispatched this iteration (each sends exactly
+    /// one result, so `need` can be declared unreachable once
+    /// `results + failures == expected`).
+    expected: usize,
+    /// Usable results in arrival order; capped at `need`.
+    pub results: Vec<StepResult>,
+    /// `(worker, error)` for every failure observed this round.
+    pub failures: Vec<(usize, String)>,
+    /// Stale usable results from previous iterations drained while
+    /// collecting.
+    pub late_drained: usize,
+    /// Stale *failures* drained while collecting — an Err that lands after
+    /// its own round completed must still reach the failure counters, but
+    /// must not feed this round's completion accounting.
+    pub late_failures: Vec<(usize, String)>,
+    /// Dispatch→completion wall time, filled in by the collector.
+    pub wall_secs: f64,
+}
+
+impl Round {
+    pub fn new(iter: u64, need: usize, expected: usize) -> Self {
+        assert!(need <= expected, "need {need} results from {expected} workers");
+        Round {
+            iter,
+            need,
+            expected,
+            results: Vec::with_capacity(need),
+            failures: Vec::new(),
+            late_drained: 0,
+            late_failures: Vec::new(),
+            wall_secs: 0.0,
+        }
+    }
+
+    /// Feed one raw channel message. Results for earlier iterations are
+    /// counted as late and dropped; results for this iteration land in
+    /// `results` or `failures`.
+    pub fn absorb(&mut self, res: StepResult) {
+        if res.iter != self.iter {
+            debug_assert!(
+                res.iter < self.iter,
+                "worker {} sent a result for future iteration {}",
+                res.worker,
+                res.iter
+            );
+            match res.data {
+                Ok(_) => self.late_drained += 1,
+                Err(msg) => self.late_failures.push((res.worker, msg)),
+            }
+            return;
+        }
+        match res.data {
+            Ok(_) if self.results.len() < self.need => self.results.push(res),
+            // A usable result past the threshold (only possible when the
+            // caller keeps feeding a completed round) is as good as late.
+            Ok(_) => self.late_drained += 1,
+            Err(ref msg) => {
+                let msg = msg.clone();
+                self.failures.push((res.worker, msg));
+            }
+        }
+    }
+
+    /// The round is over: either enough usable results arrived, or every
+    /// dispatched worker has been accounted for and `need` is unreachable.
+    pub fn complete(&self) -> bool {
+        self.results.len() >= self.need
+            || self.results.len() + self.failures.len() >= self.expected
+    }
+
+    /// Did the round actually reach the threshold?
+    pub fn ok(&self) -> bool {
+        self.results.len() >= self.need
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ok_result(worker: usize, iter: u64) -> StepResult {
+        StepResult { worker, iter, data: Ok(vec![worker as u64]), compute_secs: 0.001 }
+    }
+
+    fn err_result(worker: usize, iter: u64) -> StepResult {
+        StepResult { worker, iter, data: Err("boom".into()), compute_secs: 0.0 }
+    }
+
+    #[test]
+    fn completes_at_need_without_waiting_for_all() {
+        let mut r = Round::new(3, 2, 5);
+        r.absorb(ok_result(4, 3));
+        assert!(!r.complete());
+        r.absorb(ok_result(1, 3));
+        assert!(r.complete() && r.ok());
+        assert_eq!(r.results.len(), 2);
+        // Arrival order is preserved — the decoder gets the fastest subset.
+        assert_eq!(r.results[0].worker, 4);
+        assert_eq!(r.results[1].worker, 1);
+    }
+
+    #[test]
+    fn stale_results_are_counted_not_used() {
+        let mut r = Round::new(5, 2, 4);
+        r.absorb(ok_result(0, 4)); // leftover from iteration 4
+        r.absorb(err_result(1, 3)); // stale failure: still surfaced…
+        assert_eq!(r.late_drained, 1);
+        assert_eq!(r.late_failures, vec![(1, "boom".to_string())]);
+        // …but never feeds this round's completion accounting.
+        assert!(r.results.is_empty() && r.failures.is_empty());
+        r.absorb(ok_result(2, 5));
+        r.absorb(ok_result(3, 5));
+        assert!(r.complete() && r.ok());
+    }
+
+    #[test]
+    fn completes_unreachable_when_failures_exhaust_workers() {
+        let mut r = Round::new(0, 3, 4);
+        r.absorb(ok_result(0, 0));
+        r.absorb(err_result(1, 0));
+        r.absorb(err_result(2, 0));
+        assert!(!r.complete());
+        r.absorb(err_result(3, 0));
+        assert!(r.complete(), "all four workers accounted for");
+        assert!(!r.ok(), "threshold 3 unreachable with one usable result");
+        assert_eq!(r.failures.len(), 3);
+    }
+
+    #[test]
+    fn extra_results_past_need_are_dropped() {
+        let mut r = Round::new(0, 1, 3);
+        r.absorb(ok_result(0, 0));
+        r.absorb(ok_result(1, 0));
+        assert_eq!(r.results.len(), 1);
+        assert_eq!(r.late_drained, 1);
+    }
+}

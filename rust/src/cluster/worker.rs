@@ -6,8 +6,9 @@
 
 use std::sync::mpsc;
 use std::thread::JoinHandle;
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
+use super::round::Round;
 use crate::runtime::{BackendKind, WorkerBackend};
 use crate::field::PrimeField;
 use crate::util::par::Parallelism;
@@ -38,6 +39,10 @@ pub struct WorkerSpec {
     /// Chaos hook: fail every step with iter ≥ this (crash-style fault
     /// injection for resilience tests; None = healthy).
     pub fail_from_iter: Option<u64>,
+    /// Chaos hook: extra sleep per step (a permanently slow machine).
+    /// The streaming round engine leaves such a worker behind — its
+    /// results arrive late and are drained, never decoded.
+    pub slow_ms: u64,
     /// Intra-worker thread budget for the native matmul kernels (results
     /// are bit-exact at any setting; see [`crate::util::par`]).
     pub par: Parallelism,
@@ -155,6 +160,9 @@ fn worker_main(
                         spec.par,
                     )),
                 };
+                if spec.slow_ms > 0 {
+                    std::thread::sleep(Duration::from_millis(spec.slow_ms));
+                }
                 let compute_secs = t0.elapsed().as_secs_f64();
                 if tx
                     .send(StepResult { worker: spec.id, iter, data, compute_secs })
@@ -249,24 +257,25 @@ impl Cluster {
         Ok(())
     }
 
-    /// Collect all N results for `iter` (arrival order). The decode step
-    /// uses only the fastest R by *modeled* arrival time; collecting all N
-    /// keeps iterations in lock-step (the paper's workers likewise finish
-    /// the round — their result is just ignored past the threshold).
-    pub fn collect_all(&self, iter: u64) -> Result<Vec<StepResult>, ClusterError> {
-        let mut out = Vec::with_capacity(self.workers.len());
-        while out.len() < self.workers.len() {
+    /// Stream results for `iter` off the shared channel and return as soon
+    /// as the fastest `need` usable ones have arrived — the master never
+    /// waits for stragglers past the recovery threshold. Stale results
+    /// from earlier iterations are drained (and counted on the returned
+    /// [`Round`]) without blocking; failures are collected so the caller
+    /// can tell "threshold unreachable" from "still in flight". Passing
+    /// `need = n()` degenerates to a full collection.
+    pub fn collect_first(&self, need: usize, iter: u64) -> Result<Round, ClusterError> {
+        let t0 = Instant::now();
+        let mut round = Round::new(iter, need, self.workers.len());
+        while !round.complete() {
             let res = self
                 .results_rx
                 .recv()
                 .map_err(|_| ClusterError::Channel("results"))?;
-            if res.iter == iter {
-                out.push(res);
-            }
-            // Results from stale iterations (shouldn't happen in lock-step)
-            // are dropped.
+            round.absorb(res);
         }
-        Ok(out)
+        round.wall_secs = t0.elapsed().as_secs_f64();
+        Ok(round)
     }
 }
 
@@ -302,6 +311,7 @@ mod tests {
                 coeffs: vec![3, 7],
                 op,
                 fail_from_iter: None,
+                slow_ms: 0,
                 par: Parallelism::Serial,
             })
             .collect()
@@ -320,7 +330,10 @@ mod tests {
         cluster
             .dispatch(0, (0..n).map(|_| w.clone()).collect())
             .unwrap();
-        let mut results = cluster.collect_all(0).unwrap();
+        let round = cluster.collect_first(n, 0).unwrap();
+        assert!(round.ok());
+        assert_eq!(round.late_drained, 0);
+        let mut results = round.results;
         results.sort_by_key(|r| r.worker);
         assert_eq!(results.len(), n);
         let wc = WorkerComputation::new(f, rows, d, vec![3, 7]);
@@ -332,7 +345,7 @@ mod tests {
     }
 
     #[test]
-    fn cluster_runs_multiple_iterations_in_lockstep() {
+    fn cluster_streams_multiple_iterations() {
         let n = 3;
         let cluster = Cluster::spawn(specs(n, 2, 2, WorkerOp::Logistic)).unwrap();
         cluster
@@ -342,10 +355,52 @@ mod tests {
             cluster
                 .dispatch(iter, vec![vec![iter + 1, iter + 2]; n])
                 .unwrap();
-            let results = cluster.collect_all(iter).unwrap();
-            assert_eq!(results.len(), n);
-            assert!(results.iter().all(|r| r.iter == iter));
+            let round = cluster.collect_first(n, iter).unwrap();
+            assert_eq!(round.results.len(), n);
+            assert!(round.results.iter().all(|r| r.iter == iter));
         }
+    }
+
+    #[test]
+    fn early_exit_leaves_slow_worker_behind_without_deadlock() {
+        // Worker 2 sleeps 60 ms per step; the master collects the fastest
+        // 2-of-3 each iteration and must never block on it. Its stale
+        // results surface as late drains once they do arrive.
+        let mut s = specs(3, 2, 2, WorkerOp::Logistic);
+        s[2].slow_ms = 60;
+        let cluster = Cluster::spawn(s).unwrap();
+        cluster.load_data(vec![vec![1, 2, 3, 4]; 3], None).unwrap();
+
+        cluster.dispatch(0, vec![vec![1, 2]; 3]).unwrap();
+        let t0 = Instant::now();
+        let round0 = cluster.collect_first(2, 0).unwrap();
+        assert!(round0.ok());
+        assert!(
+            t0.elapsed() < Duration::from_millis(50),
+            "early exit must not wait for the slow worker"
+        );
+        assert!(round0.results.iter().all(|r| r.worker != 2));
+
+        // Let the slow iter-0 result land, then run the next iteration:
+        // it must be drained as late, not decoded into iteration 1.
+        std::thread::sleep(Duration::from_millis(150));
+        cluster.dispatch(1, vec![vec![3, 4]; 3]).unwrap();
+        let round1 = cluster.collect_first(2, 1).unwrap();
+        assert!(round1.ok());
+        assert_eq!(round1.late_drained, 1, "slow iter-0 result drained");
+        assert!(round1.results.iter().all(|r| r.iter == 1));
+    }
+
+    #[test]
+    fn collect_first_full_need_equals_full_collection() {
+        let n = 4;
+        let cluster = Cluster::spawn(specs(n, 2, 2, WorkerOp::Logistic)).unwrap();
+        cluster.load_data(vec![vec![1, 2, 3, 4]; n], None).unwrap();
+        cluster.dispatch(0, vec![vec![5, 6]; n]).unwrap();
+        let round = cluster.collect_first(n, 0).unwrap();
+        let mut workers: Vec<usize> = round.results.iter().map(|r| r.worker).collect();
+        workers.sort_unstable();
+        assert_eq!(workers, vec![0, 1, 2, 3]);
     }
 
     #[test]
@@ -359,8 +414,8 @@ mod tests {
             .load_data(vec![x.clone()], Some(vec![y.clone()]))
             .unwrap();
         cluster.dispatch(0, vec![vec![1, 1]]).unwrap();
-        let results = cluster.collect_all(0).unwrap();
-        let got = results[0].data.as_ref().unwrap().clone();
+        let round = cluster.collect_first(1, 0).unwrap();
+        let got = round.results[0].data.as_ref().unwrap().clone();
         // Xw = [3, 7]; resid = [-2, 1]; Xᵀresid = [1·-2+3·1, 2·-2+4·1] = [1, 0]
         assert_eq!(got, vec![f.from_i64(1), f.from_i64(0)]);
     }

@@ -101,6 +101,22 @@ impl Decoder {
     pub fn decode(&mut self, results: &[WorkerResult], d: usize)
         -> Result<Vec<Vec<u64>>, DecodeError>
     {
+        let all: Vec<usize> = (0..self.params.k).collect();
+        self.decode_blocks(results, d, &all)
+    }
+
+    /// Decode only the requested data blocks (output order follows
+    /// `blocks`). The per-subset coefficient cache still holds all K rows
+    /// — a mini-batch round skips the dense pass for the other K−b blocks
+    /// without evicting anything.
+    pub fn decode_blocks(&mut self, results: &[WorkerResult], d: usize, blocks: &[usize])
+        -> Result<Vec<Vec<u64>>, DecodeError>
+    {
+        assert!(
+            blocks.iter().all(|&b| b < self.params.k),
+            "block index out of range (K = {})",
+            self.params.k
+        );
         let need = self.params.recovery_threshold();
         if results.len() < need {
             return Err(DecodeError::NotEnoughResults { need, have: results.len() });
@@ -143,15 +159,17 @@ impl Decoder {
             self.hits += 1;
         }
         let rows = &self.cache[&key];
+        let selected: Vec<&Vec<u64>> = blocks.iter().map(|&b| &rows[b]).collect();
 
-        // h(β_k)[e] = Σ_i λ_i · result_i[e] — a K×R by R×d dense pass.
-        // Each output column is independent, so split the d columns into
-        // per-thread chunks; within a chunk, accumulate with the deferred
-        // Barrett reduction trick from compute::matmul.
+        // h(β_k)[e] = Σ_i λ_i · result_i[e] — a K×R by R×d dense pass
+        // (b×R×d when only a batch of blocks is requested). Each output
+        // column is independent, so split the d columns into per-thread
+        // chunks; within a chunk, accumulate with the deferred Barrett
+        // reduction trick from compute::matmul.
         let f = self.field;
         let chunk = crate::compute::safe_chunk_len(f.modulus());
         let col_parts = par_ranges(self.par, d, |_, cols| {
-            rows.iter()
+            selected.iter()
                 .map(|lam| {
                     let width = cols.len();
                     let mut acc = vec![0u64; width];
@@ -180,9 +198,9 @@ impl Decoder {
                 })
                 .collect::<Vec<Vec<u64>>>()
         });
-        // Stitch the column chunks back into K full-width blocks.
+        // Stitch the column chunks back into full-width blocks.
         // (map, not vec![..; n]: cloning an empty Vec drops its capacity.)
-        let mut out: Vec<Vec<u64>> = (0..rows.len()).map(|_| Vec::with_capacity(d)).collect();
+        let mut out: Vec<Vec<u64>> = (0..selected.len()).map(|_| Vec::with_capacity(d)).collect();
         for part in col_parts {
             for (k, piece) in part.into_iter().enumerate() {
                 out[k].extend(piece);
@@ -390,6 +408,28 @@ mod tests {
                 .with_parallelism(Parallelism::from_count(threads));
             assert_eq!(dec.decode(&results, d).unwrap(), want, "threads={threads}");
         }
+    }
+
+    #[test]
+    fn decode_blocks_matches_full_decode() {
+        let f = PrimeField::new(PAPER_PRIME);
+        let params = CodingParams::new(13, 3, 1, 1).unwrap(); // threshold 10
+        let enc = Encoder::new(f, params);
+        let mut rng = Rng::new(77);
+        let d = 5;
+        let results: Vec<WorkerResult> = (0..params.recovery_threshold())
+            .map(|w| WorkerResult { worker: w, data: f.random_matrix(&mut rng, d, 1) })
+            .collect();
+        let mut dec = Decoder::new(f, params, enc.points.clone());
+        let full = dec.decode(&results, d).unwrap();
+        // Any batch, any order, must match the corresponding full blocks —
+        // and reuse the same cached subset coefficients (1 miss total).
+        let batch = dec.decode_blocks(&results, d, &[2, 0]).unwrap();
+        assert_eq!(batch[0], full[2]);
+        assert_eq!(batch[1], full[0]);
+        let single = dec.decode_blocks(&results, d, &[1]).unwrap();
+        assert_eq!(single[0], full[1]);
+        assert_eq!(dec.cache_stats(), (2, 1));
     }
 
     #[test]

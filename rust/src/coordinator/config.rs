@@ -7,18 +7,73 @@ use crate::coding::{CodingParams, ParamError};
 use crate::field::{PrimeField, PAPER_PRIME};
 use crate::quant::{BudgetReport, OverflowBudget};
 use crate::runtime::BackendKind;
-use crate::util::json::Json;
+use crate::util::json::{obj, Json};
 use crate::util::par::Parallelism;
 
 /// How per-iteration computation time is attributed.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum CompMode {
-    /// R-th order statistic of per-worker (measured compute + straggle) —
-    /// the paper's N-independent-machines semantics (default).
+    /// R-th order statistic over the healthy workers of (compute +
+    /// sampled straggle) — the paper's N-independent-machines semantics
+    /// (default). Computes the early exit never measured are approximated
+    /// by the collected subset's mean (equal-sized coded blocks).
     ModeledParallel,
     /// Wall-clock time from dispatch to the R-th arrival on this host
     /// (deflated by thread oversubscription; for debugging only).
     Wall,
+}
+
+impl std::str::FromStr for CompMode {
+    type Err = String;
+
+    fn from_str(s: &str) -> Result<Self, String> {
+        match s {
+            "modeled" => Ok(CompMode::ModeledParallel),
+            "wall" => Ok(CompMode::Wall),
+            other => Err(format!("unknown comp mode '{other}' (modeled|wall)")),
+        }
+    }
+}
+
+impl std::fmt::Display for CompMode {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(match self {
+            CompMode::ModeledParallel => "modeled",
+            CompMode::Wall => "wall",
+        })
+    }
+}
+
+/// Which coded objective the session trains (see
+/// [`crate::coordinator::CodedObjective`]).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum ModelKind {
+    /// Algorithm 1: logistic regression with a polynomial sigmoid.
+    #[default]
+    Logistic,
+    /// Remark 1: linear regression — identity "activation", coded labels.
+    Linear,
+}
+
+impl std::str::FromStr for ModelKind {
+    type Err = String;
+
+    fn from_str(s: &str) -> Result<Self, String> {
+        match s {
+            "logistic" => Ok(ModelKind::Logistic),
+            "linear" => Ok(ModelKind::Linear),
+            other => Err(format!("unknown model '{other}' (logistic|linear)")),
+        }
+    }
+}
+
+impl std::fmt::Display for ModelKind {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(match self {
+            ModelKind::Logistic => "logistic",
+            ModelKind::Linear => "linear",
+        })
+    }
 }
 
 #[derive(Debug)]
@@ -54,7 +109,7 @@ impl From<ParamError> for ConfigError {
 }
 
 /// Everything a CodedPrivateML training session needs.
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, PartialEq)]
 pub struct CodedMlConfig {
     /// Workers.
     pub n: usize,
@@ -102,6 +157,18 @@ pub struct CodedMlConfig {
     /// (CLI `--threads`, JSON `parallelism`). Results are bit-identical at
     /// every setting — see [`crate::util::par`]; only wall-clock changes.
     pub parallelism: Parallelism,
+    /// Which coded objective trains (CLI `--model`, JSON `model`).
+    pub model: ModelKind,
+    /// Mini-batch: decode and apply only this many of the K row blocks per
+    /// round, rotating the window each iteration (0 = full batch). The
+    /// workers' cost is unchanged — the coded shares mix all blocks — but
+    /// the master's decode pass and the gradient shrink to the batch.
+    pub batch_blocks: usize,
+    /// Chaos hook: this many workers run with an extra per-step sleep...
+    pub chaos_slow_workers: usize,
+    /// ...of this many milliseconds (real slow machines; the streaming
+    /// round engine must leave them behind, not wait).
+    pub chaos_slow_ms: u64,
 }
 
 impl Default for CodedMlConfig {
@@ -130,6 +197,10 @@ impl Default for CodedMlConfig {
             packed_wire: false,
             fit_method: crate::sigmoid::FitMethod::LeastSquares,
             parallelism: Parallelism::Serial,
+            model: ModelKind::Logistic,
+            batch_blocks: 0,
+            chaos_slow_workers: 0,
+            chaos_slow_ms: 0,
         }
     }
 }
@@ -147,6 +218,25 @@ impl CodedMlConfig {
         Ok(CodedMlConfig { n, k: p.k, t: p.t, r, ..Default::default() })
     }
 
+    /// Defaults tuned for the Remark-1 linear-regression objective:
+    /// `l_x = 4, l_w = 6, l_c = 0` with the 26-bit prime so
+    /// `X̄ᵀ(X̄w̄ − ȳ)` keeps generous field headroom on the planted task.
+    /// This is the single source of the linear scale choices (CLI,
+    /// reproduce harness, examples, and tests all start here). A JSON
+    /// config that merely flips `"model": "linear"` does NOT shift these —
+    /// a config file is a complete specification and should set the scales
+    /// it wants.
+    pub fn linear() -> Self {
+        CodedMlConfig {
+            p: crate::field::PRIME_26,
+            lx: 4,
+            lw: 6,
+            lc: 0,
+            model: ModelKind::Linear,
+            ..Default::default()
+        }
+    }
+
     pub fn coding_params(&self) -> Result<CodingParams, ConfigError> {
         Ok(CodingParams::new(self.n, self.k, self.t, self.r)?)
     }
@@ -162,6 +252,12 @@ impl CodedMlConfig {
             return Err(ConfigError::BadShape(format!(
                 "m={m} too small for K={}",
                 self.k
+            )));
+        }
+        if self.batch_blocks > self.k {
+            return Err(ConfigError::BadShape(format!(
+                "batch_blocks={} exceeds K={}",
+                self.batch_blocks, self.k
             )));
         }
         let field = self.field();
@@ -222,7 +318,13 @@ impl CodedMlConfig {
                 }
                 "latency" => self.net.latency = val.as_f64().ok_or("latency: want number")?,
                 "straggler_rate" => {
-                    self.straggler.rate = val.as_f64().ok_or("straggler_rate: want number")?
+                    // null = no exponential tail (rate λ = ∞, which plain
+                    // JSON cannot carry as a number).
+                    self.straggler.rate = if matches!(val, Json::Null) {
+                        f64::INFINITY
+                    } else {
+                        val.as_f64().ok_or("straggler_rate: want number or null")?
+                    }
                 }
                 "straggler_shift" => {
                     self.straggler.shift = val.as_f64().ok_or("straggler_shift: want number")?
@@ -249,10 +351,95 @@ impl CodedMlConfig {
                         .parse()
                         .map_err(|e: String| e)?
                 }
+                "model" => {
+                    self.model = val
+                        .as_str()
+                        .ok_or("model: want string")?
+                        .parse()
+                        .map_err(|e: String| e)?
+                }
+                "comp_mode" => {
+                    self.comp_mode = val
+                        .as_str()
+                        .ok_or("comp_mode: want string")?
+                        .parse()
+                        .map_err(|e: String| e)?
+                }
+                "straggler_relative" => {
+                    self.straggler.relative =
+                        val.as_bool().ok_or("straggler_relative: want bool")?
+                }
+                "batch_blocks" => {
+                    self.batch_blocks = val.as_usize().ok_or("batch_blocks: want integer")?
+                }
+                "chaos_failures" => {
+                    self.chaos_failures = val.as_usize().ok_or("chaos_failures: want integer")?
+                }
+                "chaos_from_iter" => {
+                    self.chaos_from_iter = val.as_u64().ok_or("chaos_from_iter: want integer")?
+                }
+                "chaos_slow_workers" => {
+                    self.chaos_slow_workers =
+                        val.as_usize().ok_or("chaos_slow_workers: want integer")?
+                }
+                "chaos_slow_ms" => {
+                    self.chaos_slow_ms = val.as_u64().ok_or("chaos_slow_ms: want integer")?
+                }
                 other => return Err(format!("unknown config key '{other}'")),
             }
         }
         Ok(())
+    }
+
+    /// Serialize to the same JSON dialect [`Self::apply_json`] parses —
+    /// `apply_json(&cfg.to_json().to_string())` on a default config
+    /// reconstructs `cfg` exactly (round-trip tested below).
+    pub fn to_json(&self) -> Json {
+        let mut fields = vec![
+            ("n", Json::Num(self.n as f64)),
+            ("k", Json::Num(self.k as f64)),
+            ("t", Json::Num(self.t as f64)),
+            ("r", Json::Num(self.r as f64)),
+            ("p", Json::Num(self.p as f64)),
+            ("lx", Json::Num(self.lx as f64)),
+            ("lw", Json::Num(self.lw as f64)),
+            ("lc", Json::Num(self.lc as f64)),
+            ("fit_range", Json::Num(self.fit_range)),
+            ("iters", Json::Num(self.iters as f64)),
+            ("seed", Json::Num(self.seed as f64)),
+            ("backend", Json::Str(self.backend.to_string())),
+            (
+                "artifact_dir",
+                Json::Str(self.artifact_dir.to_string_lossy().into_owned()),
+            ),
+            ("bandwidth", Json::Num(self.net.bandwidth)),
+            ("latency", Json::Num(self.net.latency)),
+            (
+                "straggler_rate",
+                if self.straggler.rate.is_finite() {
+                    Json::Num(self.straggler.rate)
+                } else {
+                    Json::Null
+                },
+            ),
+            ("straggler_shift", Json::Num(self.straggler.shift)),
+            ("straggler_relative", Json::Bool(self.straggler.relative)),
+            ("comp_mode", Json::Str(self.comp_mode.to_string())),
+            ("strict_budget", Json::Bool(self.strict_budget)),
+            ("packed_wire", Json::Bool(self.packed_wire)),
+            ("parallelism", Json::Str(self.parallelism.to_string())),
+            ("fit_method", Json::Str(self.fit_method.to_string())),
+            ("model", Json::Str(self.model.to_string())),
+            ("batch_blocks", Json::Num(self.batch_blocks as f64)),
+            ("chaos_failures", Json::Num(self.chaos_failures as f64)),
+            ("chaos_from_iter", Json::Num(self.chaos_from_iter as f64)),
+            ("chaos_slow_workers", Json::Num(self.chaos_slow_workers as f64)),
+            ("chaos_slow_ms", Json::Num(self.chaos_slow_ms as f64)),
+        ];
+        if let Some(eta) = self.eta {
+            fields.push(("eta", Json::Num(eta)));
+        }
+        obj(&fields)
     }
 }
 
@@ -319,6 +506,81 @@ mod tests {
         assert_eq!(cfg.parallelism, Parallelism::Serial);
         assert!(cfg.apply_json(r#"{"parallelism": "many"}"#).is_err());
         assert!(cfg.apply_json(r#"{"parallelism": true}"#).is_err());
+    }
+
+    #[test]
+    fn model_kind_string_round_trip() {
+        for m in [ModelKind::Logistic, ModelKind::Linear] {
+            assert_eq!(m.to_string().parse::<ModelKind>().unwrap(), m);
+        }
+        assert!("perceptron".parse::<ModelKind>().is_err());
+        assert_eq!(ModelKind::default(), ModelKind::Logistic);
+    }
+
+    #[test]
+    fn json_model_key_applies() {
+        let mut cfg = CodedMlConfig::default();
+        cfg.apply_json(r#"{"model": "linear", "batch_blocks": 2}"#).unwrap();
+        assert_eq!(cfg.model, ModelKind::Linear);
+        assert_eq!(cfg.batch_blocks, 2);
+        assert!(cfg.apply_json(r#"{"model": "svm"}"#).is_err());
+    }
+
+    #[test]
+    fn config_json_round_trips_exactly() {
+        let cfg = CodedMlConfig {
+            n: 16,
+            k: 4,
+            t: 2,
+            r: 2,
+            p: crate::field::PRIME_26,
+            lx: 3,
+            lw: 5,
+            lc: 1,
+            fit_range: 4.0,
+            iters: 7,
+            eta: Some(0.125),
+            seed: 99,
+            backend: BackendKind::Xla,
+            artifact_dir: PathBuf::from("elsewhere"),
+            net: NetworkModel { bandwidth: 2e9, latency: 1e-3 },
+            straggler: StragglerModel { shift: 0.25, rate: 3.0, relative: false },
+            comp_mode: CompMode::Wall,
+            strict_budget: true,
+            chaos_failures: 2,
+            chaos_from_iter: 5,
+            packed_wire: true,
+            fit_method: crate::sigmoid::FitMethod::Chebyshev,
+            parallelism: Parallelism::from_count(4),
+            model: ModelKind::Linear,
+            batch_blocks: 3,
+            chaos_slow_workers: 1,
+            chaos_slow_ms: 40,
+        };
+        let text = cfg.to_json().to_string();
+        let mut restored = CodedMlConfig::default();
+        restored.apply_json(&text).unwrap();
+        assert_eq!(restored, cfg);
+    }
+
+    #[test]
+    fn config_json_round_trips_infinite_straggler_rate() {
+        let cfg = CodedMlConfig { straggler: StragglerModel::none(), ..Default::default() };
+        let text = cfg.to_json().to_string();
+        let mut restored = CodedMlConfig::default();
+        restored.apply_json(&text).unwrap();
+        assert_eq!(restored, cfg);
+    }
+
+    #[test]
+    fn batch_blocks_bounded_by_k() {
+        let cfg = CodedMlConfig { batch_blocks: 5, ..Default::default() }; // K=3
+        match cfg.validate(300, 1.0) {
+            Err(ConfigError::BadShape(msg)) => assert!(msg.contains("batch_blocks"), "{msg}"),
+            other => panic!("expected BadShape, got {other:?}"),
+        }
+        let cfg = CodedMlConfig { batch_blocks: 3, ..Default::default() };
+        cfg.validate(300, 1.0).unwrap();
     }
 
     #[test]

@@ -1,16 +1,22 @@
-//! The CodedPrivateML master (paper Algorithm 1).
+//! The CodedPrivateML master (paper Algorithm 1, Remark 1).
 //!
-//! Orchestrates the full training loop over the simulated [`crate::cluster`]:
-//! quantize → Lagrange-encode → dispatch → collect the fastest R results →
+//! Orchestrates the full training loop over the simulated [`crate::cluster`]
+//! as a streaming round engine: quantize → Lagrange-encode → dispatch →
+//! consume results as they arrive and stop at the fastest R →
 //! interpolation-decode → dequantize → gradient update, with the
 //! encode/comm/comp timing breakdown the paper reports in Tables 1–6.
+//! Everything algorithm-specific (worker polynomial, gradient assembly,
+//! loss) is behind the [`CodedObjective`] trait — logistic regression is
+//! Algorithm 1, linear regression is Remark 1.
 
 mod config;
+mod objective;
 mod report;
 mod session;
 mod trace;
 
-pub use config::{CodedMlConfig, CompMode, ConfigError};
+pub use config::{CodedMlConfig, CompMode, ConfigError, ModelKind};
+pub use objective::{CodedObjective, LinearObjective, LogisticObjective};
 pub use report::{IterationMetrics, TimingBreakdown, TrainReport};
 pub use session::{CodedMlSession, TrainError};
 pub use trace::Tracer;

@@ -1,0 +1,358 @@
+//! Pluggable coded objectives.
+//!
+//! The round engine in [`super::CodedMlSession`] is algorithm-agnostic:
+//! it quantizes weights, encodes, dispatches, collects the fastest R
+//! results, and decodes. Everything specific to *what* the workers
+//! compute lives behind [`CodedObjective`]:
+//!
+//! - how many independent weight quantizations a round sends (the worker
+//!   polynomial degree r for logistic, 1 for linear),
+//! - which worker op runs and with which field coefficients,
+//! - whether coded labels ship to the workers (linear: ỹ enters the
+//!   worker polynomial; logistic: the master holds y and subtracts X̄ᵀy
+//!   after decoding),
+//! - how decoded blocks assemble into a real-domain gradient,
+//! - loss / accuracy / default step size.
+//!
+//! [`LogisticObjective`] is paper Algorithm 1; [`LinearObjective`] is
+//! Remark 1 — the identity "activation" is already a polynomial, so the
+//! gradient estimator is exactly unbiased with no sigmoid-fit error term.
+
+use super::config::CodedMlConfig;
+use crate::cluster::WorkerOp;
+use crate::coding::Encoder;
+use crate::data::Dataset;
+use crate::model::{max_eig_xtx, tr_matvec, LinearRegression, LogisticRegression};
+use crate::quant::{phi, round_half_up, phi_inv, Dequantizer};
+use crate::sigmoid::SigmoidPoly;
+use crate::util::Rng;
+
+/// The algorithm-specific half of a CodedPrivateML session. One instance
+/// is built per session (it may precompute per-block master-side terms);
+/// the engine drives it once per round.
+pub trait CodedObjective: Send {
+    /// Short identifier ("logistic" | "linear") for reports and models.
+    fn name(&self) -> &'static str;
+
+    /// Columns of W̄ dispatched each round — the number of independent
+    /// stochastic weight quantizations the worker polynomial consumes.
+    fn weight_draws(&self) -> usize;
+
+    /// Which computation the workers run on their coded share.
+    fn worker_op(&self) -> WorkerOp;
+
+    /// Field-quantized polynomial coefficients delivered to every worker
+    /// (the sigmoid fit for logistic; a degree-1 placeholder for linear,
+    /// whose op ignores them).
+    fn worker_coeffs(&self) -> Vec<u64>;
+
+    /// Coded label shares (one per worker) for ops whose worker polynomial
+    /// consumes ỹ; `None` when the master keeps the labels to itself.
+    fn label_shares(&self, encoder: &Encoder, rng: &mut Rng) -> Option<Vec<Vec<u64>>>;
+
+    /// Assemble this round's real-domain gradient from the decoded field
+    /// blocks `(block index, f(X̄_k, W̄))`, normalized by the batch's row
+    /// count. The engine applies `w ← w − η·gradient`.
+    fn gradient(&self, blocks: &[(usize, Vec<u64>)]) -> Vec<f64>;
+
+    /// Training loss of `w` on the quantized dataset view `x` (the
+    /// quantity the paper's convergence theorem is stated on).
+    fn loss(&self, w: &[f64], x: &[f64], m: usize, d: usize) -> f64;
+
+    /// Held-out accuracy, when the objective has a notion of it.
+    fn accuracy(&self, w: &[f64], test: &Dataset) -> Option<f64>;
+
+    /// Step size η = 1/L from the objective's Lipschitz constant.
+    fn default_eta(&self, x: &[f64], m: usize, d: usize) -> f64;
+}
+
+/// Paper Algorithm 1: logistic regression with a degree-r polynomial
+/// sigmoid. Workers return X̃ᵀḡ(X̃, W̃); the master subtracts its locally
+/// held X̄ᵀy after decoding (eq. 19).
+pub struct LogisticObjective {
+    poly: SigmoidPoly,
+    field_coeffs: Vec<u64>,
+    dequant: Dequantizer,
+    r: usize,
+    /// X̄_kᵀ y_k per row block — the batch-local label term of eq. 19.
+    xty_blocks: Vec<Vec<f64>>,
+    y: Vec<f64>,
+    rows: usize,
+    d: usize,
+}
+
+impl LogisticObjective {
+    pub fn new(
+        cfg: &CodedMlConfig,
+        xbar_real: &[f64],
+        y: &[f64],
+        m: usize,
+        d: usize,
+        k: usize,
+    ) -> Self {
+        let field = cfg.field();
+        let poly = crate::sigmoid::fit_sigmoid_with(cfg.fit_method, cfg.r as u32, cfg.fit_range);
+        let field_coeffs = poly.field_coeffs(&field, cfg.lx, cfg.lw, cfg.lc);
+        let rows = m / k;
+        let xty_blocks = (0..k)
+            .map(|b| {
+                tr_matvec(
+                    &xbar_real[b * rows * d..(b + 1) * rows * d],
+                    &y[b * rows..(b + 1) * rows],
+                    rows,
+                    d,
+                )
+            })
+            .collect();
+        LogisticObjective {
+            poly,
+            field_coeffs,
+            dequant: Dequantizer::new(field, cfg.lx, cfg.lw, cfg.lc, cfg.r as u32),
+            r: cfg.r,
+            xty_blocks,
+            y: y.to_vec(),
+            rows,
+            d,
+        }
+    }
+
+    /// The fitted sigmoid polynomial (diagnostics / ablations).
+    pub fn sigmoid_poly(&self) -> &SigmoidPoly {
+        &self.poly
+    }
+}
+
+impl CodedObjective for LogisticObjective {
+    fn name(&self) -> &'static str {
+        "logistic"
+    }
+
+    fn weight_draws(&self) -> usize {
+        self.r
+    }
+
+    fn worker_op(&self) -> WorkerOp {
+        WorkerOp::Logistic
+    }
+
+    fn worker_coeffs(&self) -> Vec<u64> {
+        self.field_coeffs.clone()
+    }
+
+    fn label_shares(&self, _encoder: &Encoder, _rng: &mut Rng) -> Option<Vec<Vec<u64>>> {
+        None
+    }
+
+    fn gradient(&self, blocks: &[(usize, Vec<u64>)]) -> Vec<f64> {
+        let mut g = vec![0.0f64; self.d];
+        for (b, data) in blocks {
+            let xty = &self.xty_blocks[*b];
+            for ((gi, &q), &t) in g.iter_mut().zip(data.iter()).zip(xty.iter()) {
+                *gi += self.dequant.dequantize_entry(q) - t;
+            }
+        }
+        let batch_rows = (blocks.len() * self.rows) as f64;
+        for gi in g.iter_mut() {
+            *gi /= batch_rows;
+        }
+        g
+    }
+
+    fn loss(&self, w: &[f64], x: &[f64], m: usize, d: usize) -> f64 {
+        let ds = Dataset::new(x.to_vec(), self.y.clone(), m, d, "quantized-train");
+        LogisticRegression::with_weights(w.to_vec()).loss(&ds)
+    }
+
+    fn accuracy(&self, w: &[f64], test: &Dataset) -> Option<f64> {
+        Some(LogisticRegression::with_weights(w.to_vec()).accuracy(test))
+    }
+
+    fn default_eta(&self, x: &[f64], m: usize, d: usize) -> f64 {
+        // η = 1/L (Lemma 2, scaled by 1/m like the cost).
+        let l = 0.25 * max_eig_xtx(x, m, d, 30) / m as f64;
+        if l > 0.0 {
+            1.0 / l
+        } else {
+            1.0
+        }
+    }
+}
+
+/// Remark 1: linear regression. Workers hold coded labels ỹ and return
+/// X̃ᵀ(X̃w̃ − ỹ) — a degree-3 polynomial, the same recovery threshold as
+/// logistic at r = 1 — so the decoded blocks *are* the (unnormalized)
+/// sub-gradients; no master-side label term.
+pub struct LinearObjective {
+    dequant: Dequantizer,
+    /// Labels quantized at scale 2^(l_x+l_w) so ȳ matches X̄w̄'s scale.
+    ybar: Vec<u64>,
+    /// The real values ȳ represents — the regression view the loss and
+    /// convergence checks are stated on.
+    ybar_real: Vec<f64>,
+    m: usize,
+    rows: usize,
+    d: usize,
+}
+
+impl LinearObjective {
+    pub fn new(cfg: &CodedMlConfig, y: &[f64], m: usize, d: usize, k: usize) -> Self {
+        let field = cfg.field();
+        // X̄w̄ carries scale l_x + l_w, so the labels quantize at l_y =
+        // l_x + l_w and f = X̄ᵀ(X̄w̄ − ȳ) dequantizes at l_x + (l_x + l_w)
+        // — exactly the logistic scale with l_c = 0, r = 1.
+        let ly = cfg.lx + cfg.lw;
+        let scale = (1u64 << ly) as f64;
+        let ybar: Vec<u64> = y
+            .iter()
+            .map(|&v| phi(&field, round_half_up(scale * v)))
+            .collect();
+        let ybar_real: Vec<f64> = ybar.iter().map(|&q| phi_inv(&field, q) as f64 / scale).collect();
+        LinearObjective {
+            dequant: Dequantizer::new(field, cfg.lx, cfg.lw, 0, 1),
+            ybar,
+            ybar_real,
+            m,
+            rows: m / k,
+            d,
+        }
+    }
+
+    /// The dequantized label vector (tests compare decoded gradients
+    /// against plaintext gradients on exactly this view).
+    pub fn labels_real(&self) -> &[f64] {
+        &self.ybar_real
+    }
+}
+
+impl CodedObjective for LinearObjective {
+    fn name(&self) -> &'static str {
+        "linear"
+    }
+
+    fn weight_draws(&self) -> usize {
+        1
+    }
+
+    fn worker_op(&self) -> WorkerOp {
+        WorkerOp::Linear
+    }
+
+    fn worker_coeffs(&self) -> Vec<u64> {
+        // The Linear op never evaluates these; the backend constructor
+        // just needs a well-formed degree-1 coefficient vector.
+        vec![0, 1]
+    }
+
+    fn label_shares(&self, encoder: &Encoder, rng: &mut Rng) -> Option<Vec<Vec<u64>>> {
+        Some(
+            encoder
+                .encode_dataset(&self.ybar, self.m, 1, rng)
+                .into_iter()
+                .map(|s| s.data)
+                .collect(),
+        )
+    }
+
+    fn gradient(&self, blocks: &[(usize, Vec<u64>)]) -> Vec<f64> {
+        let mut g = vec![0.0f64; self.d];
+        for (_, data) in blocks {
+            for (gi, &q) in g.iter_mut().zip(data.iter()) {
+                *gi += self.dequant.dequantize_entry(q);
+            }
+        }
+        let batch_rows = (blocks.len() * self.rows) as f64;
+        for gi in g.iter_mut() {
+            *gi /= batch_rows;
+        }
+        g
+    }
+
+    fn loss(&self, w: &[f64], x: &[f64], m: usize, d: usize) -> f64 {
+        LinearRegression::with_weights(w.to_vec()).loss(x, &self.ybar_real, m, d)
+    }
+
+    fn accuracy(&self, _w: &[f64], _test: &Dataset) -> Option<f64> {
+        None // 0/1 accuracy is not defined for regression targets
+    }
+
+    fn default_eta(&self, x: &[f64], m: usize, d: usize) -> f64 {
+        let l = max_eig_xtx(x, m, d, 30) / m as f64;
+        if l > 0.0 {
+            1.0 / l
+        } else {
+            1.0
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::field::PAPER_PRIME;
+
+    fn cfg() -> CodedMlConfig {
+        CodedMlConfig { p: PAPER_PRIME, lx: 4, lw: 6, ..Default::default() }
+    }
+
+    #[test]
+    fn linear_label_quantization_round_trips_on_grid() {
+        // Values on the 2^-(lx+lw) grid are represented exactly.
+        let y = [0.5, -1.25, 0.0, 2.0];
+        let obj = LinearObjective::new(&cfg(), &y, 4, 2, 2);
+        assert_eq!(obj.labels_real(), &y);
+    }
+
+    #[test]
+    fn linear_gradient_sums_and_normalizes_blocks() {
+        let cfg = cfg();
+        let f = cfg.field();
+        let obj = LinearObjective::new(&cfg, &[0.0; 8], 8, 2, 2); // rows = 4
+        // Decoded entries represent integers at scale 2^(2lx+lw) = 2^14.
+        let one = phi(&f, 1 << 14); // represents 1.0
+        let blocks = vec![(0usize, vec![one, 0]), (1usize, vec![one, one])];
+        let g = obj.gradient(&blocks);
+        // Batch rows = 2 blocks × 4 rows; sums are [2.0, 1.0].
+        assert_eq!(g, vec![2.0 / 8.0, 1.0 / 8.0]);
+        // A single-block batch normalizes by that block's rows only.
+        let g1 = obj.gradient(&blocks[1..]);
+        assert_eq!(g1, vec![0.25, 0.25]);
+    }
+
+    #[test]
+    fn logistic_gradient_subtracts_batch_local_label_term() {
+        let cfg = CodedMlConfig::default(); // lx=2, lw=4, lc=3, r=1
+        let f = cfg.field();
+        // Two blocks of one row each: X̄ = [[1, 0], [0, 1]], y = [1, 0].
+        let xbar_real = [1.0, 0.0, 0.0, 1.0];
+        let y = [1.0, 0.0];
+        let obj = LogisticObjective::new(&cfg, &xbar_real, &y, 2, 2, 2);
+        let l = crate::quant::dequant_scale_bits(cfg.lx, cfg.lw, cfg.lc, cfg.r as u32);
+        let half = phi(&f, (1i64 << l) / 2); // decoded entry representing 0.5
+        // Block 0 decodes to [0.5, 0]; block 1 to [0, 0.5].
+        let blocks = vec![(0usize, vec![half, 0]), (1usize, vec![0, half])];
+        let g = obj.gradient(&blocks);
+        // X̄ᵀy per block: block 0 → [1, 0], block 1 → [0, 0].
+        // g = ([0.5-1, 0] + [0, 0.5-0]) / 2 rows = [-0.25, 0.25].
+        assert_eq!(g, vec![-0.25, 0.25]);
+        // Single-block batch uses only that block's label term.
+        let g0 = obj.gradient(&blocks[..1]);
+        assert_eq!(g0, vec![-0.5, 0.0]);
+    }
+
+    #[test]
+    fn objective_names_and_draws() {
+        let lin = LinearObjective::new(&cfg(), &[0.0; 4], 4, 2, 2);
+        assert_eq!(lin.name(), "linear");
+        assert_eq!(lin.weight_draws(), 1);
+        assert_eq!(lin.worker_op(), WorkerOp::Linear);
+        let mut cfg2 = CodedMlConfig::default();
+        cfg2.r = 2;
+        cfg2.n = 11;
+        cfg2.k = 2;
+        let log = LogisticObjective::new(&cfg2, &[0.0; 8], &[0.0; 4], 4, 2, 2);
+        assert_eq!(log.name(), "logistic");
+        assert_eq!(log.weight_draws(), 2);
+        assert_eq!(log.worker_op(), WorkerOp::Logistic);
+        assert_eq!(log.worker_coeffs().len(), 3); // degree-2 polynomial
+    }
+}

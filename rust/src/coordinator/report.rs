@@ -56,6 +56,13 @@ pub struct TrainReport {
     /// Bytes moved master→workers and workers→master (modeled).
     pub bytes_sent: u64,
     pub bytes_received: u64,
+    /// Worker step failures observed across the run (each also emits a
+    /// `worker_failure` tracer event). Training survives while the usable
+    /// count stays ≥ the recovery threshold.
+    pub worker_failures: u64,
+    /// Results that arrived after their round had already completed and
+    /// were drained without decoding (the early-exit engine's discards).
+    pub late_results: u64,
 }
 
 impl TrainReport {
@@ -78,6 +85,8 @@ impl TrainReport {
             ("recovery_threshold", Json::Num(self.recovery_threshold as f64)),
             ("bytes_sent", Json::Num(self.bytes_sent as f64)),
             ("bytes_received", Json::Num(self.bytes_received as f64)),
+            ("worker_failures", Json::Num(self.worker_failures as f64)),
+            ("late_results", Json::Num(self.late_results as f64)),
             (
                 "loss_curve",
                 Json::Arr(self.iterations.iter().map(|m| Json::Num(m.train_loss)).collect()),
@@ -121,6 +130,8 @@ mod tests {
         let j = rep.to_json();
         let parsed = Json::parse(&j.to_string()).unwrap();
         assert_eq!(parsed.get("total_s").unwrap().as_f64(), Some(3.5));
+        assert_eq!(parsed.get("worker_failures").unwrap().as_u64(), Some(0));
+        assert_eq!(parsed.get("late_results").unwrap().as_u64(), Some(0));
         let curve = parsed.get("loss_curve").unwrap().as_arr().unwrap();
         assert_eq!(curve.len(), 2);
         assert_eq!(parsed.get("accuracy_curve").unwrap().as_arr().unwrap()[1], Json::Null);

@@ -1,18 +1,18 @@
-//! The training session — paper Algorithm 1 end to end.
-
-use std::time::Instant;
+//! The training session: a streaming round engine (dispatch → consume
+//! results as they arrive → decode the fastest R) driving a pluggable
+//! [`CodedObjective`] — paper Algorithm 1 when the objective is logistic,
+//! Remark 1 when it is linear.
 
 use super::config::{CodedMlConfig, CompMode, ConfigError};
+use super::objective::{CodedObjective, LinearObjective, LogisticObjective};
 use super::report::{IterationMetrics, TimingBreakdown, TrainReport};
-use crate::cluster::{Cluster, ClusterError, StepResult, WorkerSpec};
-use crate::cluster::worker::WorkerOp;
-use crate::coding::{CodingParams, DecodeError, Decoder, Encoder};
+use crate::cluster::{Cluster, ClusterError, WorkerSpec};
 use crate::coding::decoder::WorkerResult;
+use crate::coding::{CodingParams, DecodeError, Decoder, Encoder};
 use crate::data::Dataset;
 use crate::field::PrimeField;
-use crate::model::{matvec, max_eig_xtx, tr_matvec, LogisticRegression};
-use crate::quant::{DatasetQuantizer, Dequantizer, WeightQuantizer};
-use crate::sigmoid::{fit_sigmoid_with, SigmoidPoly};
+use crate::model::matvec;
+use crate::quant::{DatasetQuantizer, WeightQuantizer};
 use crate::util::{Rng, Stopwatch};
 
 /// Errors surfaced during training.
@@ -57,25 +57,23 @@ impl From<DecodeError> for TrainError {
 }
 
 /// A live CodedPrivateML training session: cluster spawned, dataset
-/// encoded and secret-shared, ready to iterate.
-pub struct CodedMlSession {
+/// encoded and secret-shared, ready to iterate. Generic over the
+/// [`CodedObjective`] being trained; [`CodedMlSession::new`] builds the
+/// paper's logistic session, [`CodedMlSession::new_linear`] the Remark-1
+/// linear-regression one.
+pub struct CodedMlSession<O: CodedObjective = LogisticObjective> {
     cfg: CodedMlConfig,
     field: PrimeField,
     params: CodingParams,
     encoder: Encoder,
     decoder: Decoder,
     cluster: Cluster,
-    poly: SigmoidPoly,
+    objective: O,
     wquant: WeightQuantizer,
-    dequant: Dequantizer,
     /// Quantized dataset (field form, kept for ground-truth tests).
     pub xbar: Vec<u64>,
     /// Dequantized dataset — the X̄ the convergence theorem is stated on.
     xbar_real: Vec<f64>,
-    /// X̄ᵀy, precomputed (the master holds y; eq. 19 subtracts it after
-    /// decoding X̄ᵀḡ).
-    xbar_t_y: Vec<f64>,
-    y: Vec<f64>,
     /// Current weights (real domain).
     pub w: Vec<f64>,
     pub eta: f64,
@@ -83,10 +81,11 @@ pub struct CodedMlSession {
     d: usize,
     rows: usize,
     rng: Rng,
-    /// Independent stream for straggler delays so the timing simulation
-    /// never perturbs masks or stochastic quantization (the fastest-R
-    /// *subset* may differ, but LCC decoding is exact for any subset, so
-    /// the training trajectory is invariant — tested below).
+    /// Independent stream for the *modeled* straggler delays so the timing
+    /// simulation never perturbs masks or stochastic quantization. (The
+    /// decoded subset is whatever actually arrived first — LCC decoding is
+    /// exact for any subset, so the training trajectory is invariant;
+    /// tested below and in rust/tests/round_engine.rs.)
     straggle_rng: Rng,
     // timers
     t_encode: Stopwatch,
@@ -96,14 +95,66 @@ pub struct CodedMlSession {
     bytes_sent: u64,
     bytes_received: u64,
     iter: u64,
+    /// Failed worker steps observed (surfaced in [`TrainReport`] and as
+    /// `worker_failure` tracer events).
+    failures: u64,
+    /// Stale results drained by later rounds without decoding.
+    late: u64,
     tracer: super::trace::Tracer,
 }
 
-impl CodedMlSession {
-    /// Build the session: fit the sigmoid polynomial, quantize + encode +
-    /// secret-share the dataset, spawn the cluster. The dataset is trimmed
-    /// to a multiple of K rows.
+impl CodedMlSession<LogisticObjective> {
+    /// Build the paper's logistic session: fit the sigmoid polynomial,
+    /// quantize + encode + secret-share the dataset, spawn the cluster.
+    /// The dataset is trimmed to a multiple of K rows.
     pub fn new(cfg: CodedMlConfig, train: &Dataset) -> Result<Self, TrainError> {
+        Self::build(cfg, train, |cfg, xbar_real, y, m, d, k| {
+            Ok(LogisticObjective::new(cfg, xbar_real, y, m, d, k))
+        })
+    }
+
+    /// The sigmoid polynomial in use (diagnostics / ablations).
+    pub fn sigmoid_poly(&self) -> &crate::sigmoid::SigmoidPoly {
+        self.objective.sigmoid_poly()
+    }
+}
+
+impl CodedMlSession<LinearObjective> {
+    /// Build a coded linear-regression session (Remark 1): the labels are
+    /// quantized at scale 2^(l_x+l_w) and secret-shared to the workers
+    /// alongside X̃, and the worker op becomes X̃ᵀ(X̃w̃ − ỹ) — degree 3,
+    /// so the recovery threshold matches logistic at r = 1 (enforced).
+    pub fn new_linear(cfg: CodedMlConfig, train: &Dataset) -> Result<Self, TrainError> {
+        Self::build(cfg, train, |cfg, _xbar_real, y, m, d, k| {
+            if cfg.r != 1 {
+                return Err(TrainError::Config(ConfigError::BadShape(format!(
+                    "linear regression is a degree-3 worker polynomial (r = 1); got r = {}",
+                    cfg.r
+                ))));
+            }
+            Ok(LinearObjective::new(cfg, y, m, d, k))
+        })
+    }
+
+    /// The dequantized label view ȳ that the coded gradient targets.
+    pub fn labels_real(&self) -> &[f64] {
+        self.objective.labels_real()
+    }
+}
+
+impl<O: CodedObjective> CodedMlSession<O> {
+    fn build(
+        cfg: CodedMlConfig,
+        train: &Dataset,
+        make_objective: impl FnOnce(
+            &CodedMlConfig,
+            &[f64],
+            &[f64],
+            usize,
+            usize,
+            usize,
+        ) -> Result<O, TrainError>,
+    ) -> Result<Self, TrainError> {
         let params = cfg.coding_params()?;
         let field = cfg.field();
         let ds = train.take_rows_multiple_of(train.m, params.k);
@@ -119,10 +170,6 @@ impl CodedMlSession {
                 rep.utilization, params.k
             );
         }
-
-        // Sigmoid polynomial (real + field forms).
-        let poly = fit_sigmoid_with(cfg.fit_method, cfg.r as u32, cfg.fit_range);
-        let field_coeffs = poly.field_coeffs(&field, cfg.lx, cfg.lw, cfg.lc);
 
         let mut rng = Rng::new(cfg.seed);
         let straggle_rng = Rng::new(cfg.seed ^ 0x5742_4751_4c45);
@@ -146,16 +193,32 @@ impl CodedMlSession {
         let decoder = Decoder::new(field, params, encoder.points.clone())
             .with_parallelism(cfg.parallelism);
 
+        // Real-domain views the master needs.
+        let xbar_real: Vec<f64> = xbar.iter().map(|&q| xq.dequantize_entry(q)).collect();
+        let objective = make_objective(&cfg, &xbar_real, &ds.y, m, d, params.k)?;
+
+        // Coded labels (linear only) — encode time + one more broadcast.
+        let y_shares = t_encode.time(|| objective.label_shares(&encoder, &mut rng));
+
         // Model the dataset broadcast (optionally bit-packed on the wire).
-        let share_bytes = if cfg.packed_wire {
+        let mut share_bytes = if cfg.packed_wire {
             encoder.packed_share_bytes(m, d)
         } else {
             encoder.share_bytes(m, d)
         };
+        if y_shares.is_some() {
+            share_bytes += if cfg.packed_wire {
+                encoder.packed_share_bytes(m, 1)
+            } else {
+                encoder.share_bytes(m, 1)
+            };
+        }
         t_comm.add_seconds(cfg.net.fanout_time(params.n, share_bytes));
         let bytes_sent = share_bytes * params.n as u64;
 
         // Spawn workers & deliver shares.
+        let coeffs = objective.worker_coeffs();
+        let op = objective.worker_op();
         let specs: Vec<WorkerSpec> = (0..params.n)
             .map(|id| WorkerSpec {
                 id,
@@ -164,33 +227,24 @@ impl CodedMlSession {
                 field,
                 rows,
                 d,
-                coeffs: field_coeffs.clone(),
-                op: WorkerOp::Logistic,
-                // Chaos hook: the first `chaos_failures` workers die at
-                // `chaos_from_iter` (resilience tests).
+                coeffs: coeffs.clone(),
+                op,
+                // Chaos hooks: the first `chaos_failures` workers die at
+                // `chaos_from_iter`; the first `chaos_slow_workers` drag
+                // every step by `chaos_slow_ms` (the round engine must
+                // leave them behind, not wait — resilience tests).
                 fail_from_iter: (id < cfg.chaos_failures).then_some(cfg.chaos_from_iter),
+                slow_ms: if id < cfg.chaos_slow_workers { cfg.chaos_slow_ms } else { 0 },
                 par: cfg.parallelism,
             })
             .collect();
         let cluster = Cluster::spawn(specs)?;
-        cluster.load_data(shares.into_iter().map(|s| s.data).collect(), None)?;
+        cluster.load_data(shares.into_iter().map(|s| s.data).collect(), y_shares)?;
 
-        // Real-domain views the master needs.
-        let xbar_real: Vec<f64> = xbar.iter().map(|&q| xq.dequantize_entry(q)).collect();
-        let xbar_t_y = tr_matvec(&xbar_real, &ds.y, m, d);
-
-        // Step size: η = 1/L (Lemma 2, scaled by 1/m like the cost).
-        let eta = cfg.eta.unwrap_or_else(|| {
-            let l = 0.25 * max_eig_xtx(&xbar_real, m, d, 30) / m as f64;
-            if l > 0.0 {
-                1.0 / l
-            } else {
-                1.0
-            }
-        });
-
-        let wquant = WeightQuantizer::new(field, cfg.lw, cfg.r as u32);
-        let dequant = Dequantizer::new(field, cfg.lx, cfg.lw, cfg.lc, cfg.r as u32);
+        let eta = cfg
+            .eta
+            .unwrap_or_else(|| objective.default_eta(&xbar_real, m, d));
+        let wquant = WeightQuantizer::new(field, cfg.lw, objective.weight_draws() as u32);
 
         Ok(CodedMlSession {
             cfg,
@@ -199,13 +253,10 @@ impl CodedMlSession {
             encoder,
             decoder,
             cluster,
-            poly,
+            objective,
             wquant,
-            dequant,
             xbar,
             xbar_real,
-            xbar_t_y,
-            y: ds.y.clone(),
             w: vec![0.0; d],
             eta,
             m,
@@ -220,6 +271,8 @@ impl CodedMlSession {
             bytes_sent,
             bytes_received: 0,
             iter: 0,
+            failures: 0,
+            late: 0,
             tracer: super::trace::Tracer::disabled(),
         })
     }
@@ -238,6 +291,17 @@ impl CodedMlSession {
         self.params
     }
 
+    /// The objective being trained.
+    pub fn objective(&self) -> &O {
+        &self.objective
+    }
+
+    /// (worker failures, late results drained) so far — the round
+    /// engine's resilience counters, also carried by [`TrainReport`].
+    pub fn round_stats(&self) -> (u64, u64) {
+        (self.failures, self.late)
+    }
+
     /// Wire size of `count` field elements under the configured framing
     /// (raw u64 or bit-packed to the field width — util::bitpack).
     fn wire_bytes(&self, count: usize) -> u64 {
@@ -252,18 +316,33 @@ impl CodedMlSession {
         (self.m, self.d)
     }
 
-    /// The sigmoid polynomial in use (diagnostics / ablations).
-    pub fn sigmoid_poly(&self) -> &SigmoidPoly {
-        &self.poly
+    /// The row blocks iteration `iter` decodes and applies: all K when
+    /// `batch_blocks` is 0 (full batch), else a `batch_blocks`-wide window
+    /// rotating over the K blocks each round.
+    fn batch_for(&self, iter: u64) -> Vec<usize> {
+        let k = self.params.k;
+        let b = if self.cfg.batch_blocks == 0 { k } else { self.cfg.batch_blocks.min(k) };
+        let start = (iter as usize * b) % k;
+        (0..b).map(|i| (start + i) % k).collect()
     }
 
-    /// One full Algorithm-1 iteration; returns the decoded real-domain
-    /// X̄ᵀḡ (before the gradient update) for inspection.
+    /// One round of the streaming engine; returns the real-domain gradient
+    /// it applied (before the weight update) for inspection:
+    ///
+    /// 1. quantize + encode the weights, dispatch to all N workers;
+    /// 2. consume [`crate::cluster::StepResult`]s in actual arrival order
+    ///    and return from collection as soon as the fastest R usable
+    ///    results land ([`Cluster::collect_first`]) — late results are
+    ///    drained by *later* rounds and never decoded;
+    /// 3. feed the fastest-R subset straight into the per-subset-cached
+    ///    decoder (only this round's batch blocks), assemble the
+    ///    objective's gradient, update the weights.
     pub fn step(&mut self) -> Result<Vec<f64>, TrainError> {
         let need = self.params.recovery_threshold();
-        let (n, d, r) = (self.params.n, self.d, self.cfg.r);
+        let (n, d) = (self.params.n, self.d);
+        let draws = self.objective.weight_draws();
 
-        // (1) Quantize weights (r independent stochastic draws) + encode
+        // (1) Quantize weights (independent stochastic draws) + encode
         //     with fresh masks — both count as encode time.
         let w_shares = {
             let mut out = None;
@@ -271,61 +350,81 @@ impl CodedMlSession {
             let (wquant, encoder, w) = (&self.wquant, &self.encoder, &self.w);
             self.t_encode.time(|| {
                 let wq = wquant.quantize(w, rng);
-                out = Some(encoder.encode_weights(&wq, d, r, rng));
+                out = Some(encoder.encode_weights(&wq, d, draws, rng));
             });
             out.unwrap()
         };
 
         // (2) Master → workers: W̃ shares.
-        let wbytes = self.wire_bytes(d * r);
+        let wbytes = self.wire_bytes(d * draws);
         self.t_comm.add_seconds(self.cfg.net.fanout_time(n, wbytes));
         self.bytes_sent += wbytes * n as u64;
         self.cluster
             .dispatch(self.iter, w_shares.into_iter().map(|s| s.data).collect())?;
 
-        // (3) Collect everyone, model arrival = compute + straggle, keep
-        //     the fastest R.
-        let t_wall = Instant::now();
-        let mut results = self.cluster.collect_all(self.iter)?;
-        let wall = t_wall.elapsed().as_secs_f64();
+        // (3) Stream arrivals; stop at the fastest R usable results.
+        let round = self.cluster.collect_first(need, self.iter)?;
+        self.late += round.late_drained as u64;
+        // A failure is a failure whichever round's drain observed it —
+        // stale Errs (late_failures) still count and still trace.
+        self.failures += (round.failures.len() + round.late_failures.len()) as u64;
+        if self.tracer.enabled() {
+            use crate::util::json::Json;
+            for (worker, error) in round.failures.iter().chain(round.late_failures.iter()) {
+                self.tracer.event(
+                    "worker_failure",
+                    self.iter,
+                    &[
+                        ("worker", Json::Num(*worker as f64)),
+                        ("error", Json::Str(error.clone())),
+                    ],
+                );
+            }
+        }
+        if !round.ok() {
+            return Err(TrainError::TooManyFailures { ok: round.results.len(), need });
+        }
 
-        let mut arrivals: Vec<(f64, StepResult)> = results
-            .drain(..)
-            .filter_map(|res| match &res.data {
-                Ok(_) => {
-                    let delay = self.cfg.straggler.sample(&mut self.straggle_rng, res.compute_secs);
-                    Some((res.compute_secs + delay, res))
-                }
-                Err(msg) => {
-                    eprintln!("worker {} failed: {msg}", res.worker);
-                    None
-                }
+        // Modeled parallel time (the paper's N-independent-machines
+        // semantics): the R-th order statistic over the healthy workers of
+        // (compute + sampled straggle). The early exit leaves the
+        // stragglers' computes unmeasured; the coded blocks are
+        // equal-sized, so approximate those with the collected mean.
+        let mean_compute = round.results.iter().map(|r| r.compute_secs).sum::<f64>()
+            / round.results.len() as f64;
+        let healthy = n - round.failures.len();
+        let mut arrivals: Vec<f64> = (0..healthy)
+            .map(|i| {
+                let compute = round
+                    .results
+                    .get(i)
+                    .map(|r| r.compute_secs)
+                    .unwrap_or(mean_compute);
+                compute + self.cfg.straggler.sample(&mut self.straggle_rng, compute)
             })
             .collect();
-        if arrivals.len() < need {
-            return Err(TrainError::TooManyFailures { ok: arrivals.len(), need });
-        }
-        arrivals.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
-        arrivals.truncate(need);
-
+        arrivals.sort_by(f64::total_cmp);
         let iter_comp = match self.cfg.comp_mode {
-            CompMode::ModeledParallel => arrivals.last().unwrap().0,
-            CompMode::Wall => wall,
+            CompMode::ModeledParallel => arrivals[need - 1],
+            CompMode::Wall => round.wall_secs,
         };
         self.t_comp.add_seconds(iter_comp);
         if self.tracer.enabled() {
             use crate::util::json::Json;
-            let used: Vec<Json> = arrivals
+            let used: Vec<Json> = round
+                .results
                 .iter()
-                .map(|(_, r)| Json::Num(r.worker as f64))
+                .map(|r| Json::Num(r.worker as f64))
                 .collect();
             self.tracer.event(
                 "collect",
                 self.iter,
                 &[
                     ("comp_modeled_s", Json::Num(iter_comp)),
-                    ("wall_s", Json::Num(wall)),
+                    ("wall_s", Json::Num(round.wall_secs)),
                     ("fastest", Json::Arr(used)),
+                    ("late", Json::Num(round.late_drained as f64)),
+                    ("failed", Json::Num(round.failures.len() as f64)),
                 ],
             );
         }
@@ -335,32 +434,26 @@ impl CodedMlSession {
         self.t_comm.add_seconds(self.cfg.net.fanin_time(need, rbytes));
         self.bytes_received += rbytes * need as u64;
 
-        // (5) Decode the K sub-gradients and dequantize per block
+        // (5) Decode this round's batch blocks and assemble the gradient
         //     (per-block dequantization keeps the overflow budget at m/K
         //     rows — DESIGN.md §Numeric design).
-        let worker_results: Vec<WorkerResult> = arrivals
+        let worker_results: Vec<WorkerResult> = round
+            .results
             .into_iter()
-            .map(|(_, res)| WorkerResult { worker: res.worker, data: res.data.unwrap() })
+            .map(|res| WorkerResult { worker: res.worker, data: res.data.unwrap() })
             .collect();
-        let mut xtg_real = vec![0.0f64; d];
-        {
+        let batch = self.batch_for(self.iter);
+        let decoded = {
             let decoder = &mut self.decoder;
-            let dequant = &self.dequant;
-            let mut decoded = None;
-            self.t_decode.time(|| {
-                decoded = Some(decoder.decode(&worker_results, d));
-            });
-            let blocks = decoded.unwrap()?;
-            for block in blocks {
-                for (acc, &q) in xtg_real.iter_mut().zip(block.iter()) {
-                    *acc += dequant.dequantize_entry(q);
-                }
-            }
-        }
+            self.t_decode
+                .time(|| decoder.decode_blocks(&worker_results, d, &batch))?
+        };
+        let blocks: Vec<(usize, Vec<u64>)> = batch.into_iter().zip(decoded).collect();
+        let grad = self.objective.gradient(&blocks);
 
-        // (6) Gradient update (eq. 19): w ← w − η/m (X̄ᵀḡ − X̄ᵀy).
-        for ((w, &xtg), &xty) in self.w.iter_mut().zip(xtg_real.iter()).zip(self.xbar_t_y.iter()) {
-            *w -= self.eta / self.m as f64 * (xtg - xty);
+        // (6) Gradient update: w ← w − η·∇ (eq. 19 for logistic).
+        for (w, &g) in self.w.iter_mut().zip(grad.iter()) {
+            *w -= self.eta * g;
         }
 
         if self.tracer.enabled() {
@@ -376,25 +469,20 @@ impl CodedMlSession {
             );
         }
         self.iter += 1;
-        Ok(xtg_real)
+        Ok(grad)
     }
 
-    /// Cross-entropy of the current weights on the quantized training set
-    /// (the quantity Theorem 1 bounds).
+    /// Loss of the current weights on the quantized training set (the
+    /// quantity Theorem 1 bounds; objective-specific: cross-entropy for
+    /// logistic, MSE for linear).
     pub fn train_loss(&self) -> f64 {
-        let ds = Dataset::new(
-            self.xbar_real.clone(),
-            self.y.clone(),
-            self.m,
-            self.d,
-            "quantized-train",
-        );
-        LogisticRegression::with_weights(self.w.clone()).loss(&ds)
+        self.objective.loss(&self.w, &self.xbar_real, self.m, self.d)
     }
 
-    /// Accuracy of the current weights on a held-out set.
-    pub fn accuracy(&self, test: &Dataset) -> f64 {
-        LogisticRegression::with_weights(self.w.clone()).accuracy(test)
+    /// Accuracy of the current weights on a held-out set, when the
+    /// objective defines one (regression objectives return None).
+    pub fn accuracy(&self, test: &Dataset) -> Option<f64> {
+        self.objective.accuracy(&self.w, test)
     }
 
     /// Run `iters` iterations, recording loss (and accuracy when a test
@@ -406,13 +494,13 @@ impl CodedMlSession {
             iterations.push(IterationMetrics {
                 iter: it,
                 train_loss: self.train_loss(),
-                test_accuracy: test.map(|ts| self.accuracy(ts)),
+                test_accuracy: test.and_then(|ts| self.accuracy(ts)),
             });
         }
         Ok(self.report(iterations))
     }
 
-    /// Estimated sigmoid input range actually seen (diagnostics for
+    /// Estimated activation input range actually seen (diagnostics for
     /// choosing `fit_range`).
     pub fn activation_range(&self) -> (f64, f64) {
         let z = matvec(&self.xbar_real, &self.w, self.m, self.d);
@@ -434,13 +522,16 @@ impl CodedMlSession {
             recovery_threshold: self.params.recovery_threshold(),
             bytes_sent: self.bytes_sent,
             bytes_received: self.bytes_received,
+            worker_failures: self.failures,
+            late_results: self.late,
         }
     }
 }
 
-impl std::fmt::Debug for CodedMlSession {
+impl<O: CodedObjective> std::fmt::Debug for CodedMlSession<O> {
     fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
         f.debug_struct("CodedMlSession")
+            .field("objective", &self.objective.name())
             .field("params", &self.params)
             .field("m", &self.m)
             .field("d", &self.d)
@@ -456,7 +547,8 @@ impl std::fmt::Debug for CodedMlSession {
 mod tests {
     use super::*;
     use crate::cluster::{NetworkModel, StragglerModel};
-    use crate::data::synthetic_3v7;
+    use crate::data::{synthetic_3v7, synthetic_planted_linear};
+    use crate::model::{tr_matvec, LinearRegression};
 
     fn quick_cfg(n: usize, k: usize, t: usize) -> CodedMlConfig {
         CodedMlConfig {
@@ -466,6 +558,17 @@ mod tests {
             straggler: StragglerModel::none(),
             net: NetworkModel::free(),
             ..Default::default()
+        }
+    }
+
+    fn linear_cfg(n: usize, k: usize, t: usize) -> CodedMlConfig {
+        CodedMlConfig {
+            n,
+            k,
+            t,
+            straggler: StragglerModel::none(),
+            net: NetworkModel::free(),
+            ..CodedMlConfig::linear()
         }
     }
 
@@ -483,6 +586,7 @@ mod tests {
         assert_eq!(report.recovery_threshold, 10);
         assert!(report.breakdown.encode_s > 0.0);
         assert!(report.breakdown.comp_s > 0.0);
+        assert_eq!(report.worker_failures, 0);
     }
 
     #[test]
@@ -496,34 +600,31 @@ mod tests {
         let cfg = quick_cfg(10, 3, 1);
         let mut sess = CodedMlSession::new(cfg.clone(), &train).unwrap();
         let eta = sess.eta;
-        let xtg = sess.step().unwrap();
+        let grad = sess.step().unwrap();
 
         // Plaintext: with w=0 every w̄ column is 0, so X̄w̄ = 0 and
-        // ḡ = c̄₀/2^l — i.e. ĝ(0) after dequantization.
+        // ḡ = ĝ(0) entrywise; the applied gradient is (X̄ᵀḡ − X̄ᵀy)/m.
         let g0 = sess.sigmoid_poly().eval(0.0);
-        // decoded X̄ᵀḡ ≈ X̄ᵀ·(ḡ(0)·1) entrywise (exactly: quantized c̄₀).
         let ds = train.take_rows_multiple_of(60, 3);
         let xq = crate::quant::DatasetQuantizer::new(cfg.field(), cfg.lx);
         let xbar = xq.quantize(&ds.x);
         let xbar_real: Vec<f64> = xbar.iter().map(|&q| xq.dequantize_entry(q)).collect();
         let ones_g: Vec<f64> = vec![g0; ds.m];
-        let expect = crate::model::tr_matvec(&xbar_real, &ones_g, ds.m, ds.d);
-        for (a, b) in xtg.iter().zip(expect.iter()) {
+        let xtg = tr_matvec(&xbar_real, &ones_g, ds.m, ds.d);
+        let xty = tr_matvec(&xbar_real, &ds.y, ds.m, ds.d);
+        let expect: Vec<f64> = xtg
+            .iter()
+            .zip(xty.iter())
+            .map(|(&a, &b)| (a - b) / ds.m as f64)
+            .collect();
+        for (a, b) in grad.iter().zip(expect.iter()) {
             // c̄₀ rounding introduces ≤ 2^-(lc + r(lx+lw)) per-row error,
-            // times Σ|X̄| per column; keep a generous bound.
-            assert!((a - b).abs() < 1.0 + b.abs() * 0.01, "{a} vs {b}");
+            // times Σ|X̄|/m per column; keep a generous bound.
+            assert!((a - b).abs() < 1.0 / ds.m as f64 + b.abs() * 0.01, "{a} vs {b}");
         }
-        // And the weight moved in the -gradient direction.
-        let grad_dir: Vec<f64> = sess.w.clone();
-        let manual: Vec<f64> = {
-            let xty = crate::model::tr_matvec(&xbar_real, &ds.y, ds.m, ds.d);
-            expect
-                .iter()
-                .zip(xty.iter())
-                .map(|(&xg, &xy)| -eta / ds.m as f64 * (xg - xy))
-                .collect()
-        };
-        for (a, b) in grad_dir.iter().zip(manual.iter()) {
+        // And the weight moved in the -gradient direction: w = −η·∇.
+        let manual: Vec<f64> = expect.iter().map(|&g| -eta * g).collect();
+        for (a, b) in sess.w.iter().zip(manual.iter()) {
             assert!((a - b).abs() < 1e-3 + b.abs() * 0.02, "{a} vs {b}");
         }
     }
@@ -535,7 +636,8 @@ mod tests {
         cfg_a.iters = 3;
         let mut cfg_b = cfg_a.clone();
         cfg_b.straggler = StragglerModel { shift: 0.5, rate: 2.0, relative: true };
-        // Same seed → same masks/quantizations; decode is exact either way.
+        // Same seed → same masks/quantizations; decode is exact for any
+        // arrival subset, so only the modeled timing may differ.
         let mut sa = CodedMlSession::new(cfg_a, &train).unwrap();
         let mut sb = CodedMlSession::new(cfg_b, &train).unwrap();
         let ra = sa.train(3, None).unwrap();
@@ -553,11 +655,14 @@ mod tests {
         sess.step().unwrap();
         sess.step().unwrap();
         let events = sess.tracer().events();
-        // Two iterations × (collect + step).
+        // Two iterations × (collect + step); no failures, so no
+        // worker_failure events.
         assert_eq!(events.len(), 4);
         assert_eq!(events[0].get("event").unwrap().as_str(), Some("collect"));
         let fastest = events[0].get("fastest").unwrap().as_arr().unwrap();
         assert_eq!(fastest.len(), 10, "threshold-many workers recorded");
+        assert_eq!(events[0].get("failed").unwrap().as_u64(), Some(0));
+        assert_eq!(events[0].get("late").unwrap().as_u64(), Some(0));
         assert!(events[1].get("encode_total_s").unwrap().as_f64().unwrap() > 0.0);
     }
 
@@ -625,9 +730,97 @@ mod tests {
     }
 
     #[test]
+    fn linear_session_recovers_planted_model() {
+        // Remark 1 end to end: coded linear regression on a planted task
+        // converges to w*, with an MSE curve that never increases (the
+        // identity activation makes the estimator exactly unbiased; the
+        // tolerance absorbs stochastic weight-quantization noise).
+        let (train, w_star) = synthetic_planted_linear(120, 8, 31);
+        let mut sess = CodedMlSession::new_linear(linear_cfg(10, 3, 1), &train).unwrap();
+        assert_eq!(sess.params().recovery_threshold(), 10);
+        let l0 = sess.train_loss();
+        let report = sess.train(30, None).unwrap();
+        let losses: Vec<f64> = report.iterations.iter().map(|m| m.train_loss).collect();
+        for w in losses.windows(2) {
+            // 1e-3 absorbs the stochastic-quantization noise floor at the
+            // bottom of the curve (~½L‖ε‖² with ‖ε‖ ~ √d·2^-l_w).
+            assert!(w[1] <= w[0] + 1e-3, "loss bump {} → {}", w[0], w[1]);
+        }
+        assert!(losses[0] <= l0, "first step must improve on w = 0");
+        assert!(*losses.last().unwrap() < 0.05 * l0, "final loss {losses:?}");
+        let err = LinearRegression::with_weights(report.weights.clone()).distance_to(&w_star);
+        assert!(err < 0.15, "‖w − w*‖ = {err}");
+        // Regression has no 0/1 accuracy.
+        let (test, _) = synthetic_planted_linear(30, 8, 32);
+        assert_eq!(sess.accuracy(&test), None);
+    }
+
+    #[test]
+    fn linear_first_step_is_exact_plaintext_gradient() {
+        // With w₀ = 0 the stochastic weight quantization is exact, the
+        // worker polynomial is −X̃ᵀỹ, and the decode is integer-exact —
+        // so the coded gradient must equal the plaintext gradient on the
+        // quantized views to f64 round-off.
+        let (train, _) = synthetic_planted_linear(60, 6, 7);
+        let cfg = linear_cfg(10, 3, 1);
+        let mut sess = CodedMlSession::new_linear(cfg.clone(), &train).unwrap();
+        let grad = sess.step().unwrap();
+
+        let ds = train.take_rows_multiple_of(60, 3);
+        let xq = crate::quant::DatasetQuantizer::new(cfg.field(), cfg.lx);
+        let xbar_real: Vec<f64> = xq
+            .quantize(&ds.x)
+            .iter()
+            .map(|&q| xq.dequantize_entry(q))
+            .collect();
+        let plain = LinearRegression::new(ds.d);
+        let want = plain.gradient(&xbar_real, sess.labels_real(), ds.m, ds.d);
+        for (a, b) in grad.iter().zip(want.iter()) {
+            assert!((a - b).abs() < 1e-9, "{a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn linear_rejects_higher_degree() {
+        let (train, _) = synthetic_planted_linear(60, 4, 9);
+        let mut cfg = linear_cfg(16, 2, 1);
+        cfg.r = 2;
+        let err = CodedMlSession::new_linear(cfg, &train).unwrap_err();
+        assert!(err.to_string().contains("r = 1"), "{err}");
+    }
+
+    #[test]
+    fn mini_batch_rotation_trains_and_rotates() {
+        let train = synthetic_3v7(120, 13);
+        let mut cfg = quick_cfg(10, 3, 1);
+        cfg.batch_blocks = 1;
+        let mut sess = CodedMlSession::new(cfg, &train).unwrap();
+        // The rotating window visits every block in turn.
+        assert_eq!(sess.batch_for(0), vec![0]);
+        assert_eq!(sess.batch_for(1), vec![1]);
+        assert_eq!(sess.batch_for(2), vec![2]);
+        assert_eq!(sess.batch_for(3), vec![0]);
+        sess.eta *= 0.5; // mini-batch steps are noisier; damp the default 1/L
+        let l0 = sess.train_loss();
+        let report = sess.train(12, None).unwrap();
+        assert!(report.final_loss().unwrap() < l0 * 0.9, "{report:?}");
+    }
+
+    #[test]
+    fn mini_batch_window_wider_than_one() {
+        let train = synthetic_3v7(120, 14);
+        let mut cfg = quick_cfg(10, 3, 1);
+        cfg.batch_blocks = 2;
+        let sess = CodedMlSession::new(cfg, &train).unwrap();
+        assert_eq!(sess.batch_for(0), vec![0, 1]);
+        assert_eq!(sess.batch_for(1), vec![2, 0]);
+        assert_eq!(sess.batch_for(2), vec![1, 2]);
+    }
+
+    #[test]
     fn linear_regression_threshold_reuse() {
         // CodingParams algebra is shared; the Linear op is exercised in
-        // cluster::worker tests and examples/linear_regression.rs.
+        // cluster::worker tests and linear_session_recovers_planted_model.
         let p = CodingParams::new(10, 3, 1, 1).unwrap();
         assert_eq!(p.recovery_threshold(), 10);
     }

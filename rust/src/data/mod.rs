@@ -6,14 +6,17 @@ mod mnist;
 mod synth;
 
 pub use mnist::{load_mnist_3v7, MnistError};
-pub use synth::synthetic_3v7;
+pub use synth::{synthetic_3v7, synthetic_planted_linear};
 
-/// A dense binary-classification dataset.
+/// A dense supervised dataset: {0,1} labels for classification
+/// ([`Dataset::new`]) or real targets for regression
+/// ([`Dataset::regression`]).
 #[derive(Debug, Clone)]
 pub struct Dataset {
     /// Row-major m×d features.
     pub x: Vec<f64>,
-    /// Labels in {0.0, 1.0}, length m.
+    /// Labels — {0.0, 1.0} for classification, arbitrary reals for
+    /// regression.
     pub y: Vec<f64>,
     pub m: usize,
     pub d: usize,
@@ -22,10 +25,20 @@ pub struct Dataset {
 }
 
 impl Dataset {
+    /// Binary-classification dataset; labels must be exactly 0.0 or 1.0.
     pub fn new(x: Vec<f64>, y: Vec<f64>, m: usize, d: usize, source: &str) -> Self {
+        assert!(y.iter().all(|&v| v == 0.0 || v == 1.0));
+        Self::unchecked(x, y, m, d, source)
+    }
+
+    /// Regression dataset — real-valued targets, no label constraint.
+    pub fn regression(x: Vec<f64>, y: Vec<f64>, m: usize, d: usize, source: &str) -> Self {
+        Self::unchecked(x, y, m, d, source)
+    }
+
+    fn unchecked(x: Vec<f64>, y: Vec<f64>, m: usize, d: usize, source: &str) -> Self {
         assert_eq!(x.len(), m * d);
         assert_eq!(y.len(), m);
-        assert!(y.iter().all(|&v| v == 0.0 || v == 1.0));
         Dataset { x, y, m, d, source: source.to_string() }
     }
 
@@ -44,7 +57,7 @@ impl Dataset {
             x.extend_from_slice(row);
             x.extend_from_slice(row);
         }
-        Dataset::new(x, self.y.clone(), self.m, d2, &format!("{}-dup", self.source))
+        Dataset::unchecked(x, self.y.clone(), self.m, d2, &format!("{}-dup", self.source))
     }
 
     /// Truncate (or keep) to the first `m` rows, rounding down so `m` is a
@@ -52,7 +65,7 @@ impl Dataset {
     pub fn take_rows_multiple_of(&self, m: usize, k: usize) -> Dataset {
         let m = (m.min(self.m) / k) * k;
         assert!(m > 0, "dataset too small for K={k}");
-        Dataset::new(
+        Dataset::unchecked(
             self.x[..m * self.d].to_vec(),
             self.y[..m].to_vec(),
             m,
@@ -64,7 +77,7 @@ impl Dataset {
     /// Split into (train, test) at `train_m` rows.
     pub fn split(&self, train_m: usize) -> (Dataset, Dataset) {
         assert!(train_m < self.m);
-        let train = Dataset::new(
+        let train = Dataset::unchecked(
             self.x[..train_m * self.d].to_vec(),
             self.y[..train_m].to_vec(),
             train_m,
@@ -72,7 +85,7 @@ impl Dataset {
             &self.source,
         );
         let test_m = self.m - train_m;
-        let test = Dataset::new(
+        let test = Dataset::unchecked(
             self.x[train_m * self.d..].to_vec(),
             self.y[train_m..].to_vec(),
             test_m,

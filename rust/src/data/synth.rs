@@ -120,6 +120,22 @@ pub fn synthetic_3v7(m: usize, seed: u64) -> Dataset {
     Dataset::new(x, y, m, D, "synthetic-3v7")
 }
 
+/// Planted linear-regression task (Remark 1's workload): x ~ U[-1, 1]^d,
+/// y = x·w* exactly, with a fixed seeded w* of entries in [-0.5, 0.5].
+/// Returns `(dataset, w*)` so callers can measure recovery error.
+pub fn synthetic_planted_linear(m: usize, d: usize, seed: u64) -> (Dataset, Vec<f64>) {
+    let mut rng = Rng::new(seed ^ 0x11EA);
+    let w_star: Vec<f64> = (0..d).map(|_| rng.range_f64(-0.5, 0.5)).collect();
+    let mut x = Vec::with_capacity(m * d);
+    let mut y = Vec::with_capacity(m);
+    for _ in 0..m {
+        let row: Vec<f64> = (0..d).map(|_| rng.range_f64(-1.0, 1.0)).collect();
+        y.push(row.iter().zip(w_star.iter()).map(|(a, b)| a * b).sum());
+        x.extend(row);
+    }
+    (Dataset::regression(x, y, m, d, "planted-linear"), w_star)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -176,6 +192,25 @@ mod tests {
             .sum::<f64>()
             .sqrt();
         assert!(sep > 3.0, "class-mean separation {sep}");
+    }
+
+    #[test]
+    fn planted_linear_is_deterministic_and_recoverable() {
+        let (ds, w_star) = synthetic_planted_linear(64, 4, 3);
+        assert_eq!(ds.m, 64);
+        assert_eq!(ds.d, 4);
+        assert_eq!(w_star.len(), 4);
+        assert!(ds.x.iter().all(|&v| (-1.0..=1.0).contains(&v)));
+        let (ds2, w2) = synthetic_planted_linear(64, 4, 3);
+        assert_eq!(ds.x, ds2.x);
+        assert_eq!(w_star, w2);
+        // y really is X·w* — plaintext GD recovers the planted model.
+        let mut lin = crate::model::LinearRegression::new(4);
+        let eta = lin.lipschitz_lr(&ds.x, 64, 4);
+        for _ in 0..500 {
+            lin.step(&ds.x, &ds.y, 64, 4, eta);
+        }
+        assert!(lin.distance_to(&w_star) < 1e-6, "{:?}", lin.w);
     }
 
     #[test]

@@ -15,6 +15,20 @@ impl LinearRegression {
         LinearRegression { w: vec![0.0; d] }
     }
 
+    pub fn with_weights(w: Vec<f64>) -> Self {
+        LinearRegression { w }
+    }
+
+    /// ‖w − w*‖₂ — recovery error against a planted model.
+    pub fn distance_to(&self, w_star: &[f64]) -> f64 {
+        self.w
+            .iter()
+            .zip(w_star.iter())
+            .map(|(a, b)| (a - b) * (a - b))
+            .sum::<f64>()
+            .sqrt()
+    }
+
     /// Mean squared error ½·mean((Xw − y)²).
     pub fn loss(&self, x: &[f64], y: &[f64], m: usize, d: usize) -> f64 {
         let z = matvec(x, &self.w, m, d);

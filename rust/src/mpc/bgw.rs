@@ -436,6 +436,9 @@ impl BgwGradientProtocol {
             recovery_threshold: 2 * self.t + 1,
             bytes_sent: self.report.bytes_master_to_worker,
             bytes_received: self.report.bytes_worker_to_master,
+            // BGW is lock-step: no early exit, no failure tolerance.
+            worker_failures: 0,
+            late_results: 0,
         }
     }
 

@@ -33,6 +33,15 @@ impl std::str::FromStr for BackendKind {
     }
 }
 
+impl std::fmt::Display for BackendKind {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(match self {
+            BackendKind::Native => "native",
+            BackendKind::Xla => "xla",
+        })
+    }
+}
+
 /// A worker's compute engine. Constructed inside the worker thread.
 pub enum WorkerBackend {
     Native(WorkerComputation),

@@ -35,6 +35,15 @@ impl std::str::FromStr for FitMethod {
     }
 }
 
+impl std::fmt::Display for FitMethod {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(match self {
+            FitMethod::LeastSquares => "lsq",
+            FitMethod::Chebyshev => "chebyshev",
+        })
+    }
+}
+
 /// Fit with the chosen method.
 pub fn fit_sigmoid_with(method: FitMethod, r: u32, range: f64) -> SigmoidPoly {
     match method {

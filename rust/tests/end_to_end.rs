@@ -5,8 +5,8 @@
 
 use codedml::cluster::{NetworkModel, StragglerModel};
 use codedml::coordinator::{CodedMlConfig, CodedMlSession};
-use codedml::data::synthetic_3v7;
-use codedml::model::LogisticRegression;
+use codedml::data::{synthetic_3v7, synthetic_planted_linear};
+use codedml::model::{LinearRegression, LogisticRegression};
 use codedml::mpc::{BgwConfig, BgwGradientProtocol};
 
 fn fast_cfg(n: usize, k: usize, t: usize) -> CodedMlConfig {
@@ -151,6 +151,44 @@ fn parallel_training_is_bit_exact_with_serial() {
         assert_eq!(report.weights, serial.weights, "par={par}");
         assert_eq!(report.bytes_sent, serial.bytes_sent);
         assert_eq!(report.bytes_received, serial.bytes_received);
+    }
+}
+
+/// Remark 1 end to end: coded linear regression tracks plaintext gradient
+/// descent on the same planted task — same trainer, different substrate —
+/// and both recover w* to within the quantization floor.
+#[test]
+fn coded_linear_regression_tracks_plaintext_gd() {
+    let (train, w_star) = synthetic_planted_linear(120, 8, 41);
+    let cfg = CodedMlConfig {
+        n: 10,
+        k: 3,
+        t: 1,
+        net: NetworkModel::free(),
+        straggler: StragglerModel::none(),
+        ..CodedMlConfig::linear()
+    };
+    let mut sess = CodedMlSession::new_linear(cfg, &train).unwrap();
+    let eta = sess.eta;
+    let report = sess.train(30, None).unwrap();
+
+    // Plaintext GD with the same step count on the raw data.
+    let mut plain = LinearRegression::new(8);
+    for _ in 0..30 {
+        plain.step(&train.x, &train.y, 120, 8, eta);
+    }
+    let coded_err = LinearRegression::with_weights(report.weights.clone()).distance_to(&w_star);
+    let plain_err = plain.distance_to(&w_star);
+    assert!(coded_err < 0.15, "coded ‖w − w*‖ = {coded_err}");
+    assert!(
+        coded_err < plain_err + 0.1,
+        "coded {coded_err} should track plaintext {plain_err}"
+    );
+    // MSE on the quantized view never increases (tolerance absorbs the
+    // stochastic weight-quantization noise floor at the curve's bottom).
+    let losses: Vec<f64> = report.iterations.iter().map(|m| m.train_loss).collect();
+    for w in losses.windows(2) {
+        assert!(w[1] <= w[0] + 1e-3, "loss bump {} → {}", w[0], w[1]);
     }
 }
 

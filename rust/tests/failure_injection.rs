@@ -24,15 +24,36 @@ fn surviving_within_slack_preserves_trajectory_exactly() {
 
     let mut healthy = CodedMlSession::new(base_cfg(), &train).unwrap();
     let ref_report = healthy.train(6, None).unwrap();
+    assert_eq!(ref_report.worker_failures, 0);
 
     // Kill 3 workers (exactly the slack) from iteration 2 on.
     let cfg = CodedMlConfig { chaos_failures: 3, chaos_from_iter: 2, ..base_cfg() };
     let mut wounded = CodedMlSession::new(cfg, &train).unwrap();
+    wounded.set_tracer(codedml::coordinator::Tracer::memory());
     let report = wounded.train(6, None).unwrap();
 
     assert_eq!(
         ref_report.weights, report.weights,
         "trajectory must be identical with slack-many failures"
+    );
+    // Failures don't vanish: counted in the report (3 per iteration from
+    // iteration 2 on) and emitted as structured tracer events. An Err
+    // landing after its round completed is drained — and still counted —
+    // by the next round, so only the final iteration's in-flight failures
+    // can escape the tally.
+    let fails = report.worker_failures;
+    assert!((9..=12).contains(&fails), "worker_failures = {fails}");
+    let failure_events: Vec<_> = wounded
+        .tracer()
+        .events()
+        .iter()
+        .filter(|e| e.get("event").unwrap().as_str() == Some("worker_failure"))
+        .collect();
+    assert_eq!(failure_events.len() as u64, fails);
+    assert!(failure_events[0].get("worker").unwrap().as_u64().unwrap() < 3);
+    assert_eq!(
+        failure_events[0].get("error").unwrap().as_str(),
+        Some("injected fault")
     );
 }
 

@@ -1,0 +1,186 @@
+//! The streaming round engine end to end: with a real slow worker in the
+//! cluster, `collect_first` must (a) return without waiting for it,
+//! (b) decode bit-identically to a full collection restricted to the same
+//! subset, and (c) drain the slow worker's late results without ever
+//! deadlocking or leaking them into a later iteration's decode.
+
+use std::path::PathBuf;
+use std::time::{Duration, Instant};
+
+use codedml::cluster::{Cluster, NetworkModel, StragglerModel, WorkerOp, WorkerSpec};
+use codedml::coding::{CodingParams, Decoder, Encoder, WorkerResult};
+use codedml::compute::WorkerComputation;
+use codedml::coordinator::{CodedMlConfig, CodedMlSession};
+use codedml::data::synthetic_3v7;
+use codedml::field::{PrimeField, PAPER_PRIME};
+use codedml::util::{Parallelism, Rng};
+
+fn specs(n: usize, rows: usize, d: usize, coeffs: Vec<u64>, slow: &[usize]) -> Vec<WorkerSpec> {
+    let f = PrimeField::new(PAPER_PRIME);
+    (0..n)
+        .map(|id| WorkerSpec {
+            id,
+            kind: codedml::runtime::BackendKind::Native,
+            artifact_dir: PathBuf::from("artifacts"),
+            field: f,
+            rows,
+            d,
+            coeffs: coeffs.clone(),
+            op: WorkerOp::Logistic,
+            fail_from_iter: None,
+            slow_ms: if slow.contains(&id) { 80 } else { 0 },
+            par: Parallelism::Serial,
+        })
+        .collect()
+}
+
+/// Early-exit decoding must be bit-identical to the old full-collection
+/// path on the same subset — run both against one dispatch, iteration by
+/// iteration, and also check against ground truth on the true blocks.
+#[test]
+fn collect_first_decodes_bit_identically_to_full_collection() {
+    let f = PrimeField::new(PAPER_PRIME);
+    let (n, k, t) = (13usize, 3usize, 1usize);
+    let params = CodingParams::new(n, k, t, 1).unwrap();
+    let need = params.recovery_threshold(); // 10 → slack 3
+    let (rows, d) = (4usize, 6usize);
+    let m = rows * k;
+    let coeffs = vec![3u64, 7];
+
+    let mut rng = Rng::new(5);
+    let xq = f.random_matrix(&mut rng, m, d);
+    let enc = Encoder::new(f, params);
+    let x_shares: Vec<Vec<u64>> = enc
+        .encode_dataset(&xq, m, d, &mut rng)
+        .into_iter()
+        .map(|s| s.data)
+        .collect();
+
+    // Two identical clusters over the same shares, each with worker 7
+    // slowed by 80 ms: A exits early, B collects everyone.
+    let early = Cluster::spawn(specs(n, rows, d, coeffs.clone(), &[7])).unwrap();
+    let full = Cluster::spawn(specs(n, rows, d, coeffs.clone(), &[7])).unwrap();
+    early.load_data(x_shares.clone(), None).unwrap();
+    full.load_data(x_shares.clone(), None).unwrap();
+
+    let wc = WorkerComputation::new(f, rows, d, coeffs);
+    let mut dec_early = Decoder::new(f, params, enc.points.clone());
+    let mut dec_full = Decoder::new(f, params, enc.points.clone());
+
+    for iter in 0..3u64 {
+        let wq = f.random_matrix(&mut rng, d, 1);
+        let w_shares: Vec<Vec<u64>> = enc
+            .encode_weights(&wq, d, 1, &mut rng)
+            .into_iter()
+            .map(|s| s.data)
+            .collect();
+
+        early.dispatch(iter, w_shares.clone()).unwrap();
+        let t0 = Instant::now();
+        let round = early.collect_first(need, iter).unwrap();
+        assert!(round.ok());
+        assert!(
+            t0.elapsed() < Duration::from_millis(60),
+            "collection must not wait out the 80 ms straggler"
+        );
+        let subset: Vec<WorkerResult> = round
+            .results
+            .iter()
+            .map(|r| WorkerResult { worker: r.worker, data: r.data.clone().unwrap() })
+            .collect();
+        let decoded_early = dec_early.decode(&subset, d).unwrap();
+
+        // Full collection on the twin cluster, restricted to the same
+        // worker subset (this is exactly what the deleted lock-step path
+        // decoded) — must be bit-identical.
+        full.dispatch(iter, w_shares).unwrap();
+        let all = full.collect_first(n, iter).unwrap();
+        assert_eq!(all.results.len(), n);
+        let used: Vec<usize> = subset.iter().map(|r| r.worker).collect();
+        let same_subset: Vec<WorkerResult> = all
+            .results
+            .iter()
+            .filter(|r| used.contains(&r.worker))
+            .map(|r| WorkerResult { worker: r.worker, data: r.data.clone().unwrap() })
+            .collect();
+        let decoded_full = dec_full.decode(&same_subset, d).unwrap();
+        assert_eq!(decoded_early, decoded_full, "iter {iter}");
+
+        // And both equal ground truth on the true blocks.
+        let block = rows * d;
+        for kk in 0..k {
+            let truth = wc.compute(&xq[kk * block..(kk + 1) * block], &wq);
+            assert_eq!(decoded_early[kk], truth, "iter {iter} block {kk}");
+        }
+    }
+}
+
+/// Late results must be drained between iterations — never decoded into a
+/// later round — and training with a real slow machine must produce the
+/// bit-identical trajectory of a healthy run (LCC decoding is exact for
+/// any arrival subset).
+#[test]
+fn slow_worker_late_results_are_drained_not_decoded() {
+    let train = synthetic_3v7(120, 17);
+    let base = CodedMlConfig {
+        n: 13, // threshold 10 → slack 3
+        k: 3,
+        t: 1,
+        net: NetworkModel::free(),
+        straggler: StragglerModel::none(),
+        ..Default::default()
+    };
+
+    let mut reference = CodedMlSession::new(base.clone(), &train).unwrap();
+    let slow_cfg = CodedMlConfig { chaos_slow_workers: 1, chaos_slow_ms: 60, ..base };
+    let mut slow = CodedMlSession::new(slow_cfg, &train).unwrap();
+
+    // Step both; then give the slow worker time to land its stale result
+    // so the next round must drain it.
+    for _ in 0..2 {
+        reference.step().unwrap();
+        slow.step().unwrap();
+    }
+    std::thread::sleep(Duration::from_millis(200));
+    for _ in 0..2 {
+        reference.step().unwrap();
+        slow.step().unwrap();
+    }
+
+    assert_eq!(
+        reference.w, slow.w,
+        "slow machine must not change the trajectory, only who is decoded"
+    );
+    let (failures, late) = slow.round_stats();
+    assert_eq!(failures, 0);
+    assert!(late > 0, "stale results must be drained and counted");
+    let (rf, rl) = reference.round_stats();
+    assert_eq!((rf, rl), (0, 0));
+}
+
+/// The engine's wall time is bounded by the fastest-R subset: a training
+/// step with one worker slowed 60 ms completes in well under 60 ms.
+#[test]
+fn step_wall_time_bounded_by_fastest_subset() {
+    let train = synthetic_3v7(60, 19);
+    let cfg = CodedMlConfig {
+        n: 13,
+        k: 3,
+        t: 1,
+        chaos_slow_workers: 1,
+        chaos_slow_ms: 60,
+        net: NetworkModel::free(),
+        straggler: StragglerModel::none(),
+        ..Default::default()
+    };
+    let mut sess = CodedMlSession::new(cfg, &train).unwrap();
+    // Warm up thread scheduling, then time a step.
+    sess.step().unwrap();
+    let t0 = Instant::now();
+    sess.step().unwrap();
+    assert!(
+        t0.elapsed() < Duration::from_millis(50),
+        "step took {:?}, gated by the slow worker",
+        t0.elapsed()
+    );
+}
