@@ -1,0 +1,523 @@
+//! A miniature Rust lexer for the in-repo linter (`codedml lint`).
+//!
+//! Full parsing (syn) is unavailable offline and unnecessary: every rule in
+//! [`crate::analysis::rules`] operates on *scrubbed* source lines — the
+//! original text with comments and string/char-literal contents blanked
+//! out — plus two bits of context the scrubber recovers:
+//!
+//! 1. **test regions**: lines covered by a `#[cfg(test)]` or `#[test]`
+//!    attribute (through the matching close brace, or the terminating `;`
+//!    for brace-less items), so rules never fire on test code;
+//! 2. **allow comments**: `// lint: allow(<rule-id>): <justification>`
+//!    suppresses `<rule-id>` on its own line (and, when the comment stands
+//!    alone, on the next line). A justification is mandatory — an allow
+//!    without one does not suppress and is itself reported.
+//!
+//! The scrubber is a character-level state machine that understands line
+//! comments, nested block comments, string literals with escapes, raw
+//! strings (`r"…"`, `r#"…"#`, any hash depth, plus `b`/`br` forms), and
+//! char literals vs. lifetimes (`'%'` is a literal, `'a` in `Vec<&'a T>`
+//! is not). Masked characters become spaces, so line numbers and column
+//! positions survive scrubbing.
+
+/// One `// lint: allow(...)` annotation found in a comment.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Allow {
+    /// Rule id inside the parentheses.
+    pub rule: String,
+    /// Whether a non-empty justification followed the closing paren.
+    pub justified: bool,
+}
+
+/// One scrubbed source line.
+#[derive(Debug, Clone)]
+pub struct ScrubbedLine {
+    /// The line with comments and literal contents replaced by spaces.
+    pub code: String,
+    /// True when the line sits inside a `#[cfg(test)]`/`#[test]` region.
+    pub in_test: bool,
+    /// Allow annotations that apply to this line.
+    pub allows: Vec<Allow>,
+}
+
+impl ScrubbedLine {
+    /// Does an allow with a justification cover `rule` on this line?
+    pub fn allowed(&self, rule: &str) -> bool {
+        self.allows.iter().any(|a| a.justified && a.rule == rule)
+    }
+
+    /// True when the scrubbed line carries no code at all.
+    pub fn is_blank(&self) -> bool {
+        self.code.trim().is_empty()
+    }
+}
+
+/// A whole scrubbed file: path (relative to the scan root, `/`-separated)
+/// plus per-line scrub results.
+#[derive(Debug, Clone)]
+pub struct ScrubbedFile {
+    pub path: String,
+    pub lines: Vec<ScrubbedLine>,
+}
+
+impl ScrubbedFile {
+    /// Scrub `source` under the given tree-relative `path`.
+    pub fn new(path: &str, source: &str) -> ScrubbedFile {
+        let (masked, comments) = scrub(source);
+        let masked_lines: Vec<&str> = split_keepempty(&masked);
+        let comment_lines: Vec<&str> = split_keepempty(&comments);
+        let test_lines = test_regions(&masked);
+
+        let mut lines: Vec<ScrubbedLine> = masked_lines
+            .iter()
+            .enumerate()
+            .map(|(i, code)| ScrubbedLine {
+                code: (*code).to_string(),
+                in_test: test_lines.get(i).copied().unwrap_or(false),
+                allows: parse_allows(comment_lines.get(i).copied().unwrap_or("")),
+            })
+            .collect();
+
+        // An allow on a comment-only line also covers the next line.
+        for i in 0..lines.len() {
+            if lines[i].is_blank() && !lines[i].allows.is_empty() && i + 1 < lines.len() {
+                let carried = lines[i].allows.clone();
+                lines[i + 1].allows.extend(carried);
+            }
+        }
+
+        ScrubbedFile { path: path.to_string(), lines }
+    }
+
+    /// The scrubbed file as one string (line numbers preserved).
+    pub fn masked_text(&self) -> String {
+        let mut out = String::new();
+        for l in &self.lines {
+            out.push_str(&l.code);
+            out.push('\n');
+        }
+        out
+    }
+}
+
+/// Split on `\n` keeping a final empty segment out (files end with `\n`).
+fn split_keepempty(s: &str) -> Vec<&str> {
+    let mut v: Vec<&str> = s.split('\n').collect();
+    if v.last().is_some_and(|l| l.is_empty()) {
+        v.pop();
+    }
+    v
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum State {
+    Code,
+    LineComment,
+    Block(u32),
+    Str,
+    RawStr(u32),
+    Char,
+}
+
+fn is_ident(c: char) -> bool {
+    c.is_alphanumeric() || c == '_'
+}
+
+/// Scrub `source` into (masked code, comment text). Both outputs have the
+/// same line structure as the input; non-code (resp. non-comment) chars
+/// are spaces.
+fn scrub(source: &str) -> (String, String) {
+    let chars: Vec<char> = source.chars().collect();
+    let n = chars.len();
+    let mut code = String::with_capacity(n);
+    let mut comment = String::with_capacity(n);
+    let mut state = State::Code;
+    let mut i = 0usize;
+
+    // Push one char into (code?, comment?) keeping newlines in both.
+    let push = |code: &mut String, comment: &mut String, c: char, is_code: bool, is_comment: bool| {
+        if c == '\n' {
+            code.push('\n');
+            comment.push('\n');
+            return;
+        }
+        code.push(if is_code { c } else { ' ' });
+        comment.push(if is_comment { c } else { ' ' });
+    };
+
+    while i < n {
+        let c = chars[i];
+        match state {
+            State::Code => {
+                if c == '/' && chars.get(i + 1) == Some(&'/') {
+                    state = State::LineComment;
+                    push(&mut code, &mut comment, c, false, true);
+                    i += 1;
+                    push(&mut code, &mut comment, chars[i], false, true);
+                } else if c == '/' && chars.get(i + 1) == Some(&'*') {
+                    state = State::Block(1);
+                    push(&mut code, &mut comment, c, false, true);
+                    i += 1;
+                    push(&mut code, &mut comment, chars[i], false, true);
+                } else if c == '"' {
+                    state = State::Str;
+                    push(&mut code, &mut comment, c, false, false);
+                } else if (c == 'r' || c == 'b')
+                    && (i == 0 || !is_ident(chars[i - 1]))
+                    && raw_str_hashes(&chars, i).is_some()
+                {
+                    // r"…" / r#"…"# / b"…" / br#"…"# — consume the prefix
+                    // through the opening quote.
+                    let (hashes, quote_at) = raw_str_hashes(&chars, i).unwrap_or((0, i));
+                    while i <= quote_at {
+                        push(&mut code, &mut comment, chars[i], false, false);
+                        i += 1;
+                    }
+                    i -= 1; // outer loop will advance
+                    state = if hashes == u32::MAX { State::Str } else { State::RawStr(hashes) };
+                } else if c == '\'' {
+                    // Char literal or lifetime?
+                    let next = chars.get(i + 1).copied();
+                    let after = chars.get(i + 2).copied();
+                    if next == Some('\\') || (next.is_some() && after == Some('\'')) {
+                        state = State::Char;
+                        push(&mut code, &mut comment, c, false, false);
+                    } else {
+                        // Lifetime — plain code.
+                        push(&mut code, &mut comment, c, true, false);
+                    }
+                } else {
+                    push(&mut code, &mut comment, c, true, false);
+                }
+            }
+            State::LineComment => {
+                if c == '\n' {
+                    state = State::Code;
+                }
+                push(&mut code, &mut comment, c, false, true);
+            }
+            State::Block(depth) => {
+                if c == '*' && chars.get(i + 1) == Some(&'/') {
+                    push(&mut code, &mut comment, c, false, true);
+                    i += 1;
+                    push(&mut code, &mut comment, chars[i], false, true);
+                    state = if depth == 1 { State::Code } else { State::Block(depth - 1) };
+                } else if c == '/' && chars.get(i + 1) == Some(&'*') {
+                    push(&mut code, &mut comment, c, false, true);
+                    i += 1;
+                    push(&mut code, &mut comment, chars[i], false, true);
+                    state = State::Block(depth + 1);
+                } else {
+                    push(&mut code, &mut comment, c, false, true);
+                }
+            }
+            State::Str => {
+                if c == '\\' && i + 1 < n {
+                    push(&mut code, &mut comment, c, false, false);
+                    i += 1;
+                    push(&mut code, &mut comment, chars[i], false, false);
+                } else {
+                    if c == '"' {
+                        state = State::Code;
+                    }
+                    push(&mut code, &mut comment, c, false, false);
+                }
+            }
+            State::RawStr(hashes) => {
+                if c == '"' && closes_raw(&chars, i, hashes) {
+                    push(&mut code, &mut comment, c, false, false);
+                    for _ in 0..hashes {
+                        i += 1;
+                        push(&mut code, &mut comment, chars[i], false, false);
+                    }
+                    state = State::Code;
+                } else {
+                    push(&mut code, &mut comment, c, false, false);
+                }
+            }
+            State::Char => {
+                if c == '\\' && i + 1 < n {
+                    push(&mut code, &mut comment, c, false, false);
+                    i += 1;
+                    push(&mut code, &mut comment, chars[i], false, false);
+                } else {
+                    if c == '\'' {
+                        state = State::Code;
+                    }
+                    push(&mut code, &mut comment, c, false, false);
+                }
+            }
+        }
+        i += 1;
+    }
+    (code, comment)
+}
+
+/// At index `i` of an `r`/`b` character: if this starts a string-literal
+/// prefix, return `(hash_count, index_of_opening_quote)`. A plain `b"…"`
+/// (no `r`) is reported with hash count `u32::MAX` meaning "treat as a
+/// normal escaped string".
+fn raw_str_hashes(chars: &[char], i: usize) -> Option<(u32, usize)> {
+    let mut j = i;
+    let mut raw = false;
+    if chars.get(j) == Some(&'b') {
+        j += 1;
+    }
+    if chars.get(j) == Some(&'r') {
+        raw = true;
+        j += 1;
+    }
+    if j == i {
+        return None; // neither b nor r consumed
+    }
+    let mut hashes = 0u32;
+    while chars.get(j) == Some(&'#') {
+        hashes += 1;
+        j += 1;
+    }
+    if chars.get(j) != Some(&'"') {
+        return None;
+    }
+    if !raw {
+        if hashes != 0 {
+            return None; // b#"…" is not a thing
+        }
+        return Some((u32::MAX, j));
+    }
+    Some((hashes, j))
+}
+
+/// Does the `"` at `i` close a raw string with `hashes` trailing hashes?
+fn closes_raw(chars: &[char], i: usize, hashes: u32) -> bool {
+    (1..=hashes as usize).all(|k| chars.get(i + k) == Some(&'#'))
+}
+
+/// Mark the lines covered by `#[cfg(test)]` / `#[test]` attributes in the
+/// masked text: from the attribute through the matching `}` of the first
+/// block it opens — or only through the first `;` when the item is
+/// brace-less (`#[cfg(test)] use …;`).
+fn test_regions(masked: &str) -> Vec<bool> {
+    let line_count = split_keepempty(masked).len();
+    let mut in_test = vec![false; line_count];
+    let bytes: Vec<char> = masked.chars().collect();
+    // line index of each char
+    let mut line_of = Vec::with_capacity(bytes.len());
+    let mut ln = 0usize;
+    for &c in &bytes {
+        line_of.push(ln);
+        if c == '\n' {
+            ln += 1;
+        }
+    }
+    let text: String = masked.to_string();
+    for pat in ["#[cfg(test)]", "#[test]"] {
+        let mut from = 0usize;
+        while let Some(off) = text[from..].find(pat) {
+            let start = from + off;
+            let start_char = text[..start].chars().count();
+            let mut j = start_char + pat.chars().count();
+            // Scan forward for the first `{`; a `;` first means a
+            // brace-less item — mark through it and stop.
+            let mut open = None;
+            while j < bytes.len() {
+                match bytes[j] {
+                    '{' => {
+                        open = Some(j);
+                        break;
+                    }
+                    ';' => break,
+                    _ => j += 1,
+                }
+            }
+            let end_char = match open {
+                None => j.min(bytes.len().saturating_sub(1)),
+                Some(o) => {
+                    let mut depth = 0i64;
+                    let mut k = o;
+                    loop {
+                        match bytes.get(k) {
+                            Some('{') => depth += 1,
+                            Some('}') => {
+                                depth -= 1;
+                                if depth == 0 {
+                                    break;
+                                }
+                            }
+                            None => break,
+                            _ => {}
+                        }
+                        k += 1;
+                    }
+                    k.min(bytes.len().saturating_sub(1))
+                }
+            };
+            for idx in start_char..=end_char.min(line_of.len().saturating_sub(1)) {
+                in_test[line_of[idx]] = true;
+            }
+            from = start + pat.len();
+        }
+    }
+    in_test
+}
+
+/// Parse every `lint: allow(<rule>)` annotation out of one line's comment
+/// text. Justification = any non-empty text after the closing paren
+/// (leading `:`, `-`, `—` separators stripped).
+fn parse_allows(comment: &str) -> Vec<Allow> {
+    const MARK: &str = "lint: allow(";
+    let mut out = Vec::new();
+    let mut from = 0usize;
+    while let Some(off) = comment[from..].find(MARK) {
+        let at = from + off + MARK.len();
+        let Some(close) = comment[at..].find(')') else {
+            break;
+        };
+        let rule = comment[at..at + close].trim().to_string();
+        let rest = comment[at + close + 1..]
+            .trim_start_matches([':', '-', '—', ' '])
+            .trim();
+        if !rule.is_empty() {
+            out.push(Allow { rule, justified: !rest.is_empty() });
+        }
+        from = at + close + 1;
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn scrub_lines(src: &str) -> Vec<ScrubbedLine> {
+        ScrubbedFile::new("x.rs", src).lines
+    }
+
+    /// Satellite requirement: table-driven scrubbing cases. Each row is
+    /// (source, line index, expectation about `%` surviving in code).
+    #[test]
+    fn percent_in_literals_and_comments_is_masked() {
+        let cases: &[(&str, bool)] = &[
+            // (source line, does masked code still contain '%')
+            ("let r = x % p;", true),
+            ("let s = \"100 % done\";", false),
+            ("// x % p is forbidden here", false),
+            ("/// docs: use `x % p` nowhere", false),
+            ("//! module docs with a % sign", false),
+            ("/* block % comment */ let y = 1;", false),
+            ("let c = '%';", false),
+            ("let s = r\"raw % string\";", false),
+            ("let s = r#\"hash % raw\"#;", false),
+            ("let s = b\"byte % string\";", false),
+            ("let m = format!(\"{:>8.2}%\", v);", false),
+            ("let escaped = \"q\\\" % still string\";", false),
+        ];
+        for (src, expect_percent) in cases {
+            let lines = scrub_lines(&format!("{src}\n"));
+            assert_eq!(
+                lines[0].code.contains('%'),
+                *expect_percent,
+                "source: {src}\nmasked: {}",
+                lines[0].code
+            );
+        }
+    }
+
+    #[test]
+    fn masking_preserves_line_and_column_positions() {
+        let src = "let a = 1; // trailing\nlet b = \"xx\";\n";
+        let lines = scrub_lines(src);
+        assert_eq!(lines.len(), 2);
+        assert!(lines[0].code.starts_with("let a = 1; "));
+        assert_eq!(lines[0].code.chars().count(), "let a = 1; // trailing".chars().count());
+        assert!(lines[1].code.contains("let b ="));
+        assert!(!lines[1].code.contains("xx"));
+    }
+
+    #[test]
+    fn cfg_test_mod_is_marked_through_matching_brace() {
+        let src = "\
+fn library() { let x = 1 % 2; }
+
+#[cfg(test)]
+mod tests {
+    fn helper() { let y = 3 % 4; }
+
+    #[test]
+    fn t() { assert!(helper() > 0); }
+}
+
+fn library_after() { }
+";
+        let lines = scrub_lines(src);
+        assert!(!lines[0].in_test, "library code before the test mod");
+        for i in 2..=8 {
+            assert!(lines[i].in_test, "line {} should be test code", i + 1);
+        }
+        assert!(!lines[10].in_test, "library code after the test mod");
+    }
+
+    #[test]
+    fn cfg_test_braceless_item_marks_only_through_semicolon() {
+        let src = "#[cfg(test)]\nuse crate::data::Dataset;\nfn lib() {}\n";
+        let lines = scrub_lines(src);
+        assert!(lines[0].in_test);
+        assert!(lines[1].in_test);
+        assert!(!lines[2].in_test, "item after the `;` is not test code");
+    }
+
+    #[test]
+    fn test_attribute_marks_single_fn() {
+        let src = "#[test]\nfn t() {\n    body();\n}\nfn lib() {}\n";
+        let lines = scrub_lines(src);
+        assert!(lines[0].in_test && lines[1].in_test && lines[2].in_test && lines[3].in_test);
+        assert!(!lines[4].in_test);
+    }
+
+    #[test]
+    fn nested_block_comments_unwind_fully() {
+        let src = "/* outer /* inner % */ still comment % */ let x = 5 % 3;\n";
+        let lines = scrub_lines(src);
+        assert!(lines[0].code.contains("let x = 5 % 3;"));
+        assert_eq!(lines[0].code.matches('%').count(), 1);
+    }
+
+    #[test]
+    fn lifetimes_are_not_char_literals() {
+        let src = "fn f<'a>(x: &'a str) -> &'a str { x } // then % here\n";
+        let lines = scrub_lines(src);
+        assert!(lines[0].code.contains("fn f<'a>(x: &'a str)"));
+        assert!(!lines[0].code.contains('%'));
+    }
+
+    #[test]
+    fn allow_with_justification_covers_line() {
+        let src = "let r = x % p; // lint: allow(no-hardware-modulo): divrem oracle\n";
+        let lines = scrub_lines(src);
+        assert!(lines[0].allowed("no-hardware-modulo"));
+        assert!(!lines[0].allowed("no-stray-io"));
+    }
+
+    #[test]
+    fn allow_without_justification_does_not_suppress() {
+        let src = "let r = x % p; // lint: allow(no-hardware-modulo)\n";
+        let lines = scrub_lines(src);
+        assert!(!lines[0].allowed("no-hardware-modulo"));
+        assert_eq!(lines[0].allows.len(), 1);
+        assert!(!lines[0].allows[0].justified);
+    }
+
+    #[test]
+    fn standalone_allow_comment_covers_next_line() {
+        let src = "// lint: allow(no-stray-io): boot diagnostics predate the tracer\nprintln!(\"hi\");\n";
+        let lines = scrub_lines(src);
+        assert!(lines[1].allowed("no-stray-io"));
+    }
+
+    #[test]
+    fn allow_inside_string_is_ignored() {
+        let src = "let s = \"lint: allow(no-stray-io): nope\";\nprintln!(\"x\");\n";
+        let lines = scrub_lines(src);
+        assert!(lines[0].allows.is_empty());
+        assert!(!lines[1].allowed("no-stray-io"));
+    }
+}

@@ -1,0 +1,128 @@
+//! `cpml-lint`: in-repo static analysis for invariants the compiler
+//! cannot see.
+//!
+//! CodedPrivateML's guarantees rest on cross-cutting source-level rules:
+//! canonical field elements for bit-exact Barrett reduction, a privacy
+//! boundary that keeps plaintext datasets away from worker code, no
+//! nondeterminism or aborts inside the training loop. This module walks
+//! `rust/src`, scrubs each file with a comment/string-aware mini-lexer
+//! (no external parser), and runs six rules over the result — see
+//! `rules::RULES` and the "Machine-checked invariants" section of
+//! `docs/ARCHITECTURE.md`.
+//!
+//! Entry points: `cargo run -- lint [--json]` (see `crate::cli`) and the
+//! tier-1 test `rust/tests/lint.rs`, which requires a clean tree and
+//! checks each fixture under `rust/tests/fixtures/lint/` trips exactly
+//! its own rule.
+
+pub mod lexer;
+pub mod report;
+pub mod rules;
+
+use std::io;
+use std::path::Path;
+
+pub use lexer::ScrubbedFile;
+pub use report::{report_json, sort_findings, Finding};
+pub use rules::{RuleInfo, RULES};
+
+/// A scrubbed snapshot of every `.rs` file under one root, with
+/// `/`-separated paths relative to that root, in sorted order.
+#[derive(Debug, Clone)]
+pub struct SourceTree {
+    pub files: Vec<ScrubbedFile>,
+}
+
+impl SourceTree {
+    /// Walk `root` recursively, scrubbing every `.rs` file. Hidden
+    /// directories and `target/` are skipped. Paths come back sorted so
+    /// findings are deterministic across platforms.
+    pub fn scan(root: &Path) -> io::Result<SourceTree> {
+        let mut paths = Vec::new();
+        walk(root, root, &mut paths)?;
+        paths.sort();
+        let mut files = Vec::with_capacity(paths.len());
+        for rel in &paths {
+            let source = std::fs::read_to_string(root.join(rel.replace('/', std::path::MAIN_SEPARATOR_STR)))?;
+            files.push(ScrubbedFile::new(rel, &source));
+        }
+        Ok(SourceTree { files })
+    }
+
+    /// Build a tree from in-memory `(path, source)` pairs — for tests.
+    pub fn from_sources(pairs: &[(&str, &str)]) -> SourceTree {
+        let mut files: Vec<ScrubbedFile> =
+            pairs.iter().map(|(p, s)| ScrubbedFile::new(p, s)).collect();
+        files.sort_by(|a, b| a.path.cmp(&b.path));
+        SourceTree { files }
+    }
+
+    /// Look up a file by tree-relative path.
+    pub fn file(&self, path: &str) -> Option<&ScrubbedFile> {
+        self.files.iter().find(|f| f.path == path)
+    }
+}
+
+fn walk(root: &Path, dir: &Path, out: &mut Vec<String>) -> io::Result<()> {
+    for entry in std::fs::read_dir(dir)? {
+        let entry = entry?;
+        let path = entry.path();
+        let name = entry.file_name().to_string_lossy().into_owned();
+        if path.is_dir() {
+            if name.starts_with('.') || name == "target" {
+                continue;
+            }
+            walk(root, &path, out)?;
+        } else if name.ends_with(".rs") {
+            let rel = path
+                .strip_prefix(root)
+                .unwrap_or(&path)
+                .components()
+                .map(|c| c.as_os_str().to_string_lossy().into_owned())
+                .collect::<Vec<_>>()
+                .join("/");
+            out.push(rel);
+        }
+    }
+    Ok(())
+}
+
+/// Run every rule over a scrubbed tree. Findings are sorted and deduped;
+/// an empty vec means the tree is clean.
+pub fn lint(tree: &SourceTree) -> Vec<Finding> {
+    rules::run_all(tree)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn from_sources_sorts_and_indexes() {
+        let t = SourceTree::from_sources(&[("b.rs", "fn b() {}\n"), ("a.rs", "fn a() {}\n")]);
+        assert_eq!(t.files[0].path, "a.rs");
+        assert!(t.file("b.rs").is_some());
+        assert!(t.file("c.rs").is_none());
+    }
+
+    #[test]
+    fn scan_walks_the_real_source_tree() {
+        let root = Path::new(env!("CARGO_MANIFEST_DIR")).join("rust").join("src");
+        let tree = SourceTree::scan(&root).expect("scan rust/src");
+        assert!(tree.file("lib.rs").is_some());
+        assert!(tree.file("analysis/mod.rs").is_some());
+        assert!(tree.file("field/prime.rs").is_some());
+    }
+
+    #[test]
+    fn the_repo_tree_is_lint_clean() {
+        let root = Path::new(env!("CARGO_MANIFEST_DIR")).join("rust").join("src");
+        let tree = SourceTree::scan(&root).expect("scan rust/src");
+        let findings = lint(&tree);
+        assert!(
+            findings.is_empty(),
+            "lint findings in the tree:\n{}",
+            findings.iter().map(|f| format!("  {f}\n")).collect::<String>()
+        );
+    }
+}

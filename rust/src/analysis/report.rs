@@ -1,0 +1,128 @@
+//! Finding type and report emission for the in-repo linter.
+//!
+//! Human output is one line per finding, `file:line rule-id message`,
+//! matching compiler-style diagnostics so editors can jump to the site.
+//! Machine output (`--json`) is a `LINT_REPORT.json` document with the
+//! full finding list plus per-rule counts, built on `util::json`.
+
+use std::fmt;
+
+use crate::util::json::{obj, Json};
+
+/// One rule violation at a specific source line.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Finding {
+    /// Tree-relative `/`-separated path, e.g. `cluster/worker.rs`.
+    pub file: String,
+    /// 1-based line number.
+    pub line: usize,
+    /// Rule id, e.g. `no-hardware-modulo`.
+    pub rule: &'static str,
+    /// Human-readable explanation of the violation.
+    pub message: String,
+}
+
+impl Finding {
+    pub fn new(file: &str, line: usize, rule: &'static str, message: String) -> Finding {
+        Finding { file: file.to_string(), line, rule, message }
+    }
+}
+
+impl fmt::Display for Finding {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}:{} {} {}", self.file, self.line, self.rule, self.message)
+    }
+}
+
+/// Sort findings for deterministic output: by file, then line, then rule.
+pub fn sort_findings(findings: &mut [Finding]) {
+    findings.sort_by(|a, b| {
+        (a.file.as_str(), a.line, a.rule).cmp(&(b.file.as_str(), b.line, b.rule))
+    });
+}
+
+/// Build the `LINT_REPORT.json` document: per-rule counts (every known
+/// rule id appears, zero or not), the total, and the finding list.
+pub fn report_json(rule_ids: &[&str], findings: &[Finding]) -> Json {
+    let mut by_rule: Vec<(&str, Json)> = Vec::new();
+    for id in rule_ids {
+        let n = findings.iter().filter(|f| f.rule == *id).count();
+        by_rule.push((id, Json::Num(n as f64)));
+    }
+    // Findings may carry ids outside the registry (e.g. malformed-allow);
+    // count those too so totals always reconcile.
+    for f in findings {
+        if !rule_ids.contains(&f.rule) && !by_rule.iter().any(|(id, _)| *id == f.rule) {
+            let n = findings.iter().filter(|g| g.rule == f.rule).count();
+            by_rule.push((f.rule, Json::Num(n as f64)));
+        }
+    }
+    let list: Vec<Json> = findings
+        .iter()
+        .map(|f| {
+            obj(&[
+                ("file", Json::Str(f.file.clone())),
+                ("line", Json::Num(f.line as f64)),
+                ("rule", Json::Str(f.rule.to_string())),
+                ("message", Json::Str(f.message.clone())),
+            ])
+        })
+        .collect();
+    obj(&[
+        ("total", Json::Num(findings.len() as f64)),
+        ("by_rule", obj(&by_rule)),
+        ("findings", Json::Arr(list)),
+    ])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> Vec<Finding> {
+        vec![
+            Finding::new("b.rs", 2, "no-stray-io", "println! in library code".into()),
+            Finding::new("a.rs", 9, "no-hardware-modulo", "hardware % on field values".into()),
+            Finding::new("a.rs", 3, "no-stray-io", "eprintln! in library code".into()),
+        ]
+    }
+
+    #[test]
+    fn display_is_compiler_style() {
+        let f = &sample()[0];
+        assert_eq!(format!("{f}"), "b.rs:2 no-stray-io println! in library code");
+    }
+
+    #[test]
+    fn sorting_is_by_file_then_line() {
+        let mut fs = sample();
+        sort_findings(&mut fs);
+        let order: Vec<(String, usize)> = fs.iter().map(|f| (f.file.clone(), f.line)).collect();
+        assert_eq!(
+            order,
+            vec![("a.rs".into(), 3), ("a.rs".into(), 9), ("b.rs".into(), 2)]
+        );
+    }
+
+    #[test]
+    fn json_report_counts_per_rule() {
+        let fs = sample();
+        let j = report_json(&["no-hardware-modulo", "no-stray-io", "no-panic-in-library"], &fs);
+        assert_eq!(j.get("total").unwrap().as_u64(), Some(3));
+        let by_rule = j.get("by_rule").unwrap();
+        assert_eq!(by_rule.get("no-stray-io").unwrap().as_u64(), Some(2));
+        assert_eq!(by_rule.get("no-hardware-modulo").unwrap().as_u64(), Some(1));
+        assert_eq!(by_rule.get("no-panic-in-library").unwrap().as_u64(), Some(0));
+        assert_eq!(j.get("findings").unwrap().as_arr().unwrap().len(), 3);
+        // Round-trips through the parser.
+        let text = j.to_string();
+        assert_eq!(Json::parse(&text).unwrap(), j);
+    }
+
+    #[test]
+    fn json_report_counts_unregistered_rules() {
+        let fs = vec![Finding::new("x.rs", 1, "malformed-allow", "missing justification".into())];
+        let j = report_json(&["no-stray-io"], &fs);
+        assert_eq!(j.get("by_rule").unwrap().get("malformed-allow").unwrap().as_u64(), Some(1));
+    }
+}

@@ -1,0 +1,652 @@
+//! The six invariant rules behind `codedml lint`.
+//!
+//! Each rule guards an invariant the compiler cannot see but the paper's
+//! guarantees rely on (see `docs/ARCHITECTURE.md`, "Machine-checked
+//! invariants"). Rules operate on scrubbed sources from
+//! [`crate::analysis::lexer`]: comments and literals are already masked
+//! and test regions marked, so the checks here are straight substring
+//! scans plus a module-reference graph walk for the privacy boundary.
+
+use std::collections::BTreeSet;
+
+use super::lexer::ScrubbedFile;
+use super::report::Finding;
+use super::SourceTree;
+
+/// Static description of one rule, for docs and the JSON report.
+#[derive(Debug, Clone, Copy)]
+pub struct RuleInfo {
+    pub id: &'static str,
+    pub summary: &'static str,
+}
+
+pub const NO_HARDWARE_MODULO: &str = "no-hardware-modulo";
+pub const NO_PLAINTEXT_TO_WORKERS: &str = "no-plaintext-to-workers";
+pub const NO_PANIC_IN_LIBRARY: &str = "no-panic-in-library";
+pub const NO_STRAY_IO: &str = "no-stray-io";
+pub const NO_WALLCLOCK: &str = "no-wallclock-nondeterminism";
+pub const CANONICAL_DEBUG_ASSERTS: &str = "canonical-field-debug-asserts";
+/// Pseudo-rule for `lint: allow(...)` annotations that are malformed
+/// (no justification) or name an unknown rule. Not suppressible.
+pub const MALFORMED_ALLOW: &str = "malformed-allow";
+
+pub const RULES: [RuleInfo; 6] = [
+    RuleInfo {
+        id: NO_HARDWARE_MODULO,
+        summary: "no hardware `%` on field values in field/, compute/, coding/, mpc/",
+    },
+    RuleInfo {
+        id: NO_PLAINTEXT_TO_WORKERS,
+        summary: "cluster/worker.rs and everything it reaches must not touch data::",
+    },
+    RuleInfo {
+        id: NO_PANIC_IN_LIBRARY,
+        summary: "no unwrap()/expect()/panic! in cluster/, coordinator/, coding/",
+    },
+    RuleInfo {
+        id: NO_STRAY_IO,
+        summary: "no println!/eprintln! in library code; route through the tracer",
+    },
+    RuleInfo {
+        id: NO_WALLCLOCK,
+        summary: "Instant::now/SystemTime confined to util/timer.rs and cluster/netmodel.rs",
+    },
+    RuleInfo {
+        id: CANONICAL_DEBUG_ASSERTS,
+        summary: "pub field-element returns in field/prime.rs carry debug_assert!(out < p)",
+    },
+];
+
+/// Run every rule over the tree; findings come back sorted and deduped.
+pub fn run_all(tree: &SourceTree) -> Vec<Finding> {
+    let mut out = Vec::new();
+    no_hardware_modulo(tree, &mut out);
+    no_plaintext_to_workers(tree, &mut out);
+    no_panic_in_library(tree, &mut out);
+    no_stray_io(tree, &mut out);
+    no_wallclock(tree, &mut out);
+    canonical_field_debug_asserts(tree, &mut out);
+    malformed_allows(tree, &mut out);
+    super::report::sort_findings(&mut out);
+    out.dedup();
+    out
+}
+
+fn is_ident(c: char) -> bool {
+    c.is_alphanumeric() || c == '_'
+}
+
+fn under(path: &str, dirs: &[&str]) -> bool {
+    dirs.iter().any(|d| path.starts_with(d))
+}
+
+// ---------------------------------------------------------------------------
+// Rule 1: no-hardware-modulo
+// ---------------------------------------------------------------------------
+
+/// Hot-path modules must reduce via Barrett (`field::PrimeField`), never
+/// the hardware `%`/`%=` operators — PR 1's entire win. Literals and
+/// comments are already masked, so any surviving `%` is the operator.
+fn no_hardware_modulo(tree: &SourceTree, out: &mut Vec<Finding>) {
+    const SCOPE: [&str; 4] = ["field/", "compute/", "coding/", "mpc/"];
+    for file in &tree.files {
+        if !under(&file.path, &SCOPE) {
+            continue;
+        }
+        for (i, line) in file.lines.iter().enumerate() {
+            if line.in_test || line.allowed(NO_HARDWARE_MODULO) {
+                continue;
+            }
+            if line.code.contains('%') {
+                out.push(Finding::new(
+                    &file.path,
+                    i + 1,
+                    NO_HARDWARE_MODULO,
+                    "hardware `%` in a field hot path; reduce via field::PrimeField (Barrett)"
+                        .to_string(),
+                ));
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Rule 2: no-plaintext-to-workers
+// ---------------------------------------------------------------------------
+
+/// `super::` from inside `path` resolves relative to this directory.
+fn super_dir(path: &str) -> String {
+    parent_of(&self_dir(path))
+}
+
+/// `self::` (and `mod x;` declarations) resolve relative to this directory.
+fn self_dir(path: &str) -> String {
+    if path == "lib.rs" || path == "main.rs" {
+        return String::new();
+    }
+    if let Some(stripped) = path.strip_suffix("/mod.rs") {
+        return stripped.to_string();
+    }
+    path.strip_suffix(".rs").unwrap_or(path).to_string()
+}
+
+fn parent_of(dir: &str) -> String {
+    match dir.rfind('/') {
+        Some(i) => dir[..i].to_string(),
+        None => String::new(),
+    }
+}
+
+/// Collect `::`-separated path segments starting at `s`.
+fn collect_segments(s: &str) -> Vec<String> {
+    let mut segs = Vec::new();
+    let mut rest = s;
+    loop {
+        let end = rest.find(|c: char| !is_ident(c)).unwrap_or(rest.len());
+        if end == 0 {
+            break;
+        }
+        segs.push(rest[..end].to_string());
+        rest = &rest[end..];
+        match rest.strip_prefix("::") {
+            Some(r) => rest = r,
+            None => break,
+        }
+    }
+    segs
+}
+
+/// Module references on one scrubbed line: `(base_dir, segments)` pairs
+/// from `crate::`/`super::`/`self::` paths plus `mod x;` declarations.
+fn refs_in_line(path: &str, code: &str) -> Vec<(String, Vec<String>)> {
+    let mut refs = Vec::new();
+    for (marker, base) in [
+        ("crate::", String::new()),
+        ("super::", super_dir(path)),
+        ("self::", self_dir(path)),
+    ] {
+        let mut from = 0usize;
+        while let Some(off) = code[from..].find(marker) {
+            let at = from + off;
+            let preceded_by_ident =
+                code[..at].chars().next_back().is_some_and(is_ident);
+            if !preceded_by_ident {
+                let segs = collect_segments(&code[at + marker.len()..]);
+                if !segs.is_empty() {
+                    refs.push((base.clone(), segs));
+                }
+            }
+            from = at + marker.len();
+        }
+    }
+    // `mod x;` pulls in a child module file.
+    let t = code.trim();
+    let after_vis = t
+        .strip_prefix("pub")
+        .map(|r| {
+            let r = r.trim_start();
+            match r.strip_prefix('(') {
+                Some(rest) => rest.split_once(')').map(|(_, tail)| tail.trim_start()).unwrap_or(r),
+                None => r,
+            }
+        })
+        .unwrap_or(t);
+    if let Some(rest) = after_vis.strip_prefix("mod ") {
+        if let Some(name) = rest.strip_suffix(';') {
+            let name = name.trim();
+            if !name.is_empty() && name.chars().all(is_ident) {
+                refs.push((self_dir(path), vec![name.to_string()]));
+            }
+        }
+    }
+    refs
+}
+
+/// Longest-prefix resolution of a module path to a file in the tree.
+fn resolve(tree: &SourceTree, base: &str, segs: &[String]) -> Option<String> {
+    for j in (1..=segs.len()).rev() {
+        let mut p = base.to_string();
+        for s in &segs[..j] {
+            if !p.is_empty() {
+                p.push('/');
+            }
+            p.push_str(s);
+        }
+        for cand in [format!("{p}.rs"), format!("{p}/mod.rs")] {
+            if tree.file(&cand).is_some() {
+                return Some(cand);
+            }
+        }
+    }
+    None
+}
+
+/// The T-collusion privacy boundary (paper §III): the worker module and
+/// every module it can reach must never reference `crate::data` — workers
+/// only ever observe Lagrange-encoded shares, never plaintext rows.
+fn no_plaintext_to_workers(tree: &SourceTree, out: &mut Vec<Finding>) {
+    const START: &str = "cluster/worker.rs";
+    if tree.file(START).is_none() {
+        return;
+    }
+    let mut queue = vec![START.to_string()];
+    let mut visited: BTreeSet<String> = queue.iter().cloned().collect();
+    while let Some(path) = queue.pop() {
+        let Some(file) = tree.file(&path) else { continue };
+        for (i, line) in file.lines.iter().enumerate() {
+            if line.in_test {
+                continue;
+            }
+            for (base, segs) in refs_in_line(&path, &line.code) {
+                let names_data = base.is_empty() && segs.first().map(String::as_str) == Some("data");
+                let resolved = resolve(tree, &base, &segs);
+                let resolves_into_data = resolved
+                    .as_deref()
+                    .is_some_and(|t| t.starts_with("data/") || t == "data.rs");
+                if names_data || resolves_into_data {
+                    if !line.allowed(NO_PLAINTEXT_TO_WORKERS) {
+                        out.push(Finding::new(
+                            &path,
+                            i + 1,
+                            NO_PLAINTEXT_TO_WORKERS,
+                            format!(
+                                "references data::{} but is reachable from {START}; \
+                                 workers may only observe encoded shares",
+                                segs.get(1).map(String::as_str).unwrap_or("*"),
+                            ),
+                        ));
+                    }
+                } else if let Some(target) = resolved {
+                    if visited.insert(target.clone()) {
+                        queue.push(target);
+                    }
+                }
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Rule 3: no-panic-in-library
+// ---------------------------------------------------------------------------
+
+/// Long-running training infrastructure must degrade through `Result` /
+/// `TrainReport::worker_failures`, not abort: no `.unwrap()`, `.expect(`
+/// or `panic!` in non-test code of cluster/, coordinator/, coding/.
+fn no_panic_in_library(tree: &SourceTree, out: &mut Vec<Finding>) {
+    const SCOPE: [&str; 3] = ["cluster/", "coordinator/", "coding/"];
+    const PATTERNS: [&str; 3] = [".unwrap()", ".expect(", "panic!"];
+    for file in &tree.files {
+        if !under(&file.path, &SCOPE) {
+            continue;
+        }
+        for (i, line) in file.lines.iter().enumerate() {
+            if line.in_test || line.allowed(NO_PANIC_IN_LIBRARY) {
+                continue;
+            }
+            for pat in PATTERNS {
+                if line.code.contains(pat) {
+                    out.push(Finding::new(
+                        &file.path,
+                        i + 1,
+                        NO_PANIC_IN_LIBRARY,
+                        format!(
+                            "`{pat}` in library code; surface the error through \
+                             Result / worker_failures instead"
+                        ),
+                    ));
+                    break;
+                }
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Rule 4: no-stray-io
+// ---------------------------------------------------------------------------
+
+/// All diagnostics route through `coordinator::trace`; ad-hoc prints in
+/// library code bypass the structured event stream (PR 3 cleanup).
+fn no_stray_io(tree: &SourceTree, out: &mut Vec<Finding>) {
+    for file in &tree.files {
+        if file.path == "cli.rs" || file.path == "main.rs" || file.path.starts_with("bin/") {
+            continue;
+        }
+        for (i, line) in file.lines.iter().enumerate() {
+            if line.in_test || line.allowed(NO_STRAY_IO) {
+                continue;
+            }
+            let mac = if line.code.contains("eprintln!") {
+                Some("eprintln!")
+            } else if line.code.contains("println!") {
+                Some("println!")
+            } else {
+                None
+            };
+            if let Some(mac) = mac {
+                out.push(Finding::new(
+                    &file.path,
+                    i + 1,
+                    NO_STRAY_IO,
+                    format!("`{mac}` in library code; emit a tracer event instead"),
+                ));
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Rule 5: no-wallclock-nondeterminism
+// ---------------------------------------------------------------------------
+
+/// "Bit-identical at every thread count" only holds if wall-clock reads
+/// stay behind `util::timer` (measurement) and `cluster::netmodel`
+/// (simulated delays). Everything else must be deterministic.
+fn no_wallclock(tree: &SourceTree, out: &mut Vec<Finding>) {
+    const EXEMPT: [&str; 2] = ["util/timer.rs", "cluster/netmodel.rs"];
+    for file in &tree.files {
+        if EXEMPT.contains(&file.path.as_str()) {
+            continue;
+        }
+        for (i, line) in file.lines.iter().enumerate() {
+            if line.in_test || line.allowed(NO_WALLCLOCK) {
+                continue;
+            }
+            let hit = if line.code.contains("Instant::now") {
+                Some("Instant::now")
+            } else if line.code.contains("SystemTime") {
+                Some("SystemTime")
+            } else {
+                None
+            };
+            if let Some(hit) = hit {
+                out.push(Finding::new(
+                    &file.path,
+                    i + 1,
+                    NO_WALLCLOCK,
+                    format!(
+                        "`{hit}` outside util/timer.rs and cluster/netmodel.rs; \
+                         use util::timer::timed or the netmodel"
+                    ),
+                ));
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Rule 6: canonical-field-debug-asserts
+// ---------------------------------------------------------------------------
+
+/// Byte index → 0-based line number map for a masked file text.
+fn line_map(text: &str) -> Vec<usize> {
+    let mut map = Vec::with_capacity(text.len());
+    let mut line = 0usize;
+    for b in text.bytes() {
+        map.push(line);
+        if b == b'\n' {
+            line += 1;
+        }
+    }
+    map
+}
+
+/// Barrett reduction is bit-exact only on canonical inputs, so every
+/// public field-element producer in `field/prime.rs` (a `pub fn`
+/// returning `u64`) must end in `debug_assert!(out < self.p)`. Checked
+/// structurally: the brace-matched body must contain a `debug_assert!`
+/// and a `< self.p` (or `< p`) comparison.
+fn canonical_field_debug_asserts(tree: &SourceTree, out: &mut Vec<Finding>) {
+    let Some(file) = tree.file("field/prime.rs") else { return };
+    check_field_asserts(file, out);
+}
+
+fn check_field_asserts(file: &ScrubbedFile, out: &mut Vec<Finding>) {
+    let text = file.masked_text();
+    let lines = line_map(&text);
+    let bytes = text.as_bytes();
+    let mut from = 0usize;
+    while let Some(off) = text[from..].find("pub fn ") {
+        let at = from + off;
+        from = at + "pub fn ".len();
+        let lineno = lines[at];
+        let line = &file.lines[lineno];
+        if line.in_test {
+            continue;
+        }
+        let name: String = text[at + "pub fn ".len()..].chars().take_while(|&c| is_ident(c)).collect();
+        // Signature runs to the body `{` or a trait-style `;`.
+        let mut j = at;
+        while j < bytes.len() && bytes[j] != b'{' && bytes[j] != b';' {
+            j += 1;
+        }
+        if j >= bytes.len() || bytes[j] == b';' {
+            continue;
+        }
+        if !text[at..j].contains("-> u64") {
+            continue;
+        }
+        // Brace-match the body.
+        let open = j;
+        let mut depth = 0i64;
+        while j < bytes.len() {
+            match bytes[j] {
+                b'{' => depth += 1,
+                b'}' => {
+                    depth -= 1;
+                    if depth == 0 {
+                        break;
+                    }
+                }
+                _ => {}
+            }
+            j += 1;
+        }
+        let body = &text[open..j.min(text.len())];
+        let ok = body.contains("debug_assert!") && (body.contains("< self.p") || body.contains("< p"));
+        if !ok && !line.allowed(CANONICAL_DEBUG_ASSERTS) {
+            out.push(Finding::new(
+                &file.path,
+                lineno + 1,
+                CANONICAL_DEBUG_ASSERTS,
+                format!(
+                    "pub fn `{name}` returns a field element without a \
+                     canonicality debug_assert!(out < p)"
+                ),
+            ));
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Allow hygiene
+// ---------------------------------------------------------------------------
+
+/// Unjustified allows do not suppress and are themselves findings, as are
+/// allows naming a rule id that does not exist.
+fn malformed_allows(tree: &SourceTree, out: &mut Vec<Finding>) {
+    for file in &tree.files {
+        for (i, line) in file.lines.iter().enumerate() {
+            for allow in &line.allows {
+                if !allow.justified {
+                    out.push(Finding::new(
+                        &file.path,
+                        i + 1,
+                        MALFORMED_ALLOW,
+                        format!(
+                            "allow({}) lacks a justification; write \
+                             `// lint: allow({}): <reason>`",
+                            allow.rule, allow.rule
+                        ),
+                    ));
+                } else if !RULES.iter().any(|r| r.id == allow.rule) {
+                    out.push(Finding::new(
+                        &file.path,
+                        i + 1,
+                        MALFORMED_ALLOW,
+                        format!("allow({}) names an unknown rule id", allow.rule),
+                    ));
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tree(files: &[(&str, &str)]) -> SourceTree {
+        SourceTree::from_sources(files)
+    }
+
+    fn ids(findings: &[Finding]) -> Vec<&'static str> {
+        findings.iter().map(|f| f.rule).collect()
+    }
+
+    #[test]
+    fn modulo_flagged_only_in_scope_dirs() {
+        let t = tree(&[
+            ("field/ops.rs", "pub fn r(x: u64, p: u64) -> u64 { x % p }\n"),
+            ("util/stats.rs", "pub fn pct(a: usize, b: usize) -> usize { a % b }\n"),
+        ]);
+        let fs = run_all(&t);
+        assert_eq!(fs.len(), 1);
+        assert_eq!(fs[0].file, "field/ops.rs");
+        assert_eq!(fs[0].rule, NO_HARDWARE_MODULO);
+    }
+
+    #[test]
+    fn modulo_in_test_block_or_allowed_is_clean() {
+        let src = "\
+pub fn ok(x: u64, p: u64) -> u64 {
+    x.wrapping_sub(p)
+}
+
+pub fn oracle(x: u64, p: u64) -> u64 {
+    x % p // lint: allow(no-hardware-modulo): divrem reference oracle
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn t() { assert_eq!(7 % 5, 2); }
+}
+";
+        let t = tree(&[("compute/matvec.rs", src)]);
+        assert!(run_all(&t).is_empty(), "{:?}", run_all(&t));
+    }
+
+    #[test]
+    fn privacy_rule_follows_module_graph() {
+        let t = tree(&[
+            ("cluster/worker.rs", "use crate::cluster::round::Round;\n"),
+            ("cluster/round.rs", "use crate::data::Dataset;\npub struct R;\n"),
+            ("cluster/mod.rs", "pub mod round;\npub mod worker;\n"),
+            ("data/mod.rs", "pub struct Dataset;\n"),
+            // Not reachable from the worker: allowed to use data.
+            ("coordinator/session.rs", "use crate::data::Dataset;\n"),
+        ]);
+        let fs = run_all(&t);
+        assert_eq!(ids(&fs), vec![NO_PLAINTEXT_TO_WORKERS]);
+        assert_eq!(fs[0].file, "cluster/round.rs");
+        assert_eq!(fs[0].line, 1);
+    }
+
+    #[test]
+    fn privacy_rule_direct_import() {
+        let t = tree(&[(
+            "cluster/worker.rs",
+            "use crate::data::Dataset;\npub fn w(_d: &Dataset) {}\n",
+        )]);
+        let fs = run_all(&t);
+        assert_eq!(ids(&fs), vec![NO_PLAINTEXT_TO_WORKERS]);
+    }
+
+    #[test]
+    fn panic_rule_scoped_and_allowable() {
+        let t = tree(&[
+            ("coding/combine.rs", "pub fn f(v: Option<u32>) -> u32 { v.unwrap() }\n"),
+            ("util/rng.rs", "pub fn g(v: Option<u32>) -> u32 { v.unwrap() }\n"),
+            (
+                "coding/encoder.rs",
+                "pub fn h(v: Option<u32>) -> u32 { v.expect(\"inv\") } // lint: allow(no-panic-in-library): invariant by construction\n",
+            ),
+        ]);
+        let fs = run_all(&t);
+        assert_eq!(ids(&fs), vec![NO_PANIC_IN_LIBRARY]);
+        assert_eq!(fs[0].file, "coding/combine.rs");
+    }
+
+    #[test]
+    fn stray_io_exempts_cli() {
+        let t = tree(&[
+            ("cli.rs", "pub fn main2() { println!(\"ok\"); }\n"),
+            ("coordinator/session.rs", "pub fn s() { eprintln!(\"warn\"); }\n"),
+        ]);
+        let fs = run_all(&t);
+        assert_eq!(ids(&fs), vec![NO_STRAY_IO]);
+        assert_eq!(fs[0].file, "coordinator/session.rs");
+    }
+
+    #[test]
+    fn wallclock_confined_to_timer_and_netmodel() {
+        let t = tree(&[
+            ("util/timer.rs", "pub fn now() { let _ = std::time::Instant::now(); }\n"),
+            ("cluster/netmodel.rs", "pub fn d() { let _ = std::time::Instant::now(); }\n"),
+            ("cluster/round.rs", "pub fn r() { let _ = std::time::Instant::now(); }\n"),
+        ]);
+        let fs = run_all(&t);
+        assert_eq!(ids(&fs), vec![NO_WALLCLOCK]);
+        assert_eq!(fs[0].file, "cluster/round.rs");
+    }
+
+    #[test]
+    fn field_debug_assert_rule() {
+        let good = "\
+pub fn add(&self, a: u64, b: u64) -> u64 {
+    let s = a + b;
+    let out = if s >= self.p { s - self.p } else { s };
+    debug_assert!(out < self.p);
+    out
+}
+";
+        let bad = "\
+pub fn add(&self, a: u64, b: u64) -> u64 {
+    a + b
+}
+";
+        let fs = run_all(&tree(&[("field/prime.rs", good)]));
+        assert!(fs.is_empty(), "{fs:?}");
+        let fs = run_all(&tree(&[("field/prime.rs", bad)]));
+        assert_eq!(ids(&fs), vec![CANONICAL_DEBUG_ASSERTS]);
+        assert!(fs[0].message.contains("`add`"));
+    }
+
+    #[test]
+    fn field_debug_assert_rule_ignores_non_field_returns() {
+        let src = "pub fn bits(&self) -> u32 { 26 }\npub fn check(&self) -> bool { true }\n";
+        assert!(run_all(&tree(&[("field/prime.rs", src)])).is_empty());
+    }
+
+    #[test]
+    fn unjustified_allow_is_reported_and_does_not_suppress() {
+        let t = tree(&[(
+            "field/ops.rs",
+            "pub fn r(x: u64, p: u64) -> u64 { x % p } // lint: allow(no-hardware-modulo)\n",
+        )]);
+        let mut got = ids(&run_all(&t));
+        got.sort_unstable();
+        assert_eq!(got, vec![MALFORMED_ALLOW, NO_HARDWARE_MODULO]);
+    }
+
+    #[test]
+    fn unknown_rule_id_in_allow_is_reported() {
+        let t = tree(&[(
+            "util/rng.rs",
+            "pub fn f() {} // lint: allow(no-such-rule): because\n",
+        )]);
+        assert_eq!(ids(&run_all(&t)), vec![MALFORMED_ALLOW]);
+    }
+}

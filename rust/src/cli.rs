@@ -11,6 +11,7 @@
 //!                     [--scale 0.05 --iters 25 --json out.json --backend ...]
 //! codedml budget      [--m 12396 --k 13 --lx 2 --lw 4 --lc 3 --r 1 --p ...]
 //! codedml artifacts   [--dir artifacts]
+//! codedml lint        [--json [path] --root rust/src]
 //! codedml list
 //! ```
 //!
@@ -35,12 +36,14 @@ use crate::runtime::{BackendKind, XlaRuntime};
 use crate::util::args::Args;
 use crate::util::json::Json;
 
-const USAGE: &str = "usage: codedml <train|mpc|reproduce|budget|artifacts|list> [options]
+const USAGE: &str = "usage: codedml <train|mpc|reproduce|budget|artifacts|lint|list> [options]
   train      run one CodedPrivateML training session
   mpc        run the BGW MPC baseline
   reproduce  regenerate a paper table/figure (or 'all')
   budget     overflow-budget analysis for a parameter set
   artifacts  inspect the AOT artifact manifest
+  lint       run the in-repo invariant linter over rust/src
+             (--json [path] writes LINT_REPORT.json)
   list       list reproducible experiments
 
 common options:
@@ -75,6 +78,7 @@ fn dispatch(args: &Args) -> Result<(), String> {
         Some("reproduce") => cmd_reproduce(args),
         Some("budget") => cmd_budget(args),
         Some("artifacts") => cmd_artifacts(args),
+        Some("lint") => cmd_lint(args),
         Some("list") => {
             for e in reproduce::EXPERIMENTS {
                 println!("{:<8} {:<18} {}", e.id, e.paper_ref, e.what);
@@ -226,6 +230,9 @@ fn train_logistic(args: &Args, cfg: CodedMlConfig) -> Result<(), String> {
     let iters = cfg.iters;
     train_banner(&cfg, train.m, train.d);
     let mut sess = CodedMlSession::new(cfg, &train).map_err(|e| e.to_string())?;
+    if let Some(w) = sess.budget_warning() {
+        eprintln!("warning: {w}");
+    }
     println!(
         "recovery threshold {} (straggler slack {})",
         sess.params().recovery_threshold(),
@@ -260,6 +267,9 @@ fn train_linear(args: &Args, cfg: CodedMlConfig) -> Result<(), String> {
     let iters = cfg.iters;
     train_banner(&cfg, train.m, train.d);
     let mut sess = CodedMlSession::new_linear(cfg, &train).map_err(|e| e.to_string())?;
+    if let Some(w) = sess.budget_warning() {
+        eprintln!("warning: {w}");
+    }
     println!(
         "recovery threshold {} (straggler slack {})",
         sess.params().recovery_threshold(),
@@ -416,6 +426,50 @@ fn cmd_artifacts(args: &Args) -> Result<(), String> {
     Ok(())
 }
 
+fn cmd_lint(args: &Args) -> Result<(), String> {
+    use crate::analysis::{self, SourceTree};
+    // Resolve the source root: explicit --root, else rust/src relative to
+    // the current directory, else relative to the build-time manifest dir
+    // (covers `cargo run` from a subdirectory).
+    let root = match args.get("root") {
+        Some(r) => PathBuf::from(r),
+        None => {
+            let cwd_rel = PathBuf::from("rust").join("src");
+            if cwd_rel.is_dir() {
+                cwd_rel
+            } else {
+                PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("rust").join("src")
+            }
+        }
+    };
+    let tree = SourceTree::scan(&root).map_err(|e| format!("scan {}: {e}", root.display()))?;
+    let findings = analysis::lint(&tree);
+    for f in &findings {
+        println!("{f}");
+    }
+    // `--json` alone writes LINT_REPORT.json; `--json <path>` picks the path.
+    let json_path = args
+        .get("json")
+        .map(str::to_string)
+        .or_else(|| args.flag("json").then(|| "LINT_REPORT.json".to_string()));
+    if let Some(path) = json_path {
+        let ids: Vec<&str> = analysis::RULES.iter().map(|r| r.id).collect();
+        let doc = analysis::report_json(&ids, &findings);
+        std::fs::write(&path, doc.to_string()).map_err(|e| format!("write {path}: {e}"))?;
+        eprintln!("wrote {path}");
+    }
+    if findings.is_empty() {
+        println!(
+            "lint: {} file(s) clean across {} rule(s)",
+            tree.files.len(),
+            analysis::RULES.len()
+        );
+        Ok(())
+    } else {
+        Err(format!("{} lint finding(s)", findings.len()))
+    }
+}
+
 // Keep synthetic_3v7 linked for the doc-examples that reference it.
 #[allow(unused)]
 fn _doc_anchor() {
@@ -500,6 +554,29 @@ mod tests {
             "train --n 10 --k 3 --t 1 --iters 1 --m 120 --threads 2 --no-straggle --free-net"
         ))
         .is_ok());
+    }
+
+    #[test]
+    fn lint_clean_tree_ok() {
+        assert!(dispatch(&args("lint")).is_ok());
+    }
+
+    #[test]
+    fn lint_writes_json_report() {
+        let path = std::env::temp_dir().join("codedml_lint_report_test.json");
+        let cmd = format!("lint --json {}", path.display());
+        assert!(dispatch(&args(&cmd)).is_ok());
+        let text = std::fs::read_to_string(&path).unwrap();
+        let doc = Json::parse(&text).unwrap();
+        assert_eq!(doc.get("total").unwrap().as_u64(), Some(0));
+        assert!(doc.get("by_rule").unwrap().get("no-hardware-modulo").is_some());
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn lint_rejects_missing_root() {
+        let err = dispatch(&args("lint --root does/not/exist")).unwrap_err();
+        assert!(err.contains("scan"), "{err}");
     }
 
     #[test]

@@ -58,12 +58,16 @@ impl Round {
     /// `results` or `failures`.
     pub fn absorb(&mut self, res: StepResult) {
         if res.iter != self.iter {
-            debug_assert!(
-                res.iter < self.iter,
-                "worker {} sent a result for future iteration {}",
-                res.worker,
-                res.iter
-            );
+            if res.iter > self.iter {
+                // A result tagged for a *future* iteration means dispatch
+                // and collection got out of sync. Surface it through the
+                // failure channel instead of aborting the training loop.
+                self.late_failures.push((
+                    res.worker,
+                    format!("result tagged for future iteration {}", res.iter),
+                ));
+                return;
+            }
             match res.data {
                 Ok(_) => self.late_drained += 1,
                 Err(msg) => self.late_failures.push((res.worker, msg)),
@@ -145,6 +149,17 @@ mod tests {
         assert!(r.complete(), "all four workers accounted for");
         assert!(!r.ok(), "threshold 3 unreachable with one usable result");
         assert_eq!(r.failures.len(), 3);
+    }
+
+    #[test]
+    fn future_iteration_result_surfaces_as_failure_not_abort() {
+        let mut r = Round::new(2, 1, 3);
+        r.absorb(ok_result(0, 7)); // tagged for iteration 7 while collecting 2
+        assert!(r.results.is_empty(), "future result must not be decoded");
+        assert_eq!(r.late_failures.len(), 1);
+        assert!(r.late_failures[0].1.contains("future iteration 7"));
+        r.absorb(ok_result(1, 2));
+        assert!(r.complete() && r.ok());
     }
 
     #[test]

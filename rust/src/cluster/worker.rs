@@ -6,12 +6,13 @@
 
 use std::sync::mpsc;
 use std::thread::JoinHandle;
-use std::time::{Duration, Instant};
+use std::time::Duration;
 
 use super::round::Round;
 use crate::runtime::{BackendKind, WorkerBackend};
 use crate::field::PrimeField;
 use crate::util::par::Parallelism;
+use crate::util::timer::timed;
 use std::path::PathBuf;
 
 /// What the worker computes each step.
@@ -75,6 +76,8 @@ pub enum ClusterError {
     Backend(String),
     /// Channel failure.
     Channel(&'static str),
+    /// The OS refused to spawn a worker thread.
+    Spawn(String),
 }
 
 impl std::fmt::Display for ClusterError {
@@ -83,6 +86,7 @@ impl std::fmt::Display for ClusterError {
             ClusterError::WorkerLost(w) => write!(f, "worker {w} disconnected"),
             ClusterError::Backend(e) => write!(f, "backend: {e}"),
             ClusterError::Channel(what) => write!(f, "channel failure: {what}"),
+            ClusterError::Spawn(e) => write!(f, "spawn worker thread: {e}"),
         }
     }
 }
@@ -126,6 +130,10 @@ fn worker_main(
     };
     let mut x_share: Vec<u64> = Vec::new();
     let mut y_share: Option<Vec<u64>> = None;
+    // A failed share-marshal poisons every subsequent step: the error is
+    // carried into each StepResult rather than printed, so the master's
+    // failure accounting (TrainReport::worker_failures) sees it.
+    let mut data_error: Option<String> = None;
     let f = spec.field;
     while let Ok(msg) = rx.recv() {
         match msg {
@@ -133,12 +141,12 @@ fn worker_main(
                 x_share = x;
                 y_share = y;
                 // XLA backend: marshal the share once, off the hot path.
-                if let Err(e) = backend.prepare_data(&x_share) {
-                    eprintln!("worker {}: prepare_data failed: {e}", spec.id);
-                }
+                data_error = backend
+                    .prepare_data(&x_share)
+                    .err()
+                    .map(|e| format!("prepare_data: {e}"));
             }
             ToWorker::Step { iter, w } => {
-                let t0 = Instant::now();
                 if spec.fail_from_iter.map(|from| iter >= from).unwrap_or(false) {
                     let _ = tx.send(StepResult {
                         worker: spec.id,
@@ -148,22 +156,37 @@ fn worker_main(
                     });
                     continue;
                 }
-                let data = match spec.op {
-                    WorkerOp::Logistic => backend.compute(&x_share, &w).map_err(|e| e.to_string()),
-                    WorkerOp::Linear => Ok(linear_f(
-                        &f,
-                        &x_share,
-                        &w,
-                        y_share.as_deref(),
-                        spec.rows,
-                        spec.d,
-                        spec.par,
-                    )),
-                };
-                if spec.slow_ms > 0 {
-                    std::thread::sleep(Duration::from_millis(spec.slow_ms));
+                if let Some(e) = &data_error {
+                    let _ = tx.send(StepResult {
+                        worker: spec.id,
+                        iter,
+                        data: Err(e.clone()),
+                        compute_secs: 0.0,
+                    });
+                    continue;
                 }
-                let compute_secs = t0.elapsed().as_secs_f64();
+                let (data, compute_secs) = timed(|| {
+                    let data = match spec.op {
+                        WorkerOp::Logistic => {
+                            backend.compute(&x_share, &w).map_err(|e| e.to_string())
+                        }
+                        WorkerOp::Linear => Ok(linear_f(
+                            &f,
+                            &x_share,
+                            &w,
+                            y_share.as_deref(),
+                            spec.rows,
+                            spec.d,
+                            spec.par,
+                        )),
+                    };
+                    // A chaos-slowed worker sleeps inside the measured span
+                    // so its compute time reflects the injected lag.
+                    if spec.slow_ms > 0 {
+                        std::thread::sleep(Duration::from_millis(spec.slow_ms));
+                    }
+                    data
+                });
                 if tx
                     .send(StepResult { worker: spec.id, iter, data, compute_secs })
                     .is_err()
@@ -209,7 +232,7 @@ impl Cluster {
             let join = std::thread::Builder::new()
                 .name(format!("worker-{}", spec.id))
                 .spawn(move || worker_main(spec, rx, rtx, ready_tx))
-                .expect("spawn worker thread");
+                .map_err(|e| ClusterError::Spawn(e.to_string()))?;
             workers.push(WorkerHandle { tx, join: Some(join) });
             readies.push(ready_rx);
         }
@@ -265,16 +288,19 @@ impl Cluster {
     /// can tell "threshold unreachable" from "still in flight". Passing
     /// `need = n()` degenerates to a full collection.
     pub fn collect_first(&self, need: usize, iter: u64) -> Result<Round, ClusterError> {
-        let t0 = Instant::now();
-        let mut round = Round::new(iter, need, self.workers.len());
-        while !round.complete() {
-            let res = self
-                .results_rx
-                .recv()
-                .map_err(|_| ClusterError::Channel("results"))?;
-            round.absorb(res);
-        }
-        round.wall_secs = t0.elapsed().as_secs_f64();
+        let (collected, wall_secs) = timed(|| -> Result<Round, ClusterError> {
+            let mut round = Round::new(iter, need, self.workers.len());
+            while !round.complete() {
+                let res = self
+                    .results_rx
+                    .recv()
+                    .map_err(|_| ClusterError::Channel("results"))?;
+                round.absorb(res);
+            }
+            Ok(round)
+        });
+        let mut round = collected?;
+        round.wall_secs = wall_secs;
         Ok(round)
     }
 }
@@ -297,6 +323,7 @@ mod tests {
     use super::*;
     use crate::compute::WorkerComputation;
     use crate::field::{PrimeField, PAPER_PRIME};
+    use std::time::Instant;
 
     fn specs(n: usize, rows: usize, d: usize, op: WorkerOp) -> Vec<WorkerSpec> {
         let f = PrimeField::new(PAPER_PRIME);

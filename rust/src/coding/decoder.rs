@@ -150,6 +150,7 @@ impl Decoder {
                 .iter()
                 .map(|&b| {
                     lagrange_coeffs(&self.field, &alphas, b)
+                        // lint: allow(no-panic-in-library): DuplicateWorker check above guarantees distinct alphas
                         .expect("alphas distinct by construction")
                 })
                 .collect();

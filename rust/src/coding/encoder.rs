@@ -52,6 +52,7 @@ impl Encoder {
             .iter()
             .map(|&a| {
                 lagrange_coeffs(&field, &points.betas, a)
+                    // lint: allow(no-panic-in-library): EvalPoints::standard guarantees distinct points
                     .expect("standard points are distinct")
             })
             .collect();
@@ -79,6 +80,7 @@ impl Encoder {
     pub fn encode_dataset(&self, xq: &[u64], m: usize, d: usize, rng: &mut Rng) -> Vec<EncodedShare> {
         let (k, t, n) = (self.params.k, self.params.t, self.params.n);
         assert_eq!(xq.len(), m * d);
+        // lint: allow(no-hardware-modulo): shape-precondition check, not field arithmetic
         assert!(m % k == 0, "m={m} must be divisible by K={k}");
         let block = m / k * d;
         // Masks are drawn before the fan-out so the RNG stream (and hence

@@ -100,6 +100,10 @@ pub struct CodedMlSession<O: CodedObjective = LogisticObjective> {
     failures: u64,
     /// Stale results drained by later rounds without decoding.
     late: u64,
+    /// Overflow-budget warning from configuration time, surfaced through
+    /// [`CodedMlSession::budget_warning`] instead of printed (the library
+    /// never writes to stdio; the CLI decides what to show).
+    budget_warning: Option<String>,
     tracer: super::trace::Tracer,
 }
 
@@ -161,15 +165,16 @@ impl<O: CodedObjective> CodedMlSession<O> {
         let (m, d) = (ds.m, ds.d);
         let rows = m / params.k;
 
-        // Budget check (warn or error per config).
+        // Budget check (warn or error per config). The warning is kept on
+        // the session rather than printed — stdio belongs to the CLI.
         let rep = cfg.validate(m, ds.max_abs_x())?;
-        if !rep.ok() {
-            eprintln!(
-                "warning: overflow budget utilization {:.2} > 1 — decoded \
-                 gradients may wrap; consider k>{}, smaller l_c, or a larger prime",
+        let budget_warning = (!rep.ok()).then(|| {
+            format!(
+                "overflow budget utilization {:.2} > 1 — decoded gradients \
+                 may wrap; consider k>{}, smaller l_c, or a larger prime",
                 rep.utilization, params.k
-            );
-        }
+            )
+        });
 
         let mut rng = Rng::new(cfg.seed);
         let straggle_rng = Rng::new(cfg.seed ^ 0x5742_4751_4c45);
@@ -179,16 +184,12 @@ impl<O: CodedObjective> CodedMlSession<O> {
 
         // Quantize + encode + secret-share the dataset (one-time).
         let xq = DatasetQuantizer::new(field, cfg.lx);
-        let (xbar, shares) = {
-            let mut out = None;
-            t_encode.time(|| {
-                let xbar = xq.quantize(&ds.x);
-                let encoder = Encoder::new(field, params).with_parallelism(cfg.parallelism);
-                let shares = encoder.encode_dataset(&xbar, m, d, &mut rng);
-                out = Some((xbar, shares));
-            });
-            out.unwrap()
-        };
+        let (xbar, shares) = t_encode.time(|| {
+            let xbar = xq.quantize(&ds.x);
+            let encoder = Encoder::new(field, params).with_parallelism(cfg.parallelism);
+            let shares = encoder.encode_dataset(&xbar, m, d, &mut rng);
+            (xbar, shares)
+        });
         let encoder = Encoder::new(field, params).with_parallelism(cfg.parallelism);
         let decoder = Decoder::new(field, params, encoder.points.clone())
             .with_parallelism(cfg.parallelism);
@@ -273,6 +274,7 @@ impl<O: CodedObjective> CodedMlSession<O> {
             iter: 0,
             failures: 0,
             late: 0,
+            budget_warning,
             tracer: super::trace::Tracer::disabled(),
         })
     }
@@ -300,6 +302,12 @@ impl<O: CodedObjective> CodedMlSession<O> {
     /// engine's resilience counters, also carried by [`TrainReport`].
     pub fn round_stats(&self) -> (u64, u64) {
         (self.failures, self.late)
+    }
+
+    /// Overflow-budget warning raised at configuration time, if any.
+    /// The session never prints; callers decide whether to surface this.
+    pub fn budget_warning(&self) -> Option<&str> {
+        self.budget_warning.as_deref()
     }
 
     /// Wire size of `count` field elements under the configured framing
@@ -345,14 +353,12 @@ impl<O: CodedObjective> CodedMlSession<O> {
         // (1) Quantize weights (independent stochastic draws) + encode
         //     with fresh masks — both count as encode time.
         let w_shares = {
-            let mut out = None;
             let rng = &mut self.rng;
             let (wquant, encoder, w) = (&self.wquant, &self.encoder, &self.w);
             self.t_encode.time(|| {
                 let wq = wquant.quantize(w, rng);
-                out = Some(encoder.encode_weights(&wq, d, draws, rng));
-            });
-            out.unwrap()
+                encoder.encode_weights(&wq, d, draws, rng)
+            })
         };
 
         // (2) Master → workers: W̃ shares.
@@ -437,11 +443,30 @@ impl<O: CodedObjective> CodedMlSession<O> {
         // (5) Decode this round's batch blocks and assemble the gradient
         //     (per-block dequantization keeps the overflow budget at m/K
         //     rows — DESIGN.md §Numeric design).
-        let worker_results: Vec<WorkerResult> = round
-            .results
-            .into_iter()
-            .map(|res| WorkerResult { worker: res.worker, data: res.data.unwrap() })
-            .collect();
+        // `Round::absorb` only admits Ok results, but stay defensive: an
+        // Err here is counted as a failure (and traced) rather than
+        // panicking; if that leaves fewer than R results the decoder
+        // reports the shortfall as a DecodeError.
+        let mut worker_results: Vec<WorkerResult> = Vec::with_capacity(round.results.len());
+        for res in round.results {
+            match res.data {
+                Ok(data) => worker_results.push(WorkerResult { worker: res.worker, data }),
+                Err(error) => {
+                    self.failures += 1;
+                    if self.tracer.enabled() {
+                        use crate::util::json::Json;
+                        self.tracer.event(
+                            "worker_failure",
+                            self.iter,
+                            &[
+                                ("worker", Json::Num(res.worker as f64)),
+                                ("error", Json::Str(error)),
+                            ],
+                        );
+                    }
+                }
+            }
+        }
         let batch = self.batch_for(self.iter);
         let decoded = {
             let decoder = &mut self.decoder;

@@ -102,6 +102,7 @@ pub fn paper_dataset(train_m: usize, test_m: usize, seed: u64) -> (Dataset, Data
     if let Ok(dir) = std::env::var("MNIST_DIR") {
         match load_mnist_3v7(&dir, train_m, test_m) {
             Ok(pair) => return pair,
+            // lint: allow(no-stray-io): user-facing env-var misconfiguration warning with no tracer in scope
             Err(e) => eprintln!("MNIST_DIR set but unusable ({e}); using synthetic surrogate"),
         }
     }

@@ -60,6 +60,7 @@ impl PrimeField {
     }
 
     #[inline(always)]
+    // lint: allow(canonical-field-debug-asserts): returns the modulus itself, not a field element
     pub fn modulus(&self) -> u64 {
         self.p
     }
@@ -86,11 +87,9 @@ impl PrimeField {
         let q = ((x as u128 * self.mu as u128) >> 64) as u64;
         // q ≤ ⌊x/p⌋, so q·p ≤ x (no underflow) and r < 2p (see module docs).
         let r = x - q.wrapping_mul(self.p);
-        if r >= self.p {
-            r - self.p
-        } else {
-            r
-        }
+        let out = if r >= self.p { r - self.p } else { r };
+        debug_assert!(out < self.p);
+        out
     }
 
     /// Reduce a `u128` into `[0, p)`. The common case (value < 2^64, e.g.
@@ -98,14 +97,16 @@ impl PrimeField {
     /// values fold the high half through `2^64 mod p` first.
     #[inline(always)]
     pub fn reduce_u128(&self, x: u128) -> u64 {
-        if x < (1u128 << 64) {
+        let out = if x < (1u128 << 64) {
             self.reduce_u64(x as u64)
         } else {
             let hi = self.reduce_u64((x >> 64) as u64);
             let lo = self.reduce_u64(x as u64);
             // x ≡ hi·(2^64 mod p) + lo; hi·r64 < p² < 2^62 fits u64.
             self.add(self.reduce_u64(hi * self.r64), lo)
-        }
+        };
+        debug_assert!(out < self.p);
+        out
     }
 
     /// Division-based `u64` reduction — the pre-Barrett path, kept as the
@@ -113,21 +114,26 @@ impl PrimeField {
     /// `rust/benches/field_ops.rs`.
     #[inline(always)]
     pub fn reduce_u64_divrem(&self, x: u64) -> u64 {
-        x % self.p
+        let out = x % self.p; // lint: allow(no-hardware-modulo): division-based oracle the Barrett path is tested against
+        debug_assert!(out < self.p);
+        out
     }
 
     /// Division-based multiply (baseline twin of [`PrimeField::mul`]).
     #[inline(always)]
     pub fn mul_divrem(&self, a: u64, b: u64) -> u64 {
         debug_assert!(a < self.p && b < self.p);
-        (a * b) % self.p
+        let out = (a * b) % self.p; // lint: allow(no-hardware-modulo): division-based oracle the Barrett path is tested against
+        debug_assert!(out < self.p);
+        out
     }
 
     /// Reduce a signed integer into `[0, p)` (two's-complement embedding φ).
     #[inline(always)]
     pub fn from_i64(&self, x: i64) -> u64 {
-        let m = x.rem_euclid(self.p as i64);
-        m as u64
+        let out = x.rem_euclid(self.p as i64) as u64;
+        debug_assert!(out < self.p);
+        out
     }
 
     /// Map back to a signed representative in `(-(p-1)/2, (p-1)/2]` (φ⁻¹).
@@ -145,38 +151,34 @@ impl PrimeField {
     pub fn add(&self, a: u64, b: u64) -> u64 {
         debug_assert!(a < self.p && b < self.p);
         let s = a + b;
-        if s >= self.p {
-            s - self.p
-        } else {
-            s
-        }
+        let out = if s >= self.p { s - self.p } else { s };
+        debug_assert!(out < self.p);
+        out
     }
 
     #[inline(always)]
     pub fn sub(&self, a: u64, b: u64) -> u64 {
         debug_assert!(a < self.p && b < self.p);
-        if a >= b {
-            a - b
-        } else {
-            a + self.p - b
-        }
+        let out = if a >= b { a - b } else { a + self.p - b };
+        debug_assert!(out < self.p);
+        out
     }
 
     #[inline(always)]
     pub fn neg(&self, a: u64) -> u64 {
         debug_assert!(a < self.p);
-        if a == 0 {
-            0
-        } else {
-            self.p - a
-        }
+        let out = if a == 0 { 0 } else { self.p - a };
+        debug_assert!(out < self.p);
+        out
     }
 
     #[inline(always)]
     pub fn mul(&self, a: u64, b: u64) -> u64 {
         debug_assert!(a < self.p && b < self.p);
         // p < 2^31 so the product fits in u64 without u128; Barrett-reduce.
-        self.reduce_u64(a * b)
+        let out = self.reduce_u64(a * b);
+        debug_assert!(out < self.p);
+        out
     }
 
     /// Modular exponentiation (square-and-multiply).
@@ -190,6 +192,7 @@ impl PrimeField {
             base = self.mul(base, base);
             exp >>= 1;
         }
+        debug_assert!(acc < self.p);
         acc
     }
 
@@ -197,7 +200,9 @@ impl PrimeField {
     #[inline]
     pub fn inv(&self, a: u64) -> u64 {
         assert!(a != 0, "division by zero in F_{}", self.p);
-        self.pow(a, self.p - 2)
+        let out = self.pow(a, self.p - 2);
+        debug_assert!(out < self.p);
+        out
     }
 
     /// Batch inversion (Montgomery's trick): one `inv` + 3(n-1) muls.
@@ -226,7 +231,9 @@ impl PrimeField {
     /// Uniformly random field element.
     #[inline]
     pub fn random(&self, rng: &mut Rng) -> u64 {
-        rng.field_element(self.p)
+        let out = rng.field_element(self.p);
+        debug_assert!(out < self.p);
+        out
     }
 
     /// Uniformly random matrix (row-major `rows × cols`).
@@ -253,17 +260,18 @@ pub fn is_prime(n: u64) -> bool {
         if n == sp {
             return true;
         }
-        if n % sp == 0 {
+        if n % sp == 0 { // lint: allow(no-hardware-modulo): primality trial division, config-time only
             return false;
         }
     }
     let mut d = n - 1;
     let mut s = 0u32;
-    while d % 2 == 0 {
+    while d % 2 == 0 { // lint: allow(no-hardware-modulo): Miller-Rabin setup, config-time only
         d /= 2;
         s += 1;
     }
     'witness: for &a in &[2u64, 3, 5, 7, 11, 13, 17, 19, 23, 29, 31, 37] {
+        // lint: allow(no-hardware-modulo): Miller-Rabin witness arithmetic, config-time only
         let mut x = pow_mod(a % n, d, n);
         if x == 1 || x == n - 1 {
             continue;
@@ -280,12 +288,13 @@ pub fn is_prime(n: u64) -> bool {
 }
 
 fn mul_mod(a: u64, b: u64, m: u64) -> u64 {
+    // lint: allow(no-hardware-modulo): Miller-Rabin witness arithmetic, config-time only
     ((a as u128 * b as u128) % m as u128) as u64
 }
 
 fn pow_mod(mut b: u64, mut e: u64, m: u64) -> u64 {
     let mut acc = 1u64;
-    b %= m;
+    b %= m; // lint: allow(no-hardware-modulo): Miller-Rabin witness arithmetic, config-time only
     while e > 0 {
         if e & 1 == 1 {
             acc = mul_mod(acc, b, m);
@@ -425,6 +434,43 @@ mod tests {
                 let (a, b) = (f.random(rng), f.random(rng));
                 if f.mul(a, b) != f.mul_divrem(a, b) {
                     return Err(format!("mul({a},{b}) mismatch"));
+                }
+                Ok(())
+            });
+        }
+    }
+
+    /// Runtime twin of the `canonical-field-debug-asserts` lint rule:
+    /// every field-op output is canonical (`< p`) for every supported
+    /// modulus, across random operands and the full reduction range.
+    #[test]
+    fn all_ops_output_canonical() {
+        for &p in &[3u64, 5, 97, PAPER_PRIME, PRIME_26, PRIME_31] {
+            let f = PrimeField::new(p);
+            check(&format!("canonical-outputs-{p}"), 300, move |rng| {
+                let a = f.random(rng);
+                let b = f.random(rng);
+                let outputs = [
+                    ("random", a),
+                    ("add", f.add(a, b)),
+                    ("sub", f.sub(a, b)),
+                    ("neg", f.neg(a)),
+                    ("mul", f.mul(a, b)),
+                    ("pow", f.pow(a, rng.next_u64() & 0xffff)),
+                    ("reduce_u64", f.reduce_u64(rng.next_u64())),
+                    ("reduce_u64_divrem", f.reduce_u64_divrem(rng.next_u64())),
+                    ("mul_divrem", f.mul_divrem(a, b)),
+                    (
+                        "reduce_u128",
+                        f.reduce_u128((rng.next_u64() as u128) << 64 | rng.next_u64() as u128),
+                    ),
+                    ("from_i64", f.from_i64(rng.next_u64() as i64)),
+                    ("inv", if a == 0 { 0 } else { f.inv(a) }),
+                ];
+                for (name, out) in outputs {
+                    if out >= p {
+                        return Err(format!("{name} output {out} not canonical for p={p}"));
+                    }
                 }
                 Ok(())
             });

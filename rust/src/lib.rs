@@ -22,7 +22,12 @@
 //!
 //! See `DESIGN.md` for the experiment index and `EXPERIMENTS.md` for
 //! paper-vs-measured results.
+//!
+//! The source tree itself is machine-checked by [`analysis`] — an
+//! in-repo linter (`cargo run -- lint`) enforcing the field, privacy,
+//! and determinism invariants listed in `docs/ARCHITECTURE.md`.
 
+pub mod analysis;
 pub mod cli;
 pub mod cluster;
 pub mod coding;

@@ -13,8 +13,6 @@
 //! discount, which is one of the two reasons CodedPrivateML wins Figure 2;
 //! the other is the K-fold smaller per-worker data).
 
-use std::time::Instant;
-
 use super::shamir::ShamirScheme;
 use crate::cluster::{NetworkModel, StragglerModel};
 use crate::coordinator::{IterationMetrics, TimingBreakdown, TrainReport};
@@ -24,6 +22,7 @@ use crate::model::{max_eig_xtx, tr_matvec, LogisticRegression};
 use crate::quant::{DatasetQuantizer, Dequantizer, WeightQuantizer};
 use crate::sigmoid::fit_sigmoid;
 use crate::util::par::Parallelism;
+use crate::util::timer::timed;
 use crate::util::{Rng, Stopwatch};
 
 #[derive(Debug)]
@@ -231,13 +230,11 @@ impl BgwGradientProtocol {
 
         // (1) Master: quantize + Shamir-share W̄ (encode time).
         let w_shares: Vec<Vec<u64>> = {
-            let mut out = None;
             let (wquant, scheme, w, rng) = (&self.wquant, &self.scheme, &self.w, &mut self.rng);
             self.t_encode.time(|| {
                 let wq = wquant.quantize(w, rng);
-                out = Some(share_matrix(scheme, &wq, rng));
-            });
-            out.unwrap()
+                share_matrix(scheme, &wq, rng)
+            })
         };
         let wbytes = (d * r * 8) as u64;
         self.t_comm.add_seconds(self.net.fanout_time(n, wbytes));
@@ -245,105 +242,121 @@ impl BgwGradientProtocol {
 
         // (2) Each worker: u_j = X_sh · w_sh_j  (degree-2T sharing of X̄w̄_j).
         // Serial-over-workers; attribute serial/N as per-worker time.
-        let t0 = Instant::now();
-        let mut u: Vec<Vec<u64>> = Vec::with_capacity(n); // per worker, m×r (row-major)
-        for i in 0..n {
-            let xs = &self.x_shares[i];
-            let ws = &w_shares[i];
-            let mut ui = vec![0u64; m * r];
-            for j in 0..r {
-                let col = crate::compute::matvec_mod_par(&f, xs, ws, m, d, r, j, self.par);
-                for (row, &v) in col.iter().enumerate() {
-                    ui[row * r + j] = v;
+        let (u, secs) = {
+            let (x_shares, par) = (&self.x_shares, self.par);
+            timed(|| {
+                let mut u: Vec<Vec<u64>> = Vec::with_capacity(n); // per worker, m×r (row-major)
+                for i in 0..n {
+                    let xs = &x_shares[i];
+                    let ws = &w_shares[i];
+                    let mut ui = vec![0u64; m * r];
+                    for j in 0..r {
+                        let col = crate::compute::matvec_mod_par(&f, xs, ws, m, d, r, j, par);
+                        for (row, &v) in col.iter().enumerate() {
+                            ui[row * r + j] = v;
+                        }
+                    }
+                    u.push(ui);
                 }
-            }
-            u.push(ui);
-        }
-        self.account_parallel_compute(t0.elapsed().as_secs_f64());
+                u
+            })
+        };
+        self.account_parallel_compute(secs);
 
         // (3) Degree reduction of the m·r values (one vectorized round).
         let u = self.reshare_round(u);
 
         // (4) ḡ on shares: g = c̄₀ + Σ_i c̄_i Π_{j≤i} u_j, reducing degree
         //     after each elementwise product level.
-        let t0 = Instant::now();
-        let mut g: Vec<Vec<u64>> = (0..n).map(|_| vec![self.coeffs[0]; m]).collect();
-        let mut prod: Vec<Vec<u64>> = u
-            .iter()
-            .map(|ui| (0..m).map(|row| ui[row * r]).collect())
-            .collect();
-        for i in 0..n {
-            for row in 0..m {
-                g[i][row] = f.add(g[i][row], f.mul(self.coeffs[1], prod[i][row]));
-            }
-        }
-        self.account_parallel_compute(t0.elapsed().as_secs_f64());
+        let ((mut g, mut prod), secs) = {
+            let coeffs = &self.coeffs;
+            timed(|| {
+                let mut g: Vec<Vec<u64>> = (0..n).map(|_| vec![coeffs[0]; m]).collect();
+                let prod: Vec<Vec<u64>> = u
+                    .iter()
+                    .map(|ui| (0..m).map(|row| ui[row * r]).collect())
+                    .collect();
+                for i in 0..n {
+                    for row in 0..m {
+                        g[i][row] = f.add(g[i][row], f.mul(coeffs[1], prod[i][row]));
+                    }
+                }
+                (g, prod)
+            })
+        };
+        self.account_parallel_compute(secs);
         for level in 2..=r {
             // prod ∘ u_level — a share×share product: degree 2T, reshare.
-            let t0 = Instant::now();
-            for i in 0..n {
-                for row in 0..m {
-                    prod[i][row] = f.mul(prod[i][row], u[i][row * r + (level - 1)]);
+            let (_, secs) = timed(|| {
+                for i in 0..n {
+                    for row in 0..m {
+                        prod[i][row] = f.mul(prod[i][row], u[i][row * r + (level - 1)]);
+                    }
                 }
-            }
-            self.account_parallel_compute(t0.elapsed().as_secs_f64());
+            });
+            self.account_parallel_compute(secs);
             prod = self.reshare_round(prod);
-            let t0 = Instant::now();
-            for i in 0..n {
-                for row in 0..m {
-                    g[i][row] = f.add(g[i][row], f.mul(self.coeffs[level], prod[i][row]));
-                }
-            }
-            self.account_parallel_compute(t0.elapsed().as_secs_f64());
+            let (_, secs) = {
+                let coeffs = &self.coeffs;
+                timed(|| {
+                    for i in 0..n {
+                        for row in 0..m {
+                            g[i][row] = f.add(g[i][row], f.mul(coeffs[level], prod[i][row]));
+                        }
+                    }
+                })
+            };
+            self.account_parallel_compute(secs);
         }
 
         // (5) f_sh = X_shᵀ · g_sh — degree 2T; master reconstructs
         //     directly from 2T+1 workers (no final resharing).
-        let t0 = Instant::now();
-        let mut f_shares: Vec<Vec<u64>> = Vec::with_capacity(n);
-        for i in 0..n {
-            f_shares.push(crate::compute::tr_matvec_mod_par(
-                &f,
-                &self.x_shares[i],
-                &g[i],
-                m,
-                d,
-                self.par,
-            ));
-        }
-        self.account_parallel_compute(t0.elapsed().as_secs_f64());
+        let (f_shares, secs) = {
+            let (x_shares, par) = (&self.x_shares, self.par);
+            timed(|| {
+                let mut f_shares: Vec<Vec<u64>> = Vec::with_capacity(n);
+                for i in 0..n {
+                    f_shares
+                        .push(crate::compute::tr_matvec_mod_par(&f, &x_shares[i], &g[i], m, d, par));
+                }
+                f_shares
+            })
+        };
+        self.account_parallel_compute(secs);
 
         let fbytes = (d * 8) as u64;
         self.t_comm.add_seconds(self.net.fanin_time(2 * self.t + 1, fbytes));
         self.report.bytes_worker_to_master += fbytes * (2 * self.t + 1) as u64;
 
         // Master: reconstruct at degree 2T with precomputed coefficients.
-        let t0 = Instant::now();
-        let mut xtg = vec![0u64; d];
-        {
+        let (xtg, secs) = {
             let lam = &self.recon_2t;
-            let mut acc = vec![0u64; d];
-            let mut pending = 0usize;
-            for (i, l) in lam.iter().enumerate() {
-                for (a, &v) in acc.iter_mut().zip(f_shares[i].iter()) {
-                    *a = a.wrapping_add(l * v);
-                }
-                pending += 1;
-                if pending == chunk {
-                    for (o, a) in xtg.iter_mut().zip(acc.iter_mut()) {
-                        *o = f.add(*o, f.reduce_u64(*a));
-                        *a = 0;
+            timed(|| {
+                let mut xtg = vec![0u64; d];
+                let mut acc = vec![0u64; d];
+                let mut pending = 0usize;
+                for (i, l) in lam.iter().enumerate() {
+                    for (a, &v) in acc.iter_mut().zip(f_shares[i].iter()) {
+                        *a = a.wrapping_add(l * v);
                     }
-                    pending = 0;
+                    pending += 1;
+                    if pending == chunk {
+                        for (o, a) in xtg.iter_mut().zip(acc.iter_mut()) {
+                            *o = f.add(*o, f.reduce_u64(*a));
+                            *a = 0;
+                        }
+                        pending = 0;
+                    }
                 }
-            }
-            if pending > 0 {
-                for (o, a) in xtg.iter_mut().zip(acc.iter()) {
-                    *o = f.add(*o, f.reduce_u64(*a));
+                if pending > 0 {
+                    for (o, a) in xtg.iter_mut().zip(acc.iter()) {
+                        *o = f.add(*o, f.reduce_u64(*a));
+                    }
                 }
-            }
-        }
-        self.t_comp.add_seconds(t0.elapsed().as_secs_f64());
+                xtg
+            })
+        };
+        self.t_comp.add_seconds(secs);
 
         // (6) Dequantize + update, identical to CodedPrivateML's master.
         let xtg_real: Vec<f64> = xtg.iter().map(|&q| self.dequant.dequantize_entry(q)).collect();
@@ -365,22 +378,27 @@ impl BgwGradientProtocol {
         let len = values[0].len();
         let senders = 2 * self.t + 1;
 
-        let t0 = Instant::now();
-        let mut new_shares: Vec<Vec<u64>> = vec![vec![0u64; len]; n];
-        // For each sender i among the first 2T+1, share its vector and
-        // accumulate λ_i·subshare into every receiver.
-        for i in 0..senders {
-            let lam_i = self.reduction[i];
-            // Fresh degree-T sharing of each value (vectorized).
-            let sub = share_matrix(&self.scheme, &values[i], &mut self.rng);
-            for j in 0..n {
-                let dst = &mut new_shares[j];
-                for (dv, &sv) in dst.iter_mut().zip(sub[j].iter()) {
-                    *dv = f.add(*dv, f.mul(lam_i, sv));
+        let (new_shares, secs) = {
+            let (scheme, reduction, rng) = (&self.scheme, &self.reduction, &mut self.rng);
+            timed(|| {
+                let mut new_shares: Vec<Vec<u64>> = vec![vec![0u64; len]; n];
+                // For each sender i among the first 2T+1, share its vector
+                // and accumulate λ_i·subshare into every receiver.
+                for i in 0..senders {
+                    let lam_i = reduction[i];
+                    // Fresh degree-T sharing of each value (vectorized).
+                    let sub = share_matrix(scheme, &values[i], rng);
+                    for j in 0..n {
+                        let dst = &mut new_shares[j];
+                        for (dv, &sv) in dst.iter_mut().zip(sub[j].iter()) {
+                            *dv = f.add(*dv, f.mul(lam_i, sv));
+                        }
+                    }
                 }
-            }
-        }
-        self.account_parallel_compute(t0.elapsed().as_secs_f64());
+                new_shares
+            })
+        };
+        self.account_parallel_compute(secs);
 
         // Traffic: each of the 2T+1 senders sends N−1 messages of len·8
         // bytes (its own subshare stays local). Senders transmit in
@@ -497,6 +515,7 @@ fn share_matrix(scheme: &ShamirScheme, values: &[u64], rng: &mut Rng) -> Vec<Vec
             let mut total = s;
             for (chunk_idx, (&c, &pwk)) in coeffs.iter().zip(pw[1..].iter()).enumerate() {
                 acc = acc.wrapping_add(c * pwk);
+                // lint: allow(no-hardware-modulo): loop-counter chunking, not field arithmetic
                 if (chunk_idx + 1) % chunk == 0 {
                     total = f.add(total, f.reduce_u64(acc));
                     acc = 0;

@@ -1,0 +1,19 @@
+//! Lint fixture: trips exactly `canonical-field-debug-asserts`.
+//!
+//! This file is never compiled — `rust/tests/lint.rs` feeds it to the
+//! linter and asserts the rule fires here and nowhere else.
+
+pub struct PrimeField {
+    pub p: u64,
+}
+
+impl PrimeField {
+    pub fn add(&self, a: u64, b: u64) -> u64 {
+        let s = a.wrapping_add(b);
+        if s >= self.p {
+            s - self.p
+        } else {
+            s
+        }
+    }
+}

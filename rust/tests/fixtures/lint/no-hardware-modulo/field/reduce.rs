@@ -1,0 +1,8 @@
+//! Lint fixture: trips exactly `no-hardware-modulo`.
+//!
+//! This file is never compiled — `rust/tests/lint.rs` feeds it to the
+//! linter and asserts the rule fires here and nowhere else.
+
+pub fn reduce(x: u64, p: u64) -> u64 {
+    x % p
+}

@@ -1,0 +1,8 @@
+//! Lint fixture: trips exactly `no-panic-in-library`.
+//!
+//! This file is never compiled — `rust/tests/lint.rs` feeds it to the
+//! linter and asserts the rule fires here and nowhere else.
+
+pub fn first(results: &[Option<u64>]) -> u64 {
+    results[0].unwrap()
+}

@@ -1,0 +1,10 @@
+//! Lint fixture: trips exactly `no-plaintext-to-workers`.
+//!
+//! This file is never compiled — `rust/tests/lint.rs` feeds it to the
+//! linter and asserts the rule fires here and nowhere else.
+
+use crate::data::Dataset;
+
+pub fn prepare(rows: &Dataset) -> usize {
+    rows.m
+}

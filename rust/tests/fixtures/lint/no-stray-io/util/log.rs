@@ -1,0 +1,8 @@
+//! Lint fixture: trips exactly `no-stray-io`.
+//!
+//! This file is never compiled — `rust/tests/lint.rs` feeds it to the
+//! linter and asserts the rule fires here and nowhere else.
+
+pub fn log(msg: &str) {
+    println!("{msg}");
+}

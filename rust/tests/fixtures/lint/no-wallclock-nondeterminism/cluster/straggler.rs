@@ -1,0 +1,11 @@
+//! Lint fixture: trips exactly `no-wallclock-nondeterminism`.
+//!
+//! This file is never compiled — `rust/tests/lint.rs` feeds it to the
+//! linter and asserts the rule fires here and nowhere else.
+
+use std::time::Instant;
+
+pub fn elapsed_secs() -> f64 {
+    let start = Instant::now();
+    start.elapsed().as_secs_f64()
+}

@@ -1,0 +1,86 @@
+//! Tier-1 enforcement of the in-repo invariant linter (`cpml-lint`).
+//!
+//! Two gates, both under plain `cargo test -q`:
+//!
+//! 1. the real source tree (`rust/src`) must be lint-clean, and
+//! 2. every seeded fixture under `rust/tests/fixtures/lint/<rule-id>/`
+//!    must trip *exactly* its own rule — proving each rule both fires
+//!    and stays in its lane.
+//!
+//! Fixture files are data, not code: they are never compiled (this
+//! package declares explicit test targets only), the linter just reads
+//! them off disk.
+
+use std::path::PathBuf;
+
+use codedml::analysis::{lint, report_json, SourceTree, RULES};
+
+fn repo_root() -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR"))
+}
+
+#[test]
+fn the_source_tree_is_lint_clean() {
+    let root = repo_root().join("rust").join("src");
+    let tree = SourceTree::scan(&root).expect("scan rust/src");
+    assert!(tree.files.len() > 20, "walker found only {} files", tree.files.len());
+    let findings = lint(&tree);
+    assert!(
+        findings.is_empty(),
+        "rust/src has lint findings — fix them or add a justified \
+         `// lint: allow(<rule>): <reason>`:\n{}",
+        findings.iter().map(|f| format!("  {f}\n")).collect::<String>()
+    );
+}
+
+#[test]
+fn every_fixture_trips_exactly_its_rule() {
+    let fixtures = repo_root().join("rust").join("tests").join("fixtures").join("lint");
+    for rule in RULES {
+        let root = fixtures.join(rule.id);
+        let tree = SourceTree::scan(&root)
+            .unwrap_or_else(|e| panic!("scan fixture {}: {e}", rule.id));
+        let findings = lint(&tree);
+        assert!(
+            !findings.is_empty(),
+            "fixture for {} produced no findings — the rule is dead",
+            rule.id
+        );
+        for f in &findings {
+            assert_eq!(
+                f.rule, rule.id,
+                "fixture for {} tripped a foreign rule: {f}",
+                rule.id
+            );
+        }
+        // The JSON report counts the violation under the right id.
+        let ids: Vec<&str> = RULES.iter().map(|r| r.id).collect();
+        let doc = report_json(&ids, &findings);
+        assert!(
+            doc.get("by_rule").unwrap().get(rule.id).unwrap().as_u64().unwrap() >= 1,
+            "JSON report missing count for {}",
+            rule.id
+        );
+        assert_eq!(
+            doc.get("total").unwrap().as_u64().unwrap(),
+            findings.len() as u64
+        );
+    }
+}
+
+#[test]
+fn findings_carry_file_line_and_message() {
+    let fixtures = repo_root().join("rust").join("tests").join("fixtures").join("lint");
+    let root = fixtures.join("no-hardware-modulo");
+    let tree = SourceTree::scan(&root).expect("scan fixture");
+    let findings = lint(&tree);
+    assert_eq!(findings.len(), 1);
+    let f = &findings[0];
+    assert_eq!(f.file, "field/reduce.rs");
+    assert_eq!(f.line, 7, "the `%` sits on line 7 of the fixture");
+    let rendered = format!("{f}");
+    assert!(
+        rendered.starts_with("field/reduce.rs:7 no-hardware-modulo "),
+        "compiler-style rendering, got: {rendered}"
+    );
+}
