@@ -70,7 +70,7 @@ fn main() {
         .collect();
 
     // Calibrate: time one healthy full round, then slow worker 0 by ~10×.
-    let calib = Cluster::spawn(specs(n, rows, d, &coeffs, 0)).unwrap();
+    let mut calib = Cluster::spawn(specs(n, rows, d, &coeffs, 0)).unwrap();
     calib.load_data(x_shares.clone(), None).unwrap();
     calib.dispatch(0, w_shares.clone()).unwrap();
     calib.collect_first(n, 0).unwrap(); // warmup
@@ -91,7 +91,7 @@ fn main() {
     let mut late_total = 0usize;
     for (mode, &collect_n) in [n, need].iter().enumerate() {
         let label = if mode == 0 { "full collection (R=N)" } else { "early exit (fastest R)" };
-        let cluster = Cluster::spawn(specs(n, rows, d, &coeffs, slow_ms)).unwrap();
+        let mut cluster = Cluster::spawn(specs(n, rows, d, &coeffs, slow_ms)).unwrap();
         cluster.load_data(x_shares.clone(), None).unwrap();
         let mut dec = Decoder::new(f, params, enc.points.clone());
         // Warmup round (also primes the decoder cache once).

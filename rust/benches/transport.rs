@@ -1,0 +1,139 @@
+//! Transport bench: in-memory channel vs loopback TCP, dispatch +
+//! `collect_first` round latency at a moderate share size, plus the
+//! bytes-on-wire per iteration that both backends account through the
+//! same frame-layout arithmetic.
+//!
+//! The TCP rows answer the deployment question the in-memory default
+//! cannot: what does a real socket hop (syscalls, framing, copies) cost
+//! per training round, and how many bytes does one iteration move?
+
+mod bench_util;
+use bench_util::{finish, report, report_metric, report_speedup};
+
+use std::io::{BufRead, BufReader};
+use std::path::PathBuf;
+use std::process::{Child, Command, Stdio};
+use std::time::Instant;
+
+use codedml::cluster::transport::TcpConfig;
+use codedml::cluster::{Cluster, TransportConfig, TransportKind, WorkerOp, WorkerSpec};
+use codedml::coding::{CodingParams, Encoder};
+use codedml::field::{PrimeField, PAPER_PRIME};
+use codedml::runtime::BackendKind;
+use codedml::util::{Parallelism, Rng};
+
+struct WorkerProc {
+    child: Child,
+    addr: String,
+}
+
+impl Drop for WorkerProc {
+    fn drop(&mut self) {
+        let _ = self.child.kill();
+        let _ = self.child.wait();
+    }
+}
+
+fn spawn_worker() -> WorkerProc {
+    let mut child = Command::new(env!("CARGO_BIN_EXE_codedml"))
+        .args(["--worker", "--listen", "127.0.0.1:0"])
+        .stdout(Stdio::piped())
+        .stderr(Stdio::null())
+        .spawn()
+        .unwrap();
+    let stdout = child.stdout.take().unwrap();
+    let mut line = String::new();
+    BufReader::new(stdout).read_line(&mut line).unwrap();
+    let addr = line.trim().rsplit(' ').next().unwrap_or("").to_string();
+    assert!(addr.contains(':'), "unexpected worker banner: {line:?}");
+    WorkerProc { child, addr }
+}
+
+fn specs(n: usize, rows: usize, d: usize, coeffs: &[u64]) -> Vec<WorkerSpec> {
+    let f = PrimeField::new(PAPER_PRIME);
+    (0..n)
+        .map(|id| WorkerSpec {
+            id,
+            kind: BackendKind::Native,
+            artifact_dir: PathBuf::from("artifacts"),
+            field: f,
+            rows,
+            d,
+            coeffs: coeffs.to_vec(),
+            op: WorkerOp::Logistic,
+            fail_from_iter: None,
+            slow_ms: 0,
+            par: Parallelism::Serial,
+        })
+        .collect()
+}
+
+fn main() {
+    let f = PrimeField::new(PAPER_PRIME);
+    let (n, k, t) = (5usize, 1usize, 1usize);
+    let params = CodingParams::new(n, k, t, 1).unwrap();
+    let need = params.recovery_threshold();
+    let (rows, d) = (256usize, 512usize);
+    let m = rows * k;
+    let coeffs = vec![3u64, 7];
+    let iters = 30u64;
+
+    println!("== transport (N={n} K={k} T={t}, R={need}, {rows}x{d} shares) ==");
+
+    let mut rng = Rng::new(17);
+    let xq = f.random_matrix(&mut rng, m, d);
+    let enc = Encoder::new(f, params);
+    let x_shares: Vec<Vec<u64>> = enc
+        .encode_dataset(&xq, m, d, &mut rng)
+        .into_iter()
+        .map(|s| s.data)
+        .collect();
+    let w_shares: Vec<Vec<u64>> = enc
+        .encode_weights(&f.random_matrix(&mut rng, d, 1), d, 1, &mut rng)
+        .into_iter()
+        .map(|s| s.data)
+        .collect();
+
+    let mut times = [0.0f64; 2];
+    let mut per_iter_bytes = [0.0f64; 2];
+    for mode in 0..2usize {
+        let (label, mut cluster, _procs) = if mode == 0 {
+            let procs: Vec<WorkerProc> = (0..n).map(|_| spawn_worker()).collect();
+            let cfg = TransportConfig {
+                kind: TransportKind::Tcp,
+                tcp: TcpConfig {
+                    workers: procs.iter().map(|p| p.addr.clone()).collect(),
+                    ..TcpConfig::default()
+                },
+            };
+            let cluster = Cluster::connect(specs(n, rows, d, &coeffs), &cfg).unwrap();
+            ("loopback tcp", cluster, procs)
+        } else {
+            let cluster = Cluster::spawn(specs(n, rows, d, &coeffs)).unwrap();
+            ("in-memory channel", cluster, Vec::new())
+        };
+        cluster.load_data(x_shares.clone(), None).unwrap();
+        // Warmup round (thread scheduling, socket buffers).
+        cluster.dispatch(0, w_shares.clone()).unwrap();
+        cluster.collect_first(need, 0).unwrap();
+
+        let (sent0, recv0) = cluster.wire_bytes();
+        let t0 = Instant::now();
+        for iter in 1..=iters {
+            cluster.dispatch(iter, w_shares.clone()).unwrap();
+            let round = cluster.collect_first(need, iter).unwrap();
+            assert!(round.ok());
+        }
+        let secs = t0.elapsed().as_secs_f64() / iters as f64;
+        let (sent1, recv1) = cluster.wire_bytes();
+        times[mode] = secs;
+        per_iter_bytes[mode] = ((sent1 - sent0) + (recv1 - recv0)) as f64 / iters as f64;
+        report(&format!("train round [{label}]"), secs, None);
+    }
+
+    report_speedup("transport in-memory vs loopback tcp", times[0], times[1]);
+    report_metric("bytes on wire per iteration [loopback tcp]", per_iter_bytes[0]);
+    report_metric("bytes on wire per iteration [in-memory model]", per_iter_bytes[1]);
+
+    finish("transport");
+}

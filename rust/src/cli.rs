@@ -4,7 +4,13 @@
 //! codedml train       [--model logistic|linear --n 10 --k 3 --t 1 --r 1
 //!                      --case 1|2 --iters 25 --m 600 --d 784 --dup
 //!                      --batch-blocks 0 --backend native|xla --seed 42
-//!                      --threads serial|auto|<n> --config cfg.json --json out.json]
+//!                      --threads serial|auto|<n> --config cfg.json --json out.json
+//!                      --transport memory|tcp --workers host:port,host:port,...
+//!                      --connect-timeout-ms 5000 --connect-retries 3
+//!                      --connect-backoff-ms 100]
+//! codedml --worker    [--listen 127.0.0.1:0]   run one TCP worker process:
+//!                     bind, print "worker listening on <addr>", serve one
+//!                     master connection, exit
 //! codedml mpc         [--n 10 --t 4 --iters 25 --m 600 --d 784
 //!                      --threads serial|auto|<n>]
 //! codedml reproduce   <fig2|table1..6|fig3|fig4|fig5|linear|all>
@@ -23,10 +29,15 @@
 //! per-worker matmuls, and the decode (`serial` = 1 thread, the default;
 //! `auto` = one per core; `<n>` = exactly n). Results are bit-identical at
 //! every setting — only wall-clock time changes.
+//!
+//! `--transport tcp --workers a:p,b:p,...` points the master at N running
+//! `codedml --worker` processes (one address per worker id, in order);
+//! `--workers` alone implies `--transport tcp`. Decoded gradients are
+//! bit-identical to the in-memory backend — only the wire changes.
 
 use std::path::PathBuf;
 
-use crate::cluster::{NetworkModel, StragglerModel};
+use crate::cluster::{NetworkModel, StragglerModel, TransportKind};
 use crate::coordinator::{CodedMlConfig, CodedMlSession, ModelKind};
 use crate::data::{paper_dataset, synthetic_3v7, synthetic_planted_linear};
 use crate::mpc::{BgwConfig, BgwGradientProtocol};
@@ -37,6 +48,7 @@ use crate::util::args::Args;
 use crate::util::json::Json;
 
 const USAGE: &str = "usage: codedml <train|mpc|reproduce|budget|artifacts|lint|list> [options]
+       codedml --worker [--listen <addr>]
   train      run one CodedPrivateML training session
   mpc        run the BGW MPC baseline
   reproduce  regenerate a paper table/figure (or 'all')
@@ -45,13 +57,20 @@ const USAGE: &str = "usage: codedml <train|mpc|reproduce|budget|artifacts|lint|l
   lint       run the in-repo invariant linter over rust/src
              (--json [path] writes LINT_REPORT.json)
   list       list reproducible experiments
+  --worker   run one TCP worker process: bind --listen (default
+             127.0.0.1:0), print the bound address, serve one master
+             connection (see train --transport tcp), exit
 
 common options:
   --model logistic|linear     coded objective to train (default logistic;
                               linear = paper Remark 1 on a planted task)
   --threads serial|auto|<n>   thread pool for encode/compute/decode hot
                               paths (default serial; results are identical
-                              at every setting, only wall-clock changes)";
+                              at every setting, only wall-clock changes)
+  --transport memory|tcp      cluster transport (default memory; tcp needs
+                              --workers with one host:port per worker)
+  --workers a:p,b:p,...       worker addresses, index = worker id
+                              (implies --transport tcp)";
 
 /// Entry point; returns the process exit code.
 pub fn run() -> i32 {
@@ -72,6 +91,11 @@ pub fn run() -> i32 {
 }
 
 fn dispatch(args: &Args) -> Result<(), String> {
+    // Worker mode first: `codedml --worker` has no subcommand and must
+    // stay minimal — a remote host runs exactly this plus a port.
+    if args.flag("worker") {
+        return cmd_worker(args);
+    }
     match args.positional.first().map(String::as_str) {
         Some("train") => cmd_train(args),
         Some("mpc") => cmd_mpc(args),
@@ -90,6 +114,26 @@ fn dispatch(args: &Args) -> Result<(), String> {
             Ok(())
         }
     }
+}
+
+/// `codedml --worker [--listen <addr>]`: bind, announce the bound address
+/// on stdout (the conformance suite and scripts parse this line — the OS
+/// picks the port when `--listen` ends in `:0`), serve exactly one master
+/// connection, exit. Worker processes hold only their own coded share;
+/// the privacy boundary (`no-plaintext-to-workers`) is unchanged.
+fn cmd_worker(args: &Args) -> Result<(), String> {
+    use std::io::Write as _;
+    let listen = args.get("listen").unwrap_or("127.0.0.1:0");
+    let listener = std::net::TcpListener::bind(listen)
+        .map_err(|e| format!("bind {listen}: {e}"))?;
+    let addr = listener
+        .local_addr()
+        .map_err(|e| format!("local addr: {e}"))?;
+    println!("worker listening on {addr}");
+    let _ = std::io::stdout().flush();
+    let (stream, peer) = listener.accept().map_err(|e| format!("accept: {e}"))?;
+    eprintln!("master connected from {peer}");
+    crate::cluster::transport::tcp::serve(stream)
 }
 
 fn parse_backend(args: &Args) -> Result<BackendKind, String> {
@@ -160,6 +204,25 @@ fn cmd_train(args: &Args) -> Result<(), String> {
     if let Some(t) = args.get("threads") {
         cfg.parallelism = t.parse().map_err(|e: String| e)?;
     }
+    if let Some(t) = args.get("transport") {
+        cfg.transport.kind = t.parse().map_err(|e: String| e)?;
+    }
+    if let Some(ws) = args.get("workers") {
+        cfg.transport.tcp.workers = ws
+            .split(',')
+            .map(|s| s.trim().to_string())
+            .filter(|s| !s.is_empty())
+            .collect();
+        if args.get("transport").is_none() {
+            cfg.transport.kind = TransportKind::Tcp;
+        }
+    }
+    cfg.transport.tcp.connect_timeout_ms =
+        args.get_u64("connect-timeout-ms", cfg.transport.tcp.connect_timeout_ms)?;
+    cfg.transport.tcp.connect_retries =
+        args.get_u64("connect-retries", cfg.transport.tcp.connect_retries as u64)? as u32;
+    cfg.transport.tcp.connect_backoff_ms =
+        args.get_u64("connect-backoff-ms", cfg.transport.tcp.connect_backoff_ms)?;
     if let Some(path) = args.get("config") {
         let text = std::fs::read_to_string(path).map_err(|e| format!("read {path}: {e}"))?;
         cfg.apply_json(&text)?;
@@ -583,5 +646,41 @@ mod tests {
     fn train_rejects_bad_threads() {
         let err = dispatch(&args("train --threads lots")).unwrap_err();
         assert!(err.contains("thread count"), "{err}");
+    }
+
+    #[test]
+    fn train_rejects_bad_transport() {
+        let err = dispatch(&args("train --transport pigeon")).unwrap_err();
+        assert!(err.contains("bad transport"), "{err}");
+    }
+
+    #[test]
+    fn train_rejects_tcp_address_count_mismatch() {
+        // Validation fails before any connection is attempted, so the
+        // bogus address is never dialed.
+        let err = dispatch(&args(
+            "train --n 4 --k 1 --t 1 --iters 1 --m 40 --transport tcp \
+             --workers 127.0.0.1:1 --no-straggle --free-net"
+        ))
+        .unwrap_err();
+        assert!(err.contains("worker addresses"), "{err}");
+    }
+
+    #[test]
+    fn workers_flag_implies_tcp_transport() {
+        // Same mismatch error without an explicit --transport: proof the
+        // comma list flipped the transport kind to tcp.
+        let err = dispatch(&args(
+            "train --n 4 --k 1 --t 1 --iters 1 --m 40 \
+             --workers 127.0.0.1:1,127.0.0.1:2 --no-straggle --free-net"
+        ))
+        .unwrap_err();
+        assert!(err.contains("worker addresses"), "{err}");
+    }
+
+    #[test]
+    fn worker_mode_rejects_bad_listen_addr() {
+        let err = dispatch(&args("--worker --listen not-an-address")).unwrap_err();
+        assert!(err.contains("bind"), "{err}");
     }
 }

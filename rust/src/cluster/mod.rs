@@ -1,9 +1,24 @@
-//! Simulated master–worker cluster.
+//! Master–worker cluster behind a pluggable transport.
 //!
-//! The paper runs on Amazon EC2 (`m3.xlarge`, MPI4Py). Here each worker is
-//! an OS thread owning its own compute backend; messages are typed channel
-//! sends with byte accounting, and a [`NetworkModel`] converts bytes moved
-//! into modeled communication time (DESIGN.md §Substitutions).
+//! The paper runs on Amazon EC2 (`m3.xlarge`, MPI4Py). Here the master
+//! drives its N workers through the [`transport::Transport`] seam, with
+//! two backends:
+//!
+//! * **memory** (default) — each worker is an OS thread owning its own
+//!   compute backend; messages are typed channel sends. This is the
+//!   simulated cluster every unit test runs on, and a [`NetworkModel`]
+//!   converts bytes moved into modeled communication time
+//!   (DESIGN.md §Substitutions).
+//! * **tcp** — each worker is a separate `codedml --worker --listen
+//!   <addr>` process; messages are length-prefixed, versioned frames over
+//!   `std::net` sockets ([`transport::frame`]). Lost connections surface
+//!   as per-round failures (`TrainReport::worker_failures`), never
+//!   panics.
+//!
+//! Both backends charge identical frame-layout byte costs and deliver
+//! results in actual arrival order, so decoded gradients are
+//! **bit-identical across transports** (LCC decoding is exact on any
+//! fastest-R subset; asserted in `rust/tests/transport_conformance.rs`).
 //!
 //! Collection is **streaming**: [`Cluster::collect_first`] consumes
 //! results in actual arrival order and returns as soon as the fastest R
@@ -19,9 +34,11 @@
 mod netmodel;
 pub mod round;
 mod straggler;
+pub mod transport;
 pub mod worker;
 
 pub use netmodel::NetworkModel;
 pub use round::Round;
 pub use straggler::StragglerModel;
-pub use worker::{Cluster, ClusterError, StepResult, WorkerOp, WorkerSpec};
+pub use transport::{Transport, TransportConfig, TransportEvent, TransportKind};
+pub use worker::{Cluster, ClusterError, StepResult, WorkerEngine, WorkerOp, WorkerSpec};

@@ -1,0 +1,171 @@
+//! The in-memory transport: one OS thread per worker, one shared results
+//! channel.
+//!
+//! This is the original simulated cluster, now behind the
+//! [`Transport`] trait. Messages never serialize — they move through
+//! `std::sync::mpsc` by value — but every send/receive is charged the
+//! byte size the equivalent TCP frame would occupy
+//! ([`frame::frame_len`] over the payload-length helpers), so byte
+//! accounting is backend-independent and the TCP bench compares real
+//! wire costs against the same denominator.
+
+use std::sync::mpsc;
+use std::thread::JoinHandle;
+
+use super::frame;
+use super::{Transport, TransportEvent};
+use crate::cluster::worker::{ClusterError, StepResult, WorkerEngine, WorkerSpec};
+
+/// Master → worker messages (the in-memory mirror of
+/// [`frame::MasterFrame`], minus Hello: the spec rides into the thread at
+/// spawn).
+enum ToWorker {
+    /// One-time delivery of the coded dataset share (and labels for Linear).
+    LoadData { x: Vec<u64>, y: Option<Vec<u64>> },
+    /// Per-iteration coded weights.
+    Step { iter: u64, w: Vec<u64> },
+    Shutdown,
+}
+
+struct WorkerHandle {
+    tx: mpsc::Sender<ToWorker>,
+    join: Option<JoinHandle<()>>,
+}
+
+/// In-process transport backend (the default).
+pub struct ChannelTransport {
+    workers: Vec<WorkerHandle>,
+    results_rx: mpsc::Receiver<StepResult>,
+    sent: u64,
+    received: u64,
+}
+
+fn worker_thread(
+    spec: WorkerSpec,
+    rx: mpsc::Receiver<ToWorker>,
+    tx: mpsc::Sender<StepResult>,
+    ready: mpsc::Sender<Result<(), String>>,
+) {
+    let mut engine = match WorkerEngine::new(spec) {
+        Ok(e) => {
+            let _ = ready.send(Ok(()));
+            e
+        }
+        Err(e) => {
+            let _ = ready.send(Err(e));
+            return;
+        }
+    };
+    while let Ok(msg) = rx.recv() {
+        match msg {
+            ToWorker::LoadData { x, y } => engine.load(x, y),
+            ToWorker::Step { iter, w } => {
+                if tx.send(engine.step(iter, &w)).is_err() {
+                    return; // master gone
+                }
+            }
+            ToWorker::Shutdown => return,
+        }
+    }
+}
+
+impl ChannelTransport {
+    /// Spawn one thread per spec. Fails if any backend fails to build —
+    /// same fail-fast semantics the TCP handshake mirrors.
+    pub fn spawn(specs: Vec<WorkerSpec>) -> Result<Self, ClusterError> {
+        let (results_tx, results_rx) = mpsc::channel();
+        let mut workers = Vec::with_capacity(specs.len());
+        let mut readies = Vec::with_capacity(specs.len());
+        for spec in specs {
+            let (tx, rx) = mpsc::channel();
+            let (ready_tx, ready_rx) = mpsc::channel();
+            let rtx = results_tx.clone();
+            let join = std::thread::Builder::new()
+                .name(format!("worker-{}", spec.id))
+                .spawn(move || worker_thread(spec, rx, rtx, ready_tx))
+                .map_err(|e| ClusterError::Spawn(e.to_string()))?;
+            workers.push(WorkerHandle { tx, join: Some(join) });
+            readies.push(ready_rx);
+        }
+        for (i, ready) in readies.iter().enumerate() {
+            match ready.recv() {
+                Ok(Ok(())) => {}
+                Ok(Err(e)) => return Err(ClusterError::Backend(format!("worker {i}: {e}"))),
+                Err(_) => return Err(ClusterError::WorkerLost(i)),
+            }
+        }
+        Ok(ChannelTransport { workers, results_rx, sent: 0, received: 0 })
+    }
+
+    fn stop(&mut self) {
+        for w in &self.workers {
+            let _ = w.tx.send(ToWorker::Shutdown);
+        }
+        for w in &mut self.workers {
+            if let Some(j) = w.join.take() {
+                let _ = j.join();
+            }
+        }
+    }
+}
+
+impl Transport for ChannelTransport {
+    fn n(&self) -> usize {
+        self.workers.len()
+    }
+
+    fn name(&self) -> &'static str {
+        "memory"
+    }
+
+    fn send_load(
+        &mut self,
+        worker: usize,
+        x: Vec<u64>,
+        y: Option<Vec<u64>>,
+    ) -> Result<(), String> {
+        let cost = frame::frame_len(frame::load_data_payload_len(
+            x.len(),
+            y.as_ref().map(Vec::len),
+        )) as u64;
+        self.workers[worker]
+            .tx
+            .send(ToWorker::LoadData { x, y })
+            .map_err(|_| "worker channel closed".to_string())?;
+        self.sent += cost;
+        Ok(())
+    }
+
+    fn send_step(&mut self, worker: usize, iter: u64, w: Vec<u64>) -> Result<(), String> {
+        let cost = frame::frame_len(frame::step_payload_len(w.len())) as u64;
+        self.workers[worker]
+            .tx
+            .send(ToWorker::Step { iter, w })
+            .map_err(|_| "worker channel closed".to_string())?;
+        self.sent += cost;
+        Ok(())
+    }
+
+    fn recv(&mut self) -> Result<TransportEvent, ClusterError> {
+        let res = self
+            .results_rx
+            .recv()
+            .map_err(|_| ClusterError::Channel("results"))?;
+        self.received += frame::frame_len(frame::result_payload_len(&res)) as u64;
+        Ok(TransportEvent::Result(res))
+    }
+
+    fn shutdown(&mut self) {
+        self.stop();
+    }
+
+    fn bytes(&self) -> (u64, u64) {
+        (self.sent, self.received)
+    }
+}
+
+impl Drop for ChannelTransport {
+    fn drop(&mut self) {
+        self.stop();
+    }
+}

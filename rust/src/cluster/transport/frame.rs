@@ -1,0 +1,706 @@
+//! Length-prefixed wire frames for the TCP transport.
+//!
+//! Every message crossing a worker connection is one frame:
+//!
+//! ```text
+//! offset  size  field
+//! 0       4     magic  "CPML"
+//! 4       2     version (little-endian u16, currently 1)
+//! 6       1     opcode  (1=Hello 2=LoadData 3=Step 4=Shutdown 5=Ready 6=Result)
+//! 7       1     reserved (0)
+//! 8       4     payload length (little-endian u32, ≤ MAX_PAYLOAD)
+//! 12      len   payload
+//! ```
+//!
+//! All integers are little-endian; `Vec<u64>` payloads are a u32 count
+//! followed by the raw words; strings are a u32 byte length followed by
+//! UTF-8. Decoding is total: truncated, oversized, wrong-magic,
+//! wrong-version and malformed frames come back as a typed [`WireError`],
+//! never a panic (fuzzed in the tests below). The same byte layout is the
+//! unit of the transport's byte accounting — the in-memory backend charges
+//! [`frame_len`]-computed sizes without serializing, so the two backends
+//! report identical per-message costs.
+
+use std::io::{Read, Write};
+
+use crate::cluster::worker::StepResult;
+
+/// Frame magic: "CPML".
+pub const MAGIC: [u8; 4] = *b"CPML";
+/// Protocol version carried in every header.
+pub const VERSION: u16 = 1;
+/// Fixed header size in bytes.
+pub const HEADER_LEN: usize = 12;
+/// Hard cap on a single payload (1 GiB) — anything larger is a corrupt or
+/// hostile header, rejected before allocation.
+pub const MAX_PAYLOAD: u32 = 1 << 30;
+
+/// Opcodes. Master → worker: Hello, LoadData, Step, Shutdown.
+/// Worker → master: Ready, Result.
+pub mod opcode {
+    pub const HELLO: u8 = 1;
+    pub const LOAD_DATA: u8 = 2;
+    pub const STEP: u8 = 3;
+    pub const SHUTDOWN: u8 = 4;
+    pub const READY: u8 = 5;
+    pub const RESULT: u8 = 6;
+}
+
+/// Typed decode/IO failures. Every malformed input maps to one of these.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum WireError {
+    /// Header did not start with "CPML".
+    BadMagic([u8; 4]),
+    /// Version field differs from [`VERSION`].
+    BadVersion(u16),
+    /// Opcode outside the known table.
+    BadOpcode(u8),
+    /// Declared payload length exceeds [`MAX_PAYLOAD`].
+    Oversized(u32),
+    /// The stream ended mid-frame (or a payload field overran its frame).
+    Truncated,
+    /// Structurally valid frame whose payload failed to parse.
+    BadPayload(String),
+    /// Underlying socket/file error.
+    Io(String),
+}
+
+impl std::fmt::Display for WireError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            WireError::BadMagic(m) => write!(f, "bad frame magic {m:?}"),
+            WireError::BadVersion(v) => {
+                write!(f, "unsupported frame version {v} (want {VERSION})")
+            }
+            WireError::BadOpcode(op) => write!(f, "unknown opcode {op}"),
+            WireError::Oversized(len) => {
+                write!(f, "payload length {len} exceeds cap {MAX_PAYLOAD}")
+            }
+            WireError::Truncated => write!(f, "truncated frame"),
+            WireError::BadPayload(e) => write!(f, "bad payload: {e}"),
+            WireError::Io(e) => write!(f, "io: {e}"),
+        }
+    }
+}
+
+impl std::error::Error for WireError {}
+
+fn io_err(e: std::io::Error) -> WireError {
+    if e.kind() == std::io::ErrorKind::UnexpectedEof {
+        WireError::Truncated
+    } else {
+        WireError::Io(e.to_string())
+    }
+}
+
+/// Write one frame; returns the total bytes put on the wire
+/// (header + payload).
+pub fn write_frame(w: &mut impl Write, op: u8, payload: &[u8]) -> Result<usize, WireError> {
+    if payload.len() as u64 > MAX_PAYLOAD as u64 {
+        return Err(WireError::Oversized(payload.len() as u32));
+    }
+    let mut header = [0u8; HEADER_LEN];
+    header[..4].copy_from_slice(&MAGIC);
+    header[4..6].copy_from_slice(&VERSION.to_le_bytes());
+    header[6] = op;
+    header[7] = 0;
+    header[8..12].copy_from_slice(&(payload.len() as u32).to_le_bytes());
+    w.write_all(&header).map_err(io_err)?;
+    w.write_all(payload).map_err(io_err)?;
+    Ok(HEADER_LEN + payload.len())
+}
+
+/// Read one frame. `Ok(None)` means the peer closed the connection cleanly
+/// (EOF before any header byte) — every other shortfall is
+/// [`WireError::Truncated`].
+pub fn read_frame(r: &mut impl Read) -> Result<Option<(u8, Vec<u8>)>, WireError> {
+    let mut header = [0u8; HEADER_LEN];
+    let mut got = 0usize;
+    while got < HEADER_LEN {
+        match r.read(&mut header[got..]) {
+            Ok(0) if got == 0 => return Ok(None),
+            Ok(0) => return Err(WireError::Truncated),
+            Ok(n) => got += n,
+            Err(e) if e.kind() == std::io::ErrorKind::Interrupted => {}
+            Err(e) => return Err(io_err(e)),
+        }
+    }
+    if header[..4] != MAGIC {
+        let mut m = [0u8; 4];
+        m.copy_from_slice(&header[..4]);
+        return Err(WireError::BadMagic(m));
+    }
+    let version = u16::from_le_bytes([header[4], header[5]]);
+    if version != VERSION {
+        return Err(WireError::BadVersion(version));
+    }
+    let op = header[6];
+    if !(opcode::HELLO..=opcode::RESULT).contains(&op) {
+        return Err(WireError::BadOpcode(op));
+    }
+    let len = u32::from_le_bytes([header[8], header[9], header[10], header[11]]);
+    if len > MAX_PAYLOAD {
+        return Err(WireError::Oversized(len));
+    }
+    let mut payload = vec![0u8; len as usize];
+    r.read_exact(&mut payload).map_err(io_err)?;
+    Ok(Some((op, payload)))
+}
+
+// ---------------------------------------------------------------------------
+// Payload primitives
+// ---------------------------------------------------------------------------
+
+struct Reader<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Reader<'a> {
+    fn new(buf: &'a [u8]) -> Self {
+        Reader { buf, pos: 0 }
+    }
+
+    fn remaining(&self) -> usize {
+        self.buf.len() - self.pos
+    }
+
+    fn u8(&mut self) -> Result<u8, WireError> {
+        if self.remaining() < 1 {
+            return Err(WireError::Truncated);
+        }
+        let v = self.buf[self.pos];
+        self.pos += 1;
+        Ok(v)
+    }
+
+    fn u32(&mut self) -> Result<u32, WireError> {
+        if self.remaining() < 4 {
+            return Err(WireError::Truncated);
+        }
+        let mut b = [0u8; 4];
+        b.copy_from_slice(&self.buf[self.pos..self.pos + 4]);
+        self.pos += 4;
+        Ok(u32::from_le_bytes(b))
+    }
+
+    fn u64(&mut self) -> Result<u64, WireError> {
+        if self.remaining() < 8 {
+            return Err(WireError::Truncated);
+        }
+        let mut b = [0u8; 8];
+        b.copy_from_slice(&self.buf[self.pos..self.pos + 8]);
+        self.pos += 8;
+        Ok(u64::from_le_bytes(b))
+    }
+
+    /// Length-checked before allocation: a corrupt count cannot trigger a
+    /// huge `Vec` reservation.
+    fn vec_u64(&mut self) -> Result<Vec<u64>, WireError> {
+        let n = self.u32()? as usize;
+        if self.remaining() < n * 8 {
+            return Err(WireError::Truncated);
+        }
+        let mut out = Vec::with_capacity(n);
+        for _ in 0..n {
+            out.push(self.u64()?);
+        }
+        Ok(out)
+    }
+
+    fn string(&mut self) -> Result<String, WireError> {
+        let n = self.u32()? as usize;
+        if self.remaining() < n {
+            return Err(WireError::Truncated);
+        }
+        let bytes = &self.buf[self.pos..self.pos + n];
+        self.pos += n;
+        String::from_utf8(bytes.to_vec())
+            .map_err(|e| WireError::BadPayload(format!("string not UTF-8: {e}")))
+    }
+
+    fn finish(self) -> Result<(), WireError> {
+        if self.remaining() == 0 {
+            Ok(())
+        } else {
+            Err(WireError::BadPayload(format!(
+                "{} trailing byte(s) after payload",
+                self.remaining()
+            )))
+        }
+    }
+}
+
+fn put_u32(out: &mut Vec<u8>, v: u32) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_u64(out: &mut Vec<u8>, v: u64) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_vec_u64(out: &mut Vec<u8>, v: &[u64]) {
+    put_u32(out, v.len() as u32);
+    for &x in v {
+        put_u64(out, x);
+    }
+}
+
+fn put_string(out: &mut Vec<u8>, s: &str) {
+    put_u32(out, s.len() as u32);
+    out.extend_from_slice(s.as_bytes());
+}
+
+// ---------------------------------------------------------------------------
+// Wire-length arithmetic (byte accounting without serializing)
+// ---------------------------------------------------------------------------
+
+/// Bytes a `Vec<u64>` of `n` words occupies in a payload.
+pub fn vec_u64_len(n: usize) -> usize {
+    4 + 8 * n
+}
+
+/// Bytes a string occupies in a payload.
+pub fn string_len(s: &str) -> usize {
+    4 + s.len()
+}
+
+/// Total frame size for a payload of `payload_len` bytes.
+pub fn frame_len(payload_len: usize) -> usize {
+    HEADER_LEN + payload_len
+}
+
+/// Payload size of a [`MasterFrame::LoadData`] carrying `x` words and
+/// optionally `y` words.
+pub fn load_data_payload_len(x: usize, y: Option<usize>) -> usize {
+    1 + vec_u64_len(x) + y.map(vec_u64_len).unwrap_or(0)
+}
+
+/// Payload size of a [`MasterFrame::Step`] carrying `w` words.
+pub fn step_payload_len(w: usize) -> usize {
+    8 + vec_u64_len(w)
+}
+
+/// Payload size of a [`WorkerFrame::Result`] for `res`.
+pub fn result_payload_len(res: &StepResult) -> usize {
+    let body = match &res.data {
+        Ok(v) => vec_u64_len(v.len()),
+        Err(e) => string_len(e),
+    };
+    4 + 8 + 1 + body + 8
+}
+
+// ---------------------------------------------------------------------------
+// Master → worker frames
+// ---------------------------------------------------------------------------
+
+/// Everything a remote worker needs to build its engine — the wire image
+/// of a [`crate::cluster::WorkerSpec`] in primitive fields (conversion to
+/// and from the spec lives in `transport::tcp`, next to the only code that
+/// needs it).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct HelloSpec {
+    pub id: u32,
+    /// 0 = native, 1 = xla.
+    pub backend: u8,
+    /// 0 = logistic, 1 = linear.
+    pub op: u8,
+    /// 0 = auto, 1 = serial, n = exactly n threads
+    /// ([`crate::util::par::Parallelism::from_count`]).
+    pub par: u32,
+    pub p: u64,
+    pub rows: u32,
+    pub d: u32,
+    pub fail_from_iter: Option<u64>,
+    pub slow_ms: u64,
+    pub coeffs: Vec<u64>,
+    pub artifact_dir: String,
+}
+
+/// Frames the master sends.
+#[derive(Debug, Clone, PartialEq)]
+pub enum MasterFrame {
+    Hello(HelloSpec),
+    LoadData { x: Vec<u64>, y: Option<Vec<u64>> },
+    Step { iter: u64, w: Vec<u64> },
+    Shutdown,
+}
+
+impl MasterFrame {
+    /// `(opcode, payload)` for [`write_frame`].
+    pub fn encode(&self) -> (u8, Vec<u8>) {
+        match self {
+            MasterFrame::Hello(h) => {
+                let mut out = Vec::new();
+                put_u32(&mut out, h.id);
+                out.push(h.backend);
+                out.push(h.op);
+                put_u32(&mut out, h.par);
+                put_u64(&mut out, h.p);
+                put_u32(&mut out, h.rows);
+                put_u32(&mut out, h.d);
+                match h.fail_from_iter {
+                    Some(it) => {
+                        out.push(1);
+                        put_u64(&mut out, it);
+                    }
+                    None => {
+                        out.push(0);
+                        put_u64(&mut out, 0);
+                    }
+                }
+                put_u64(&mut out, h.slow_ms);
+                put_vec_u64(&mut out, &h.coeffs);
+                put_string(&mut out, &h.artifact_dir);
+                (opcode::HELLO, out)
+            }
+            MasterFrame::LoadData { x, y } => {
+                let mut out = Vec::new();
+                match y {
+                    Some(ys) => {
+                        out.push(1);
+                        put_vec_u64(&mut out, x);
+                        put_vec_u64(&mut out, ys);
+                    }
+                    None => {
+                        out.push(0);
+                        put_vec_u64(&mut out, x);
+                    }
+                }
+                (opcode::LOAD_DATA, out)
+            }
+            MasterFrame::Step { iter, w } => {
+                let mut out = Vec::new();
+                put_u64(&mut out, *iter);
+                put_vec_u64(&mut out, w);
+                (opcode::STEP, out)
+            }
+            MasterFrame::Shutdown => (opcode::SHUTDOWN, Vec::new()),
+        }
+    }
+
+    pub fn decode(op: u8, payload: &[u8]) -> Result<MasterFrame, WireError> {
+        let mut r = Reader::new(payload);
+        let frame = match op {
+            opcode::HELLO => {
+                let id = r.u32()?;
+                let backend = r.u8()?;
+                let op_code = r.u8()?;
+                let par = r.u32()?;
+                let p = r.u64()?;
+                let rows = r.u32()?;
+                let d = r.u32()?;
+                let has_fail = r.u8()?;
+                let fail_at = r.u64()?;
+                let slow_ms = r.u64()?;
+                let coeffs = r.vec_u64()?;
+                let artifact_dir = r.string()?;
+                MasterFrame::Hello(HelloSpec {
+                    id,
+                    backend,
+                    op: op_code,
+                    par,
+                    p,
+                    rows,
+                    d,
+                    fail_from_iter: (has_fail != 0).then_some(fail_at),
+                    slow_ms,
+                    coeffs,
+                    artifact_dir,
+                })
+            }
+            opcode::LOAD_DATA => {
+                let has_y = r.u8()?;
+                let x = r.vec_u64()?;
+                let y = if has_y != 0 { Some(r.vec_u64()?) } else { None };
+                MasterFrame::LoadData { x, y }
+            }
+            opcode::STEP => {
+                let iter = r.u64()?;
+                let w = r.vec_u64()?;
+                MasterFrame::Step { iter, w }
+            }
+            opcode::SHUTDOWN => MasterFrame::Shutdown,
+            other => return Err(WireError::BadOpcode(other)),
+        };
+        r.finish()?;
+        Ok(frame)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Worker → master frames
+// ---------------------------------------------------------------------------
+
+/// Frames a worker sends.
+#[derive(Debug, Clone, PartialEq)]
+pub enum WorkerFrame {
+    /// Handshake reply to Hello: `error` is `Some` when the backend failed
+    /// to build (the master aborts connect, mirroring the in-memory
+    /// spawn-fails-fast semantics).
+    Ready { error: Option<String> },
+    Result(StepResult),
+}
+
+impl WorkerFrame {
+    /// `(opcode, payload)` for [`write_frame`].
+    pub fn encode(&self) -> (u8, Vec<u8>) {
+        match self {
+            WorkerFrame::Ready { error } => {
+                let mut out = Vec::new();
+                match error {
+                    Some(e) => {
+                        out.push(1);
+                        put_string(&mut out, e);
+                    }
+                    None => out.push(0),
+                }
+                (opcode::READY, out)
+            }
+            WorkerFrame::Result(res) => {
+                let mut out = Vec::new();
+                put_u32(&mut out, res.worker as u32);
+                put_u64(&mut out, res.iter);
+                match &res.data {
+                    Ok(v) => {
+                        out.push(1);
+                        put_vec_u64(&mut out, v);
+                    }
+                    Err(e) => {
+                        out.push(0);
+                        put_string(&mut out, e);
+                    }
+                }
+                put_u64(&mut out, res.compute_secs.to_bits());
+                (opcode::RESULT, out)
+            }
+        }
+    }
+
+    pub fn decode(op: u8, payload: &[u8]) -> Result<WorkerFrame, WireError> {
+        let mut r = Reader::new(payload);
+        let frame = match op {
+            opcode::READY => {
+                let has_err = r.u8()?;
+                let error = if has_err != 0 { Some(r.string()?) } else { None };
+                WorkerFrame::Ready { error }
+            }
+            opcode::RESULT => {
+                let worker = r.u32()? as usize;
+                let iter = r.u64()?;
+                let ok = r.u8()?;
+                let data = if ok != 0 { Ok(r.vec_u64()?) } else { Err(r.string()?) };
+                let compute_secs = f64::from_bits(r.u64()?);
+                WorkerFrame::Result(StepResult { worker, iter, data, compute_secs })
+            }
+            other => return Err(WireError::BadOpcode(other)),
+        };
+        r.finish()?;
+        Ok(frame)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    fn round_trip_master(f: MasterFrame) {
+        let (op, payload) = f.encode();
+        let mut wire = Vec::new();
+        let n = write_frame(&mut wire, op, &payload).unwrap();
+        assert_eq!(n, wire.len());
+        assert_eq!(n, frame_len(payload.len()));
+        let (rop, rpayload) = read_frame(&mut wire.as_slice()).unwrap().unwrap();
+        assert_eq!((rop, &rpayload), (op, &payload));
+        assert_eq!(MasterFrame::decode(rop, &rpayload).unwrap(), f);
+    }
+
+    fn round_trip_worker(f: WorkerFrame) {
+        let (op, payload) = f.encode();
+        let mut wire = Vec::new();
+        write_frame(&mut wire, op, &payload).unwrap();
+        let (rop, rpayload) = read_frame(&mut wire.as_slice()).unwrap().unwrap();
+        assert_eq!(WorkerFrame::decode(rop, &rpayload).unwrap(), f);
+    }
+
+    fn sample_hello(rng: &mut Rng) -> HelloSpec {
+        HelloSpec {
+            id: rng.below(64) as u32,
+            backend: rng.below(2) as u8,
+            op: rng.below(2) as u8,
+            par: rng.below(9) as u32,
+            p: rng.next_u64() | 1,
+            rows: 1 + rng.below(1000) as u32,
+            d: 1 + rng.below(1000) as u32,
+            fail_from_iter: rng.bernoulli(0.5).then(|| rng.below(100)),
+            slow_ms: rng.below(1000),
+            coeffs: (0..rng.below_usize(5)).map(|_| rng.next_u64()).collect(),
+            artifact_dir: "artifacts/λ-dir".to_string(),
+        }
+    }
+
+    #[test]
+    fn master_frames_round_trip() {
+        let mut rng = Rng::new(7);
+        for _ in 0..50 {
+            round_trip_master(MasterFrame::Hello(sample_hello(&mut rng)));
+            let x: Vec<u64> = (0..rng.below_usize(64)).map(|_| rng.next_u64()).collect();
+            let y = rng
+                .bernoulli(0.5)
+                .then(|| (0..rng.below_usize(16)).map(|_| rng.next_u64()).collect());
+            round_trip_master(MasterFrame::LoadData { x, y });
+            round_trip_master(MasterFrame::Step {
+                iter: rng.next_u64(),
+                w: (0..rng.below_usize(64)).map(|_| rng.next_u64()).collect(),
+            });
+        }
+        round_trip_master(MasterFrame::Shutdown);
+        round_trip_master(MasterFrame::LoadData { x: vec![], y: Some(vec![]) });
+    }
+
+    #[test]
+    fn worker_frames_round_trip_both_result_arms() {
+        let mut rng = Rng::new(8);
+        round_trip_worker(WorkerFrame::Ready { error: None });
+        round_trip_worker(WorkerFrame::Ready { error: Some("no artifact".into()) });
+        for _ in 0..50 {
+            let data = if rng.bernoulli(0.5) {
+                Ok((0..rng.below_usize(64)).map(|_| rng.next_u64()).collect())
+            } else {
+                Err("injected fault".to_string())
+            };
+            round_trip_worker(WorkerFrame::Result(StepResult {
+                worker: rng.below_usize(64),
+                iter: rng.next_u64(),
+                data,
+                compute_secs: rng.f64(),
+            }));
+        }
+    }
+
+    #[test]
+    fn wire_length_helpers_match_encoders() {
+        let mut rng = Rng::new(9);
+        for _ in 0..20 {
+            let x: Vec<u64> = (0..rng.below_usize(40)).map(|_| rng.next_u64()).collect();
+            let y: Option<Vec<u64>> = rng
+                .bernoulli(0.5)
+                .then(|| (0..rng.below_usize(40)).map(|_| rng.next_u64()).collect());
+            let (_, p) = MasterFrame::LoadData { x: x.clone(), y: y.clone() }.encode();
+            assert_eq!(p.len(), load_data_payload_len(x.len(), y.as_ref().map(Vec::len)));
+
+            let w: Vec<u64> = (0..rng.below_usize(40)).map(|_| rng.next_u64()).collect();
+            let (_, p) = MasterFrame::Step { iter: 3, w: w.clone() }.encode();
+            assert_eq!(p.len(), step_payload_len(w.len()));
+
+            let res = StepResult {
+                worker: 2,
+                iter: 5,
+                data: if rng.bernoulli(0.5) {
+                    Ok(w.clone())
+                } else {
+                    Err("boom with ünicode".to_string())
+                },
+                compute_secs: 0.25,
+            };
+            let (_, p) = WorkerFrame::Result(res.clone()).encode();
+            assert_eq!(p.len(), result_payload_len(&res));
+        }
+    }
+
+    #[test]
+    fn rejects_bad_magic_version_opcode_oversize() {
+        let (op, payload) = MasterFrame::Shutdown.encode();
+        let mut wire = Vec::new();
+        write_frame(&mut wire, op, &payload).unwrap();
+
+        let mut bad = wire.clone();
+        bad[0] = b'X';
+        assert!(matches!(
+            read_frame(&mut bad.as_slice()),
+            Err(WireError::BadMagic(_))
+        ));
+
+        let mut bad = wire.clone();
+        bad[4] = 99;
+        assert_eq!(read_frame(&mut bad.as_slice()), Err(WireError::BadVersion(99)));
+
+        let mut bad = wire.clone();
+        bad[6] = 42;
+        assert_eq!(read_frame(&mut bad.as_slice()), Err(WireError::BadOpcode(42)));
+
+        let mut bad = wire;
+        bad[8..12].copy_from_slice(&(MAX_PAYLOAD + 1).to_le_bytes());
+        assert_eq!(
+            read_frame(&mut bad.as_slice()),
+            Err(WireError::Oversized(MAX_PAYLOAD + 1))
+        );
+    }
+
+    #[test]
+    fn truncation_at_every_cut_is_typed_not_a_panic() {
+        let (op, payload) = MasterFrame::Step { iter: 9, w: vec![1, 2, 3] }.encode();
+        let mut wire = Vec::new();
+        write_frame(&mut wire, op, &payload).unwrap();
+        for cut in 0..wire.len() {
+            let mut cursor: &[u8] = &wire[..cut];
+            let got = read_frame(&mut cursor);
+            if cut == 0 {
+                assert_eq!(got, Ok(None), "EOF at a frame boundary is a clean close");
+            } else {
+                assert_eq!(got, Err(WireError::Truncated), "cut at {cut}");
+            }
+        }
+    }
+
+    #[test]
+    fn fuzz_random_corruption_never_panics() {
+        // Fuzz-style: take valid frames, flip random bytes/lengths, and
+        // require every outcome to be Ok or a typed WireError — decoding
+        // must be total.
+        let mut rng = Rng::new(0xF0055_u64);
+        let frames: Vec<Vec<u8>> = {
+            let mut out = Vec::new();
+            let (op, p) = MasterFrame::Hello(sample_hello(&mut rng)).encode();
+            let mut w = Vec::new();
+            write_frame(&mut w, op, &p).unwrap();
+            out.push(w);
+            let (op, p) =
+                MasterFrame::LoadData { x: vec![5; 12], y: Some(vec![7; 12]) }.encode();
+            let mut w = Vec::new();
+            write_frame(&mut w, op, &p).unwrap();
+            out.push(w);
+            let (op, p) = WorkerFrame::Result(StepResult {
+                worker: 1,
+                iter: 2,
+                data: Ok(vec![3; 9]),
+                compute_secs: 0.5,
+            })
+            .encode();
+            let mut w = Vec::new();
+            write_frame(&mut w, op, &p).unwrap();
+            out.push(w);
+            out
+        };
+        for _ in 0..2000 {
+            let mut wire = frames[rng.below_usize(frames.len())].clone();
+            for _ in 0..=rng.below_usize(4) {
+                let at = rng.below_usize(wire.len());
+                wire[at] = rng.next_u64() as u8;
+            }
+            if rng.bernoulli(0.3) {
+                wire.truncate(rng.below_usize(wire.len() + 1));
+            }
+            match read_frame(&mut wire.as_slice()) {
+                Ok(Some((op, payload))) => {
+                    // Whichever direction claims the opcode, decoding must
+                    // return, not panic.
+                    let _ = MasterFrame::decode(op, &payload);
+                    let _ = WorkerFrame::decode(op, &payload);
+                }
+                Ok(None) | Err(_) => {}
+            }
+        }
+    }
+}

@@ -1,0 +1,169 @@
+//! Pluggable master ↔ worker transports.
+//!
+//! [`super::Cluster`] talks to its N workers exclusively through the
+//! [`Transport`] trait: deliver a coded data share once, deliver coded
+//! weights every iteration, and stream back [`StepResult`]s in actual
+//! arrival order. Two backends implement it:
+//!
+//! * [`ChannelTransport`] (default) — one OS thread per worker sharing an
+//!   in-process mpsc channel. This is the original simulated cluster;
+//!   every existing test runs on it unchanged.
+//! * [`TcpTransport`] — one OS *process* per worker (`codedml --worker
+//!   --listen <addr>`), length-prefixed frames over `std::net` sockets
+//!   (layout in [`frame`]), connect with configurable
+//!   timeout/retry/backoff, and disconnects surfaced as
+//!   [`TransportEvent::Down`] rather than panics.
+//!
+//! Both backends charge the *same* per-message byte costs (the frame
+//! layout is the accounting unit even in memory — see
+//! [`frame::frame_len`]), so `BENCH_transport` speedup rows compare like
+//! with like and decoded gradients are bit-identical across backends:
+//! LCC decoding is exact on any fastest-R subset, and the transports only
+//! reorder arrivals, never values.
+
+pub mod channel;
+pub mod frame;
+pub mod tcp;
+
+pub use channel::ChannelTransport;
+pub use tcp::TcpTransport;
+
+use crate::cluster::worker::{ClusterError, StepResult};
+
+/// One message from the worker side of a transport.
+#[derive(Debug)]
+pub enum TransportEvent {
+    /// A worker finished (or failed) a step.
+    Result(StepResult),
+    /// The transport lost a worker for good: connection closed, protocol
+    /// violation, or undecodable frame. The worker sends nothing further;
+    /// [`super::Cluster::collect_first`] converts this into a per-round
+    /// failure so it lands in `TrainReport::worker_failures`.
+    Down { worker: usize, error: String },
+}
+
+/// The seam between the round engine and the wire.
+///
+/// Sends are per-worker and a send error means *that worker* is gone
+/// (the cluster marks it down and keeps going); [`Transport::recv`]
+/// errors only when the whole transport is broken. Implementations must
+/// never panic on peer misbehavior — malformed input becomes
+/// [`TransportEvent::Down`].
+pub trait Transport: Send {
+    /// Number of workers this transport was built with (live or not).
+    fn n(&self) -> usize;
+
+    /// Backend name for traces and benches ("memory" / "tcp").
+    fn name(&self) -> &'static str;
+
+    /// Deliver worker `worker`'s coded data share (labels only for the
+    /// Linear op). `Err` = that worker is unreachable.
+    fn send_load(&mut self, worker: usize, x: Vec<u64>, y: Option<Vec<u64>>)
+        -> Result<(), String>;
+
+    /// Deliver coded weights for iteration `iter` to worker `worker`.
+    fn send_step(&mut self, worker: usize, iter: u64, w: Vec<u64>) -> Result<(), String>;
+
+    /// Block for the next worker event, whichever worker it comes from.
+    fn recv(&mut self) -> Result<TransportEvent, ClusterError>;
+
+    /// Tear down: best-effort notify workers, release connections, join
+    /// any internal threads. Must be idempotent (called from both
+    /// [`super::Cluster`]'s `Drop` and backend `Drop`s).
+    fn shutdown(&mut self);
+
+    /// Cumulative `(sent, received)` wire bytes, counted in frame-layout
+    /// units on both backends.
+    fn bytes(&self) -> (u64, u64);
+}
+
+/// Which backend a [`super::Cluster`] should run on.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum TransportKind {
+    /// In-process threads + channels (the simulated cluster).
+    #[default]
+    Memory,
+    /// One process per worker over loopback/LAN sockets.
+    Tcp,
+}
+
+impl std::str::FromStr for TransportKind {
+    type Err = String;
+
+    fn from_str(s: &str) -> Result<Self, Self::Err> {
+        match s {
+            "memory" => Ok(TransportKind::Memory),
+            "tcp" => Ok(TransportKind::Tcp),
+            other => Err(format!("bad transport '{other}' (memory|tcp)")),
+        }
+    }
+}
+
+impl std::fmt::Display for TransportKind {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            TransportKind::Memory => write!(f, "memory"),
+            TransportKind::Tcp => write!(f, "tcp"),
+        }
+    }
+}
+
+/// TCP backend knobs. `workers[i]` is the `host:port` the master connects
+/// to for worker id `i`; a refused/timed-out connect is retried
+/// `connect_retries` times with `connect_backoff_ms` sleeps and then the
+/// worker is marked down (reported per-iteration in
+/// `TrainReport::worker_failures`, not a panic or abort).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct TcpConfig {
+    /// One `host:port` per worker, index = worker id.
+    pub workers: Vec<String>,
+    /// Per-attempt connect (and handshake-read) timeout.
+    pub connect_timeout_ms: u64,
+    /// Extra attempts after the first connect failure.
+    pub connect_retries: u32,
+    /// Sleep between connect attempts.
+    pub connect_backoff_ms: u64,
+}
+
+impl Default for TcpConfig {
+    fn default() -> Self {
+        TcpConfig {
+            workers: Vec::new(),
+            connect_timeout_ms: 5000,
+            connect_retries: 3,
+            connect_backoff_ms: 100,
+        }
+    }
+}
+
+/// Transport selection + backend knobs, carried by
+/// [`crate::coordinator::CodedMlConfig`]. Flat (kind beside the TCP
+/// knobs) so JSON keys apply independently in any order.
+#[derive(Debug, Clone, PartialEq, Default)]
+pub struct TransportConfig {
+    pub kind: TransportKind,
+    pub tcp: TcpConfig,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn transport_kind_parses_and_displays() {
+        assert_eq!("memory".parse::<TransportKind>().unwrap(), TransportKind::Memory);
+        assert_eq!("tcp".parse::<TransportKind>().unwrap(), TransportKind::Tcp);
+        assert!("udp".parse::<TransportKind>().unwrap_err().contains("bad transport"));
+        assert_eq!(TransportKind::Memory.to_string(), "memory");
+        assert_eq!(TransportKind::Tcp.to_string(), "tcp");
+        assert_eq!(TransportKind::default(), TransportKind::Memory);
+    }
+
+    #[test]
+    fn tcp_config_defaults_are_reasonable() {
+        let cfg = TcpConfig::default();
+        assert!(cfg.workers.is_empty());
+        assert!(cfg.connect_timeout_ms > 0);
+        assert!(cfg.connect_backoff_ms > 0);
+    }
+}

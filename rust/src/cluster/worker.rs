@@ -1,16 +1,27 @@
-//! Worker threads and the cluster handle.
+//! The worker engine and the transport-generic cluster handle.
 //!
-//! Each worker owns its backend (constructed in-thread — the XLA runtime
-//! is thread-local by design) and its coded data share, mirroring the
+//! [`WorkerEngine`] is the compute side of one worker — it owns the
+//! backend (constructed where the worker runs; the XLA runtime is
+//! thread-local by design) and the coded data share, mirroring the
 //! paper's protocol where X̃_i is sent once and W̃_i^(t) every iteration.
+//! The engine is transport-agnostic: the in-memory backend runs it on a
+//! thread fed by a channel, the TCP backend runs it in a separate
+//! `codedml --worker` process fed by socket frames
+//! ([`super::transport`]).
+//!
+//! [`Cluster`] is the master-side handle: it drives a
+//! [`Transport`] and keeps per-worker *down* state so a lost worker
+//! becomes per-round failures (counted by the session into
+//! `TrainReport::worker_failures`) instead of an abort.
 
-use std::sync::mpsc;
-use std::thread::JoinHandle;
 use std::time::Duration;
 
 use super::round::Round;
-use crate::runtime::{BackendKind, WorkerBackend};
+use super::transport::{
+    ChannelTransport, TcpTransport, Transport, TransportConfig, TransportEvent, TransportKind,
+};
 use crate::field::PrimeField;
+use crate::runtime::{BackendKind, WorkerBackend};
 use crate::util::par::Parallelism;
 use crate::util::timer::timed;
 use std::path::PathBuf;
@@ -24,7 +35,9 @@ pub enum WorkerOp {
     Linear,
 }
 
-/// `Send`-able recipe for building a worker.
+/// `Send`-able recipe for building a worker. For the TCP backend this is
+/// what the Hello frame carries (in primitive form; see
+/// [`super::transport::frame::HelloSpec`]).
 #[derive(Debug, Clone)]
 pub struct WorkerSpec {
     pub id: usize,
@@ -49,16 +62,8 @@ pub struct WorkerSpec {
     pub par: Parallelism,
 }
 
-enum ToWorker {
-    /// One-time delivery of the coded dataset share (and labels for Linear).
-    LoadData { x: Vec<u64>, y: Option<Vec<u64>> },
-    /// Per-iteration coded weights.
-    Step { iter: u64, w: Vec<u64> },
-    Shutdown,
-}
-
 /// A worker's per-step result.
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, PartialEq)]
 pub struct StepResult {
     pub worker: usize,
     pub iter: u64,
@@ -70,7 +75,7 @@ pub struct StepResult {
 
 #[derive(Debug)]
 pub enum ClusterError {
-    /// A worker thread disconnected unexpectedly.
+    /// A worker disconnected unexpectedly.
     WorkerLost(usize),
     /// Backend construction failed on a worker.
     Backend(String),
@@ -93,109 +98,115 @@ impl std::fmt::Display for ClusterError {
 
 impl std::error::Error for ClusterError {}
 
-struct WorkerHandle {
-    tx: mpsc::Sender<ToWorker>,
-    join: Option<JoinHandle<()>>,
+/// One worker's compute state: backend + coded share + chaos hooks.
+///
+/// Lives wherever the transport puts the worker (thread or process) and
+/// is driven by exactly three operations: build, load, step.
+pub struct WorkerEngine {
+    id: usize,
+    op: WorkerOp,
+    field: PrimeField,
+    rows: usize,
+    d: usize,
+    par: Parallelism,
+    fail_from_iter: Option<u64>,
+    slow_ms: u64,
+    backend: WorkerBackend,
+    x_share: Vec<u64>,
+    y_share: Option<Vec<u64>>,
+    /// A failed share-marshal poisons every subsequent step: the error is
+    /// carried into each StepResult rather than printed, so the master's
+    /// failure accounting (TrainReport::worker_failures) sees it.
+    data_error: Option<String>,
 }
 
-/// Handle to N running workers.
-pub struct Cluster {
-    workers: Vec<WorkerHandle>,
-    results_rx: mpsc::Receiver<StepResult>,
-}
+impl WorkerEngine {
+    /// Build the backend for `spec`. The error string travels back to the
+    /// master over the transport's ready/Ready handshake.
+    pub fn new(spec: WorkerSpec) -> Result<Self, String> {
+        let backend = WorkerBackend::create(
+            spec.kind,
+            &spec.artifact_dir,
+            spec.field,
+            spec.rows,
+            spec.d,
+            spec.coeffs.clone(),
+            spec.par,
+        )
+        .map_err(|e| e.to_string())?;
+        Ok(WorkerEngine {
+            id: spec.id,
+            op: spec.op,
+            field: spec.field,
+            rows: spec.rows,
+            d: spec.d,
+            par: spec.par,
+            fail_from_iter: spec.fail_from_iter,
+            slow_ms: spec.slow_ms,
+            backend,
+            x_share: Vec::new(),
+            y_share: None,
+            data_error: None,
+        })
+    }
 
-fn worker_main(
-    spec: WorkerSpec,
-    rx: mpsc::Receiver<ToWorker>,
-    tx: mpsc::Sender<StepResult>,
-    ready: mpsc::Sender<Result<(), String>>,
-) {
-    let backend = match WorkerBackend::create(
-        spec.kind,
-        &spec.artifact_dir,
-        spec.field,
-        spec.rows,
-        spec.d,
-        spec.coeffs.clone(),
-        spec.par,
-    ) {
-        Ok(b) => {
-            let _ = ready.send(Ok(()));
-            b
+    /// One-time delivery of the coded dataset share (labels only for
+    /// Linear).
+    pub fn load(&mut self, x: Vec<u64>, y: Option<Vec<u64>>) {
+        self.x_share = x;
+        self.y_share = y;
+        // XLA backend: marshal the share once, off the hot path.
+        self.data_error = self
+            .backend
+            .prepare_data(&self.x_share)
+            .err()
+            .map(|e| format!("prepare_data: {e}"));
+    }
+
+    /// Compute one step. Infallible by construction: every failure mode
+    /// (chaos injection, poisoned data, backend error) is carried inside
+    /// the [`StepResult`] so the master's round accounting sees it.
+    pub fn step(&self, iter: u64, w: &[u64]) -> StepResult {
+        if self.fail_from_iter.map(|from| iter >= from).unwrap_or(false) {
+            return StepResult {
+                worker: self.id,
+                iter,
+                data: Err("injected fault".to_string()),
+                compute_secs: 0.0,
+            };
         }
-        Err(e) => {
-            let _ = ready.send(Err(e.to_string()));
-            return;
+        if let Some(e) = &self.data_error {
+            return StepResult {
+                worker: self.id,
+                iter,
+                data: Err(e.clone()),
+                compute_secs: 0.0,
+            };
         }
-    };
-    let mut x_share: Vec<u64> = Vec::new();
-    let mut y_share: Option<Vec<u64>> = None;
-    // A failed share-marshal poisons every subsequent step: the error is
-    // carried into each StepResult rather than printed, so the master's
-    // failure accounting (TrainReport::worker_failures) sees it.
-    let mut data_error: Option<String> = None;
-    let f = spec.field;
-    while let Ok(msg) = rx.recv() {
-        match msg {
-            ToWorker::LoadData { x, y } => {
-                x_share = x;
-                y_share = y;
-                // XLA backend: marshal the share once, off the hot path.
-                data_error = backend
-                    .prepare_data(&x_share)
-                    .err()
-                    .map(|e| format!("prepare_data: {e}"));
+        let (data, compute_secs) = timed(|| {
+            let data = match self.op {
+                WorkerOp::Logistic => self
+                    .backend
+                    .compute(&self.x_share, w)
+                    .map_err(|e| e.to_string()),
+                WorkerOp::Linear => Ok(linear_f(
+                    &self.field,
+                    &self.x_share,
+                    w,
+                    self.y_share.as_deref(),
+                    self.rows,
+                    self.d,
+                    self.par,
+                )),
+            };
+            // A chaos-slowed worker sleeps inside the measured span so its
+            // compute time reflects the injected lag.
+            if self.slow_ms > 0 {
+                std::thread::sleep(Duration::from_millis(self.slow_ms));
             }
-            ToWorker::Step { iter, w } => {
-                if spec.fail_from_iter.map(|from| iter >= from).unwrap_or(false) {
-                    let _ = tx.send(StepResult {
-                        worker: spec.id,
-                        iter,
-                        data: Err("injected fault".to_string()),
-                        compute_secs: 0.0,
-                    });
-                    continue;
-                }
-                if let Some(e) = &data_error {
-                    let _ = tx.send(StepResult {
-                        worker: spec.id,
-                        iter,
-                        data: Err(e.clone()),
-                        compute_secs: 0.0,
-                    });
-                    continue;
-                }
-                let (data, compute_secs) = timed(|| {
-                    let data = match spec.op {
-                        WorkerOp::Logistic => {
-                            backend.compute(&x_share, &w).map_err(|e| e.to_string())
-                        }
-                        WorkerOp::Linear => Ok(linear_f(
-                            &f,
-                            &x_share,
-                            &w,
-                            y_share.as_deref(),
-                            spec.rows,
-                            spec.d,
-                            spec.par,
-                        )),
-                    };
-                    // A chaos-slowed worker sleeps inside the measured span
-                    // so its compute time reflects the injected lag.
-                    if spec.slow_ms > 0 {
-                        std::thread::sleep(Duration::from_millis(spec.slow_ms));
-                    }
-                    data
-                });
-                if tx
-                    .send(StepResult { worker: spec.id, iter, data, compute_secs })
-                    .is_err()
-                {
-                    return; // master gone
-                }
-            }
-            ToWorker::Shutdown => return,
-        }
+            data
+        });
+        StepResult { worker: self.id, iter, data, compute_secs }
     }
 }
 
@@ -219,83 +230,153 @@ fn linear_f(
     tr_matvec_mod_par(f, x, &resid, rows, d, par)
 }
 
+/// Handle to N workers behind a [`Transport`].
+///
+/// The cluster tracks which workers are *down* (unreachable at connect,
+/// or lost mid-training). A down worker is skipped on sends and counted
+/// as one failure per round in [`Cluster::collect_first`] — training
+/// survives as long as the fastest-R threshold stays reachable.
+pub struct Cluster {
+    transport: Box<dyn Transport>,
+    /// `Some(reason)` once worker i is unreachable for good.
+    down: Vec<Option<String>>,
+}
+
 impl Cluster {
-    /// Spawn one thread per spec. Fails if any backend fails to build.
+    /// Spawn the default in-memory backend: one thread per spec. Fails if
+    /// any backend fails to build.
     pub fn spawn(specs: Vec<WorkerSpec>) -> Result<Self, ClusterError> {
-        let (results_tx, results_rx) = mpsc::channel();
-        let mut workers = Vec::with_capacity(specs.len());
-        let mut readies = Vec::with_capacity(specs.len());
-        for spec in specs {
-            let (tx, rx) = mpsc::channel();
-            let (ready_tx, ready_rx) = mpsc::channel();
-            let rtx = results_tx.clone();
-            let join = std::thread::Builder::new()
-                .name(format!("worker-{}", spec.id))
-                .spawn(move || worker_main(spec, rx, rtx, ready_tx))
-                .map_err(|e| ClusterError::Spawn(e.to_string()))?;
-            workers.push(WorkerHandle { tx, join: Some(join) });
-            readies.push(ready_rx);
-        }
-        for (i, ready) in readies.iter().enumerate() {
-            match ready.recv() {
-                Ok(Ok(())) => {}
-                Ok(Err(e)) => return Err(ClusterError::Backend(format!("worker {i}: {e}"))),
-                Err(_) => return Err(ClusterError::WorkerLost(i)),
+        Cluster::connect(specs, &TransportConfig::default())
+    }
+
+    /// Build a cluster on the configured transport. Memory spawns threads
+    /// in-process; TCP connects to already-running `codedml --worker`
+    /// processes at `cfg.tcp.workers[i]` (worker i), marking unreachable
+    /// ones down rather than failing the build.
+    pub fn connect(specs: Vec<WorkerSpec>, cfg: &TransportConfig) -> Result<Self, ClusterError> {
+        match cfg.kind {
+            TransportKind::Memory => {
+                let n = specs.len();
+                let transport = ChannelTransport::spawn(specs)?;
+                Ok(Cluster { transport: Box::new(transport), down: vec![None; n] })
+            }
+            TransportKind::Tcp => {
+                if cfg.tcp.workers.len() != specs.len() {
+                    return Err(ClusterError::Backend(format!(
+                        "tcp transport needs {} worker addresses, got {}",
+                        specs.len(),
+                        cfg.tcp.workers.len()
+                    )));
+                }
+                let (transport, down) = TcpTransport::connect(&specs, &cfg.tcp)?;
+                Ok(Cluster { transport: Box::new(transport), down })
             }
         }
-        Ok(Cluster { workers, results_rx })
     }
 
     pub fn n(&self) -> usize {
-        self.workers.len()
+        self.transport.n()
+    }
+
+    /// Transport backend name ("memory" / "tcp") for traces and benches.
+    pub fn transport_name(&self) -> &'static str {
+        self.transport.name()
+    }
+
+    /// Cumulative `(sent, received)` wire bytes. Both backends count in
+    /// frame-layout units, so the numbers are comparable across
+    /// transports.
+    pub fn wire_bytes(&self) -> (u64, u64) {
+        self.transport.bytes()
+    }
+
+    /// Workers currently marked down, with reasons.
+    pub fn down_workers(&self) -> Vec<(usize, String)> {
+        self.down
+            .iter()
+            .enumerate()
+            .filter_map(|(i, e)| e.as_ref().map(|e| (i, e.clone())))
+            .collect()
     }
 
     /// Deliver coded dataset shares (index = worker id). `y_shares` only
-    /// for the Linear op.
+    /// for the Linear op. A send failure marks that worker down; it will
+    /// be counted failed each round.
     pub fn load_data(
-        &self,
+        &mut self,
         x_shares: Vec<Vec<u64>>,
         mut y_shares: Option<Vec<Vec<u64>>>,
     ) -> Result<(), ClusterError> {
-        assert_eq!(x_shares.len(), self.workers.len());
+        assert_eq!(x_shares.len(), self.transport.n());
         for (i, x) in x_shares.into_iter().enumerate() {
+            if self.down[i].is_some() {
+                continue;
+            }
             let y = y_shares.as_mut().map(|ys| std::mem::take(&mut ys[i]));
-            self.workers[i]
-                .tx
-                .send(ToWorker::LoadData { x, y })
-                .map_err(|_| ClusterError::WorkerLost(i))?;
+            if let Err(e) = self.transport.send_load(i, x, y) {
+                self.down[i] = Some(e);
+            }
         }
         Ok(())
     }
 
-    /// Send coded weights for iteration `iter` to every worker.
-    pub fn dispatch(&self, iter: u64, w_shares: Vec<Vec<u64>>) -> Result<(), ClusterError> {
-        assert_eq!(w_shares.len(), self.workers.len());
+    /// Send coded weights for iteration `iter` to every live worker.
+    pub fn dispatch(&mut self, iter: u64, w_shares: Vec<Vec<u64>>) -> Result<(), ClusterError> {
+        assert_eq!(w_shares.len(), self.transport.n());
         for (i, w) in w_shares.into_iter().enumerate() {
-            self.workers[i]
-                .tx
-                .send(ToWorker::Step { iter, w })
-                .map_err(|_| ClusterError::WorkerLost(i))?;
+            if self.down[i].is_some() {
+                continue;
+            }
+            if let Err(e) = self.transport.send_step(i, iter, w) {
+                self.down[i] = Some(e);
+            }
         }
         Ok(())
     }
 
-    /// Stream results for `iter` off the shared channel and return as soon
-    /// as the fastest `need` usable ones have arrived — the master never
+    /// Stream results for `iter` off the transport and return as soon as
+    /// the fastest `need` usable ones have arrived — the master never
     /// waits for stragglers past the recovery threshold. Stale results
     /// from earlier iterations are drained (and counted on the returned
     /// [`Round`]) without blocking; failures are collected so the caller
-    /// can tell "threshold unreachable" from "still in flight". Passing
-    /// `need = n()` degenerates to a full collection.
-    pub fn collect_first(&self, need: usize, iter: u64) -> Result<Round, ClusterError> {
+    /// can tell "threshold unreachable" from "still in flight". Workers
+    /// already down contribute one failure up front, and a transport
+    /// `Down` event mid-round converts to a failure the same way — so
+    /// `collect_first` terminates (never deadlocks) whenever every live
+    /// worker eventually answers or dies. Passing `need = n()` degenerates
+    /// to a full collection.
+    pub fn collect_first(&mut self, need: usize, iter: u64) -> Result<Round, ClusterError> {
+        let n = self.transport.n();
         let (collected, wall_secs) = timed(|| -> Result<Round, ClusterError> {
-            let mut round = Round::new(iter, need, self.workers.len());
+            let mut round = Round::new(iter, need, n);
+            for w in 0..n {
+                if let Some(e) = &self.down[w] {
+                    round.absorb(StepResult {
+                        worker: w,
+                        iter,
+                        data: Err(format!("worker down: {e}")),
+                        compute_secs: 0.0,
+                    });
+                }
+            }
             while !round.complete() {
-                let res = self
-                    .results_rx
-                    .recv()
-                    .map_err(|_| ClusterError::Channel("results"))?;
-                round.absorb(res);
+                match self.transport.recv()? {
+                    TransportEvent::Result(res) => round.absorb(res),
+                    TransportEvent::Down { worker, error } => {
+                        // First notice of this death: count it against the
+                        // current round. (Subsequent rounds charge it via
+                        // the up-front down scan above.)
+                        if self.down[worker].is_none() {
+                            self.down[worker] = Some(error.clone());
+                            round.absorb(StepResult {
+                                worker,
+                                iter,
+                                data: Err(format!("worker down: {error}")),
+                                compute_secs: 0.0,
+                            });
+                        }
+                    }
+                }
             }
             Ok(round)
         });
@@ -307,14 +388,7 @@ impl Cluster {
 
 impl Drop for Cluster {
     fn drop(&mut self) {
-        for w in &self.workers {
-            let _ = w.tx.send(ToWorker::Shutdown);
-        }
-        for w in &mut self.workers {
-            if let Some(j) = w.join.take() {
-                let _ = j.join();
-            }
-        }
+        self.transport.shutdown();
     }
 }
 
@@ -348,7 +422,7 @@ mod tests {
     fn cluster_computes_logistic_on_all_workers() {
         let f = PrimeField::new(PAPER_PRIME);
         let (n, rows, d) = (4, 2, 3);
-        let cluster = Cluster::spawn(specs(n, rows, d, WorkerOp::Logistic)).unwrap();
+        let mut cluster = Cluster::spawn(specs(n, rows, d, WorkerOp::Logistic)).unwrap();
         let x_shares: Vec<Vec<u64>> = (0..n)
             .map(|i| (0..rows * d).map(|e| (i * 10 + e) as u64 % PAPER_PRIME).collect())
             .collect();
@@ -369,12 +443,15 @@ mod tests {
             assert!(res.compute_secs >= 0.0);
             assert_eq!(res.data.as_ref().unwrap(), &wc.compute(&x_shares[i], &w));
         }
+        let (sent, received) = cluster.wire_bytes();
+        assert!(sent > 0, "load + dispatch must be charged");
+        assert!(received > 0, "collected results must be charged");
     }
 
     #[test]
     fn cluster_streams_multiple_iterations() {
         let n = 3;
-        let cluster = Cluster::spawn(specs(n, 2, 2, WorkerOp::Logistic)).unwrap();
+        let mut cluster = Cluster::spawn(specs(n, 2, 2, WorkerOp::Logistic)).unwrap();
         cluster
             .load_data(vec![vec![1, 2, 3, 4]; n], None)
             .unwrap();
@@ -395,7 +472,7 @@ mod tests {
         // results surface as late drains once they do arrive.
         let mut s = specs(3, 2, 2, WorkerOp::Logistic);
         s[2].slow_ms = 60;
-        let cluster = Cluster::spawn(s).unwrap();
+        let mut cluster = Cluster::spawn(s).unwrap();
         cluster.load_data(vec![vec![1, 2, 3, 4]; 3], None).unwrap();
 
         cluster.dispatch(0, vec![vec![1, 2]; 3]).unwrap();
@@ -421,7 +498,7 @@ mod tests {
     #[test]
     fn collect_first_full_need_equals_full_collection() {
         let n = 4;
-        let cluster = Cluster::spawn(specs(n, 2, 2, WorkerOp::Logistic)).unwrap();
+        let mut cluster = Cluster::spawn(specs(n, 2, 2, WorkerOp::Logistic)).unwrap();
         cluster.load_data(vec![vec![1, 2, 3, 4]; n], None).unwrap();
         cluster.dispatch(0, vec![vec![5, 6]; n]).unwrap();
         let round = cluster.collect_first(n, 0).unwrap();
@@ -434,7 +511,7 @@ mod tests {
     fn linear_op_computes_residual_gradient() {
         let f = PrimeField::new(PAPER_PRIME);
         let (rows, d) = (2, 2);
-        let cluster = Cluster::spawn(specs(1, rows, d, WorkerOp::Linear)).unwrap();
+        let mut cluster = Cluster::spawn(specs(1, rows, d, WorkerOp::Linear)).unwrap();
         let x = vec![1u64, 2, 3, 4];
         let y = vec![5u64, 6];
         cluster
@@ -459,5 +536,46 @@ mod tests {
             Err(other) => panic!("wrong error: {other:?}"),
             Ok(_) => panic!("spawn should fail"),
         }
+    }
+
+    #[test]
+    fn connect_rejects_mismatched_tcp_address_count() {
+        use crate::cluster::transport::{TcpConfig, TransportConfig, TransportKind};
+        let cfg = TransportConfig {
+            kind: TransportKind::Tcp,
+            tcp: TcpConfig { workers: vec!["127.0.0.1:1".into()], ..TcpConfig::default() },
+        };
+        match Cluster::connect(specs(2, 2, 2, WorkerOp::Logistic), &cfg) {
+            Err(ClusterError::Backend(e)) => {
+                assert!(e.contains("2 worker addresses"), "{e}");
+            }
+            other => panic!("expected Backend error, got {:?}", other.map(|_| ())),
+        }
+    }
+
+    #[test]
+    fn worker_engine_steps_match_direct_computation() {
+        let f = PrimeField::new(PAPER_PRIME);
+        let (rows, d) = (2, 3);
+        let spec = specs(1, rows, d, WorkerOp::Logistic).remove(0);
+        let mut engine = WorkerEngine::new(spec).unwrap();
+        let x = vec![1u64, 2, 3, 4, 5, 6];
+        engine.load(x.clone(), None);
+        let w = vec![2u64, 4, 6];
+        let res = engine.step(7, &w);
+        assert_eq!(res.worker, 0);
+        assert_eq!(res.iter, 7);
+        let wc = WorkerComputation::new(f, rows, d, vec![3, 7]);
+        assert_eq!(res.data.unwrap(), wc.compute(&x, &w));
+    }
+
+    #[test]
+    fn worker_engine_honors_fail_from_iter() {
+        let mut spec = specs(1, 2, 2, WorkerOp::Logistic).remove(0);
+        spec.fail_from_iter = Some(2);
+        let mut engine = WorkerEngine::new(spec).unwrap();
+        engine.load(vec![1, 2, 3, 4], None);
+        assert!(engine.step(1, &[1, 1]).data.is_ok());
+        assert_eq!(engine.step(2, &[1, 1]).data.unwrap_err(), "injected fault");
     }
 }

@@ -2,7 +2,7 @@
 
 use std::path::PathBuf;
 
-use crate::cluster::{NetworkModel, StragglerModel};
+use crate::cluster::{NetworkModel, StragglerModel, TransportConfig, TransportKind};
 use crate::coding::{CodingParams, ParamError};
 use crate::field::{PrimeField, PAPER_PRIME};
 use crate::quant::{BudgetReport, OverflowBudget};
@@ -169,6 +169,10 @@ pub struct CodedMlConfig {
     /// ...of this many milliseconds (real slow machines; the streaming
     /// round engine must leave them behind, not wait).
     pub chaos_slow_ms: u64,
+    /// Which transport the cluster runs on (CLI `--transport`/`--workers`,
+    /// JSON `transport`/`tcp_workers`/`connect_*`). Memory spawns threads
+    /// in-process; Tcp connects to running `codedml --worker` processes.
+    pub transport: TransportConfig,
 }
 
 impl Default for CodedMlConfig {
@@ -201,6 +205,7 @@ impl Default for CodedMlConfig {
             batch_blocks: 0,
             chaos_slow_workers: 0,
             chaos_slow_ms: 0,
+            transport: TransportConfig::default(),
         }
     }
 }
@@ -258,6 +263,15 @@ impl CodedMlConfig {
             return Err(ConfigError::BadShape(format!(
                 "batch_blocks={} exceeds K={}",
                 self.batch_blocks, self.k
+            )));
+        }
+        if self.transport.kind == TransportKind::Tcp
+            && self.transport.tcp.workers.len() != self.n
+        {
+            return Err(ConfigError::BadShape(format!(
+                "tcp transport needs {} worker addresses (one per worker), got {}",
+                self.n,
+                self.transport.tcp.workers.len()
             )));
         }
         let field = self.field();
@@ -385,6 +399,37 @@ impl CodedMlConfig {
                 "chaos_slow_ms" => {
                     self.chaos_slow_ms = val.as_u64().ok_or("chaos_slow_ms: want integer")?
                 }
+                "transport" => {
+                    self.transport.kind = val
+                        .as_str()
+                        .ok_or("transport: want string")?
+                        .parse()
+                        .map_err(|e: String| e)?
+                }
+                "tcp_workers" => {
+                    let arr = val.as_arr().ok_or("tcp_workers: want array of strings")?;
+                    let mut workers = Vec::with_capacity(arr.len());
+                    for v in arr {
+                        workers.push(
+                            v.as_str()
+                                .ok_or("tcp_workers: want array of strings")?
+                                .to_string(),
+                        );
+                    }
+                    self.transport.tcp.workers = workers;
+                }
+                "connect_timeout_ms" => {
+                    self.transport.tcp.connect_timeout_ms =
+                        val.as_u64().ok_or("connect_timeout_ms: want integer")?
+                }
+                "connect_retries" => {
+                    self.transport.tcp.connect_retries =
+                        val.as_u64().ok_or("connect_retries: want integer")? as u32
+                }
+                "connect_backoff_ms" => {
+                    self.transport.tcp.connect_backoff_ms =
+                        val.as_u64().ok_or("connect_backoff_ms: want integer")?
+                }
                 other => return Err(format!("unknown config key '{other}'")),
             }
         }
@@ -435,6 +480,30 @@ impl CodedMlConfig {
             ("chaos_from_iter", Json::Num(self.chaos_from_iter as f64)),
             ("chaos_slow_workers", Json::Num(self.chaos_slow_workers as f64)),
             ("chaos_slow_ms", Json::Num(self.chaos_slow_ms as f64)),
+            ("transport", Json::Str(self.transport.kind.to_string())),
+            (
+                "tcp_workers",
+                Json::Arr(
+                    self.transport
+                        .tcp
+                        .workers
+                        .iter()
+                        .map(|w| Json::Str(w.clone()))
+                        .collect(),
+                ),
+            ),
+            (
+                "connect_timeout_ms",
+                Json::Num(self.transport.tcp.connect_timeout_ms as f64),
+            ),
+            (
+                "connect_retries",
+                Json::Num(self.transport.tcp.connect_retries as f64),
+            ),
+            (
+                "connect_backoff_ms",
+                Json::Num(self.transport.tcp.connect_backoff_ms as f64),
+            ),
         ];
         if let Some(eta) = self.eta {
             fields.push(("eta", Json::Num(eta)));
@@ -556,6 +625,15 @@ mod tests {
             batch_blocks: 3,
             chaos_slow_workers: 1,
             chaos_slow_ms: 40,
+            transport: TransportConfig {
+                kind: TransportKind::Tcp,
+                tcp: crate::cluster::transport::TcpConfig {
+                    workers: vec!["10.0.0.1:7000".into(), "10.0.0.2:7000".into()],
+                    connect_timeout_ms: 750,
+                    connect_retries: 5,
+                    connect_backoff_ms: 25,
+                },
+            },
         };
         let text = cfg.to_json().to_string();
         let mut restored = CodedMlConfig::default();
@@ -580,6 +658,46 @@ mod tests {
             other => panic!("expected BadShape, got {other:?}"),
         }
         let cfg = CodedMlConfig { batch_blocks: 3, ..Default::default() };
+        cfg.validate(300, 1.0).unwrap();
+    }
+
+    #[test]
+    fn json_transport_keys_apply_in_any_order() {
+        // Keys reach apply_json alphabetically (BTreeMap-backed object), so
+        // the tcp knobs land before "transport" — the flat layout makes
+        // that ordering irrelevant.
+        let mut cfg = CodedMlConfig::default();
+        cfg.apply_json(
+            r#"{"transport": "tcp",
+                "tcp_workers": ["127.0.0.1:7001", "127.0.0.1:7002"],
+                "connect_timeout_ms": 900, "connect_retries": 1,
+                "connect_backoff_ms": 10}"#,
+        )
+        .unwrap();
+        assert_eq!(cfg.transport.kind, TransportKind::Tcp);
+        assert_eq!(
+            cfg.transport.tcp.workers,
+            vec!["127.0.0.1:7001".to_string(), "127.0.0.1:7002".to_string()]
+        );
+        assert_eq!(cfg.transport.tcp.connect_timeout_ms, 900);
+        assert_eq!(cfg.transport.tcp.connect_retries, 1);
+        assert_eq!(cfg.transport.tcp.connect_backoff_ms, 10);
+        assert!(cfg.apply_json(r#"{"transport": "carrier-pigeon"}"#).is_err());
+        assert!(cfg.apply_json(r#"{"tcp_workers": [1, 2]}"#).is_err());
+    }
+
+    #[test]
+    fn validate_requires_one_address_per_worker_on_tcp() {
+        let mut cfg = CodedMlConfig::default(); // n = 10
+        cfg.transport.kind = TransportKind::Tcp;
+        cfg.transport.tcp.workers = vec!["127.0.0.1:7001".into(); 3];
+        match cfg.validate(300, 1.0) {
+            Err(ConfigError::BadShape(msg)) => {
+                assert!(msg.contains("10 worker addresses"), "{msg}");
+            }
+            other => panic!("expected BadShape, got {other:?}"),
+        }
+        cfg.transport.tcp.workers = vec!["127.0.0.1:7001".into(); 10];
         cfg.validate(300, 1.0).unwrap();
     }
 

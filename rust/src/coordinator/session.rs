@@ -239,7 +239,7 @@ impl<O: CodedObjective> CodedMlSession<O> {
                 par: cfg.parallelism,
             })
             .collect();
-        let cluster = Cluster::spawn(specs)?;
+        let mut cluster = Cluster::connect(specs, &cfg.transport)?;
         cluster.load_data(shares.into_iter().map(|s| s.data).collect(), y_shares)?;
 
         let eta = cfg
@@ -308,6 +308,14 @@ impl<O: CodedObjective> CodedMlSession<O> {
     /// The session never prints; callers decide whether to surface this.
     pub fn budget_warning(&self) -> Option<&str> {
         self.budget_warning.as_deref()
+    }
+
+    /// Cumulative `(sent, received)` bytes actually moved by the cluster
+    /// transport, in frame-layout units on both backends — distinct from
+    /// [`TrainReport`]'s *modeled* byte counts, which account the paper's
+    /// protocol (optionally bit-packed) rather than this build's wire.
+    pub fn transport_bytes(&self) -> (u64, u64) {
+        self.cluster.wire_bytes()
     }
 
     /// Wire size of `count` field elements under the configured framing
@@ -415,6 +423,7 @@ impl<O: CodedObjective> CodedMlSession<O> {
             CompMode::Wall => round.wall_secs,
         };
         self.t_comp.add_seconds(iter_comp);
+        let (wire_sent, wire_received) = self.cluster.wire_bytes();
         if self.tracer.enabled() {
             use crate::util::json::Json;
             let used: Vec<Json> = round
@@ -431,6 +440,9 @@ impl<O: CodedObjective> CodedMlSession<O> {
                     ("fastest", Json::Arr(used)),
                     ("late", Json::Num(round.late_drained as f64)),
                     ("failed", Json::Num(round.failures.len() as f64)),
+                    ("transport", Json::Str(self.cluster.transport_name().to_string())),
+                    ("wire_sent", Json::Num(wire_sent as f64)),
+                    ("wire_received", Json::Num(wire_received as f64)),
                 ],
             );
         }

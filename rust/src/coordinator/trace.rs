@@ -2,6 +2,11 @@
 //! for post-hoc analysis (`codedml train --trace run.jsonl`). This is the
 //! observability a deployment needs to see *where* an iteration went slow
 //! (encode vs dispatch vs straggle vs decode) without attaching a profiler.
+//!
+//! The per-iteration `collect` event also records the transport backend
+//! and its cumulative `wire_sent`/`wire_received` byte counters, and every
+//! worker loss — chaos-injected faults and real TCP disconnects alike —
+//! surfaces as a `worker_failure` event with the worker id and reason.
 
 use std::fs::File;
 use std::io::{BufWriter, Write as _};

@@ -1,1 +1,4 @@
+//! `codedml` binary: the CLI (`train`, `mpc`, `reproduce`, ...) and the
+//! TCP worker-process mode (`codedml --worker --listen <addr>`), which is
+//! how `--transport tcp` masters get their remote workers.
 fn main() { std::process::exit(codedml::cli::run()); }

@@ -2,8 +2,18 @@
 //! boundary. Killing up to `N − R` workers mid-training must not change
 //! the *trajectory at all* (LCC decode is subset-invariant); killing one
 //! more must fail loudly, not corrupt gradients.
+//!
+//! The TCP chaos tests exercise the same boundary over the real wire:
+//! a worker *process* killed mid-training and a connect timeout at spawn
+//! must both land in `TrainReport::worker_failures` (never a panic, never
+//! a deadlocked `collect_first`).
 
-use codedml::cluster::{NetworkModel, StragglerModel};
+use std::io::{BufRead, BufReader};
+use std::net::TcpListener;
+use std::process::{Child, Command, Stdio};
+
+use codedml::cluster::transport::TcpConfig;
+use codedml::cluster::{NetworkModel, StragglerModel, TransportConfig, TransportKind};
 use codedml::coordinator::{CodedMlConfig, CodedMlSession};
 use codedml::data::synthetic_3v7;
 
@@ -78,4 +88,117 @@ fn failures_from_start_with_zero_slack_fail_immediately() {
     cfg.chaos_from_iter = 0;
     let mut sess = CodedMlSession::new(cfg, &train).unwrap();
     assert!(sess.step().is_err());
+}
+
+// --- TCP chaos: the same fault-tolerance boundary over real sockets ---
+
+struct WorkerProc {
+    child: Child,
+    addr: String,
+}
+
+impl Drop for WorkerProc {
+    fn drop(&mut self) {
+        let _ = self.child.kill();
+        let _ = self.child.wait();
+    }
+}
+
+fn spawn_worker() -> WorkerProc {
+    let mut child = Command::new(env!("CARGO_BIN_EXE_codedml"))
+        .args(["--worker", "--listen", "127.0.0.1:0"])
+        .stdout(Stdio::piped())
+        .stderr(Stdio::null())
+        .spawn()
+        .unwrap();
+    let stdout = child.stdout.take().unwrap();
+    let mut line = String::new();
+    BufReader::new(stdout).read_line(&mut line).unwrap();
+    let addr = line.trim().rsplit(' ').next().unwrap_or("").to_string();
+    assert!(addr.contains(':'), "unexpected worker banner: {line:?}");
+    WorkerProc { child, addr }
+}
+
+fn tcp_cfg(n: usize, addrs: Vec<String>) -> CodedMlConfig {
+    CodedMlConfig {
+        n, // k=1, t=1 → threshold 4 → slack 1
+        k: 1,
+        t: 1,
+        net: NetworkModel::free(),
+        straggler: StragglerModel::none(),
+        transport: TransportConfig {
+            kind: TransportKind::Tcp,
+            tcp: TcpConfig { workers: addrs, ..TcpConfig::default() },
+        },
+        ..Default::default()
+    }
+}
+
+/// A worker process killed mid-training is one failure per remaining
+/// round — counted, not fatal — and the trajectory stays bit-identical to
+/// an in-memory run with the same seed (LCC decode is subset-invariant).
+#[test]
+fn tcp_worker_killed_mid_training_is_counted_not_fatal() {
+    let train = synthetic_3v7(40, 23);
+    let n = 5usize;
+
+    let mem_cfg = CodedMlConfig { transport: TransportConfig::default(), ..tcp_cfg(n, Vec::new()) };
+    let mut reference = CodedMlSession::new(mem_cfg, &train).unwrap();
+
+    let mut procs: Vec<WorkerProc> = (0..n).map(|_| spawn_worker()).collect();
+    let addrs = procs.iter().map(|p| p.addr.clone()).collect();
+    let mut tcp = CodedMlSession::new(tcp_cfg(n, addrs), &train).unwrap();
+
+    reference.step().unwrap();
+    tcp.step().unwrap();
+
+    // Kill one worker's process — within the slack of 1.
+    let _ = procs[2].child.kill();
+    let _ = procs[2].child.wait();
+
+    for _ in 0..3 {
+        reference.step().unwrap();
+        tcp.step().unwrap();
+    }
+
+    assert_eq!(
+        reference.w, tcp.w,
+        "a dead socket must not change the trajectory, only who is decoded"
+    );
+    let (failures, _) = tcp.round_stats();
+    assert!(failures > 0, "the killed process must be counted, got {failures}");
+    let (rf, _) = reference.round_stats();
+    assert_eq!(rf, 0);
+}
+
+/// A connect timeout at spawn marks the worker down rather than aborting:
+/// the session builds, trains to completion without deadlocking, and the
+/// unreachable worker is charged one failure per iteration.
+#[test]
+fn tcp_connect_timeout_at_spawn_lands_in_worker_failures() {
+    let train = synthetic_3v7(40, 29);
+    let n = 5usize;
+
+    // Four live workers plus one address nothing listens on: bind an
+    // ephemeral port, then drop the listener before the master dials it.
+    let procs: Vec<WorkerProc> = (0..n - 1).map(|_| spawn_worker()).collect();
+    let dead_addr = {
+        let l = TcpListener::bind("127.0.0.1:0").unwrap();
+        l.local_addr().unwrap().to_string()
+    };
+    let mut addrs: Vec<String> = procs.iter().map(|p| p.addr.clone()).collect();
+    addrs.push(dead_addr);
+
+    let mut cfg = tcp_cfg(n, addrs);
+    cfg.transport.tcp.connect_timeout_ms = 300;
+    cfg.transport.tcp.connect_retries = 1;
+    cfg.transport.tcp.connect_backoff_ms = 10;
+
+    let mut sess = CodedMlSession::new(cfg, &train).unwrap();
+    let report = sess.train(3, None).unwrap();
+    assert!(
+        report.worker_failures >= 3,
+        "one failure per iteration for the unreachable worker, got {}",
+        report.worker_failures
+    );
 }

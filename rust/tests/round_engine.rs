@@ -58,8 +58,8 @@ fn collect_first_decodes_bit_identically_to_full_collection() {
 
     // Two identical clusters over the same shares, each with worker 7
     // slowed by 80 ms: A exits early, B collects everyone.
-    let early = Cluster::spawn(specs(n, rows, d, coeffs.clone(), &[7])).unwrap();
-    let full = Cluster::spawn(specs(n, rows, d, coeffs.clone(), &[7])).unwrap();
+    let mut early = Cluster::spawn(specs(n, rows, d, coeffs.clone(), &[7])).unwrap();
+    let mut full = Cluster::spawn(specs(n, rows, d, coeffs.clone(), &[7])).unwrap();
     early.load_data(x_shares.clone(), None).unwrap();
     full.load_data(x_shares.clone(), None).unwrap();
 

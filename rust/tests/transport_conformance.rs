@@ -1,0 +1,364 @@
+//! Backend-conformance suite for the `Transport` seam: every backend —
+//! the in-memory channel default and the TCP multi-process one — must
+//! drive the identical dispatch/collect contract. Because LCC decoding is
+//! exact for *any* fastest-R subset, the decoded gradients must be
+//! bit-identical across backends at every thread count, no matter which
+//! workers happened to answer first or over which medium the shares
+//! travelled. The suite also pins the streaming-round behaviours
+//! (early exit at R, late-result draining, mid-round worker death) to
+//! both backends so a new transport cannot regress them silently.
+//!
+//! TCP scenarios spawn real `codedml --worker` processes on loopback via
+//! `CARGO_BIN_EXE_codedml`, exactly as a deployment would.
+
+use std::io::{BufRead, BufReader};
+use std::path::PathBuf;
+use std::process::{Child, Command, Stdio};
+use std::time::Duration;
+
+use codedml::cluster::transport::TcpConfig;
+use codedml::cluster::{Cluster, TransportConfig, TransportKind, WorkerOp, WorkerSpec};
+use codedml::coding::{CodingParams, Decoder, Encoder, WorkerResult};
+use codedml::compute::WorkerComputation;
+use codedml::field::{PrimeField, PAPER_PRIME};
+use codedml::util::{Parallelism, Rng};
+
+/// A `codedml --worker` child process bound to an ephemeral loopback
+/// port. Killed and reaped on drop so a failing assertion can't leak
+/// processes into the test runner.
+struct WorkerProc {
+    child: Child,
+    addr: String,
+}
+
+impl Drop for WorkerProc {
+    fn drop(&mut self) {
+        let _ = self.child.kill();
+        let _ = self.child.wait();
+    }
+}
+
+fn spawn_worker() -> WorkerProc {
+    let mut child = Command::new(env!("CARGO_BIN_EXE_codedml"))
+        .args(["--worker", "--listen", "127.0.0.1:0"])
+        .stdout(Stdio::piped())
+        .stderr(Stdio::null())
+        .spawn()
+        .unwrap();
+    // The worker prints exactly one banner line before accepting:
+    //   worker listening on 127.0.0.1:PORT
+    let stdout = child.stdout.take().unwrap();
+    let mut line = String::new();
+    BufReader::new(stdout).read_line(&mut line).unwrap();
+    let addr = line.trim().rsplit(' ').next().unwrap_or("").to_string();
+    assert!(addr.contains(':'), "unexpected worker banner: {line:?}");
+    WorkerProc { child, addr }
+}
+
+fn spawn_workers(n: usize) -> Vec<WorkerProc> {
+    (0..n).map(|_| spawn_worker()).collect()
+}
+
+fn tcp_config(procs: &[WorkerProc]) -> TransportConfig {
+    TransportConfig {
+        kind: TransportKind::Tcp,
+        tcp: TcpConfig {
+            workers: procs.iter().map(|p| p.addr.clone()).collect(),
+            ..TcpConfig::default()
+        },
+    }
+}
+
+fn specs(n: usize, rows: usize, d: usize, coeffs: &[u64], par: Parallelism) -> Vec<WorkerSpec> {
+    let f = PrimeField::new(PAPER_PRIME);
+    (0..n)
+        .map(|id| WorkerSpec {
+            id,
+            kind: codedml::runtime::BackendKind::Native,
+            artifact_dir: PathBuf::from("artifacts"),
+            field: f,
+            rows,
+            d,
+            coeffs: coeffs.to_vec(),
+            op: WorkerOp::Logistic,
+            fail_from_iter: None,
+            slow_ms: 0,
+            par,
+        })
+        .collect()
+}
+
+/// Run `iters` dispatch/collect/decode rounds on a cluster and return the
+/// decoded gradient blocks per iteration, always decoding the fastest-R
+/// subset in arrival order.
+fn run_rounds(
+    cluster: &mut Cluster,
+    enc: &Encoder,
+    f: PrimeField,
+    params: CodingParams,
+    d: usize,
+    w_shares_per_iter: &[Vec<Vec<u64>>],
+) -> Vec<Vec<Vec<u64>>> {
+    let need = params.recovery_threshold();
+    let mut dec = Decoder::new(f, params, enc.points.clone());
+    let mut decoded = Vec::new();
+    for (iter, w_shares) in w_shares_per_iter.iter().enumerate() {
+        cluster.dispatch(iter as u64, w_shares.clone()).unwrap();
+        let round = cluster.collect_first(need, iter as u64).unwrap();
+        assert!(round.ok(), "iter {iter}: {round:?}");
+        let subset: Vec<WorkerResult> = round
+            .results
+            .iter()
+            .take(need)
+            .map(|r| WorkerResult { worker: r.worker, data: r.data.clone().unwrap() })
+            .collect();
+        decoded.push(dec.decode(&subset, d).unwrap());
+    }
+    decoded
+}
+
+/// Tentpole conformance: with identical shares, the decoded gradient of
+/// every iteration is bit-identical on the in-memory backend, on the TCP
+/// backend with real worker processes, and to the ground-truth direct
+/// computation — at serial and multi-threaded worker parallelism alike.
+#[test]
+fn decoded_gradients_bit_identical_across_backends() {
+    let f = PrimeField::new(PAPER_PRIME);
+    let (n, k, t) = (9usize, 2usize, 1usize);
+    let params = CodingParams::new(n, k, t, 1).unwrap();
+    assert!(n - params.recovery_threshold() >= 2, "want straggler slack");
+    let (rows, d) = (4usize, 6usize);
+    let m = rows * k;
+    let coeffs = vec![3u64, 7];
+
+    let mut rng = Rng::new(42);
+    let xq = f.random_matrix(&mut rng, m, d);
+    let enc = Encoder::new(f, params);
+    let x_shares: Vec<Vec<u64>> = enc
+        .encode_dataset(&xq, m, d, &mut rng)
+        .into_iter()
+        .map(|s| s.data)
+        .collect();
+
+    let iters = 3usize;
+    let mut wqs = Vec::new();
+    let mut w_shares_per_iter = Vec::new();
+    for _ in 0..iters {
+        let wq = f.random_matrix(&mut rng, d, 1);
+        let shares: Vec<Vec<u64>> = enc
+            .encode_weights(&wq, d, 1, &mut rng)
+            .into_iter()
+            .map(|s| s.data)
+            .collect();
+        wqs.push(wq);
+        w_shares_per_iter.push(shares);
+    }
+    let wc = WorkerComputation::new(f, rows, d, coeffs.clone());
+
+    for par in [Parallelism::Serial, Parallelism::from_count(2)] {
+        let mut mem = Cluster::spawn(specs(n, rows, d, &coeffs, par)).unwrap();
+        mem.load_data(x_shares.clone(), None).unwrap();
+        let mem_decoded = run_rounds(&mut mem, &enc, f, params, d, &w_shares_per_iter);
+
+        let procs = spawn_workers(n);
+        let mut tcp = Cluster::connect(specs(n, rows, d, &coeffs, par), &tcp_config(&procs)).unwrap();
+        assert_eq!(tcp.transport_name(), "tcp");
+        tcp.load_data(x_shares.clone(), None).unwrap();
+        let tcp_decoded = run_rounds(&mut tcp, &enc, f, params, d, &w_shares_per_iter);
+
+        assert_eq!(mem_decoded, tcp_decoded, "backends diverged at par {par:?}");
+
+        // Both equal ground truth on the true blocks, every iteration.
+        let block = rows * d;
+        for (iter, wq) in wqs.iter().enumerate() {
+            for kk in 0..k {
+                let truth = wc.compute(&xq[kk * block..(kk + 1) * block], wq);
+                assert_eq!(mem_decoded[iter][kk], truth, "iter {iter} block {kk}");
+            }
+        }
+
+        // Byte accounting is live on both backends.
+        let (ms, mr) = mem.wire_bytes();
+        let (ts, tr) = tcp.wire_bytes();
+        assert!(ms > 0 && mr > 0, "memory backend must account bytes");
+        assert!(ts > 0 && tr > 0, "tcp backend must account bytes");
+    }
+}
+
+/// Early exit: with one worker slowed well past the round, `collect_first`
+/// must return the fastest-R subset without it — on both backends.
+#[test]
+fn early_exit_skips_slow_worker_on_both_backends() {
+    let f = PrimeField::new(PAPER_PRIME);
+    let (n, k, t) = (9usize, 2usize, 1usize);
+    let params = CodingParams::new(n, k, t, 1).unwrap();
+    let need = params.recovery_threshold();
+    let (rows, d) = (4usize, 6usize);
+    let m = rows * k;
+    let coeffs = vec![3u64, 7];
+    let slow_id = 3usize;
+
+    let mut rng = Rng::new(7);
+    let xq = f.random_matrix(&mut rng, m, d);
+    let enc = Encoder::new(f, params);
+    let x_shares: Vec<Vec<u64>> = enc
+        .encode_dataset(&xq, m, d, &mut rng)
+        .into_iter()
+        .map(|s| s.data)
+        .collect();
+    let w_shares: Vec<Vec<u64>> = enc
+        .encode_weights(&f.random_matrix(&mut rng, d, 1), d, 1, &mut rng)
+        .into_iter()
+        .map(|s| s.data)
+        .collect();
+
+    let mut slow_specs = specs(n, rows, d, &coeffs, Parallelism::Serial);
+    slow_specs[slow_id].slow_ms = 150;
+
+    let procs = spawn_workers(n);
+    let backends: Vec<(&str, Cluster)> = vec![
+        ("memory", Cluster::spawn(slow_specs.clone()).unwrap()),
+        ("tcp", Cluster::connect(slow_specs, &tcp_config(&procs)).unwrap()),
+    ];
+    for (name, mut cluster) in backends {
+        cluster.load_data(x_shares.clone(), None).unwrap();
+        cluster.dispatch(0, w_shares.clone()).unwrap();
+        let round = cluster.collect_first(need, 0).unwrap();
+        assert!(round.ok(), "{name}: {round:?}");
+        assert_eq!(round.results.len(), need, "{name}");
+        assert!(
+            round.results.iter().all(|r| r.worker != slow_id),
+            "{name}: the 150 ms straggler cannot be in the fastest-{need} subset"
+        );
+    }
+}
+
+/// Late-result draining: a straggler's stale result lands between rounds
+/// and must be drained (counted, never decoded) by the next round — on
+/// both backends.
+#[test]
+fn late_results_are_drained_on_both_backends() {
+    let f = PrimeField::new(PAPER_PRIME);
+    let (n, k, t) = (9usize, 2usize, 1usize);
+    let params = CodingParams::new(n, k, t, 1).unwrap();
+    let need = params.recovery_threshold();
+    let (rows, d) = (4usize, 6usize);
+    let m = rows * k;
+    let coeffs = vec![3u64, 7];
+
+    let mut rng = Rng::new(8);
+    let xq = f.random_matrix(&mut rng, m, d);
+    let enc = Encoder::new(f, params);
+    let x_shares: Vec<Vec<u64>> = enc
+        .encode_dataset(&xq, m, d, &mut rng)
+        .into_iter()
+        .map(|s| s.data)
+        .collect();
+    let w_shares: Vec<Vec<u64>> = enc
+        .encode_weights(&f.random_matrix(&mut rng, d, 1), d, 1, &mut rng)
+        .into_iter()
+        .map(|s| s.data)
+        .collect();
+
+    let mut slow_specs = specs(n, rows, d, &coeffs, Parallelism::Serial);
+    slow_specs[0].slow_ms = 120;
+
+    let procs = spawn_workers(n);
+    let backends: Vec<(&str, Cluster)> = vec![
+        ("memory", Cluster::spawn(slow_specs.clone()).unwrap()),
+        ("tcp", Cluster::connect(slow_specs, &tcp_config(&procs)).unwrap()),
+    ];
+    for (name, mut cluster) in backends {
+        cluster.load_data(x_shares.clone(), None).unwrap();
+        cluster.dispatch(0, w_shares.clone()).unwrap();
+        let r0 = cluster.collect_first(need, 0).unwrap();
+        assert!(r0.ok(), "{name}");
+        // Let the straggler's iteration-0 result land in the channel.
+        std::thread::sleep(Duration::from_millis(300));
+        cluster.dispatch(1, w_shares.clone()).unwrap();
+        let r1 = cluster.collect_first(need, 1).unwrap();
+        assert!(r1.ok(), "{name}");
+        assert!(
+            r1.late_drained >= 1,
+            "{name}: stale result must be drained, got {r1:?}"
+        );
+        assert!(r1.failures.is_empty(), "{name}: a late Ok is not a failure");
+    }
+}
+
+/// Mid-round worker death lands in `failures`, never deadlocks, and the
+/// cluster keeps training: on the in-memory backend via an injected fault,
+/// on TCP by killing the real worker process between iterations.
+#[test]
+fn mid_round_death_is_counted_and_survivable_on_both_backends() {
+    let f = PrimeField::new(PAPER_PRIME);
+    let (n, k, t) = (5usize, 1usize, 1usize);
+    let params = CodingParams::new(n, k, t, 1).unwrap();
+    let need = params.recovery_threshold(); // 4 → slack 1
+    assert_eq!(n - need, 1);
+    let (rows, d) = (4usize, 6usize);
+    let coeffs = vec![3u64, 7];
+
+    let mut rng = Rng::new(9);
+    let xq = f.random_matrix(&mut rng, rows * k, d);
+    let enc = Encoder::new(f, params);
+    let x_shares: Vec<Vec<u64>> = enc
+        .encode_dataset(&xq, rows * k, d, &mut rng)
+        .into_iter()
+        .map(|s| s.data)
+        .collect();
+    let wq = f.random_matrix(&mut rng, d, 1);
+    let w_shares: Vec<Vec<u64>> = enc
+        .encode_weights(&wq, d, 1, &mut rng)
+        .into_iter()
+        .map(|s| s.data)
+        .collect();
+    let wc = WorkerComputation::new(f, rows, d, coeffs.clone());
+    let truth = wc.compute(&xq, &wq);
+
+    // In-memory: worker 0 starts failing at iteration 1.
+    let mut mem_specs = specs(n, rows, d, &coeffs, Parallelism::Serial);
+    mem_specs[0].fail_from_iter = Some(1);
+    let mut mem = Cluster::spawn(mem_specs).unwrap();
+
+    // TCP: same topology, worker 0's *process* is killed after iteration 0.
+    let mut procs = spawn_workers(n);
+    let mut tcp =
+        Cluster::connect(specs(n, rows, d, &coeffs, Parallelism::Serial), &tcp_config(&procs))
+            .unwrap();
+
+    for (name, cluster) in [("memory", &mut mem), ("tcp", &mut tcp)] {
+        cluster.load_data(x_shares.clone(), None).unwrap();
+        cluster.dispatch(0, w_shares.clone()).unwrap();
+        let r0 = cluster.collect_first(need, 0).unwrap();
+        assert!(r0.ok(), "{name}: healthy round must succeed");
+    }
+
+    let _ = procs[0].child.kill();
+    let _ = procs[0].child.wait();
+
+    for (name, cluster) in [("memory", &mut mem), ("tcp", &mut tcp)] {
+        let mut dec = Decoder::new(f, params, enc.points.clone());
+        for iter in 1..=2u64 {
+            cluster.dispatch(iter, w_shares.clone()).unwrap();
+            let round = cluster.collect_first(need, iter).unwrap();
+            assert!(round.ok(), "{name} iter {iter}: {round:?}");
+            assert!(
+                !round.failures.is_empty(),
+                "{name} iter {iter}: the dead worker must be counted, got {round:?}"
+            );
+            assert!(
+                round.results.iter().all(|r| r.worker != 0),
+                "{name} iter {iter}: dead worker cannot produce results"
+            );
+            let subset: Vec<WorkerResult> = round
+                .results
+                .iter()
+                .take(need)
+                .map(|r| WorkerResult { worker: r.worker, data: r.data.clone().unwrap() })
+                .collect();
+            let decoded = dec.decode(&subset, d).unwrap();
+            assert_eq!(decoded[0], truth, "{name} iter {iter}: decode still exact");
+        }
+    }
+}
