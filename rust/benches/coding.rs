@@ -4,10 +4,10 @@
 //! parallel speedup is recorded side by side.
 
 mod bench_util;
-use bench_util::{bench_secs, finish, min_secs, report, report_speedup};
+use bench_util::{bench_secs, finish, min_secs, report, report_metric, report_speedup};
 
-use codedml::coding::{CodingParams, Decoder, Encoder, WorkerResult};
-use codedml::field::{PrimeField, PAPER_PRIME};
+use codedml::coding::{CodingBackend, CodingParams, Decoder, Encoder, EvalPoints, WorkerResult};
+use codedml::field::{PrimeField, PAPER_PRIME, PRIME_NTT_25};
 use codedml::util::{Parallelism, Rng};
 
 fn main() {
@@ -124,6 +124,78 @@ fn main() {
                 None,
             );
         }
+    }
+
+    // NTT coset layout vs dense Lagrange at a large shape (K+T = 64,
+    // N = 192 → l1 = 64, l2 = 256 on the 25-bit NTT prime). The CI bench
+    // smoke job gates on the engaged metric and the speedup row below.
+    {
+        let (n, k, t, d) = (192usize, 48usize, 16usize, 256usize);
+        let fntt = PrimeField::new(PRIME_NTT_25);
+        let params = CodingParams::new(n, k, t, 1).unwrap();
+        let mut rng = Rng::new(5);
+        let m = 2 * k; // 2 rows per block: encode cost scales per element
+        let xq = fntt.random_matrix(&mut rng, m, d);
+        let pts = EvalPoints::ntt_coset(&fntt, k, t, n).expect("2-adicity 21 hosts l2=256");
+        let auto_enc = Encoder::with_points(fntt, params, pts.clone());
+        report_metric(
+            &format!("ntt backend engaged (K={k} T={t} N={n} p={})", fntt.modulus()),
+            (auto_enc.backend() == CodingBackend::Ntt) as u64 as f64,
+        );
+        let dense_enc = Encoder::with_points(fntt, params, pts.clone()).force_dense();
+        let ntt_enc = auto_enc;
+
+        let work = (n * (m / k) * d * (k + t)) as f64;
+        let t_dense_enc = bench_secs(secs, || {
+            std::hint::black_box(dense_enc.encode_dataset(&xq, m, d, &mut rng));
+        });
+        report(&format!("encode_dataset dense K={k} T={t} N={n} d={d}"), t_dense_enc, Some(work));
+        let t_ntt_enc = bench_secs(secs, || {
+            std::hint::black_box(ntt_enc.encode_dataset(&xq, m, d, &mut rng));
+        });
+        report(&format!("encode_dataset ntt   K={k} T={t} N={n} d={d}"), t_ntt_enc, Some(work));
+        report_speedup(&format!("encode ntt vs dense K={k} T={t} N={n}"), t_dense_enc, t_ntt_enc);
+
+        // Decode-row construction: cold cache each iteration so the
+        // coefficient build (O(K·R²) dense vs barycentric closed form)
+        // dominates, rotating the straggler subset.
+        let need = params.recovery_threshold();
+        let all: Vec<WorkerResult> = (0..n)
+            .map(|w| WorkerResult { worker: w, data: fntt.random_matrix(&mut rng, d, 1) })
+            .collect();
+        let mut t_decode = [0.0f64; 2];
+        for (i, coset) in [false, true].into_iter().enumerate() {
+            let points = if coset {
+                pts.clone()
+            } else {
+                // Dense-rows baseline: same alphas, but with the coset
+                // geometry hidden the decoder takes the generic
+                // lagrange_coeffs path.
+                EvalPoints { betas: pts.betas.clone(), alphas: pts.alphas.clone(), coset: None }
+            };
+            let mut dec = Decoder::new(fntt, params, points).with_cache_cap(1);
+            let mut start = 0usize;
+            t_decode[i] = bench_secs(secs, || {
+                let subset: Vec<WorkerResult> =
+                    (0..need).map(|j| all[(start + j) % n].clone()).collect();
+                start += 1;
+                std::hint::black_box(dec.decode(&subset, d).unwrap());
+            });
+            report(
+                &format!(
+                    "decode cold-cache {} K={k} T={t} N={n} (R={need})",
+                    if coset { "coset" } else { "dense" }
+                ),
+                t_decode[i],
+                None,
+            );
+        }
+        report_speedup(&format!("decode ntt vs dense K={k} T={t} N={n}"), t_decode[0], t_decode[1]);
+        report_speedup(
+            &format!("ntt vs dense encode+decode K={k} T={t} N={n}"),
+            t_dense_enc + t_decode[0],
+            t_ntt_enc + t_decode[1],
+        );
     }
 
     finish("coding");

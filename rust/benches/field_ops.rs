@@ -5,7 +5,10 @@
 mod bench_util;
 use bench_util::{bench_secs, finish, min_secs, report, report_speedup};
 
-use codedml::field::{eval_poly, interpolate, lagrange_coeffs, PrimeField, PAPER_PRIME, PRIME_31};
+use codedml::field::{
+    eval_poly, interpolate, lagrange_coeffs, simd, NttPlan, PrimeField, PAPER_PRIME, PRIME_31,
+    PRIME_NTT_25,
+};
 use codedml::util::Rng;
 
 fn main() {
@@ -108,6 +111,74 @@ fn main() {
         std::hint::black_box(eval_poly(&f, &coeffs, 12345));
     });
     report("eval_poly (deg 63)", t, Some(63.0));
+
+    // Lane kernels vs the always-compiled scalar oracles — the deferred-
+    // reduction MAC is the inner loop of encode, decode and worker matmul.
+    let fp = PrimeField::new(PAPER_PRIME);
+    let src: Vec<u64> = (0..4096).map(|_| fp.random(&mut rng)).collect();
+    let wts: Vec<u64> = (0..4096).map(|_| fp.random(&mut rng)).collect();
+    let mut acc = vec![0u64; 4096];
+    let t_lanes = bench_secs(secs, || {
+        simd::lanes::mac_wrapping(&mut acc, &src, 12345);
+        std::hint::black_box(&mut acc);
+    });
+    report("mac_wrapping lanes (4096 elems)", t_lanes, Some(4096.0));
+    let t_scalar = bench_secs(secs, || {
+        simd::scalar::mac_wrapping(&mut acc, &src, 12345);
+        std::hint::black_box(&mut acc);
+    });
+    report("mac_wrapping scalar (4096 elems)", t_scalar, Some(4096.0));
+    report_speedup("mac_wrapping lanes vs scalar", t_scalar, t_lanes);
+    let t_lanes = bench_secs(secs, || {
+        std::hint::black_box(simd::lanes::dot_wrapping(&src, &wts));
+    });
+    report("dot_wrapping lanes (4096 elems)", t_lanes, Some(4096.0));
+    let t_scalar = bench_secs(secs, || {
+        std::hint::black_box(simd::scalar::dot_wrapping(&src, &wts));
+    });
+    report("dot_wrapping scalar (4096 elems)", t_scalar, Some(4096.0));
+    report_speedup("dot_wrapping lanes vs scalar", t_scalar, t_lanes);
+
+    // Radix-2 NTT butterflies vs dense evaluation at the same length —
+    // the asymptotic separation behind the coding-layer speedup.
+    let fntt = PrimeField::new(PRIME_NTT_25);
+    for logn in [6u32, 8] {
+        let n = 1usize << logn;
+        let plan = NttPlan::new(fntt, n).expect("2-adicity 21 covers these");
+        let vals: Vec<u64> = (0..n).map(|_| fntt.random(&mut rng)).collect();
+        let mut buf = vals.clone();
+        let t_ntt = bench_secs(secs, || {
+            buf.copy_from_slice(&vals);
+            plan.forward_rows(&mut buf, 1);
+            std::hint::black_box(&mut buf);
+        });
+        report(
+            &format!("ntt forward (n={n}, p={PRIME_NTT_25})"),
+            t_ntt,
+            Some((n / 2 * logn as usize) as f64),
+        );
+        let t_rt = bench_secs(secs, || {
+            buf.copy_from_slice(&vals);
+            plan.forward_rows(&mut buf, 1);
+            plan.inverse_rows(&mut buf, 1);
+            std::hint::black_box(&mut buf);
+        });
+        report(&format!("ntt round trip (n={n})"), t_rt, Some((n * logn as usize) as f64));
+        // Dense apples-to-apples: evaluate the same coefficients at all n
+        // subgroup points by Horner.
+        let pts: Vec<u64> = {
+            let root = plan.root();
+            let mut cur = 1u64;
+            (0..n).map(|_| { let p = cur; cur = fntt.mul(cur, root); p }).collect()
+        };
+        let t_dense = bench_secs(secs, || {
+            for &x in &pts {
+                std::hint::black_box(eval_poly(&fntt, &vals, x));
+            }
+        });
+        report(&format!("dense eval at n={n} points"), t_dense, Some((n * n) as f64));
+        report_speedup(&format!("ntt vs dense eval (n={n})"), t_dense, t_ntt);
+    }
 
     finish("field_ops");
 }

@@ -5,6 +5,7 @@
 //!                      --case 1|2 --iters 25 --m 600 --d 784 --dup
 //!                      --batch-blocks 0 --backend native|xla --seed 42
 //!                      --threads serial|auto|<n> --config cfg.json --json out.json
+//!                      --coding-backend auto|dense|ntt --decode-cache-cap 256
 //!                      --transport memory|tcp --workers host:port,host:port,...
 //!                      --connect-timeout-ms 5000 --connect-retries 3
 //!                      --connect-backoff-ms 100]
@@ -70,7 +71,14 @@ common options:
   --transport memory|tcp      cluster transport (default memory; tcp needs
                               --workers with one host:port per worker)
   --workers a:p,b:p,...       worker addresses, index = worker id
-                              (implies --transport tcp)";
+                              (implies --transport tcp)
+  --coding-backend auto|dense|ntt
+                              Lagrange encode/decode path (default auto:
+                              roots-of-unity NTT coset when the modulus
+                              supports it and it wins at this (K,T,N);
+                              ntt on a low-adicity modulus is an error)
+  --decode-cache-cap <n>      max cached decoder subsets, LRU-evicted
+                              (default 256; 0 = unbounded)";
 
 /// Entry point; returns the process exit code.
 pub fn run() -> i32 {
@@ -204,6 +212,10 @@ fn cmd_train(args: &Args) -> Result<(), String> {
     if let Some(t) = args.get("threads") {
         cfg.parallelism = t.parse().map_err(|e: String| e)?;
     }
+    if let Some(b) = args.get("coding-backend") {
+        cfg.coding_backend = b.parse().map_err(|e: String| e)?;
+    }
+    cfg.decode_cache_cap = args.get_usize("decode-cache-cap", cfg.decode_cache_cap)?;
     if let Some(t) = args.get("transport") {
         cfg.transport.kind = t.parse().map_err(|e: String| e)?;
     }
@@ -248,10 +260,12 @@ fn print_report(report: &crate::coordinator::TrainReport) {
     println!("{}", reproduce::TABLE_HEADER);
     println!("{}", report.breakdown.row("CodedPrivateML"));
     println!(
-        "decode cache: {} hits / {} misses; bytes sent {}, received {}; \
-         worker failures {}, late results drained {}",
+        "coding backend {}; decode cache: {} hits / {} misses / {} evicted; \
+         bytes sent {}, received {}; worker failures {}, late results drained {}",
+        report.coding_backend,
         report.decode_cache.0,
         report.decode_cache.1,
+        report.decode_cache_evictions,
         report.bytes_sent,
         report.bytes_received,
         report.worker_failures,
@@ -640,6 +654,33 @@ mod tests {
     fn lint_rejects_missing_root() {
         let err = dispatch(&args("lint --root does/not/exist")).unwrap_err();
         assert!(err.contains("scan"), "{err}");
+    }
+
+    #[test]
+    fn train_micro_run_forced_ntt() {
+        // 23068673 = 11·2^21 + 1 hosts the (K+T=4, N=10) coset easily.
+        assert!(dispatch(&args(
+            "train --n 10 --k 3 --t 1 --iters 2 --m 120 --p 23068673 \
+             --coding-backend ntt --no-straggle --free-net"
+        ))
+        .is_ok());
+    }
+
+    #[test]
+    fn train_rejects_ntt_on_low_adicity_prime() {
+        // The paper's 24-bit prime has 2-adicity 1 — no coset to be had.
+        let err = dispatch(&args(
+            "train --n 10 --k 3 --t 1 --iters 1 --m 120 \
+             --coding-backend ntt --no-straggle --free-net"
+        ))
+        .unwrap_err();
+        assert!(err.contains("2-adicity"), "{err}");
+    }
+
+    #[test]
+    fn train_rejects_bad_coding_backend() {
+        let err = dispatch(&args("train --coding-backend fft")).unwrap_err();
+        assert!(err.contains("bad coding backend"), "{err}");
     }
 
     #[test]

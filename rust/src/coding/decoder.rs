@@ -6,16 +6,27 @@
 //!
 //! Implementation: for a fixed subset S of responding workers, the map
 //! {h(α_i)}_{i∈S} → {h(β_k)}_k is linear — a K×R matrix of Lagrange basis
-//! coefficients. Computing it costs O(K·R²) field ops but depends only on
-//! S, so it is cached per subset; applying it is a K·R·d dense pass. With
-//! straggler patterns repeating across iterations the cache hit rate is
-//! high (measured in EXPERIMENTS.md §Perf).
+//! coefficients. On the dense layout computing it costs O(K·R²) field ops;
+//! on a coset layout ([`EvalPoints::ntt_coset`]) the α's are roots of
+//! `z^l2 − s^l2`, so the barycentric weights collapse to closed-form
+//! products over the *complement* of S — O((K+R)·(l2−R) + K·R) — and yield
+//! bit-identical coefficients. Either way the matrix depends only on S, so
+//! it is cached per subset (LRU-bounded, see [`Decoder::with_cache_cap`]);
+//! applying it is a K·R·d dense pass. With straggler patterns repeating
+//! across iterations the cache hit rate is high (measured in
+//! EXPERIMENTS.md §Perf).
 
-use std::collections::HashMap;
+use std::collections::{HashMap, VecDeque};
 
-use super::{CodingParams, EvalPoints};
-use crate::field::{lagrange_coeffs, PrimeField};
+use super::{CodingParams, CosetLayout, EvalPoints};
+use crate::field::{lagrange_coeffs, simd, PrimeField};
 use crate::util::par::{par_ranges, Parallelism};
+
+/// Default bound on the per-subset coefficient cache. Each entry is
+/// K·R u64s; straggler patterns in a session cycle through far fewer than
+/// this, so the default never evicts in practice while still bounding
+/// multi-session memory.
+pub const DEFAULT_CACHE_CAP: usize = 256;
 
 /// Decoding failure.
 #[derive(Debug, Clone, PartialEq, Eq)]
@@ -63,8 +74,13 @@ pub struct Decoder {
     pub points: EvalPoints,
     /// subset (sorted worker ids) → K rows of R Lagrange coefficients.
     cache: HashMap<Vec<u32>, Vec<Vec<u64>>>,
+    /// Recency order of cached subsets (front = least recently used).
+    order: VecDeque<Vec<u32>>,
+    /// Max cached subsets; 0 = unbounded.
+    cache_cap: usize,
     hits: u64,
     misses: u64,
+    evictions: u64,
     /// Threads for the decode pass, split over output column chunks (the
     /// combination per column is independent, so exact at any setting).
     par: Parallelism,
@@ -77,8 +93,11 @@ impl Decoder {
             params,
             points,
             cache: HashMap::new(),
+            order: VecDeque::new(),
+            cache_cap: DEFAULT_CACHE_CAP,
             hits: 0,
             misses: 0,
+            evictions: 0,
             par: Parallelism::Serial,
         }
     }
@@ -89,9 +108,21 @@ impl Decoder {
         self
     }
 
+    /// Bound the subset-coefficient cache to `cap` entries (LRU eviction;
+    /// 0 = unbounded). Surfaced as `decode_cache_cap` in the config.
+    pub fn with_cache_cap(mut self, cap: usize) -> Self {
+        self.cache_cap = cap;
+        self
+    }
+
     /// (cache hits, misses) — perf observability.
     pub fn cache_stats(&self) -> (u64, u64) {
         (self.hits, self.misses)
+    }
+
+    /// Subsets evicted from the coefficient cache (LRU, beyond the cap).
+    pub fn cache_evictions(&self) -> u64 {
+        self.evictions
     }
 
     /// Decode the K true sub-results {f(X̄_k, W̄)}_k from worker results.
@@ -144,20 +175,24 @@ impl Decoder {
         let mut ordered: Vec<&WorkerResult> = used.iter().collect();
         ordered.sort_unstable_by_key(|r| r.worker);
 
-        if !self.cache.contains_key(&key) {
-            let alphas: Vec<u64> = key.iter().map(|&w| self.points.alphas[w as usize]).collect();
-            let rows: Vec<Vec<u64>> = self.points.betas[..self.params.k]
-                .iter()
-                .map(|&b| {
-                    lagrange_coeffs(&self.field, &alphas, b)
-                        // lint: allow(no-panic-in-library): DuplicateWorker check above guarantees distinct alphas
-                        .expect("alphas distinct by construction")
-                })
-                .collect();
-            self.cache.insert(key.clone(), rows);
-            self.misses += 1;
-        } else {
+        if self.cache.contains_key(&key) {
             self.hits += 1;
+            // Refresh recency: move the key to the back of the LRU order.
+            if let Some(pos) = self.order.iter().position(|k| *k == key) {
+                self.order.remove(pos);
+                self.order.push_back(key.clone());
+            }
+        } else {
+            let rows = self.subset_rows(&key);
+            self.cache.insert(key.clone(), rows);
+            self.order.push_back(key.clone());
+            self.misses += 1;
+            if self.cache_cap > 0 && self.cache.len() > self.cache_cap {
+                if let Some(old) = self.order.pop_front() {
+                    self.cache.remove(&old);
+                    self.evictions += 1;
+                }
+            }
         }
         let rows = &self.cache[&key];
         let selected: Vec<&Vec<u64>> = blocks.iter().map(|&b| &rows[b]).collect();
@@ -166,7 +201,7 @@ impl Decoder {
         // (b×R×d when only a batch of blocks is requested). Each output
         // column is independent, so split the d columns into per-thread
         // chunks; within a chunk, accumulate with the deferred Barrett
-        // reduction trick from compute::matmul.
+        // reduction trick from compute::matmul via the lane kernels.
         let f = self.field;
         let chunk = crate::compute::safe_chunk_len(f.modulus());
         let col_parts = par_ranges(self.par, d, |_, cols| {
@@ -177,23 +212,15 @@ impl Decoder {
                     let mut out_k = vec![0u64; width];
                     let mut pending = 0usize;
                     for (lam_i, r) in lam.iter().zip(ordered.iter()) {
-                        let data = &r.data[cols.clone()];
-                        for (a, &v) in acc.iter_mut().zip(data.iter()) {
-                            *a = a.wrapping_add(lam_i * v);
-                        }
+                        simd::mac_wrapping(&mut acc, &r.data[cols.clone()], *lam_i);
                         pending += 1;
                         if pending == chunk {
-                            for (o, a) in out_k.iter_mut().zip(acc.iter_mut()) {
-                                *o = f.add(*o, f.reduce_u64(*a));
-                                *a = 0;
-                            }
+                            simd::fold_reduce(&f, &mut out_k, &mut acc);
                             pending = 0;
                         }
                     }
                     if pending > 0 {
-                        for (o, a) in out_k.iter_mut().zip(acc.iter()) {
-                            *o = f.add(*o, f.reduce_u64(*a));
-                        }
+                        simd::fold_reduce(&f, &mut out_k, &mut acc);
                     }
                     out_k
                 })
@@ -209,6 +236,95 @@ impl Decoder {
         }
         Ok(out)
     }
+
+    /// The K×R coefficient matrix for one sorted worker subset.
+    fn subset_rows(&self, key: &[u32]) -> Vec<Vec<u64>> {
+        if let Some(layout) = self.points.coset {
+            return self.coset_rows(&layout, key);
+        }
+        let alphas: Vec<u64> = key.iter().map(|&w| self.points.alphas[w as usize]).collect();
+        self.points.betas[..self.params.k]
+            .iter()
+            .map(|&b| {
+                lagrange_coeffs(&self.field, &alphas, b)
+                    // lint: allow(no-panic-in-library): DuplicateWorker check above guarantees distinct alphas
+                    .expect("alphas distinct by construction")
+            })
+            .collect()
+    }
+
+    /// Closed-form barycentric rows on a coset layout. The subset's α's
+    /// are roots of P(z) = z^l2 − s^l2 (the full-coset vanishing
+    /// polynomial), so with C = the coset indices *outside* the subset:
+    ///
+    ///   λ_{k,i} = P(β_k) · c_i / (pβ_k · (β_k − α_i) · P'(α_i))
+    ///
+    /// where c_i = Π_{j∈C}(α_i − α_j), pβ_k = Π_{j∈C}(β_k − α_j), and
+    /// P'(α_i) = l2·α_i^(l2−1). P(β_k) = 1 − s^l2 for every k (β^l2 = 1),
+    /// and every denominator is provably nonzero (β ∉ coset, α's distinct,
+    /// s^l2 ≠ 1), so one batch inversion covers everything. Exact field
+    /// arithmetic on the same mathematical value ⇒ bit-identical to the
+    /// dense `lagrange_coeffs` rows.
+    fn coset_rows(&self, layout: &CosetLayout, key: &[u32]) -> Vec<Vec<u64>> {
+        let f = &self.field;
+        let l2 = layout.l2;
+        let r = key.len();
+        let k = self.params.k;
+        // Full coset points s·ω₂^j, and which of them the subset uses.
+        let mut coset_pts = Vec::with_capacity(l2);
+        let mut cur = layout.shift;
+        for _ in 0..l2 {
+            coset_pts.push(cur);
+            cur = f.mul(cur, layout.omega_l2);
+        }
+        let mut in_subset = vec![false; l2];
+        for &w in key {
+            in_subset[w as usize] = true;
+        }
+        let comp: Vec<u64> =
+            (0..l2).filter(|&j| !in_subset[j]).map(|j| coset_pts[j]).collect();
+        let sel: Vec<u64> = key.iter().map(|&w| coset_pts[w as usize]).collect();
+        // c_i and P'(α_i); pβ_k; then one batch inversion.
+        let c: Vec<u64> = sel
+            .iter()
+            .map(|&a| comp.iter().fold(1u64, |acc, &x| f.mul(acc, f.sub(a, x))))
+            .collect();
+        let l2e = f.reduce_u64(l2 as u64);
+        let dp: Vec<u64> =
+            sel.iter().map(|&a| f.mul(l2e, f.pow(a, l2 as u64 - 1))).collect();
+        let betas = &self.points.betas[..k];
+        let pb: Vec<u64> = betas
+            .iter()
+            .map(|&b| comp.iter().fold(1u64, |acc, &x| f.mul(acc, f.sub(b, x))))
+            .collect();
+        let num = f.sub(1, f.pow(layout.shift, l2 as u64));
+        // Denominators: [pβ_0..pβ_{K−1}] ++ [dp_0..dp_{R−1}] ++
+        // [(β_k − α_i) for all k, i].
+        let mut denoms = Vec::with_capacity(k + r + k * r);
+        denoms.extend(&pb);
+        denoms.extend(&dp);
+        for &b in betas {
+            for &a in &sel {
+                denoms.push(f.sub(b, a));
+            }
+        }
+        let invs = f.batch_inv(&denoms);
+        let (inv_pb, rest) = invs.split_at(k);
+        let (inv_dp, inv_diff) = rest.split_at(r);
+        (0..k)
+            .map(|kk| {
+                let scale = f.mul(num, inv_pb[kk]);
+                (0..r)
+                    .map(|i| {
+                        f.mul(
+                            f.mul(scale, c[i]),
+                            f.mul(inv_diff[kk * r + i], inv_dp[i]),
+                        )
+                    })
+                    .collect()
+            })
+            .collect()
+    }
 }
 
 #[cfg(test)]
@@ -216,7 +332,7 @@ mod tests {
     use super::*;
     use crate::coding::Encoder;
     use crate::compute::WorkerComputation;
-    use crate::field::{PrimeField, PAPER_PRIME};
+    use crate::field::{PrimeField, PAPER_PRIME, PRIME_NTT_25, PRIME_NTT_28};
     use crate::util::proptest::check;
     use crate::util::Rng;
 
@@ -388,6 +504,45 @@ mod tests {
             .collect();
         dec.decode(&results2, 2).unwrap();
         assert_eq!(dec.cache_stats(), (1, 2));
+        assert_eq!(dec.cache_evictions(), 0);
+    }
+
+    #[test]
+    fn cache_evicts_least_recently_used_beyond_cap() {
+        let f = PrimeField::new(PAPER_PRIME);
+        let params = CodingParams::new(6, 1, 1, 1).unwrap(); // threshold 4
+        let enc = Encoder::new(f, params);
+        let mut dec = Decoder::new(f, params, enc.points.clone()).with_cache_cap(2);
+        let subset = |ws: [usize; 4]| -> Vec<WorkerResult> {
+            ws.iter().map(|&w| WorkerResult { worker: w, data: vec![1; 2] }).collect()
+        };
+        let a = subset([0, 1, 2, 3]);
+        let b = subset([1, 2, 3, 4]);
+        let c = subset([2, 3, 4, 5]);
+        dec.decode(&a, 2).unwrap(); // miss  {a}
+        dec.decode(&b, 2).unwrap(); // miss  {a,b}
+        dec.decode(&a, 2).unwrap(); // hit — refreshes a's recency
+        dec.decode(&c, 2).unwrap(); // miss, evicts b (LRU)  {a,c}
+        dec.decode(&b, 2).unwrap(); // miss again, evicts a  {c,b}
+        dec.decode(&c, 2).unwrap(); // hit
+        assert_eq!(dec.cache_stats(), (2, 4));
+        assert_eq!(dec.cache_evictions(), 2);
+    }
+
+    #[test]
+    fn zero_cap_means_unbounded() {
+        let f = PrimeField::new(PAPER_PRIME);
+        let params = CodingParams::new(6, 1, 1, 1).unwrap();
+        let enc = Encoder::new(f, params);
+        let mut dec = Decoder::new(f, params, enc.points.clone()).with_cache_cap(0);
+        for start in 0..3usize {
+            let results: Vec<WorkerResult> = (start..start + 4)
+                .map(|w| WorkerResult { worker: w, data: vec![1; 2] })
+                .collect();
+            dec.decode(&results, 2).unwrap();
+        }
+        assert_eq!(dec.cache_stats(), (0, 3));
+        assert_eq!(dec.cache_evictions(), 0);
     }
 
     #[test]
@@ -455,5 +610,69 @@ mod tests {
         results.reverse();
         let b = dec.decode(&results, d).unwrap();
         assert_eq!(a, b);
+    }
+
+    #[test]
+    fn coset_rows_match_dense_lagrange_all_moduli() {
+        // The closed-form barycentric rows must be bit-identical to the
+        // O(K·R²) lagrange_coeffs rows for random straggler subsets.
+        for &p in &[97u64, PRIME_NTT_25, PRIME_NTT_28] {
+            let f = PrimeField::new(p);
+            for &(n, k, t) in &[(10usize, 3usize, 1usize), (13, 2, 2), (16, 4, 1)] {
+                let params = CodingParams::new(n, k, t, 1).unwrap();
+                let pts = EvalPoints::ntt_coset(&f, k, t, n).unwrap();
+                let dec = Decoder::new(f, params, pts.clone());
+                let need = params.recovery_threshold();
+                let mut rng = Rng::new(p.wrapping_mul(31) ^ n as u64);
+                for _ in 0..5 {
+                    let mut ids: Vec<u32> = (0..n as u32).collect();
+                    rng.shuffle(&mut ids);
+                    let mut key = ids[..need].to_vec();
+                    key.sort_unstable();
+                    let layout = pts.coset.unwrap();
+                    let fast = dec.coset_rows(&layout, &key);
+                    let alphas: Vec<u64> =
+                        key.iter().map(|&w| pts.alphas[w as usize]).collect();
+                    for (kk, row) in fast.iter().enumerate() {
+                        let want =
+                            lagrange_coeffs(&f, &alphas, pts.betas[kk]).unwrap();
+                        assert_eq!(row, &want, "p={p} n={n} k={kk} key={key:?}");
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn ntt_roundtrip_with_stragglers() {
+        // Full pipeline on the coset layout: NTT encode → worker compute →
+        // barycentric decode equals compute on the true blocks.
+        let f = PrimeField::new(PRIME_NTT_25);
+        let params = CodingParams::new(13, 2, 2, 1).unwrap(); // threshold 10
+        let pts = EvalPoints::ntt_coset(&f, 2, 2, 13).unwrap();
+        let enc = Encoder::with_points(f, params, pts).force_ntt();
+        let mut rng = Rng::new(40);
+        let (rows, d) = (3, 5);
+        let m = rows * 2;
+        let xq = f.random_matrix(&mut rng, m, d);
+        let wq = f.random_matrix(&mut rng, d, 1);
+        let coeffs: Vec<u64> = (0..2).map(|_| f.random(&mut rng)).collect();
+        let xs = enc.encode_dataset(&xq, m, d, &mut rng);
+        let ws = enc.encode_weights(&wq, d, 1, &mut rng);
+        let wc = WorkerComputation::new(f, rows, d, coeffs);
+        let mut results: Vec<WorkerResult> = xs
+            .iter()
+            .zip(ws.iter())
+            .map(|(x, w)| WorkerResult { worker: x.worker, data: wc.compute(&x.data, &w.data) })
+            .collect();
+        rng.shuffle(&mut results);
+        results.truncate(10); // drop the full straggler slack
+        let mut dec = Decoder::new(f, params, enc.points.clone());
+        let decoded = dec.decode(&results, d).unwrap();
+        let block = rows * d;
+        for kk in 0..2 {
+            let truth = wc.compute(&xq[kk * block..(kk + 1) * block], &wq);
+            assert_eq!(decoded[kk], truth, "block {kk}");
+        }
     }
 }

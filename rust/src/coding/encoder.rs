@@ -1,17 +1,36 @@
 //! LCC encoder (paper §3.2).
 //!
-//! The encoding matrix U ∈ F_p^{(K+T)×N} has column i equal to the Lagrange
-//! basis coefficients of the β points evaluated at α_i (eq. 12), so worker
-//! i's share is a fixed linear combination of the K data blocks and T
-//! masks: `X̃_i = Σ_j U[j,i]·block_j`. Weight shares exploit that the first
-//! K blocks are all W̄ (eq. 14): `Σ_{j<K} U[j,i]·W̄ = s_i·W̄` with the column
+//! **Dense path** (any modulus): the encoding matrix U ∈ F_p^{(K+T)×N} has
+//! column i equal to the Lagrange basis coefficients of the β points
+//! evaluated at α_i (eq. 12), so worker i's share is a fixed linear
+//! combination of the K data blocks and T masks:
+//! `X̃_i = Σ_j U[j,i]·block_j`. Weight shares exploit that the first K
+//! blocks are all W̄ (eq. 14): `Σ_{j<K} U[j,i]·W̄ = s_i·W̄` with the column
 //! sums s_i precomputed — an O(K) → O(1) saving per entry that dominates
-//! the per-iteration encode cost (EXPERIMENTS.md §Perf).
+//! the per-iteration encode cost (EXPERIMENTS.md §Perf). U is built lazily
+//! (first dense encode / `u_column` call) so a session on the NTT backend
+//! never pays the O((K+T)²·N) setup, and a session sharing one `Encoder`
+//! for dataset and weights builds it exactly once.
+//!
+//! **NTT path** ([`EvalPoints::ntt_coset`] layouts): the share polynomial's
+//! values at the β subgroup are converted to coefficients (a size-l1
+//! inverse transform when K+T fills the subgroup, else a precomputed
+//! (K+T)² basis change), twisted by powers of the coset shift, and
+//! evaluated at all α's at once with a size-l2 forward transform —
+//! O(l2 log l2) per element column instead of O(N·(K+T)). Both paths
+//! evaluate the same polynomial at the same points with exact field
+//! arithmetic, so their outputs are bit-identical.
 
-use super::{CodingParams, EvalPoints};
-use crate::field::{lagrange_coeffs, PrimeField};
-use crate::util::par::{par_map, Parallelism};
+use super::{CodingBackend, CodingParams, CosetLayout, EvalPoints};
+use crate::field::{interpolate, lagrange_coeffs, simd, NttPlan, PrimeField};
+use crate::util::par::{par_map, par_ranges, Parallelism};
 use crate::util::Rng;
+use std::sync::OnceLock;
+
+/// Column width of the structure-of-arrays NTT strips: big enough to
+/// amortize the butterfly loop overhead, small enough that an l2-row
+/// buffer stays cache-resident (256 rows × 512 cols × 8 B = 1 MiB).
+const NTT_STRIP: usize = 512;
 
 /// One worker's coded share of the dataset (or of the weights).
 #[derive(Debug, Clone, PartialEq, Eq)]
@@ -22,19 +41,75 @@ pub struct EncodedShare {
     pub data: Vec<u64>,
 }
 
+/// The dense encoding matrix, built on first use and shared by the
+/// dataset and weight encode paths.
+#[derive(Debug, Clone)]
+struct UMatrix {
+    /// U stored column-major: `cols[i]` is worker i's coefficient vector
+    /// (length K+T).
+    cols: Vec<Vec<u64>>,
+    /// `Σ_{j<K} U[j,i]` per worker — the replicated-secret shortcut.
+    top_sums: Vec<u64>,
+}
+
+/// Precomputed transforms for the coset fast path.
+#[derive(Debug, Clone)]
+struct NttEncoder {
+    layout: CosetLayout,
+    /// Values at the full β subgroup → coefficients, when K+T == l1.
+    plan_l1: Option<NttPlan>,
+    /// Otherwise: `interp[c][j]` maps value at β_j to coefficient c of
+    /// the degree-<K+T interpolant (rows 0..K+T; higher rows are zero).
+    interp: Option<Vec<Vec<u64>>>,
+    /// Coefficients (twisted) → values at the α coset.
+    plan_l2: NttPlan,
+    /// shift^c for the coefficient twist u(s·z) = Σ (c_t·s^t)·z^t.
+    shift_pows: Vec<u64>,
+}
+
+impl NttEncoder {
+    fn new(f: &PrimeField, layout: &CosetLayout, kt: usize) -> Self {
+        let plan_l2 = NttPlan::with_root(*f, layout.l2, layout.omega_l2);
+        let (plan_l1, interp) = if kt == layout.l1 {
+            (Some(NttPlan::with_root(*f, layout.l1, layout.omega_l1)), None)
+        } else {
+            let betas: Vec<u64> = (0..kt).map(|j| f.pow(layout.omega_l1, j as u64)).collect();
+            let mut rows = vec![vec![0u64; kt]; kt];
+            for j in 0..kt {
+                let mut unit = vec![0u64; kt];
+                unit[j] = 1;
+                let coeffs = interpolate(f, &betas, &unit)
+                    // lint: allow(no-panic-in-library): coset betas are distinct powers of an order-l1 root
+                    .expect("coset betas are distinct");
+                for (c, &v) in coeffs.iter().enumerate() {
+                    rows[c][j] = v;
+                }
+            }
+            (None, Some(rows))
+        };
+        let mut shift_pows = Vec::with_capacity(kt);
+        let mut s = 1u64;
+        for _ in 0..kt {
+            shift_pows.push(s);
+            s = f.mul(s, layout.shift);
+        }
+        NttEncoder { layout: *layout, plan_l1, interp, plan_l2, shift_pows }
+    }
+}
+
 /// Encoder for a fixed (field, params, points) session.
 #[derive(Debug, Clone)]
 pub struct Encoder {
     pub field: PrimeField,
     pub params: CodingParams,
     pub points: EvalPoints,
-    /// U, stored column-major: `u[i]` is worker i's coefficient vector
-    /// (length K+T).
-    u_cols: Vec<Vec<u64>>,
-    /// `Σ_{j<K} U[j,i]` per worker — the replicated-secret shortcut.
-    top_sums: Vec<u64>,
-    /// Threads for the per-worker share columns (mask randomness is drawn
-    /// before fan-out, so shares are identical at any setting).
+    /// Dense U matrix, built lazily (never for a pure-NTT session).
+    u: OnceLock<UMatrix>,
+    /// Engaged NTT fast path, if the points are a coset layout and the
+    /// cost model (or an explicit force) selected it.
+    ntt: Option<NttEncoder>,
+    /// Threads for the encode fan-out (mask randomness is drawn before
+    /// fan-out, so shares are identical at any setting).
     par: Parallelism,
 }
 
@@ -44,23 +119,21 @@ impl Encoder {
         Self::with_points(field, params, points)
     }
 
+    /// Build for an explicit point layout. Coset layouts engage the NTT
+    /// path automatically when the cost model says it beats the dense
+    /// combine at this (K, T, N); `force_dense` / `force_ntt` override.
     pub fn with_points(field: PrimeField, params: CodingParams, points: EvalPoints) -> Self {
         assert_eq!(points.betas.len(), params.k + params.t);
         assert_eq!(points.alphas.len(), params.n);
-        let u_cols: Vec<Vec<u64>> = points
-            .alphas
-            .iter()
-            .map(|&a| {
-                lagrange_coeffs(&field, &points.betas, a)
-                    // lint: allow(no-panic-in-library): EvalPoints::standard guarantees distinct points
-                    .expect("standard points are distinct")
-            })
-            .collect();
-        let top_sums = u_cols
-            .iter()
-            .map(|col| col[..params.k].iter().fold(0u64, |acc, &c| field.add(acc, c)))
-            .collect();
-        Encoder { field, params, points, u_cols, top_sums, par: Parallelism::Serial }
+        let kt = params.k + params.t;
+        let ntt = points.coset.as_ref().and_then(|layout| {
+            if layout.ntt_encode_cost(kt) < CosetLayout::dense_encode_cost(kt, params.n) {
+                Some(NttEncoder::new(&field, layout, kt))
+            } else {
+                None
+            }
+        });
+        Encoder { field, params, points, u: OnceLock::new(), ntt, par: Parallelism::Serial }
     }
 
     /// Spread the N per-worker share computations across `par` threads.
@@ -69,9 +142,61 @@ impl Encoder {
         self
     }
 
+    /// Use the dense combine even on a coset layout (bit-identical).
+    pub fn force_dense(mut self) -> Self {
+        self.ntt = None;
+        self
+    }
+
+    /// Use the NTT path regardless of the cost model. The points must be
+    /// a coset layout.
+    pub fn force_ntt(mut self) -> Self {
+        assert!(
+            self.points.coset.is_some(),
+            "ntt backend requires EvalPoints::ntt_coset points"
+        );
+        if let Some(layout) = self.points.coset {
+            let kt = self.params.k + self.params.t;
+            self.ntt = Some(NttEncoder::new(&self.field, &layout, kt));
+        }
+        self
+    }
+
+    /// Which encode implementation this session runs.
+    pub fn backend(&self) -> CodingBackend {
+        if self.ntt.is_some() {
+            CodingBackend::Ntt
+        } else {
+            CodingBackend::Dense
+        }
+    }
+
+    /// The dense encoding matrix, built on first use.
+    fn u(&self) -> &UMatrix {
+        self.u.get_or_init(|| {
+            let cols: Vec<Vec<u64>> = self
+                .points
+                .alphas
+                .iter()
+                .map(|&a| {
+                    lagrange_coeffs(&self.field, &self.points.betas, a)
+                        // lint: allow(no-panic-in-library): EvalPoints constructors guarantee distinct points
+                        .expect("eval points are distinct")
+                })
+                .collect();
+            let top_sums = cols
+                .iter()
+                .map(|col| {
+                    col[..self.params.k].iter().fold(0u64, |acc, &c| self.field.add(acc, c))
+                })
+                .collect();
+            UMatrix { cols, top_sums }
+        })
+    }
+
     /// Column i of the encoding matrix U (length K+T).
     pub fn u_column(&self, worker: usize) -> &[u64] {
-        &self.u_cols[worker]
+        &self.u().cols[worker]
     }
 
     /// Encode the quantized dataset X̄ (row-major `m × d`, `m % K == 0`)
@@ -84,10 +209,18 @@ impl Encoder {
         assert!(m % k == 0, "m={m} must be divisible by K={k}");
         let block = m / k * d;
         // Masks are drawn before the fan-out so the RNG stream (and hence
-        // every share) is independent of the thread count.
+        // every share) is independent of the thread count and backend.
         let masks: Vec<Vec<u64>> = (0..t)
             .map(|_| self.field.random_matrix(rng, m / k, d))
             .collect();
+        if let Some(ntt) = &self.ntt {
+            let sources: Vec<&[u64]> = (0..k)
+                .map(|j| &xq[j * block..(j + 1) * block])
+                .chain(masks.iter().map(|m| m.as_slice()))
+                .collect();
+            return self.ntt_shares(ntt, &sources, block);
+        }
+        self.u(); // build U before the fan-out, not inside every thread
         par_map(self.par, n, |w| EncodedShare {
             worker: w,
             data: self.combine_blocks(xq, block, &masks, w),
@@ -96,11 +229,11 @@ impl Encoder {
 
     /// Linear combination `Σ_j U[j,w]·block_j` over K data blocks + T masks.
     ///
-    /// Hot loop of the Encode column: products of reduced elements are
-    /// < p² ≤ 2^52 and we sum K+T of them, so partial sums stay in u64
-    /// for `safe_chunk_len(p)` terms — reduce once per chunk of source
-    /// blocks instead of per multiply-add (≈2.5× on the 24-bit prime;
-    /// EXPERIMENTS.md §Perf).
+    /// Hot loop of the dense Encode column: products of reduced elements
+    /// are < p² and we sum K+T of them, so partial sums stay in u64 for
+    /// `safe_chunk_len(p)` terms — one lane-kernel fold per chunk of
+    /// source blocks instead of a reduction per multiply-add (≈2.5× on
+    /// the 24-bit prime; EXPERIMENTS.md §Perf).
     fn combine_blocks(
         &self,
         xq: &[u64],
@@ -109,20 +242,12 @@ impl Encoder {
         w: usize,
     ) -> Vec<u64> {
         let f = &self.field;
-        let p = f.modulus();
         let k = self.params.k;
-        let col = &self.u_cols[w];
-        let chunk = crate::compute::safe_chunk_len(p);
+        let col = &self.u().cols[w];
+        let chunk = crate::compute::safe_chunk_len(f.modulus());
         let mut acc = vec![0u64; block];
         let mut out = vec![0u64; block];
         let mut pending = 0usize;
-        let fold = |acc: &mut Vec<u64>, out: &mut Vec<u64>, pending: &mut usize| {
-            for (o, a) in out.iter_mut().zip(acc.iter_mut()) {
-                *o = f.add(*o, f.reduce_u64(*a));
-                *a = 0;
-            }
-            *pending = 0;
-        };
         let sources = (0..k)
             .map(|j| (col[j], &xq[j * block..(j + 1) * block]))
             .chain(masks.iter().enumerate().map(|(j, m)| (col[k + j], m.as_slice())));
@@ -130,16 +255,15 @@ impl Encoder {
             if c == 0 {
                 continue;
             }
-            for (a, &s) in acc.iter_mut().zip(src.iter()) {
-                *a = a.wrapping_add(c * s);
-            }
+            simd::mac_wrapping(&mut acc, src, c);
             pending += 1;
             if pending == chunk {
-                fold(&mut acc, &mut out, &mut pending);
+                simd::fold_reduce(f, &mut out, &mut acc);
+                pending = 0;
             }
         }
         if pending > 0 {
-            fold(&mut acc, &mut out, &mut pending);
+            simd::fold_reduce(f, &mut out, &mut acc);
         }
         out
     }
@@ -149,13 +273,22 @@ impl Encoder {
     /// paper re-encodes every iteration precisely so intermediate weights
     /// stay private.
     pub fn encode_weights(&self, wq: &[u64], d: usize, r: usize, rng: &mut Rng) -> Vec<EncodedShare> {
-        let (t, n) = (self.params.t, self.params.n);
+        let (k, t, n) = (self.params.k, self.params.t, self.params.n);
         assert_eq!(wq.len(), d * r);
         let f = self.field;
         // Fresh masks drawn before fan-out (thread-count independence).
         let masks: Vec<Vec<u64>> = (0..t)
             .map(|_| f.random_matrix(rng, d, r))
             .collect();
+        if let Some(ntt) = &self.ntt {
+            // The first K blocks are all W̄ (eq. 14).
+            let sources: Vec<&[u64]> = (0..k)
+                .map(|_| wq)
+                .chain(masks.iter().map(|m| m.as_slice()))
+                .collect();
+            return self.ntt_shares(ntt, &sources, d * r);
+        }
+        self.u();
         par_map(self.par, n, |w| EncodedShare {
             worker: w,
             data: self.combine_weight_share(wq, &masks, w),
@@ -168,34 +301,110 @@ impl Encoder {
         let f = &self.field;
         let k = self.params.k;
         let chunk = crate::compute::safe_chunk_len(f.modulus());
-        let col = &self.u_cols[w];
-        let s = self.top_sums[w];
-        let mut acc: Vec<u64> = wq.iter().map(|&v| s * v).collect();
+        let u = self.u();
+        let col = &u.cols[w];
+        let mut acc = vec![0u64; wq.len()];
         let mut out = vec![0u64; wq.len()];
+        simd::mac_wrapping(&mut acc, wq, u.top_sums[w]);
         let mut pending = 1usize;
         for (j, mask) in masks.iter().enumerate() {
             let c = col[k + j];
             if c == 0 {
                 continue;
             }
-            for (a, &v) in acc.iter_mut().zip(mask.iter()) {
-                *a = a.wrapping_add(c * v);
-            }
+            simd::mac_wrapping(&mut acc, mask, c);
             pending += 1;
             if pending == chunk {
-                for (o, a) in out.iter_mut().zip(acc.iter_mut()) {
-                    *o = f.add(*o, f.reduce_u64(*a));
-                    *a = 0;
-                }
+                simd::fold_reduce(f, &mut out, &mut acc);
                 pending = 0;
             }
         }
         if pending > 0 {
-            for (o, a) in out.iter_mut().zip(acc.iter()) {
-                *o = f.add(*o, f.reduce_u64(*a));
-            }
+            simd::fold_reduce(f, &mut out, &mut acc);
         }
         out
+    }
+
+    /// NTT fan-out: every worker's share strip drops out of one forward
+    /// transform. `sources` are the K+T value blocks (β_j ↦ sources[j]),
+    /// each of length `block`; element columns are processed in strips so
+    /// the l2-row working set stays in cache, and strips are partitioned
+    /// across threads (outputs are disjoint — bit-exact at any setting).
+    fn ntt_shares(&self, ntt: &NttEncoder, sources: &[&[u64]], block: usize) -> Vec<EncodedShare> {
+        let n = self.params.n;
+        let kt = sources.len();
+        let f = &self.field;
+        let l2 = ntt.layout.l2;
+        let chunk = crate::compute::safe_chunk_len(f.modulus());
+        let parts: Vec<Vec<Vec<u64>>> = par_ranges(self.par, block, |_, range| {
+            let span = range.len();
+            let mut out: Vec<Vec<u64>> = (0..n).map(|_| vec![0u64; span]).collect();
+            let mut buf = vec![0u64; l2 * NTT_STRIP.min(span.max(1))];
+            let mut vals = vec![0u64; kt * NTT_STRIP.min(span.max(1))];
+            let mut lo = range.start;
+            while lo < range.end {
+                let hi = (lo + NTT_STRIP).min(range.end);
+                let width = hi - lo;
+                let buf = &mut buf[..l2 * width];
+                buf.fill(0);
+                if let Some(plan) = &ntt.plan_l1 {
+                    // K+T fills the l1 subgroup: values → coefficients is
+                    // a straight inverse transform.
+                    for (j, src) in sources.iter().enumerate() {
+                        buf[j * width..(j + 1) * width].copy_from_slice(&src[lo..hi]);
+                    }
+                    plan.inverse_rows(&mut buf[..ntt.layout.l1 * width], width);
+                } else if let Some(interp) = &ntt.interp {
+                    // Partial subgroup: (K+T)² basis change into the
+                    // coefficient rows, deferred-reduction chunked.
+                    let vals = &mut vals[..kt * width];
+                    for (j, src) in sources.iter().enumerate() {
+                        vals[j * width..(j + 1) * width].copy_from_slice(&src[lo..hi]);
+                    }
+                    let mut acc = vec![0u64; width];
+                    for (c, brow) in interp.iter().enumerate() {
+                        let row = &mut buf[c * width..(c + 1) * width];
+                        let mut pending = 0usize;
+                        for (j, &b) in brow.iter().enumerate() {
+                            if b == 0 {
+                                continue;
+                            }
+                            simd::mac_wrapping(&mut acc, &vals[j * width..(j + 1) * width], b);
+                            pending += 1;
+                            if pending == chunk {
+                                simd::fold_reduce(f, row, &mut acc);
+                                pending = 0;
+                            }
+                        }
+                        if pending > 0 {
+                            simd::fold_reduce(f, row, &mut acc);
+                        }
+                    }
+                }
+                // Twist by the coset shift (u(s·z) = Σ c_t·s^t·z^t), then
+                // evaluate at the whole α coset in one forward pass.
+                for (c, &sp) in ntt.shift_pows.iter().enumerate().skip(1) {
+                    simd::scale_mod(f, &mut buf[c * width..(c + 1) * width], sp);
+                }
+                ntt.plan_l2.forward_rows(buf, width);
+                for (w, o) in out.iter_mut().enumerate() {
+                    o[lo - range.start..hi - range.start]
+                        .copy_from_slice(&buf[w * width..(w + 1) * width]);
+                }
+                lo = hi;
+            }
+            out
+        });
+        let mut data: Vec<Vec<u64>> = (0..n).map(|_| Vec::with_capacity(block)).collect();
+        for part in parts {
+            for (w, piece) in part.into_iter().enumerate() {
+                data[w].extend(piece);
+            }
+        }
+        data.into_iter()
+            .enumerate()
+            .map(|(worker, data)| EncodedShare { worker, data })
+            .collect()
     }
 
     /// Bytes a dataset share occupies on the wire (u64 per element — the
@@ -215,7 +424,7 @@ impl Encoder {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::field::{eval_poly, interpolate, PAPER_PRIME};
+    use crate::field::{eval_poly, interpolate, PAPER_PRIME, PRIME_NTT_25, PRIME_NTT_28};
     use crate::util::proptest::check;
 
     fn setup(n: usize, k: usize, t: usize) -> Encoder {
@@ -368,10 +577,100 @@ mod tests {
         let enc = setup(13, 3, 2);
         let f = enc.field;
         for w in 0..enc.params.n {
-            let direct = enc.u_cols[w][..3]
+            let direct = enc.u_column(w)[..3]
                 .iter()
                 .fold(0u64, |acc, &c| f.add(acc, c));
-            assert_eq!(enc.top_sums[w], direct);
+            assert_eq!(enc.u().top_sums[w], direct);
+        }
+    }
+
+    #[test]
+    fn backend_selection_rules() {
+        // Standard points: always dense, even on an NTT-friendly modulus.
+        let f = PrimeField::new(PRIME_NTT_25);
+        let params = CodingParams::new(10, 3, 1, 1).unwrap();
+        assert_eq!(Encoder::new(f, params).backend(), CodingBackend::Dense);
+        // Coset points at the small default shape: cost model says dense.
+        let pts = EvalPoints::ntt_coset(&f, 3, 1, 10).unwrap();
+        let enc = Encoder::with_points(f, params, pts.clone());
+        assert_eq!(enc.backend(), CodingBackend::Dense);
+        // …but forcing NTT engages it, and force_dense reverts.
+        let enc = Encoder::with_points(f, params, pts).force_ntt();
+        assert_eq!(enc.backend(), CodingBackend::Ntt);
+        assert_eq!(enc.force_dense().backend(), CodingBackend::Dense);
+        // Big shape: auto-selected.
+        let params = CodingParams::new(192, 48, 16, 1).unwrap();
+        let pts = EvalPoints::ntt_coset(&f, 48, 16, 192).unwrap();
+        assert_eq!(Encoder::with_points(f, params, pts).backend(), CodingBackend::Ntt);
+    }
+
+    #[test]
+    #[should_panic(expected = "ntt backend requires")]
+    fn force_ntt_rejects_standard_points() {
+        let f = PrimeField::new(PRIME_NTT_25);
+        let params = CodingParams::new(10, 3, 1, 1).unwrap();
+        let _ = Encoder::new(f, params).force_ntt();
+    }
+
+    #[test]
+    fn ntt_encode_is_bit_exact_with_dense_all_moduli() {
+        // Same coset points, forced dense vs forced NTT, same mask seeds:
+        // every share must be bitwise identical. Covers both coefficient
+        // recovery paths (K+T == l1 straight iNTT, K+T < l1 basis change)
+        // and all NTT-capable moduli, serial and threaded.
+        for &p in &[97u64, PRIME_NTT_25, PRIME_NTT_28] {
+            for &(n, k, t) in &[(10usize, 3usize, 1usize), (10, 2, 1), (13, 2, 2), (16, 4, 1)] {
+                let f = PrimeField::new(p);
+                let params = CodingParams::new(n, k, t, 1).unwrap();
+                let pts = EvalPoints::ntt_coset(&f, k, t, n).unwrap();
+                let dense = Encoder::with_points(f, params, pts.clone()).force_dense();
+                let ntt = Encoder::with_points(f, params, pts.clone()).force_ntt();
+                let mut rng = Rng::new(p ^ (n as u64) << 8 ^ (k as u64) << 4 ^ t as u64);
+                let (m, d) = (3 * k, 5);
+                let xq = f.random_matrix(&mut rng, m, d);
+                let wq = f.random_matrix(&mut rng, d, 1);
+                let want_x = dense.encode_dataset(&xq, m, d, &mut Rng::new(11));
+                let want_w = dense.encode_weights(&wq, d, 1, &mut Rng::new(12));
+                assert_eq!(ntt.encode_dataset(&xq, m, d, &mut Rng::new(11)), want_x,
+                    "dataset p={p} n={n} k={k} t={t}");
+                assert_eq!(ntt.encode_weights(&wq, d, 1, &mut Rng::new(12)), want_w,
+                    "weights p={p} n={n} k={k} t={t}");
+                for threads in [2usize, 4] {
+                    let pntt = Encoder::with_points(f, params, pts.clone())
+                        .force_ntt()
+                        .with_parallelism(Parallelism::from_count(threads));
+                    assert_eq!(pntt.encode_dataset(&xq, m, d, &mut Rng::new(11)), want_x,
+                        "threads={threads} p={p}");
+                    assert_eq!(pntt.encode_weights(&wq, d, 1, &mut Rng::new(12)), want_w,
+                        "threads={threads} p={p}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn ntt_shares_are_polynomial_evaluations_at_coset_alphas() {
+        // Independent of the dense path: interpolate the NTT-encoded
+        // shares directly and check they lie on the degree-<K+T polynomial
+        // through the β values.
+        let f = PrimeField::new(PRIME_NTT_25);
+        let params = CodingParams::new(10, 2, 1, 1).unwrap();
+        let pts = EvalPoints::ntt_coset(&f, 2, 1, 10).unwrap();
+        let enc = Encoder::with_points(f, params, pts).force_ntt();
+        let mut rng = Rng::new(3);
+        let (m, d) = (4, 3);
+        let xq = f.random_matrix(&mut rng, m, d);
+        let shares = enc.encode_dataset(&xq, m, d, &mut Rng::new(9));
+        let block = m / 2 * d;
+        for e in 0..block {
+            let p3: Vec<u64> = enc.points.alphas[..3].to_vec();
+            let vals: Vec<u64> = shares[..3].iter().map(|s| s.data[e]).collect();
+            let coeffs = interpolate(&f, &p3, &vals).unwrap();
+            assert_eq!(eval_poly(&f, &coeffs, enc.points.betas[0]), xq[e]);
+            assert_eq!(eval_poly(&f, &coeffs, enc.points.betas[1]), xq[block + e]);
+            for s in &shares[3..] {
+                assert_eq!(eval_poly(&f, &coeffs, enc.points.alphas[s.worker]), s.data[e]);
+            }
         }
     }
 }

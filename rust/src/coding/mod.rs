@@ -9,6 +9,19 @@
 //! colluding workers learn nothing; any `(2r+1)(K+T−1)+1` worker *results*
 //! determine the composed polynomial h(z) = f(u(z), v(z)) by interpolation,
 //! and the true sub-results are its values at the β's.
+//!
+//! **Eval-point layouts.** The scheme is correct for *any* distinct
+//! β ∪ α, so the layout is a free perf knob. [`EvalPoints::standard`] uses
+//! 1..K+T+N and pairs with the dense O(N·(K+T)) encode / O(K·R²) decode
+//! setup. [`EvalPoints::ntt_coset`] — available when the modulus is
+//! NTT-friendly — places the β's on a power-of-two subgroup of roots of
+//! unity and the α's on a disjoint coset of a larger subgroup, so encoding
+//! becomes O(L log L) butterflies ([`crate::field::ntt`]) and decode rows
+//! come from a closed-form barycentric product instead of O(R²) Lagrange
+//! sums. Both layouts produce the *same field values* for every share and
+//! decoded block given the same points, so the choice is invisible to
+//! correctness; which one a session uses is surfaced as the
+//! `coding_backend` trace field.
 
 pub mod decoder;
 mod encoder;
@@ -18,13 +31,115 @@ pub use decoder::{DecodeError, Decoder, WorkerResult};
 pub use encoder::{EncodedShare, Encoder};
 pub use params::{CodingParams, ParamError};
 
-use crate::field::PrimeField;
+use crate::field::{ntt, PrimeField};
+
+/// Which encode/decode implementation a session's point layout enables.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum CodingBackend {
+    /// Dense Lagrange combines against the U matrix (any modulus).
+    Dense,
+    /// Roots-of-unity coset layout with butterfly encode + barycentric
+    /// decode rows (NTT-friendly moduli only).
+    Ntt,
+}
+
+impl CodingBackend {
+    /// Stable string used in traces and reports.
+    pub fn name(self) -> &'static str {
+        match self {
+            CodingBackend::Dense => "dense",
+            CodingBackend::Ntt => "ntt",
+        }
+    }
+}
+
+/// Backend request in [`crate::coordinator::CodedMlConfig`]: `Auto` picks
+/// the NTT layout whenever the modulus supports it *and* the cost model
+/// says it wins at the session's (K, T, N); `Dense`/`Ntt` force the choice
+/// (forcing `Ntt` on a low-adicity modulus is a config error).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum CodingBackendChoice {
+    #[default]
+    Auto,
+    Dense,
+    Ntt,
+}
+
+impl std::str::FromStr for CodingBackendChoice {
+    type Err = String;
+
+    fn from_str(s: &str) -> Result<Self, String> {
+        match s {
+            "auto" => Ok(CodingBackendChoice::Auto),
+            "dense" => Ok(CodingBackendChoice::Dense),
+            "ntt" => Ok(CodingBackendChoice::Ntt),
+            _ => Err(format!("bad coding backend '{s}' (auto|dense|ntt)")),
+        }
+    }
+}
+
+impl std::fmt::Display for CodingBackendChoice {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            CodingBackendChoice::Auto => write!(f, "auto"),
+            CodingBackendChoice::Dense => write!(f, "dense"),
+            CodingBackendChoice::Ntt => write!(f, "ntt"),
+        }
+    }
+}
+
+/// Roots-of-unity coset geometry behind an NTT point layout.
+///
+/// β_j = ω₁^j for j < K+T, where ω₁ generates the size-`l1` subgroup
+/// (`l1` = next power of two ≥ K+T); α_i = s·ω₂^i for i < N, where ω₂
+/// generates the size-`l2` subgroup (`l2` ≥ max(next_pow2(N), l1)) and
+/// the shift `s` is a field generator. Since ord(s) = p−1 > l2, s^l2 ≠ 1,
+/// so the α coset is disjoint from the β subgroup — the scheme's
+/// α ∩ β = ∅ requirement holds structurally.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct CosetLayout {
+    /// β-side transform length (next power of two ≥ K+T).
+    pub l1: usize,
+    /// α-side transform length (next power of two ≥ N, and ≥ l1).
+    pub l2: usize,
+    /// Principal l1-th root of unity, ω₁ = ω₂^(l2/l1).
+    pub omega_l1: u64,
+    /// Principal l2-th root of unity.
+    pub omega_l2: u64,
+    /// Coset shift s (the field's smallest generator).
+    pub shift: u64,
+}
+
+impl CosetLayout {
+    /// Estimated field multiplies per encoded element on the NTT path:
+    /// coefficient recovery (size-l1 inverse butterflies when K+T fills
+    /// the subgroup, else a (K+T)² basis-change pass), the s^t twist, and
+    /// the size-l2 forward butterflies — times a constant-factor fudge
+    /// for the extra buffer traffic relative to the dense combine's
+    /// streaming MACs.
+    pub fn ntt_encode_cost(&self, kt: usize) -> usize {
+        let interp = if kt == self.l1 {
+            self.l1 / 2 * self.l1.trailing_zeros() as usize
+        } else {
+            kt * kt
+        };
+        3 * (interp + kt + self.l2 / 2 * self.l2.trailing_zeros() as usize)
+    }
+
+    /// Field multiplies per element of the dense U-matrix combine.
+    pub fn dense_encode_cost(kt: usize, n: usize) -> usize {
+        kt * n
+    }
+}
 
 /// The β (data/mask) and α (worker) evaluation points for a session.
 #[derive(Debug, Clone)]
 pub struct EvalPoints {
     pub betas: Vec<u64>,
     pub alphas: Vec<u64>,
+    /// Present iff the points were laid out by [`EvalPoints::ntt_coset`];
+    /// carries the subgroup geometry the fast paths need.
+    pub coset: Option<CosetLayout>,
 }
 
 impl EvalPoints {
@@ -35,14 +150,43 @@ impl EvalPoints {
         EvalPoints {
             betas: all[..k + t].to_vec(),
             alphas: all[k + t..].to_vec(),
+            coset: None,
         }
+    }
+
+    /// Roots-of-unity coset layout, if the modulus has enough 2-adicity
+    /// for the α-side transform length (`None` otherwise — e.g. the
+    /// paper's 24-bit prime, whose p−1 has 2-adicity 1).
+    pub fn ntt_coset(field: &PrimeField, k: usize, t: usize, n: usize) -> Option<Self> {
+        let kt = k + t;
+        if kt == 0 || n == 0 {
+            return None;
+        }
+        let l1 = kt.next_power_of_two();
+        let l2 = n.next_power_of_two().max(l1);
+        if ntt::two_adicity(field.modulus()) < l2.trailing_zeros() {
+            return None;
+        }
+        let p = field.modulus();
+        let g = ntt::generator(field);
+        let omega_l2 = field.pow(g, (p - 1) / l2 as u64);
+        let omega_l1 = field.pow(omega_l2, (l2 / l1) as u64);
+        let betas = (0..kt).map(|j| field.pow(omega_l1, j as u64)).collect();
+        let alphas = (0..n)
+            .map(|i| field.mul(g, field.pow(omega_l2, i as u64)))
+            .collect();
+        Some(EvalPoints {
+            betas,
+            alphas,
+            coset: Some(CosetLayout { l1, l2, omega_l1, omega_l2, shift: g }),
+        })
     }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::field::PAPER_PRIME;
+    use crate::field::{PAPER_PRIME, PRIME_NTT_25, PRIME_NTT_28};
 
     #[test]
     fn standard_points_disjoint() {
@@ -50,8 +194,88 @@ mod tests {
         let pts = EvalPoints::standard(&f, 4, 2, 10);
         assert_eq!(pts.betas.len(), 6);
         assert_eq!(pts.alphas.len(), 10);
+        assert!(pts.coset.is_none());
         for a in &pts.alphas {
             assert!(!pts.betas.contains(a));
         }
+    }
+
+    #[test]
+    fn ntt_coset_points_distinct_and_disjoint() {
+        // Including the acceptance shape K=48, T=16, N=192 (l1=64, l2=256).
+        for &(p, k, t, n) in &[
+            (PRIME_NTT_25, 3usize, 1usize, 10usize),
+            (PRIME_NTT_25, 48, 16, 192),
+            (PRIME_NTT_28, 7, 7, 42),
+            (97, 2, 1, 8), // tiny field, 2-adicity 5
+        ] {
+            let f = PrimeField::new(p);
+            let pts = EvalPoints::ntt_coset(&f, k, t, n).unwrap();
+            assert_eq!(pts.betas.len(), k + t);
+            assert_eq!(pts.alphas.len(), n);
+            let mut all = pts.betas.clone();
+            all.extend(&pts.alphas);
+            all.sort_unstable();
+            let before = all.len();
+            all.dedup();
+            assert_eq!(all.len(), before, "p={p} k={k} t={t} n={n}");
+        }
+    }
+
+    #[test]
+    fn ntt_coset_layout_geometry() {
+        let f = PrimeField::new(PRIME_NTT_25);
+        let pts = EvalPoints::ntt_coset(&f, 48, 16, 192).unwrap();
+        let c = pts.coset.unwrap();
+        assert_eq!((c.l1, c.l2), (64, 256));
+        // ω's have exact order l1 / l2; the shift escapes the subgroup.
+        assert_eq!(f.pow(c.omega_l1, c.l1 as u64), 1);
+        assert_ne!(f.pow(c.omega_l1, c.l1 as u64 / 2), 1);
+        assert_eq!(f.pow(c.omega_l2, c.l2 as u64), 1);
+        assert_ne!(f.pow(c.omega_l2, c.l2 as u64 / 2), 1);
+        assert_ne!(f.pow(c.shift, c.l2 as u64), 1);
+        // βs sit in the l1-subgroup, αs in the shifted l2-coset.
+        for &b in &pts.betas {
+            assert_eq!(f.pow(b, c.l1 as u64), 1);
+        }
+        for &a in &pts.alphas {
+            assert_eq!(f.pow(a, c.l2 as u64), f.pow(c.shift, c.l2 as u64));
+        }
+    }
+
+    #[test]
+    fn ntt_coset_unavailable_on_low_adicity_moduli() {
+        let f = PrimeField::new(PAPER_PRIME);
+        assert!(EvalPoints::ntt_coset(&f, 3, 1, 10).is_none());
+        // 97 supports up to length 32 = 2^5 only.
+        let f = PrimeField::new(97);
+        assert!(EvalPoints::ntt_coset(&f, 2, 1, 33).is_none());
+    }
+
+    #[test]
+    fn cost_model_prefers_ntt_at_large_shapes_only() {
+        let f = PrimeField::new(PRIME_NTT_25);
+        // Paper default 10/3/1: dense wins.
+        let small = EvalPoints::ntt_coset(&f, 3, 1, 10).unwrap().coset.unwrap();
+        assert!(small.ntt_encode_cost(4) >= CosetLayout::dense_encode_cost(4, 10));
+        // Acceptance shape 48/16/192: NTT wins.
+        let big = EvalPoints::ntt_coset(&f, 48, 16, 192).unwrap().coset.unwrap();
+        assert!(big.ntt_encode_cost(64) < CosetLayout::dense_encode_cost(64, 192));
+    }
+
+    #[test]
+    fn backend_choice_parses_and_displays() {
+        for (s, v) in [
+            ("auto", CodingBackendChoice::Auto),
+            ("dense", CodingBackendChoice::Dense),
+            ("ntt", CodingBackendChoice::Ntt),
+        ] {
+            assert_eq!(s.parse::<CodingBackendChoice>().unwrap(), v);
+            assert_eq!(v.to_string(), s);
+        }
+        assert!("fft".parse::<CodingBackendChoice>().is_err());
+        assert_eq!(CodingBackendChoice::default(), CodingBackendChoice::Auto);
+        assert_eq!(CodingBackend::Dense.name(), "dense");
+        assert_eq!(CodingBackend::Ntt.name(), "ntt");
     }
 }

@@ -13,7 +13,7 @@
 //! ([`crate::util::par`]); outputs are per-row (or merged with exact field
 //! adds), so results are bit-identical at every thread count.
 
-use crate::field::PrimeField;
+use crate::field::{simd, PrimeField};
 use crate::util::par::{par_ranges, Parallelism};
 
 /// Number of p²-bounded terms that can accumulate in a u64 without
@@ -35,6 +35,11 @@ fn matvec_rows(
     col: usize,
 ) -> Vec<u64> {
     let chunk = safe_chunk_len(f.modulus());
+    // Strided weight columns are gathered once per range so the chunk dot
+    // runs over two contiguous slices (lane-kernel friendly).
+    let gathered: Option<Vec<u64>> =
+        (stride != 1).then(|| (0..d).map(|k| w[k * stride + col]).collect());
+    let wcol: &[u64] = gathered.as_deref().unwrap_or(&w[..d]);
     let mut out = Vec::with_capacity(row_range.len());
     for row in row_range {
         let xrow = &x[row * d..(row + 1) * d];
@@ -42,10 +47,7 @@ fn matvec_rows(
         let mut k = 0;
         while k < d {
             let end = (k + chunk).min(d);
-            let mut partial: u64 = 0;
-            for kk in k..end {
-                partial = partial.wrapping_add(xrow[kk] * w[kk * stride + col]);
-            }
+            let partial = simd::dot_wrapping(&xrow[k..end], &wcol[k..end]);
             acc = f.add(acc, f.reduce_u64(partial));
             k = end;
         }
@@ -103,23 +105,15 @@ fn tr_matvec_rows(
     let mut pending = 0usize;
     for row in row_range {
         let gi = g[row];
-        let xrow = &x[row * d..(row + 1) * d];
-        for (a, &xv) in acc.iter_mut().zip(xrow.iter()) {
-            *a = a.wrapping_add(xv * gi);
-        }
+        simd::mac_wrapping(&mut acc, &x[row * d..(row + 1) * d], gi);
         pending += 1;
         if pending == chunk {
-            for (o, a) in out.iter_mut().zip(acc.iter_mut()) {
-                *o = f.add(*o, f.reduce_u64(*a));
-                *a = 0;
-            }
+            simd::fold_reduce(f, &mut out, &mut acc);
             pending = 0;
         }
     }
     if pending > 0 {
-        for (o, a) in out.iter_mut().zip(acc.iter()) {
-            *o = f.add(*o, f.reduce_u64(*a));
-        }
+        simd::fold_reduce(f, &mut out, &mut acc);
     }
     out
 }
@@ -159,7 +153,7 @@ pub fn tr_matvec_mod_par(
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::field::{PrimeField, PAPER_PRIME, PRIME_26, PRIME_31};
+    use crate::field::{PrimeField, PAPER_PRIME, PRIME_26, PRIME_31, PRIME_NTT_25, PRIME_NTT_28};
     use crate::util::proptest::check;
 
     #[test]
@@ -187,7 +181,7 @@ mod tests {
 
     #[test]
     fn matvec_matches_naive_all_primes() {
-        for &p in &[PAPER_PRIME, PRIME_26, PRIME_31, 97] {
+        for &p in &[PAPER_PRIME, PRIME_NTT_25, PRIME_26, PRIME_NTT_28, PRIME_31, 97] {
             let f = PrimeField::new(p);
             check(&format!("matvec-{p}"), 30, move |rng| {
                 let rows = 1 + rng.below_usize(8);
@@ -220,7 +214,7 @@ mod tests {
 
     #[test]
     fn tr_matvec_matches_naive() {
-        for &p in &[PAPER_PRIME, PRIME_31] {
+        for &p in &[PAPER_PRIME, PRIME_NTT_25, PRIME_NTT_28, PRIME_31] {
             let f = PrimeField::new(p);
             check(&format!("tr-matvec-{p}"), 30, move |rng| {
                 let rows = 1 + rng.below_usize(40);

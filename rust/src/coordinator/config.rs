@@ -3,7 +3,7 @@
 use std::path::PathBuf;
 
 use crate::cluster::{NetworkModel, StragglerModel, TransportConfig, TransportKind};
-use crate::coding::{CodingParams, ParamError};
+use crate::coding::{CodingBackendChoice, CodingParams, ParamError};
 use crate::field::{PrimeField, PAPER_PRIME};
 use crate::quant::{BudgetReport, OverflowBudget};
 use crate::runtime::BackendKind;
@@ -173,6 +173,14 @@ pub struct CodedMlConfig {
     /// JSON `transport`/`tcp_workers`/`connect_*`). Memory spawns threads
     /// in-process; Tcp connects to running `codedml --worker` processes.
     pub transport: TransportConfig,
+    /// Eval-point layout / encode-decode implementation (CLI
+    /// `--coding-backend`, JSON `coding_backend`). `Auto` engages the NTT
+    /// coset layout when the modulus supports it and the cost model says
+    /// it wins; forcing `Ntt` on a low-adicity modulus is a config error.
+    pub coding_backend: CodingBackendChoice,
+    /// Max cached decoder subsets (LRU; 0 = unbounded). CLI
+    /// `--decode-cache-cap`, JSON `decode_cache_cap`.
+    pub decode_cache_cap: usize,
 }
 
 impl Default for CodedMlConfig {
@@ -206,6 +214,8 @@ impl Default for CodedMlConfig {
             chaos_slow_workers: 0,
             chaos_slow_ms: 0,
             transport: TransportConfig::default(),
+            coding_backend: CodingBackendChoice::Auto,
+            decode_cache_cap: crate::coding::decoder::DEFAULT_CACHE_CAP,
         }
     }
 }
@@ -430,6 +440,17 @@ impl CodedMlConfig {
                     self.transport.tcp.connect_backoff_ms =
                         val.as_u64().ok_or("connect_backoff_ms: want integer")?
                 }
+                "coding_backend" => {
+                    self.coding_backend = val
+                        .as_str()
+                        .ok_or("coding_backend: want string")?
+                        .parse()
+                        .map_err(|e: String| e)?
+                }
+                "decode_cache_cap" => {
+                    self.decode_cache_cap =
+                        val.as_usize().ok_or("decode_cache_cap: want integer")?
+                }
                 other => return Err(format!("unknown config key '{other}'")),
             }
         }
@@ -504,6 +525,8 @@ impl CodedMlConfig {
                 "connect_backoff_ms",
                 Json::Num(self.transport.tcp.connect_backoff_ms as f64),
             ),
+            ("coding_backend", Json::Str(self.coding_backend.to_string())),
+            ("decode_cache_cap", Json::Num(self.decode_cache_cap as f64)),
         ];
         if let Some(eta) = self.eta {
             fields.push(("eta", Json::Num(eta)));
@@ -634,6 +657,8 @@ mod tests {
                     connect_backoff_ms: 25,
                 },
             },
+            coding_backend: CodingBackendChoice::Ntt,
+            decode_cache_cap: 64,
         };
         let text = cfg.to_json().to_string();
         let mut restored = CodedMlConfig::default();
@@ -699,6 +724,19 @@ mod tests {
         }
         cfg.transport.tcp.workers = vec!["127.0.0.1:7001".into(); 10];
         cfg.validate(300, 1.0).unwrap();
+    }
+
+    #[test]
+    fn json_coding_backend_and_cache_cap_apply() {
+        let mut cfg = CodedMlConfig::default();
+        assert_eq!(cfg.coding_backend, CodingBackendChoice::Auto);
+        cfg.apply_json(r#"{"coding_backend": "ntt", "decode_cache_cap": 8}"#).unwrap();
+        assert_eq!(cfg.coding_backend, CodingBackendChoice::Ntt);
+        assert_eq!(cfg.decode_cache_cap, 8);
+        cfg.apply_json(r#"{"coding_backend": "dense"}"#).unwrap();
+        assert_eq!(cfg.coding_backend, CodingBackendChoice::Dense);
+        assert!(cfg.apply_json(r#"{"coding_backend": "fft"}"#).is_err());
+        assert!(cfg.apply_json(r#"{"decode_cache_cap": "lots"}"#).is_err());
     }
 
     #[test]

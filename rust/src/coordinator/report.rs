@@ -51,6 +51,10 @@ pub struct TrainReport {
     pub weights: Vec<f64>,
     /// Decoder cache (hits, misses).
     pub decode_cache: (u64, u64),
+    /// Subsets evicted from the decoder's bounded LRU cache.
+    pub decode_cache_evictions: u64,
+    /// Encode/decode backend that ran ("dense" or "ntt").
+    pub coding_backend: &'static str,
     /// Recovery threshold used.
     pub recovery_threshold: usize,
     /// Bytes moved master→workers and workers→master (modeled).
@@ -82,6 +86,13 @@ impl TrainReport {
             ("comp_s", Json::Num(self.breakdown.comp_s)),
             ("total_s", Json::Num(self.breakdown.total())),
             ("decode_s", Json::Num(self.decode_s)),
+            ("decode_cache_hits", Json::Num(self.decode_cache.0 as f64)),
+            ("decode_cache_misses", Json::Num(self.decode_cache.1 as f64)),
+            (
+                "decode_cache_evictions",
+                Json::Num(self.decode_cache_evictions as f64),
+            ),
+            ("coding_backend", Json::Str(self.coding_backend.to_string())),
             ("recovery_threshold", Json::Num(self.recovery_threshold as f64)),
             ("bytes_sent", Json::Num(self.bytes_sent as f64)),
             ("bytes_received", Json::Num(self.bytes_received as f64)),

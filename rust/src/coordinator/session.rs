@@ -8,7 +8,9 @@ use super::objective::{CodedObjective, LinearObjective, LogisticObjective};
 use super::report::{IterationMetrics, TimingBreakdown, TrainReport};
 use crate::cluster::{Cluster, ClusterError, WorkerSpec};
 use crate::coding::decoder::WorkerResult;
-use crate::coding::{CodingParams, DecodeError, Decoder, Encoder};
+use crate::coding::{
+    CodingBackend, CodingBackendChoice, CodingParams, DecodeError, Decoder, Encoder, EvalPoints,
+};
 use crate::data::Dataset;
 use crate::field::PrimeField;
 use crate::model::matvec;
@@ -182,17 +184,22 @@ impl<O: CodedObjective> CodedMlSession<O> {
         let mut t_encode = Stopwatch::new();
         let mut t_comm = Stopwatch::new();
 
+        // One encoder for the whole session — the dataset and the
+        // per-iteration weight encodes share its eval points and its
+        // lazily-built U matrix (or NTT plans), instead of each building
+        // their own as earlier revisions did.
+        let encoder = Self::make_encoder(&cfg, field, params)?;
+        let decoder = Decoder::new(field, params, encoder.points.clone())
+            .with_cache_cap(cfg.decode_cache_cap)
+            .with_parallelism(cfg.parallelism);
+
         // Quantize + encode + secret-share the dataset (one-time).
         let xq = DatasetQuantizer::new(field, cfg.lx);
         let (xbar, shares) = t_encode.time(|| {
             let xbar = xq.quantize(&ds.x);
-            let encoder = Encoder::new(field, params).with_parallelism(cfg.parallelism);
             let shares = encoder.encode_dataset(&xbar, m, d, &mut rng);
             (xbar, shares)
         });
-        let encoder = Encoder::new(field, params).with_parallelism(cfg.parallelism);
-        let decoder = Decoder::new(field, params, encoder.points.clone())
-            .with_parallelism(cfg.parallelism);
 
         // Real-domain views the master needs.
         let xbar_real: Vec<f64> = xbar.iter().map(|&q| xq.dequantize_entry(q)).collect();
@@ -277,6 +284,59 @@ impl<O: CodedObjective> CodedMlSession<O> {
             budget_warning,
             tracer: super::trace::Tracer::disabled(),
         })
+    }
+
+    /// Resolve eval points + backend for `cfg.coding_backend`: `Dense`
+    /// keeps the standard point grid; `Ntt` demands the roots-of-unity
+    /// coset (a config error on low-adicity moduli); `Auto` takes the
+    /// coset only when the encoder's cost model actually elects the NTT
+    /// path for it, so Auto on small shapes behaves exactly like Dense.
+    fn make_encoder(
+        cfg: &CodedMlConfig,
+        field: PrimeField,
+        params: CodingParams,
+    ) -> Result<Encoder, TrainError> {
+        let base = |points: EvalPoints| {
+            Encoder::with_points(field, params, points).with_parallelism(cfg.parallelism)
+        };
+        let standard = || EvalPoints::standard(&field, params.k, params.t, params.n);
+        let ntt_points = EvalPoints::ntt_coset(&field, params.k, params.t, params.n);
+        Ok(match cfg.coding_backend {
+            CodingBackendChoice::Dense => base(standard()).force_dense(),
+            CodingBackendChoice::Ntt => {
+                let points = ntt_points.ok_or_else(|| {
+                    let l2 = params
+                        .n
+                        .next_power_of_two()
+                        .max((params.k + params.t).next_power_of_two());
+                    ConfigError::BadShape(format!(
+                        "coding_backend=ntt needs {l2} | p−1; p = {} has too \
+                         little 2-adicity (try an NTT-friendly prime such as \
+                         {} or {})",
+                        field.modulus(),
+                        crate::field::PRIME_NTT_25,
+                        crate::field::PRIME_NTT_28,
+                    ))
+                })?;
+                base(points).force_ntt()
+            }
+            CodingBackendChoice::Auto => match ntt_points {
+                Some(points) => {
+                    let enc = base(points);
+                    if enc.backend() == CodingBackend::Ntt {
+                        enc
+                    } else {
+                        base(standard())
+                    }
+                }
+                None => base(standard()),
+            },
+        })
+    }
+
+    /// The encode/decode backend this session resolved to.
+    pub fn coding_backend(&self) -> CodingBackend {
+        self.encoder.backend()
     }
 
     /// Attach a tracer (JSONL per-phase events; see [`super::Tracer`]).
@@ -502,6 +562,10 @@ impl<O: CodedObjective> CodedMlSession<O> {
                     ("encode_total_s", Json::Num(self.t_encode.seconds())),
                     ("comm_total_s", Json::Num(self.t_comm.seconds())),
                     ("decode_total_s", Json::Num(self.t_decode.seconds())),
+                    (
+                        "coding_backend",
+                        Json::Str(self.encoder.backend().name().to_string()),
+                    ),
                 ],
             );
         }
@@ -556,6 +620,8 @@ impl<O: CodedObjective> CodedMlSession<O> {
             iterations,
             weights: self.w.clone(),
             decode_cache: self.decoder.cache_stats(),
+            decode_cache_evictions: self.decoder.cache_evictions(),
+            coding_backend: self.encoder.backend().name(),
             recovery_threshold: self.params.recovery_threshold(),
             bytes_sent: self.bytes_sent,
             bytes_received: self.bytes_received,

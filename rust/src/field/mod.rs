@@ -5,9 +5,12 @@
 //! product without intermediate reduction (see `PrimeField::MAX_XLA_BITS`).
 //! The paper's default is p = 15485863, the largest 24-bit prime.
 
+pub mod ntt;
 mod poly;
 mod prime;
+pub mod simd;
 
+pub use ntt::NttPlan;
 pub use poly::{
     eval_poly, interpolate, lagrange_basis_at, lagrange_coeffs, InterpolationError,
 };
@@ -17,10 +20,21 @@ pub use prime::PrimeField;
 /// implementation (§5, "CodedPrivateML parameters").
 pub const PAPER_PRIME: u64 = 15_485_863;
 
+/// NTT-friendly 25-bit prime `11·2^21 + 1`: nearly the paper prime's
+/// dynamic range and overflow budget, but with 2-adicity 21 the coding
+/// layer can place evaluation points on roots-of-unity cosets and run
+/// quasi-linear encode/decode (see [`ntt`] and `coding::EvalPoints`).
+pub const PRIME_NTT_25: u64 = 23_068_673;
+
 /// A larger 26-bit prime giving ~4x more dynamic range at decode while still
 /// safe for i64 accumulation over ≤ 2048-column dot products (see
 /// `PrimeField::check_dot_safe`). Used by the d=1568 paper-scale configs.
 pub const PRIME_26: u64 = 67_108_859;
+
+/// NTT-friendly 28-bit prime `5·2^25 + 1` (2-adicity 25): the headroom
+/// choice when both a bigger overflow budget and fast transforms are
+/// wanted.
+pub const PRIME_NTT_28: u64 = 167_772_161;
 
 /// 31-bit prime for native-backend headroom experiments (not XLA-safe for
 /// long dots; `check_dot_safe` enforces the limit).

@@ -1,0 +1,333 @@
+//! Radix-2 number-theoretic transform over F_p.
+//!
+//! For an NTT-friendly modulus — `p = c·2^e + 1` with `e` large enough —
+//! the multiplicative group contains a 2^e-element subgroup of roots of
+//! unity, so evaluating a polynomial on a power-of-two subgroup (or a coset
+//! of one) is an O(L log L) butterfly network instead of an O(L²) dense
+//! pass. The coding layer uses this to make Lagrange encode/decode
+//! quasi-linear (see [`crate::coding::EvalPoints::ntt_coset`]); moduli
+//! whose 2-adicity is too small (the paper's 24-bit prime has
+//! `p − 1 = 2·7742931`) simply never get a plan and fall back to the dense
+//! path.
+//!
+//! The transforms are row-oriented (structure-of-arrays): one [`NttPlan`]
+//! transforms `n` *rows* of `width` elements at a time, so the butterflies
+//! run over contiguous strips and vectorize ([`super::simd::butterfly`]).
+//! All arithmetic is exact canonical field arithmetic — a transform
+//! followed by its inverse is the identity bit-for-bit, and evaluation
+//! results agree exactly with the dense Lagrange/Horner oracles.
+
+use super::prime::PrimeField;
+use super::simd;
+
+/// The 2-adicity of `p − 1`: the largest `e` with `2^e | p − 1`, i.e. the
+/// largest power-of-two transform length the field supports.
+pub fn two_adicity(p: u64) -> u32 {
+    (p - 1).trailing_zeros()
+}
+
+/// Distinct prime factors of `m` by trial division (config-time only:
+/// `m < 2^31`, so at most ~46k divisions once per plan/layout).
+fn distinct_prime_factors(mut m: u64) -> Vec<u64> {
+    let mut factors = Vec::new();
+    let mut d = 2u64;
+    while d * d <= m {
+        // lint: allow(no-hardware-modulo): config-time factoring of p−1, not a field hot loop
+        if m % d == 0 {
+            factors.push(d);
+            // lint: allow(no-hardware-modulo): config-time factoring of p−1, not a field hot loop
+            while m % d == 0 {
+                m /= d;
+            }
+        }
+        d += 1;
+    }
+    if m > 1 {
+        factors.push(m);
+    }
+    factors
+}
+
+/// Smallest generator of F_p^× (deterministic, so every component that
+/// derives points from it — plans, coset layouts — agrees on the choice).
+pub fn generator(f: &PrimeField) -> u64 {
+    let p = f.modulus();
+    let factors = distinct_prime_factors(p - 1);
+    let mut g = 2u64;
+    loop {
+        assert!(g < p, "no generator found for p={p} (not prime?)");
+        if factors.iter().all(|&q| f.pow(g, (p - 1) / q) != 1) {
+            return g;
+        }
+        g += 1;
+    }
+}
+
+/// A principal `n`-th root of unity (`n` a power of two), if the field has
+/// one: `g^((p−1)/n)` for the smallest generator `g`.
+pub fn root_of_unity(f: &PrimeField, n: usize) -> Option<u64> {
+    if n == 0 || !n.is_power_of_two() {
+        return None;
+    }
+    if n == 1 {
+        return Some(1);
+    }
+    if two_adicity(f.modulus()) < n.trailing_zeros() {
+        return None;
+    }
+    let p = f.modulus();
+    Some(f.pow(generator(f), (p - 1) / n as u64))
+}
+
+/// A size-`n` radix-2 transform plan: bit-reversal schedule plus per-stage
+/// twiddle tables for the forward and inverse directions.
+#[derive(Debug, Clone)]
+pub struct NttPlan {
+    f: PrimeField,
+    n: usize,
+    root: u64,
+    /// `fwd[s][k] = (root^(n/2^(s+1)))^k` — twiddles for the stage whose
+    /// butterfly span is `2^(s+1)` rows.
+    fwd: Vec<Vec<u64>>,
+    inv: Vec<Vec<u64>>,
+    inv_n: u64,
+}
+
+impl NttPlan {
+    /// Plan a size-`n` transform, if the field supports one (`n` a power of
+    /// two dividing `p − 1` through the 2-part).
+    pub fn new(f: PrimeField, n: usize) -> Option<Self> {
+        root_of_unity(&f, n).map(|root| Self::with_root(f, n, root))
+    }
+
+    /// Plan around an explicitly chosen `n`-th root (the coding layer picks
+    /// roots once per session so β/α layouts and plans stay consistent).
+    /// Asserts the root really has order `n`.
+    pub fn with_root(f: PrimeField, n: usize, root: u64) -> Self {
+        assert!(n >= 1 && n.is_power_of_two(), "NTT size {n} must be a power of two");
+        assert_eq!(f.pow(root, n as u64), 1, "root^n must be 1");
+        if n > 1 {
+            assert_ne!(f.pow(root, n as u64 / 2), 1, "root must have order exactly n");
+        }
+        let stages = n.trailing_zeros();
+        let root_inv = if n == 1 { 1 } else { f.inv(root) };
+        let mut fwd = Vec::with_capacity(stages as usize);
+        let mut inv = Vec::with_capacity(stages as usize);
+        for s in 0..stages {
+            let half = 1usize << s;
+            let step = (n >> (s + 1)) as u64;
+            let w = f.pow(root, step);
+            let wi = f.pow(root_inv, step);
+            let mut tw = Vec::with_capacity(half);
+            let mut ti = Vec::with_capacity(half);
+            let (mut cw, mut ci) = (1u64, 1u64);
+            for _ in 0..half {
+                tw.push(cw);
+                ti.push(ci);
+                cw = f.mul(cw, w);
+                ci = f.mul(ci, wi);
+            }
+            fwd.push(tw);
+            inv.push(ti);
+        }
+        let inv_n = if n == 1 { 1 } else { f.inv(n as u64) };
+        NttPlan { f, n, root, fwd, inv, inv_n }
+    }
+
+    /// Transform length.
+    pub fn size(&self) -> usize {
+        self.n
+    }
+
+    /// The principal root this plan evaluates at: output row `i` holds the
+    /// input polynomial evaluated at `root^i`.
+    pub fn root(&self) -> u64 {
+        self.root
+    }
+
+    /// Forward transform of `n` rows × `width` columns, in place (`buf`
+    /// row-major, rows = polynomial coefficients by ascending degree).
+    /// Each column independently becomes its evaluations at `root^i`.
+    pub fn forward_rows(&self, buf: &mut [u64], width: usize) {
+        self.transform_rows(buf, width, &self.fwd);
+    }
+
+    /// Inverse transform (interpolation back to coefficient rows).
+    pub fn inverse_rows(&self, buf: &mut [u64], width: usize) {
+        self.transform_rows(buf, width, &self.inv);
+        if self.n > 1 {
+            simd::scale_mod(&self.f, buf, self.inv_n);
+        }
+    }
+
+    fn transform_rows(&self, buf: &mut [u64], width: usize, stages: &[Vec<u64>]) {
+        assert_eq!(buf.len(), self.n * width, "buffer must be n rows × width");
+        let n = self.n;
+        if width == 0 || n <= 1 {
+            return;
+        }
+        // Bit-reversal row permutation (decimation in time).
+        let mut j = 0usize;
+        for i in 1..n {
+            let mut bit = n >> 1;
+            while j & bit != 0 {
+                j ^= bit;
+                bit >>= 1;
+            }
+            j |= bit;
+            if i < j {
+                let (a, b) = two_rows(buf, i, j, width);
+                a.swap_with_slice(b);
+            }
+        }
+        // Butterfly stages over whole rows at a time.
+        let f = &self.f;
+        for tw in stages {
+            let half = tw.len();
+            let span = half * 2;
+            for block in 0..n / span {
+                let base = block * span;
+                for (k, &w) in tw.iter().enumerate() {
+                    let (a, b) = two_rows(buf, base + k, base + k + half, width);
+                    simd::butterfly(f, a, b, w);
+                }
+            }
+        }
+    }
+}
+
+/// Two disjoint mutable row views (`i < j`) of a row-major buffer.
+fn two_rows(buf: &mut [u64], i: usize, j: usize, width: usize) -> (&mut [u64], &mut [u64]) {
+    debug_assert!(i < j);
+    let (lo, hi) = buf.split_at_mut(j * width);
+    (&mut lo[i * width..(i + 1) * width], &mut hi[..width])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::field::{eval_poly, PAPER_PRIME, PRIME_NTT_25, PRIME_NTT_28};
+    use crate::util::Rng;
+
+    #[test]
+    fn adicity_of_supported_moduli() {
+        assert_eq!(two_adicity(PAPER_PRIME), 1);
+        assert_eq!(two_adicity(crate::field::PRIME_26), 1);
+        assert_eq!(two_adicity(crate::field::PRIME_31), 1);
+        assert_eq!(two_adicity(97), 5); // 96 = 2^5·3
+        assert_eq!(two_adicity(PRIME_NTT_25), 21); // 11·2^21 + 1
+        assert_eq!(two_adicity(PRIME_NTT_28), 25); // 5·2^25 + 1
+    }
+
+    #[test]
+    fn smallest_generators() {
+        assert_eq!(generator(&PrimeField::new(97)), 5);
+        assert_eq!(generator(&PrimeField::new(PRIME_NTT_25)), 3);
+        assert_eq!(generator(&PrimeField::new(PRIME_NTT_28)), 3);
+    }
+
+    #[test]
+    fn root_orders() {
+        for &(p, n) in &[(97u64, 32usize), (PRIME_NTT_25, 1 << 10), (PRIME_NTT_28, 1 << 12)] {
+            let f = PrimeField::new(p);
+            let w = root_of_unity(&f, n).unwrap();
+            assert_eq!(f.pow(w, n as u64), 1);
+            assert_ne!(f.pow(w, n as u64 / 2), 1, "order must be exactly n");
+        }
+        // Low-adicity moduli reject transforms beyond their 2-part.
+        assert!(root_of_unity(&PrimeField::new(PAPER_PRIME), 4).is_none());
+        assert!(NttPlan::new(PrimeField::new(PAPER_PRIME), 4).is_none());
+        assert!(root_of_unity(&PrimeField::new(97), 64).is_none());
+        assert!(root_of_unity(&PrimeField::new(97), 12).is_none(), "non power of two");
+    }
+
+    #[test]
+    fn forward_matches_dense_evaluation() {
+        // NTT output row i must equal the per-column polynomial evaluated
+        // at root^i — pinned against the Horner oracle, several widths.
+        for &p in &[97u64, PRIME_NTT_25, PRIME_NTT_28] {
+            let f = PrimeField::new(p);
+            for &(n, width) in &[(1usize, 3usize), (2, 1), (8, 3), (16, 5), (32, 1)] {
+                if two_adicity(p) < n.trailing_zeros() {
+                    continue;
+                }
+                let plan = NttPlan::new(f, n).unwrap();
+                let mut rng = Rng::new((p ^ n as u64) * 31 + width as u64);
+                let coeffs = f.random_matrix(&mut rng, n, width);
+                let mut buf = coeffs.clone();
+                plan.forward_rows(&mut buf, width);
+                for col in 0..width {
+                    let poly: Vec<u64> = (0..n).map(|r| coeffs[r * width + col]).collect();
+                    for i in 0..n {
+                        let x = f.pow(plan.root(), i as u64);
+                        assert_eq!(
+                            buf[i * width + col],
+                            eval_poly(&f, &poly, x),
+                            "p={p} n={n} width={width} row={i} col={col}"
+                        );
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn inverse_round_trips_bitwise() {
+        for &p in &[97u64, PRIME_NTT_25] {
+            let f = PrimeField::new(p);
+            for n in [1usize, 2, 4, 16, 32] {
+                if two_adicity(p) < n.trailing_zeros() {
+                    continue;
+                }
+                let plan = NttPlan::new(f, n).unwrap();
+                let mut rng = Rng::new(p + n as u64);
+                let orig = f.random_matrix(&mut rng, n, 7);
+                let mut buf = orig.clone();
+                plan.forward_rows(&mut buf, 7);
+                plan.inverse_rows(&mut buf, 7);
+                assert_eq!(buf, orig, "p={p} n={n}");
+            }
+        }
+    }
+
+    #[test]
+    fn rows_transform_equals_column_at_a_time() {
+        // The SoA strip transform is just n independent column transforms.
+        let f = PrimeField::new(PRIME_NTT_25);
+        let plan = NttPlan::new(f, 16).unwrap();
+        let mut rng = Rng::new(9);
+        let width = 5;
+        let data = f.random_matrix(&mut rng, 16, width);
+        let mut wide = data.clone();
+        plan.forward_rows(&mut wide, width);
+        for col in 0..width {
+            let mut one: Vec<u64> = (0..16).map(|r| data[r * width + col]).collect();
+            plan.forward_rows(&mut one, 1);
+            for r in 0..16 {
+                assert_eq!(wide[r * width + col], one[r], "col={col} row={r}");
+            }
+        }
+    }
+
+    #[test]
+    fn with_root_agrees_with_new() {
+        let f = PrimeField::new(PRIME_NTT_25);
+        let w = root_of_unity(&f, 64).unwrap();
+        let a = NttPlan::new(f, 64).unwrap();
+        let b = NttPlan::with_root(f, 64, w);
+        let mut rng = Rng::new(4);
+        let data = f.random_matrix(&mut rng, 64, 2);
+        let (mut x, mut y) = (data.clone(), data);
+        a.forward_rows(&mut x, 2);
+        b.forward_rows(&mut y, 2);
+        assert_eq!(x, y);
+    }
+
+    #[test]
+    #[should_panic(expected = "order exactly n")]
+    fn with_root_rejects_wrong_order() {
+        let f = PrimeField::new(97);
+        // 1 is a 2nd root of unity of the wrong order.
+        NttPlan::with_root(f, 2, 1);
+    }
+}

@@ -308,7 +308,7 @@ fn pow_mod(mut b: u64, mut e: u64, m: u64) -> u64 {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::field::{PAPER_PRIME, PRIME_26, PRIME_31};
+    use crate::field::{PAPER_PRIME, PRIME_26, PRIME_31, PRIME_NTT_25, PRIME_NTT_28};
     use crate::util::proptest::check;
 
     #[test]
@@ -316,6 +316,13 @@ mod tests {
         assert!(is_prime(PAPER_PRIME));
         assert!(is_prime(PRIME_26));
         assert!(is_prime(PRIME_31));
+        // NTT-friendly moduli: prime, and of the claimed c·2^e + 1 shape.
+        assert!(is_prime(PRIME_NTT_25));
+        assert_eq!(PRIME_NTT_25, 11 * (1 << 21) + 1);
+        assert_eq!(PrimeField::new(PRIME_NTT_25).bits(), 25);
+        assert!(is_prime(PRIME_NTT_28));
+        assert_eq!(PRIME_NTT_28, 5 * (1 << 25) + 1);
+        assert_eq!(PrimeField::new(PRIME_NTT_28).bits(), 28);
         // Bit widths are what the overflow analysis assumes. (The paper
         // calls 15485863 "the largest prime with 24 bits", which is
         // actually the 1,000,000th prime — e.g. 15485867 is a larger
@@ -400,7 +407,7 @@ mod tests {
     /// values around 0, p, 2p, and the type maxima.
     #[test]
     fn barrett_matches_division_all_moduli() {
-        for &p in &[3u64, 5, 97, PAPER_PRIME, PRIME_26, PRIME_31] {
+        for &p in &[3u64, 5, 97, PAPER_PRIME, PRIME_NTT_25, PRIME_26, PRIME_NTT_28, PRIME_31] {
             let f = PrimeField::new(p);
             // Deterministic edge cases first.
             let edges = [
@@ -445,7 +452,7 @@ mod tests {
     /// modulus, across random operands and the full reduction range.
     #[test]
     fn all_ops_output_canonical() {
-        for &p in &[3u64, 5, 97, PAPER_PRIME, PRIME_26, PRIME_31] {
+        for &p in &[3u64, 5, 97, PAPER_PRIME, PRIME_NTT_25, PRIME_26, PRIME_NTT_28, PRIME_31] {
             let f = PrimeField::new(p);
             check(&format!("canonical-outputs-{p}"), 300, move |rng| {
                 let a = f.random(rng);
@@ -479,7 +486,7 @@ mod tests {
 
     #[test]
     fn barrett_constants_satisfy_invariants() {
-        for &p in &[3u64, 97, PAPER_PRIME, PRIME_26, PRIME_31] {
+        for &p in &[3u64, 97, PAPER_PRIME, PRIME_NTT_25, PRIME_26, PRIME_NTT_28, PRIME_31] {
             let f = PrimeField::new(p);
             // 2^64 = μ·p + ρ with ρ < p, reconstructed exactly.
             let mu = ((1u128 << 64) / p as u128) as u64;

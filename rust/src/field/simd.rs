@@ -1,0 +1,347 @@
+//! Portable lane-oriented kernels for the field hot loops.
+//!
+//! Every dense inner loop in the crate — the Lagrange encode/decode
+//! combines, the worker matmul chunk folds, the NTT butterflies — bottoms
+//! out in one of five primitives defined here. Each primitive has two
+//! implementations with identical semantics:
+//!
+//! * [`lanes`]: u64x4-style unrolled loops. Four independent accumulators
+//!   / four independent element streams per iteration give the
+//!   autovectorizer straight-line code it can lower to SIMD on any target
+//!   (no intrinsics, no `std::simd` — the crate stays stable-Rust and
+//!   dependency-free).
+//! * [`scalar`]: the plain one-element-at-a-time oracles, compiled
+//!   unconditionally so property tests can compare against them.
+//!
+//! The crate-wide dispatch is `cfg`-gated on the `scalar_kernels` cargo
+//! feature (lanes by default; `--features scalar_kernels` forces the
+//! oracles everywhere — useful for bisecting a perf regression down to
+//! codegen vs algorithm).
+//!
+//! Bit-exactness: the wrapping accumulators are sums in Z/2^64, which is
+//! commutative and associative, so splitting one running sum into four and
+//! re-merging cannot change the value. Everything else is exact field
+//! arithmetic. The property tests at the bottom pin lanes == scalar for
+//! every supported modulus.
+
+use super::prime::PrimeField;
+
+/// Lane width the unrolled kernels target (matches AVX2 u64x4 / NEON 2×2).
+pub const LANES: usize = 4;
+
+#[cfg(not(feature = "scalar_kernels"))]
+use lanes as imp;
+#[cfg(feature = "scalar_kernels")]
+use scalar as imp;
+
+/// `acc[i] += c·src[i]` in Z/2^64 (deferred-reduction multiply-accumulate).
+/// Caller guarantees `c` and `src` are reduced, so each product is < p²
+/// and the *caller's* chunking keeps the sums from wrapping meaningfully.
+#[inline]
+pub fn mac_wrapping(acc: &mut [u64], src: &[u64], c: u64) {
+    imp::mac_wrapping(acc, src, c)
+}
+
+/// Fold the deferred accumulators into canonical outputs:
+/// `out[i] = out[i] + reduce(acc[i]) mod p; acc[i] = 0`.
+#[inline]
+pub fn fold_reduce(f: &PrimeField, out: &mut [u64], acc: &mut [u64]) {
+    imp::fold_reduce(f, out, acc)
+}
+
+/// Wrapping dot product `Σ_i x[i]·w[i]` in Z/2^64 (one chunk of a
+/// deferred-reduction dot; caller reduces the result).
+#[inline]
+pub fn dot_wrapping(x: &[u64], w: &[u64]) -> u64 {
+    imp::dot_wrapping(x, w)
+}
+
+/// `xs[i] = c·xs[i] mod p` (NTT twist rows, inverse-transform scaling).
+#[inline]
+pub fn scale_mod(f: &PrimeField, xs: &mut [u64], c: u64) {
+    imp::scale_mod(f, xs, c)
+}
+
+/// Radix-2 DIT butterfly across two equal-length rows with twiddle `w`:
+/// `(a[i], b[i]) ← (a[i] + w·b[i], a[i] − w·b[i]) mod p`.
+#[inline]
+pub fn butterfly(f: &PrimeField, a: &mut [u64], b: &mut [u64], w: u64) {
+    imp::butterfly(f, a, b, w)
+}
+
+/// Four-accumulator / four-stream unrolled kernels (the default).
+pub mod lanes {
+    use super::{PrimeField, LANES};
+
+    #[inline]
+    pub fn mac_wrapping(acc: &mut [u64], src: &[u64], c: u64) {
+        debug_assert_eq!(acc.len(), src.len());
+        let n = acc.len();
+        let head = n & !(LANES - 1);
+        let (a4, a1) = acc.split_at_mut(head);
+        let (s4, s1) = src.split_at(head);
+        for (a, s) in a4.chunks_exact_mut(LANES).zip(s4.chunks_exact(LANES)) {
+            a[0] = a[0].wrapping_add(c * s[0]);
+            a[1] = a[1].wrapping_add(c * s[1]);
+            a[2] = a[2].wrapping_add(c * s[2]);
+            a[3] = a[3].wrapping_add(c * s[3]);
+        }
+        for (a, &s) in a1.iter_mut().zip(s1.iter()) {
+            *a = a.wrapping_add(c * s);
+        }
+    }
+
+    #[inline]
+    pub fn fold_reduce(f: &PrimeField, out: &mut [u64], acc: &mut [u64]) {
+        debug_assert_eq!(out.len(), acc.len());
+        let n = out.len();
+        let head = n & !(LANES - 1);
+        let (o4, o1) = out.split_at_mut(head);
+        let (a4, a1) = acc.split_at_mut(head);
+        for (o, a) in o4.chunks_exact_mut(LANES).zip(a4.chunks_exact_mut(LANES)) {
+            o[0] = f.add(o[0], f.reduce_u64(a[0]));
+            o[1] = f.add(o[1], f.reduce_u64(a[1]));
+            o[2] = f.add(o[2], f.reduce_u64(a[2]));
+            o[3] = f.add(o[3], f.reduce_u64(a[3]));
+            a[0] = 0;
+            a[1] = 0;
+            a[2] = 0;
+            a[3] = 0;
+        }
+        for (o, a) in o1.iter_mut().zip(a1.iter_mut()) {
+            *o = f.add(*o, f.reduce_u64(*a));
+            *a = 0;
+        }
+    }
+
+    #[inline]
+    pub fn dot_wrapping(x: &[u64], w: &[u64]) -> u64 {
+        debug_assert_eq!(x.len(), w.len());
+        let n = x.len();
+        let head = n & !(LANES - 1);
+        let mut a = [0u64; LANES];
+        for (xs, ws) in x[..head].chunks_exact(LANES).zip(w[..head].chunks_exact(LANES)) {
+            a[0] = a[0].wrapping_add(xs[0] * ws[0]);
+            a[1] = a[1].wrapping_add(xs[1] * ws[1]);
+            a[2] = a[2].wrapping_add(xs[2] * ws[2]);
+            a[3] = a[3].wrapping_add(xs[3] * ws[3]);
+        }
+        // Z/2^64 addition is associative+commutative: merging the four
+        // lanes gives exactly the sequential sum.
+        let mut acc = a[0]
+            .wrapping_add(a[1])
+            .wrapping_add(a[2])
+            .wrapping_add(a[3]);
+        for (&xv, &wv) in x[head..].iter().zip(w[head..].iter()) {
+            acc = acc.wrapping_add(xv * wv);
+        }
+        acc
+    }
+
+    #[inline]
+    pub fn scale_mod(f: &PrimeField, xs: &mut [u64], c: u64) {
+        let n = xs.len();
+        let head = n & !(LANES - 1);
+        let (x4, x1) = xs.split_at_mut(head);
+        for x in x4.chunks_exact_mut(LANES) {
+            x[0] = f.mul(x[0], c);
+            x[1] = f.mul(x[1], c);
+            x[2] = f.mul(x[2], c);
+            x[3] = f.mul(x[3], c);
+        }
+        for x in x1.iter_mut() {
+            *x = f.mul(*x, c);
+        }
+    }
+
+    #[inline]
+    pub fn butterfly(f: &PrimeField, a: &mut [u64], b: &mut [u64], w: u64) {
+        debug_assert_eq!(a.len(), b.len());
+        let n = a.len();
+        let head = n & !(LANES - 1);
+        let (a4, a1) = a.split_at_mut(head);
+        let (b4, b1) = b.split_at_mut(head);
+        for (av, bv) in a4.chunks_exact_mut(LANES).zip(b4.chunks_exact_mut(LANES)) {
+            let t0 = f.mul(w, bv[0]);
+            let t1 = f.mul(w, bv[1]);
+            let t2 = f.mul(w, bv[2]);
+            let t3 = f.mul(w, bv[3]);
+            bv[0] = f.sub(av[0], t0);
+            bv[1] = f.sub(av[1], t1);
+            bv[2] = f.sub(av[2], t2);
+            bv[3] = f.sub(av[3], t3);
+            av[0] = f.add(av[0], t0);
+            av[1] = f.add(av[1], t1);
+            av[2] = f.add(av[2], t2);
+            av[3] = f.add(av[3], t3);
+        }
+        for (av, bv) in a1.iter_mut().zip(b1.iter_mut()) {
+            let t = f.mul(w, *bv);
+            *bv = f.sub(*av, t);
+            *av = f.add(*av, t);
+        }
+    }
+}
+
+/// One-element-at-a-time oracles (always compiled; the property tests pin
+/// [`lanes`] against these, and `--features scalar_kernels` swaps them in
+/// crate-wide).
+pub mod scalar {
+    use super::PrimeField;
+
+    #[inline]
+    pub fn mac_wrapping(acc: &mut [u64], src: &[u64], c: u64) {
+        debug_assert_eq!(acc.len(), src.len());
+        for (a, &s) in acc.iter_mut().zip(src.iter()) {
+            *a = a.wrapping_add(c * s);
+        }
+    }
+
+    #[inline]
+    pub fn fold_reduce(f: &PrimeField, out: &mut [u64], acc: &mut [u64]) {
+        debug_assert_eq!(out.len(), acc.len());
+        for (o, a) in out.iter_mut().zip(acc.iter_mut()) {
+            *o = f.add(*o, f.reduce_u64(*a));
+            *a = 0;
+        }
+    }
+
+    #[inline]
+    pub fn dot_wrapping(x: &[u64], w: &[u64]) -> u64 {
+        debug_assert_eq!(x.len(), w.len());
+        let mut acc = 0u64;
+        for (&xv, &wv) in x.iter().zip(w.iter()) {
+            acc = acc.wrapping_add(xv * wv);
+        }
+        acc
+    }
+
+    #[inline]
+    pub fn scale_mod(f: &PrimeField, xs: &mut [u64], c: u64) {
+        for x in xs.iter_mut() {
+            *x = f.mul(*x, c);
+        }
+    }
+
+    #[inline]
+    pub fn butterfly(f: &PrimeField, a: &mut [u64], b: &mut [u64], w: u64) {
+        debug_assert_eq!(a.len(), b.len());
+        for (av, bv) in a.iter_mut().zip(b.iter_mut()) {
+            let t = f.mul(w, *bv);
+            *bv = f.sub(*av, t);
+            *av = f.add(*av, t);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::field::{PAPER_PRIME, PRIME_26, PRIME_31, PRIME_NTT_25, PRIME_NTT_28};
+    use crate::util::proptest::check;
+    use crate::util::Rng;
+
+    const MODULI: &[u64] =
+        &[3, 5, 97, PAPER_PRIME, PRIME_NTT_25, PRIME_26, PRIME_NTT_28, PRIME_31];
+
+    fn rand_vec(f: &PrimeField, rng: &mut Rng, n: usize) -> Vec<u64> {
+        (0..n).map(|_| f.random(rng)).collect()
+    }
+
+    #[test]
+    fn lanes_match_scalar_all_moduli() {
+        // All five kernels, every supported modulus, lengths that cross the
+        // 4-lane boundary in every residue class (0..=9 covers tails 0..3).
+        for &p in MODULI {
+            let f = PrimeField::new(p);
+            check(&format!("simd-lanes-{p}"), 25, move |rng| {
+                let n = rng.below_usize(10) + rng.below_usize(30);
+                let c = f.random(rng);
+                let w = f.random(rng);
+                let src = rand_vec(&f, rng, n);
+                let ws = rand_vec(&f, rng, n);
+                let acc0 = rand_vec(&f, rng, n);
+                let out0 = rand_vec(&f, rng, n);
+
+                let (mut a1, mut a2) = (acc0.clone(), acc0.clone());
+                lanes::mac_wrapping(&mut a1, &src, c);
+                scalar::mac_wrapping(&mut a2, &src, c);
+                if a1 != a2 {
+                    return Err(format!("mac_wrapping p={p} n={n}"));
+                }
+
+                let (mut o1, mut o2) = (out0.clone(), out0.clone());
+                let (mut f1, mut f2) = (a1.clone(), a1.clone());
+                lanes::fold_reduce(&f, &mut o1, &mut f1);
+                scalar::fold_reduce(&f, &mut o2, &mut f2);
+                if o1 != o2 || f1 != f2 || f1.iter().any(|&v| v != 0) {
+                    return Err(format!("fold_reduce p={p} n={n}"));
+                }
+
+                if lanes::dot_wrapping(&src, &ws) != scalar::dot_wrapping(&src, &ws) {
+                    return Err(format!("dot_wrapping p={p} n={n}"));
+                }
+
+                let (mut s1, mut s2) = (src.clone(), src.clone());
+                lanes::scale_mod(&f, &mut s1, c);
+                scalar::scale_mod(&f, &mut s2, c);
+                if s1 != s2 {
+                    return Err(format!("scale_mod p={p} n={n}"));
+                }
+
+                let (mut ba1, mut bb1) = (src.clone(), ws.clone());
+                let (mut ba2, mut bb2) = (src.clone(), ws.clone());
+                lanes::butterfly(&f, &mut ba1, &mut bb1, w);
+                scalar::butterfly(&f, &mut ba2, &mut bb2, w);
+                if ba1 != ba2 || bb1 != bb2 {
+                    return Err(format!("butterfly p={p} n={n}"));
+                }
+                Ok(())
+            });
+        }
+    }
+
+    #[test]
+    fn dispatch_matches_scalar() {
+        // Whatever the feature flags selected, the public entry points must
+        // agree with the scalar oracles.
+        let f = PrimeField::new(PRIME_NTT_25);
+        let mut rng = Rng::new(7);
+        let x = rand_vec(&f, &mut rng, 23);
+        let w = rand_vec(&f, &mut rng, 23);
+        assert_eq!(dot_wrapping(&x, &w), scalar::dot_wrapping(&x, &w));
+        let (mut a, mut b) = (x.clone(), w.clone());
+        let (mut a2, mut b2) = (x.clone(), w.clone());
+        butterfly(&f, &mut a, &mut b, 12345);
+        scalar::butterfly(&f, &mut a2, &mut b2, 12345);
+        assert_eq!((a, b), (a2, b2));
+    }
+
+    #[test]
+    fn mac_then_fold_is_exact_linear_combination() {
+        // MAC + fold over one safe chunk equals the mod-p linear
+        // combination computed in u128 — the contract the encoder/decoder
+        // combines rely on.
+        for &p in &[PAPER_PRIME, PRIME_NTT_25, PRIME_31] {
+            let f = PrimeField::new(p);
+            let chunk = crate::compute::safe_chunk_len(p);
+            let mut rng = Rng::new(p ^ 0xA5);
+            let n = 17;
+            let terms = chunk.min(64);
+            let mut acc = vec![0u64; n];
+            let mut out = vec![0u64; n];
+            let mut want = vec![0u128; n];
+            for _ in 0..terms {
+                let c = f.random(&mut rng);
+                let src = rand_vec(&f, &mut rng, n);
+                mac_wrapping(&mut acc, &src, c);
+                for (wv, &s) in want.iter_mut().zip(src.iter()) {
+                    *wv += c as u128 * s as u128;
+                }
+            }
+            fold_reduce(&f, &mut out, &mut acc);
+            let want: Vec<u64> = want.iter().map(|&v| (v % p as u128) as u64).collect();
+            assert_eq!(out, want, "p={p}");
+        }
+    }
+}

@@ -451,6 +451,8 @@ impl BgwGradientProtocol {
             iterations,
             weights: self.w.clone(),
             decode_cache: (0, 0),
+            decode_cache_evictions: 0,
+            coding_backend: "dense",
             recovery_threshold: 2 * self.t + 1,
             bytes_sent: self.report.bytes_master_to_worker,
             bytes_received: self.report.bytes_worker_to_master,

@@ -1,0 +1,154 @@
+//! Integration: the NTT coset coding backend must be a pure perf choice —
+//! bit-identical training trajectories to the dense Lagrange path at every
+//! thread count, visible in traces/reports, and a config error where the
+//! modulus cannot host the coset.
+
+use codedml::cluster::{NetworkModel, StragglerModel};
+use codedml::coding::{CodingBackend, CodingBackendChoice};
+use codedml::coordinator::{CodedMlConfig, CodedMlSession, Tracer};
+use codedml::data::{synthetic_3v7, synthetic_planted_linear};
+use codedml::field::{PRIME_NTT_25, PRIME_NTT_28};
+use codedml::util::Parallelism;
+
+fn ntt_cfg(backend: CodingBackendChoice) -> CodedMlConfig {
+    CodedMlConfig {
+        n: 10,
+        k: 3,
+        t: 1,
+        p: PRIME_NTT_25,
+        coding_backend: backend,
+        straggler: StragglerModel::none(),
+        net: NetworkModel::free(),
+        ..Default::default()
+    }
+}
+
+#[test]
+fn ntt_trajectory_is_bit_identical_to_dense_at_every_thread_count() {
+    // Same seed → same quantizations and mask draws; LCC decoding is exact
+    // on either point layout, so the weight trajectories must agree to the
+    // last bit — not approximately.
+    let train = synthetic_3v7(120, 11);
+    let test = synthetic_3v7(60, 12);
+    let mut dense = CodedMlSession::new(ntt_cfg(CodingBackendChoice::Dense), &train).unwrap();
+    let dense_rep = dense.train(6, Some(&test)).unwrap();
+    assert_eq!(dense.coding_backend(), CodingBackend::Dense);
+    assert_eq!(dense_rep.coding_backend, "dense");
+
+    for threads in [1usize, 2, 4] {
+        let mut cfg = ntt_cfg(CodingBackendChoice::Ntt);
+        cfg.parallelism = Parallelism::from_count(threads);
+        let mut ntt = CodedMlSession::new(cfg, &train).unwrap();
+        let ntt_rep = ntt.train(6, Some(&test)).unwrap();
+        assert_eq!(ntt.coding_backend(), CodingBackend::Ntt);
+        assert_eq!(ntt_rep.coding_backend, "ntt");
+        assert_eq!(
+            dense_rep.weights, ntt_rep.weights,
+            "ntt trajectory diverged at {threads} thread(s)"
+        );
+        for (a, b) in dense_rep.iterations.iter().zip(ntt_rep.iterations.iter()) {
+            assert_eq!(a.train_loss, b.train_loss);
+            assert_eq!(a.test_accuracy, b.test_accuracy);
+        }
+    }
+}
+
+#[test]
+fn ntt_decode_is_exact_for_straggler_subsets() {
+    // Whichever R-subset of the coset alphas arrives first, the
+    // barycentric decode rows are exact — straggling may only change the
+    // modeled timing, never the weights (mirror of the dense-path test in
+    // coordinator::session).
+    let train = synthetic_3v7(60, 5);
+    let mut cfg_a = ntt_cfg(CodingBackendChoice::Ntt);
+    cfg_a.n = 12;
+    let mut cfg_b = cfg_a.clone();
+    cfg_b.straggler = StragglerModel { shift: 0.5, rate: 2.0, relative: true };
+    let ra = CodedMlSession::new(cfg_a, &train).unwrap().train(3, None).unwrap();
+    let rb = CodedMlSession::new(cfg_b, &train).unwrap().train(3, None).unwrap();
+    assert_eq!(ra.weights, rb.weights);
+}
+
+#[test]
+fn step_trace_carries_the_coding_backend() {
+    let train = synthetic_3v7(60, 7);
+    let mut sess = CodedMlSession::new(ntt_cfg(CodingBackendChoice::Ntt), &train).unwrap();
+    sess.set_tracer(Tracer::memory());
+    sess.step().unwrap();
+    let events = sess.tracer().events();
+    let step = events
+        .iter()
+        .find(|e| e.get("event").and_then(|v| v.as_str()) == Some("step"))
+        .expect("step event");
+    assert_eq!(step.get("coding_backend").unwrap().as_str(), Some("ntt"));
+}
+
+#[test]
+fn forcing_ntt_on_a_low_adicity_modulus_is_a_config_error() {
+    // The paper's 24-bit prime has 2-adicity 1: no power-of-two subgroup
+    // big enough for the alphas, so the session must refuse loudly (and
+    // point at the NTT-friendly primes) instead of silently going dense.
+    let train = synthetic_3v7(60, 9);
+    let mut cfg = ntt_cfg(CodingBackendChoice::Ntt);
+    cfg.p = codedml::field::PAPER_PRIME;
+    let err = CodedMlSession::new(cfg, &train).unwrap_err().to_string();
+    assert!(err.contains("2-adicity"), "{err}");
+    assert!(err.contains(&PRIME_NTT_25.to_string()), "{err}");
+}
+
+#[test]
+fn auto_backend_matches_dense_exactly_at_small_shapes() {
+    // At (K+T = 4, N = 10) the cost model keeps Auto on the dense path
+    // even on an NTT-friendly modulus — and Auto must then behave exactly
+    // like Dense, standard point grid included.
+    let train = synthetic_3v7(60, 13);
+    let mut auto_s = CodedMlSession::new(ntt_cfg(CodingBackendChoice::Auto), &train).unwrap();
+    let mut dense = CodedMlSession::new(ntt_cfg(CodingBackendChoice::Dense), &train).unwrap();
+    assert_eq!(auto_s.coding_backend(), CodingBackend::Dense);
+    let ra = auto_s.train(3, None).unwrap();
+    let rd = dense.train(3, None).unwrap();
+    assert_eq!(ra.weights, rd.weights);
+}
+
+#[test]
+fn auto_backend_engages_ntt_at_large_shapes() {
+    // K+T = 32 with N = 128 is past the crossover (butterflies beat the
+    // 32×128 dense combine), so Auto must resolve to the coset layout on
+    // its own. Linear model keeps d small so 128 in-memory workers stay
+    // cheap; the 28-bit NTT prime has headroom for the linear scales.
+    let (train, _) = synthetic_planted_linear(60, 4, 17);
+    let cfg = CodedMlConfig {
+        n: 128,
+        k: 30,
+        t: 2,
+        r: 1,
+        p: PRIME_NTT_28,
+        straggler: StragglerModel::none(),
+        net: NetworkModel::free(),
+        ..CodedMlConfig::linear()
+    };
+    let mut sess = CodedMlSession::new_linear(cfg, &train).unwrap();
+    assert_eq!(sess.coding_backend(), CodingBackend::Ntt);
+    sess.step().unwrap();
+}
+
+#[test]
+fn bounded_decode_cache_evicts_without_changing_the_trajectory() {
+    // N = 12 at threshold 10 leaves real straggler slack, so the decoded
+    // subsets follow thread-scheduling races from round to round; decode
+    // exactness makes that invisible in the weights. The cap is a memory
+    // knob only — and with cap 1, every miss after the first must evict,
+    // so evictions = misses − 1 whatever the subset pattern was.
+    let train = synthetic_3v7(120, 15);
+    let mut capped = ntt_cfg(CodingBackendChoice::Dense);
+    capped.n = 12;
+    capped.decode_cache_cap = 1;
+    let mut unbounded = capped.clone();
+    unbounded.decode_cache_cap = 0;
+    let rc = CodedMlSession::new(capped, &train).unwrap().train(6, None).unwrap();
+    let ru = CodedMlSession::new(unbounded, &train).unwrap().train(6, None).unwrap();
+    assert_eq!(rc.weights, ru.weights);
+    assert_eq!(ru.decode_cache_evictions, 0);
+    assert!(rc.decode_cache.1 >= 1, "at least the first decode misses");
+    assert_eq!(rc.decode_cache_evictions, rc.decode_cache.1 - 1);
+}

@@ -1,0 +1,63 @@
+#!/usr/bin/env python3
+"""Gate the coding-bench JSON: the NTT path must actually engage and win.
+
+Usage: check_bench.py [BENCH_coding.json]
+
+Fails (exit 1) when:
+  * the "ntt backend engaged" metric row is missing or != 1 — i.e. the
+    auto backend silently fell back to dense on an NTT-friendly modulus;
+  * the combined "ntt vs dense encode+decode ... [speedup x]" row is
+    missing or <= 1.0 — i.e. the fast path stopped being fast.
+
+Run against a fresh BENCH_JSON=1 output (see .github/workflows/ci.yml
+bench-smoke), not against the committed baselines in benchmarks/baseline.
+"""
+
+import json
+import sys
+
+
+def main() -> int:
+    path = sys.argv[1] if len(sys.argv) > 1 else "BENCH_coding.json"
+    try:
+        with open(path) as fh:
+            rows = json.load(fh)["rows"]
+    except (OSError, KeyError, json.JSONDecodeError) as e:
+        print(f"check_bench: cannot read rows from {path}: {e}")
+        return 1
+
+    failures = []
+
+    engaged = [r for r in rows if r["name"].startswith("ntt backend engaged")]
+    if not engaged:
+        failures.append("no 'ntt backend engaged' metric row in the bench output")
+    for r in engaged:
+        if r.get("value") != 1:
+            failures.append(
+                f"{r['name']!r}: value {r.get('value')!r} — the auto backend "
+                "fell back to dense on an NTT-friendly modulus"
+            )
+
+    combined = [
+        r
+        for r in rows
+        if "ntt vs dense encode+decode" in r["name"] and "[speedup x]" in r["name"]
+    ]
+    if not combined:
+        failures.append("no 'ntt vs dense encode+decode ... [speedup x]' row")
+    for r in combined:
+        speedup = r.get("value", 0.0)
+        if not speedup > 1.0:
+            failures.append(f"{r['name']!r}: speedup {speedup} <= 1.0")
+        else:
+            print(f"ok: {r['name']} = {speedup:.2f}x")
+
+    for msg in failures:
+        print(f"check_bench: FAIL: {msg}")
+    if not failures:
+        print(f"check_bench: {path} ok ({len(rows)} rows)")
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
