@@ -1,0 +1,116 @@
+//! Supervisor bench: what fault tolerance costs when nothing faults, and
+//! what a fault costs when it is healed or degraded.
+//!
+//! Four runs on a zero-slack pool (N = 10, K = 3, T = 1 → R = N, so any
+//! loss is felt immediately):
+//!
+//!   1. fault tolerance off                    (baseline)
+//!   2. fully armed (supervision + approx + deadline), zero chaos
+//!   3. one worker killed per run, healed mid-round
+//!   4. two workers killed per run, degraded to approximate decode
+//!
+//! Run 2 is the regression gate: `scripts/check_bench.py` fails the CI
+//! chaos job if any degraded-mode counter (approx rounds, respawns,
+//! deadline expiries) moves off zero — the fault-tolerance stack must be
+//! strictly passive on a healthy pool, and runs 1–3 must share one
+//! bit-identical trajectory (asserted here).
+
+mod bench_util;
+use bench_util::{finish, report, report_metric};
+
+use std::time::Instant;
+
+use codedml::cluster::{NetworkModel, StragglerModel};
+use codedml::coordinator::{CodedMlConfig, CodedMlSession};
+use codedml::data::synthetic_3v7;
+
+fn cfg() -> CodedMlConfig {
+    CodedMlConfig {
+        n: 10, // threshold 3·3+1 = 10 → zero slack
+        k: 3,
+        t: 1,
+        net: NetworkModel::free(),
+        straggler: StragglerModel::none(),
+        ..Default::default()
+    }
+}
+
+fn main() {
+    let train = synthetic_3v7(120, 51);
+    let iters = 12usize;
+    println!("== supervisor (N=10 K=3 T=1, R=10, zero slack) ==");
+
+    // 1. Baseline: no supervision, no deadline, no approx.
+    let mut plain_sess = CodedMlSession::new(cfg(), &train).unwrap();
+    let t0 = Instant::now();
+    let plain = plain_sess.train(iters, None).unwrap();
+    report(
+        "train round, fault tolerance off (baseline)",
+        t0.elapsed().as_secs_f64() / iters as f64,
+        None,
+    );
+
+    // 2. Fully armed, zero chaos: the gated run.
+    let mut armed_cfg = cfg();
+    armed_cfg.max_respawns = 2;
+    armed_cfg.approx_decode = true;
+    armed_cfg.round_deadline_ms = 60_000;
+    let mut armed_sess = CodedMlSession::new(armed_cfg, &train).unwrap();
+    let t0 = Instant::now();
+    let armed = armed_sess.train(iters, None).unwrap();
+    report(
+        "train round, fault tolerance armed, zero chaos",
+        t0.elapsed().as_secs_f64() / iters as f64,
+        None,
+    );
+    report_metric("approx rounds (zero chaos)", armed.approx_rounds as f64);
+    report_metric("respawns (zero chaos)", armed.respawns as f64);
+    report_metric(
+        "deadline-expired rounds (zero chaos)",
+        armed.deadline_expired_rounds as f64,
+    );
+    assert_eq!(
+        armed.weights, plain.weights,
+        "armed-but-idle fault tolerance must not perturb the trajectory"
+    );
+
+    // 3. One worker killed from iteration 1, healed mid-round: the
+    //    trajectory must still be bit-identical to the baseline.
+    let mut healed_cfg = cfg();
+    healed_cfg.chaos_failures = 1;
+    healed_cfg.chaos_from_iter = 1;
+    healed_cfg.max_respawns = 2;
+    let mut healed_sess = CodedMlSession::new(healed_cfg, &train).unwrap();
+    let t0 = Instant::now();
+    let healed = healed_sess.train(iters, None).unwrap();
+    report(
+        "train round, 1 kill healed mid-round",
+        t0.elapsed().as_secs_f64() / iters as f64,
+        None,
+    );
+    report_metric("respawns (healed run)", healed.respawns as f64);
+    assert_eq!(
+        healed.weights, plain.weights,
+        "a healed pool must reproduce the fault-free trajectory exactly"
+    );
+
+    // 4. Two workers killed (beyond heal reach: no respawn budget),
+    //    degraded to approximate decode from iteration 1 on.
+    let mut deg_cfg = cfg();
+    deg_cfg.chaos_failures = 2;
+    deg_cfg.chaos_from_iter = 1;
+    deg_cfg.approx_decode = true;
+    let mut deg_sess = CodedMlSession::new(deg_cfg, &train).unwrap();
+    let t0 = Instant::now();
+    let deg = deg_sess.train(iters, None).unwrap();
+    report(
+        "train round, 2 kills degraded to approx decode",
+        t0.elapsed().as_secs_f64() / iters as f64,
+        None,
+    );
+    report_metric("approx rounds (degraded run)", deg.approx_rounds as f64);
+    report_metric("max approx residual (degraded run)", deg.max_approx_residual);
+    report_metric("worker failures (degraded run)", deg.worker_failures as f64);
+
+    finish("supervisor");
+}

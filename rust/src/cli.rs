@@ -8,10 +8,13 @@
 //!                      --coding-backend auto|dense|ntt --decode-cache-cap 256
 //!                      --transport memory|tcp --workers host:port,host:port,...
 //!                      --connect-timeout-ms 5000 --connect-retries 3
-//!                      --connect-backoff-ms 100]
+//!                      --connect-backoff-ms 100 --round-deadline-ms 0
+//!                      --approx-decode --approx-r-min 0 --max-respawns 0
+//!                      --adaptive-deadline]
 //! codedml --worker    [--listen 127.0.0.1:0]   run one TCP worker process:
-//!                     bind, print "worker listening on <addr>", serve one
-//!                     master connection, exit
+//!                     bind, print "worker listening on <addr>", serve
+//!                     master connections until a Shutdown frame (a lost
+//!                     master — or a supervisor redial — can reconnect)
 //! codedml mpc         [--n 10 --t 4 --iters 25 --m 600 --d 784
 //!                      --threads serial|auto|<n>]
 //! codedml reproduce   <fig2|table1..6|fig3|fig4|fig5|linear|all>
@@ -59,8 +62,10 @@ const USAGE: &str = "usage: codedml <train|mpc|reproduce|budget|artifacts|lint|l
              (--json [path] writes LINT_REPORT.json)
   list       list reproducible experiments
   --worker   run one TCP worker process: bind --listen (default
-             127.0.0.1:0), print the bound address, serve one master
-             connection (see train --transport tcp), exit
+             127.0.0.1:0), print the bound address, serve master
+             connections (see train --transport tcp) until a Shutdown
+             frame arrives; dropped connections return to accept so a
+             supervising master can redial
 
 common options:
   --model logistic|linear     coded objective to train (default logistic;
@@ -78,7 +83,20 @@ common options:
                               supports it and it wins at this (K,T,N);
                               ntt on a low-adicity modulus is an error)
   --decode-cache-cap <n>      max cached decoder subsets, LRU-evicted
-                              (default 256; 0 = unbounded)";
+                              (default 256; 0 = unbounded)
+  --round-deadline-ms <ms>    per-round collection deadline (default 0 =
+                              wait forever); silent workers are charged a
+                              failure when it fires
+  --approx-decode             degraded mode: least-squares approximate
+                              decode instead of aborting when a round
+                              ends below the recovery threshold
+  --approx-r-min <n>          abort anyway below this many usable results
+                              (default 0 = auto, K+T)
+  --max-respawns <n>          per-worker heal budget: revive failed
+                              workers (TCP redial / in-memory respawn and
+                              share re-ship; default 0 = off)
+  --adaptive-deadline         tighten the round deadline to mean + 4 sigma
+                              of observed round times";
 
 /// Entry point; returns the process exit code.
 pub fn run() -> i32 {
@@ -139,9 +157,19 @@ fn cmd_worker(args: &Args) -> Result<(), String> {
         .map_err(|e| format!("local addr: {e}"))?;
     println!("worker listening on {addr}");
     let _ = std::io::stdout().flush();
-    let (stream, peer) = listener.accept().map_err(|e| format!("accept: {e}"))?;
-    eprintln!("master connected from {peer}");
-    crate::cluster::transport::tcp::serve(stream)
+    // Serve connections until a master sends an explicit Shutdown frame.
+    // A dropped connection (master crash, supervisor-initiated redial
+    // after this worker was charged a failure) returns to accept() so the
+    // worker can be re-admitted without restarting the process.
+    loop {
+        let (stream, peer) = listener.accept().map_err(|e| format!("accept: {e}"))?;
+        eprintln!("master connected from {peer}");
+        match crate::cluster::transport::tcp::serve(stream) {
+            Ok(true) => return Ok(()),
+            Ok(false) => eprintln!("master disconnected; awaiting reconnect"),
+            Err(e) => eprintln!("connection error: {e}; awaiting reconnect"),
+        }
+    }
 }
 
 fn parse_backend(args: &Args) -> Result<BackendKind, String> {
@@ -235,6 +263,15 @@ fn cmd_train(args: &Args) -> Result<(), String> {
         args.get_u64("connect-retries", cfg.transport.tcp.connect_retries as u64)? as u32;
     cfg.transport.tcp.connect_backoff_ms =
         args.get_u64("connect-backoff-ms", cfg.transport.tcp.connect_backoff_ms)?;
+    cfg.round_deadline_ms = args.get_u64("round-deadline-ms", cfg.round_deadline_ms)?;
+    if args.flag("approx-decode") {
+        cfg.approx_decode = true;
+    }
+    cfg.approx_r_min = args.get_usize("approx-r-min", cfg.approx_r_min)?;
+    cfg.max_respawns = args.get_u64("max-respawns", cfg.max_respawns as u64)? as u32;
+    if args.flag("adaptive-deadline") {
+        cfg.adaptive_deadline = true;
+    }
     if let Some(path) = args.get("config") {
         let text = std::fs::read_to_string(path).map_err(|e| format!("read {path}: {e}"))?;
         cfg.apply_json(&text)?;
@@ -271,6 +308,16 @@ fn print_report(report: &crate::coordinator::TrainReport) {
         report.worker_failures,
         report.late_results
     );
+    if report.respawns > 0 || report.deadline_expired_rounds > 0 || report.approx_rounds > 0 {
+        println!(
+            "fault tolerance: {} respawn(s); {} deadline-expired round(s); \
+             {} round(s) decoded approximately (max residual {:.3e})",
+            report.respawns,
+            report.deadline_expired_rounds,
+            report.approx_rounds,
+            report.max_approx_residual
+        );
+    }
 }
 
 fn save_model(
@@ -621,6 +668,27 @@ mod tests {
         assert!(dispatch(&args(
             "train --n 10 --k 3 --t 1 --iters 2 --m 120 --batch-blocks 1 \
              --no-straggle --free-net"
+        ))
+        .is_ok());
+    }
+
+    #[test]
+    fn train_micro_run_degraded_mode() {
+        // R = 10 with zero slack: two chaos deaths at iteration 1 push
+        // the second round below threshold; --approx-decode keeps it
+        // alive instead of erroring out.
+        assert!(dispatch(&args(
+            "train --n 10 --k 3 --t 1 --iters 2 --m 120 --chaos-failures 2 \
+             --chaos-from-iter 1 --approx-decode --no-straggle --free-net"
+        ))
+        .is_ok());
+    }
+
+    #[test]
+    fn train_micro_run_supervised_respawn() {
+        assert!(dispatch(&args(
+            "train --n 10 --k 3 --t 1 --iters 2 --m 120 --chaos-failures 1 \
+             --chaos-from-iter 1 --max-respawns 1 --no-straggle --free-net"
         ))
         .is_ok());
     }

@@ -34,11 +34,13 @@
 mod netmodel;
 pub mod round;
 mod straggler;
+pub mod supervisor;
 pub mod transport;
 pub mod worker;
 
 pub use netmodel::NetworkModel;
 pub use round::Round;
-pub use straggler::StragglerModel;
+pub use straggler::{ArrivalStats, StragglerModel};
+pub use supervisor::{DeadlineController, HealOutcome, Supervisor};
 pub use transport::{Transport, TransportConfig, TransportEvent, TransportKind};
 pub use worker::{Cluster, ClusterError, StepResult, WorkerEngine, WorkerOp, WorkerSpec};

@@ -34,6 +34,15 @@ pub struct Round {
     /// its own round completed must still reach the failure counters, but
     /// must not feed this round's completion accounting.
     pub late_failures: Vec<(usize, String)>,
+    /// Failures that were subsequently healed by the supervisor: the
+    /// worker was revived and re-dispatched *within this round*, so its
+    /// original failure no longer blocks completion accounting — but it
+    /// still happened and still reaches `TrainReport::worker_failures`.
+    pub healed: Vec<(usize, String)>,
+    /// Set when collection stopped because the per-round deadline
+    /// (`--round-deadline-ms`) expired with workers still outstanding;
+    /// each outstanding worker also gets a synthesized failure entry.
+    pub deadline_expired: bool,
     /// Dispatch→completion wall time, filled in by the collector.
     pub wall_secs: f64,
 }
@@ -49,7 +58,25 @@ impl Round {
             failures: Vec::new(),
             late_drained: 0,
             late_failures: Vec::new(),
+            healed: Vec::new(),
+            deadline_expired: false,
             wall_secs: 0.0,
+        }
+    }
+
+    /// The supervisor revived `worker` and re-dispatched this iteration's
+    /// weights to it: move its failure out of the completion accounting
+    /// (into `healed`) so the round can wait for the replacement's result.
+    /// Returns false (and changes nothing) if `worker` has no recorded
+    /// failure this round.
+    pub fn heal(&mut self, worker: usize) -> bool {
+        match self.failures.iter().position(|(w, _)| *w == worker) {
+            Some(at) => {
+                let entry = self.failures.remove(at);
+                self.healed.push(entry);
+                true
+            }
+            None => false,
         }
     }
 
@@ -169,5 +196,24 @@ mod tests {
         r.absorb(ok_result(1, 0));
         assert_eq!(r.results.len(), 1);
         assert_eq!(r.late_drained, 1);
+    }
+
+    #[test]
+    fn heal_reopens_completion_and_keeps_failure_recorded() {
+        let mut r = Round::new(0, 2, 3);
+        r.absorb(ok_result(0, 0));
+        r.absorb(err_result(1, 0));
+        r.absorb(err_result(2, 0));
+        assert!(r.complete() && !r.ok(), "threshold unreachable");
+        // Supervisor revives worker 1 and re-dispatches: its failure moves
+        // aside so the round can wait for the replacement's result.
+        assert!(r.heal(1));
+        assert!(!r.complete(), "healed round waits for the replacement");
+        assert_eq!(r.healed, vec![(1, "boom".to_string())]);
+        assert_eq!(r.failures.len(), 1);
+        // Healing a worker with no recorded failure is a no-op.
+        assert!(!r.heal(0));
+        r.absorb(ok_result(1, 0));
+        assert!(r.complete() && r.ok(), "replacement result completes the round");
     }
 }

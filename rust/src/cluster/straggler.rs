@@ -50,9 +50,69 @@ impl StragglerModel {
     }
 }
 
+/// Streaming mean/variance (Welford) over observed per-round wall times.
+///
+/// This is the measurement half of the adaptive controller
+/// ([`super::supervisor::DeadlineController`]): each completed round
+/// records its wall time here, and the next round's deadline is chosen
+/// from the running mean + a few standard deviations — so the deadline
+/// tracks the cluster actually being observed instead of a static guess.
+#[derive(Debug, Clone, Default)]
+pub struct ArrivalStats {
+    count: u64,
+    mean: f64,
+    m2: f64,
+}
+
+impl ArrivalStats {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Fold in one observed round wall time (seconds).
+    pub fn record(&mut self, secs: f64) {
+        self.count += 1;
+        let delta = secs - self.mean;
+        self.mean += delta / self.count as f64;
+        self.m2 += delta * (secs - self.mean);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count
+    }
+
+    pub fn mean(&self) -> f64 {
+        self.mean
+    }
+
+    /// Sample standard deviation; 0 until two observations exist.
+    pub fn std_dev(&self) -> f64 {
+        if self.count < 2 {
+            0.0
+        } else {
+            (self.m2 / (self.count - 1) as f64).sqrt()
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn arrival_stats_match_closed_form() {
+        let mut s = ArrivalStats::new();
+        assert_eq!(s.count(), 0);
+        assert_eq!(s.std_dev(), 0.0);
+        for v in [2.0, 4.0, 4.0, 4.0, 5.0, 5.0, 7.0, 9.0] {
+            s.record(v);
+        }
+        assert_eq!(s.count(), 8);
+        assert!((s.mean() - 5.0).abs() < 1e-12, "mean={}", s.mean());
+        // Sample variance of the classic example set is 32/7.
+        let want = (32.0f64 / 7.0).sqrt();
+        assert!((s.std_dev() - want).abs() < 1e-12, "sd={}", s.std_dev());
+    }
 
     #[test]
     fn none_is_zero() {

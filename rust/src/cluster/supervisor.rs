@@ -1,0 +1,394 @@
+//! Worker supervision: liveness tracking, respawn/redial, re-dispatch,
+//! and the adaptive per-round deadline controller.
+//!
+//! The round engine (PR 2) *detects* faults — failures are counted, the
+//! fastest-R threshold decides the round. This module closes the loop to
+//! fault *recovery*: a [`Supervisor`] owns each worker's health record
+//! and, within a configurable respawn budget, re-admits lost workers
+//! through the transport seam ([`super::transport::Transport::reconnect`]
+//! — TCP redial with capped jittered backoff, or an in-memory replacement
+//! thread) and re-ships the worker's encoded share so the pool heals
+//! without restarting the session. When a heal lands *mid-round* (the
+//! threshold was unreachable), the supervisor also re-dispatches the
+//! current iteration's coded weights and reopens the round
+//! ([`super::round::Round::heal`]) so collection can resume.
+//!
+//! The [`DeadlineController`] is the adaptivity piece: it feeds observed
+//! round wall times ([`super::straggler::ArrivalStats`]) into the next
+//! round's deadline and decides when approximate decoding should be
+//! pre-armed. It never touches the wall clock itself — it only consumes
+//! `Round::wall_secs` measured by `util::timer` — so the
+//! `no-wallclock-nondeterminism` lint stays green.
+//!
+//! The supervisor deliberately handles only *opaque coded shares*
+//! (`Vec<u64>` it was handed at build time): it never imports `data/`, so
+//! the no-plaintext-to-workers invariant is preserved by construction.
+
+use super::round::Round;
+use super::straggler::ArrivalStats;
+use super::worker::{Cluster, WorkerSpec};
+
+/// One worker's liveness record.
+#[derive(Debug, Clone, Default)]
+pub struct WorkerHealth {
+    /// Rounds failed since the last usable result.
+    pub consecutive_failures: u32,
+    /// Heals spent on this worker so far.
+    pub respawns_used: u32,
+}
+
+/// What one heal attempt did, for the session's tracer/report accounting.
+#[derive(Debug)]
+pub struct HealOutcome {
+    pub worker: usize,
+    /// 1-based respawn count after this attempt (for trace events).
+    pub respawn: u32,
+    /// `Err` = the worker is still unreachable; it stays down and keeps
+    /// its remaining budget for a later round.
+    pub result: Result<(), String>,
+    /// True when the current iteration's weights were re-dispatched to
+    /// the revived worker (mid-round heal).
+    pub redispatched: bool,
+}
+
+/// Master-side worker supervision: re-admits failed workers within a
+/// per-worker respawn budget.
+///
+/// Owns the original [`WorkerSpec`]s and each worker's encoded share
+/// (cloned at session build) so a revived worker can be handed exactly
+/// the data its predecessor held — LCC decoding then stays *exact*, and
+/// trajectories are bit-identical to a fault-free run whenever the exact
+/// path is used.
+pub struct Supervisor {
+    specs: Vec<WorkerSpec>,
+    x_shares: Vec<Vec<u64>>,
+    y_shares: Option<Vec<Vec<u64>>>,
+    health: Vec<WorkerHealth>,
+    max_respawns: u32,
+    /// Successful revives, cumulative.
+    pub respawns: u64,
+    /// Mid-round weight re-dispatches, cumulative.
+    pub redispatches: u64,
+}
+
+impl Supervisor {
+    /// `max_respawns` is per worker; 0 disables healing entirely (the
+    /// session then never constructs a Supervisor).
+    pub fn new(
+        specs: Vec<WorkerSpec>,
+        x_shares: Vec<Vec<u64>>,
+        y_shares: Option<Vec<Vec<u64>>>,
+        max_respawns: u32,
+    ) -> Self {
+        let n = specs.len();
+        assert!(x_shares.len() == n, "one share per worker");
+        Supervisor {
+            specs,
+            x_shares,
+            y_shares,
+            health: (0..n).map(|_| WorkerHealth::default()).collect(),
+            max_respawns,
+            respawns: 0,
+            redispatches: 0,
+        }
+    }
+
+    /// Fold a completed round into the health records: every usable
+    /// result resets its worker's failure streak, every failure (live or
+    /// healed) extends it.
+    pub fn observe_round(&mut self, round: &Round) {
+        for r in &round.results {
+            if let Some(h) = self.health.get_mut(r.worker) {
+                h.consecutive_failures = 0;
+            }
+        }
+        for (w, _) in round.failures.iter().chain(round.healed.iter()) {
+            if let Some(h) = self.health.get_mut(*w) {
+                h.consecutive_failures += 1;
+            }
+        }
+    }
+
+    pub fn health(&self) -> &[WorkerHealth] {
+        &self.health
+    }
+
+    /// Heal this round's failed workers, within budget.
+    ///
+    /// For each worker in `round.failures`: build a replacement spec (the
+    /// crash chaos hook `fail_from_iter` is cleared — it models a fault of
+    /// the *dead* incarnation; `slow_ms` is kept, a slow machine stays
+    /// slow), `revive` it through the transport (reconnect + re-ship the
+    /// encoded share), and — only when the round fell short of its
+    /// threshold — re-dispatch the current iteration's weights and reopen
+    /// the round so [`super::worker::Cluster::collect_resume`] can wait
+    /// for the replacement's result. When the round already reached R,
+    /// revived workers simply rejoin at the next dispatch.
+    pub fn heal(
+        &mut self,
+        cluster: &mut Cluster,
+        round: &mut Round,
+        w_shares: &[Vec<u64>],
+    ) -> Vec<HealOutcome> {
+        let mid_round = !round.ok();
+        let failed: Vec<usize> = round.failures.iter().map(|(w, _)| *w).collect();
+        let mut outcomes = Vec::new();
+        for w in failed {
+            let (spec, x, y) = match (self.specs.get(w), self.x_shares.get(w)) {
+                (Some(spec), Some(x)) => {
+                    let y = self.y_shares.as_ref().and_then(|ys| ys.get(w)).cloned();
+                    (spec, x.clone(), y)
+                }
+                _ => continue, // unknown worker id: nothing to heal with
+            };
+            {
+                let h = &mut self.health[w];
+                if h.respawns_used >= self.max_respawns {
+                    continue; // budget exhausted: stays failed
+                }
+                h.respawns_used += 1;
+            }
+            let mut replacement = spec.clone();
+            replacement.fail_from_iter = None;
+            let revived = cluster.revive(&replacement, x, y);
+            let mut redispatched = false;
+            if revived.is_ok() {
+                self.respawns += 1;
+                if mid_round && round.heal(w) {
+                    match w_shares.get(w) {
+                        Some(ws) => match cluster.dispatch_to(w, round.iter, ws.clone()) {
+                            Ok(()) => {
+                                redispatched = true;
+                                self.redispatches += 1;
+                            }
+                            Err(e) => {
+                                // Revive landed but the re-dispatch died:
+                                // put the failure back into the round's
+                                // accounting so completion stays sound.
+                                round.absorb(super::worker::StepResult {
+                                    worker: w,
+                                    iter: round.iter,
+                                    data: Err(format!("re-dispatch: {e}")),
+                                    compute_secs: 0.0,
+                                });
+                            }
+                        },
+                        None => {
+                            round.absorb(super::worker::StepResult {
+                                worker: w,
+                                iter: round.iter,
+                                data: Err("re-dispatch: no weight share".to_string()),
+                                compute_secs: 0.0,
+                            });
+                        }
+                    }
+                }
+            }
+            outcomes.push(HealOutcome {
+                worker: w,
+                respawn: self.health[w].respawns_used,
+                result: revived,
+                redispatched,
+            });
+        }
+        outcomes
+    }
+}
+
+/// Adaptive per-round deadline: starts from the configured
+/// `--round-deadline-ms` and, once enough rounds have been observed,
+/// tightens it to `mean + 4σ` of the measured round wall times (never
+/// above the configured ceiling — the static deadline is a hard cap, the
+/// controller only sharpens it). With `adaptive` off it returns the
+/// configured value unchanged. Also tracks a deadline-expiry streak so
+/// the session can pre-arm approximate decoding instead of burning the
+/// full deadline every round on a persistently short-handed pool.
+#[derive(Debug, Clone)]
+pub struct DeadlineController {
+    stats: ArrivalStats,
+    base_ms: u64,
+    adaptive: bool,
+    expired_streak: u32,
+}
+
+/// Observed rounds required before the controller trusts its estimate.
+const MIN_OBSERVATIONS: u64 = 3;
+/// Tail width: deadline = mean + TAIL_SIGMA·σ.
+const TAIL_SIGMA: f64 = 4.0;
+/// Floor so an adaptively tightened deadline can never hit zero.
+const MIN_DEADLINE_MS: u64 = 10;
+/// Expiry streak at which approximate decode is pre-armed.
+const PRE_ARM_STREAK: u32 = 2;
+
+impl DeadlineController {
+    pub fn new(base_ms: u64, adaptive: bool) -> Self {
+        DeadlineController {
+            stats: ArrivalStats::new(),
+            base_ms,
+            adaptive,
+            expired_streak: 0,
+        }
+    }
+
+    /// Fold in a completed round: its measured wall time (only rounds
+    /// that finished on their own — deadline-expired rounds would bias
+    /// the estimate toward the deadline itself) and whether the deadline
+    /// fired.
+    pub fn observe(&mut self, wall_secs: f64, deadline_expired: bool) {
+        if deadline_expired {
+            self.expired_streak += 1;
+        } else {
+            self.expired_streak = 0;
+            self.stats.record(wall_secs);
+        }
+    }
+
+    /// Deadline for the next round, in ms (0 = unbounded).
+    pub fn next_deadline_ms(&self) -> u64 {
+        if !self.adaptive || self.stats.count() < MIN_OBSERVATIONS {
+            return self.base_ms;
+        }
+        let est_ms = ((self.stats.mean() + TAIL_SIGMA * self.stats.std_dev()) * 1000.0).ceil()
+            as u64
+            + 1;
+        let est_ms = est_ms.max(MIN_DEADLINE_MS);
+        if self.base_ms == 0 {
+            est_ms
+        } else {
+            est_ms.min(self.base_ms)
+        }
+    }
+
+    /// Should the session skip straight to approximate decode when the
+    /// next round falls short, rather than spending heal attempts first?
+    pub fn pre_arm_approx(&self) -> bool {
+        self.expired_streak >= PRE_ARM_STREAK
+    }
+
+    pub fn observed_rounds(&self) -> u64 {
+        self.stats.count()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::worker::{Cluster, StepResult, WorkerOp, WorkerSpec};
+    use crate::field::{PrimeField, PAPER_PRIME};
+    use crate::runtime::BackendKind;
+    use crate::util::par::Parallelism;
+    use std::path::PathBuf;
+
+    fn specs(n: usize) -> Vec<WorkerSpec> {
+        let f = PrimeField::new(PAPER_PRIME);
+        (0..n)
+            .map(|id| WorkerSpec {
+                id,
+                kind: BackendKind::Native,
+                artifact_dir: PathBuf::from("artifacts"),
+                field: f,
+                rows: 2,
+                d: 2,
+                coeffs: vec![3, 7],
+                op: WorkerOp::Logistic,
+                fail_from_iter: None,
+                slow_ms: 0,
+                par: Parallelism::Serial,
+            })
+            .collect()
+    }
+
+    fn ok_result(worker: usize, iter: u64) -> StepResult {
+        StepResult { worker, iter, data: Ok(vec![1]), compute_secs: 0.001 }
+    }
+
+    fn err_result(worker: usize, iter: u64) -> StepResult {
+        StepResult { worker, iter, data: Err("boom".into()), compute_secs: 0.0 }
+    }
+
+    #[test]
+    fn observe_round_tracks_streaks() {
+        let mut sup = Supervisor::new(specs(3), vec![vec![1, 2, 3, 4]; 3], None, 2);
+        let mut r = Round::new(0, 2, 3);
+        r.absorb(ok_result(0, 0));
+        r.absorb(err_result(1, 0));
+        r.absorb(ok_result(2, 0));
+        sup.observe_round(&r);
+        sup.observe_round(&r);
+        assert_eq!(sup.health()[0].consecutive_failures, 0);
+        assert_eq!(sup.health()[1].consecutive_failures, 2);
+        let mut r2 = Round::new(1, 2, 3);
+        r2.absorb(ok_result(1, 1));
+        sup.observe_round(&r2);
+        assert_eq!(sup.health()[1].consecutive_failures, 0, "usable result resets");
+    }
+
+    #[test]
+    fn heal_revives_failed_worker_and_redispatches_mid_round() {
+        let s = specs(3);
+        let mut chaos = s.clone();
+        chaos[1].fail_from_iter = Some(0);
+        let x_shares = vec![vec![1u64, 2, 3, 4]; 3];
+        let mut cluster = Cluster::spawn(chaos).unwrap();
+        cluster.load_data(x_shares.clone(), None).unwrap();
+        let w_shares = vec![vec![1u64, 1]; 3];
+        cluster.dispatch(0, w_shares.clone()).unwrap();
+        // need = 3-of-3 so worker 1's injected fault leaves the round short.
+        let mut round = cluster.collect_first(3, 0).unwrap();
+        assert!(!round.ok());
+
+        let mut sup = Supervisor::new(s, x_shares, None, 1);
+        let outcomes = sup.heal(&mut cluster, &mut round, &w_shares);
+        assert_eq!(outcomes.len(), 1);
+        assert_eq!(outcomes[0].worker, 1);
+        assert!(outcomes[0].result.is_ok(), "{:?}", outcomes[0].result);
+        assert!(outcomes[0].redispatched);
+        assert_eq!(sup.respawns, 1);
+        assert_eq!(sup.redispatches, 1);
+
+        // The reopened round now completes from the replacement's result.
+        cluster
+            .collect_resume(&mut round, &crate::util::timer::Deadline::none())
+            .unwrap();
+        assert!(round.ok(), "failures: {:?}", round.failures);
+        assert_eq!(round.healed.len(), 1, "original failure stays recorded");
+
+        // Budget exhausted: a second heal attempt is a no-op.
+        let mut r2 = Round::new(1, 3, 3);
+        r2.absorb(err_result(1, 1));
+        let outcomes2 = sup.heal(&mut cluster, &mut r2, &w_shares);
+        assert!(outcomes2.is_empty(), "respawn budget is per worker");
+    }
+
+    #[test]
+    fn controller_is_inert_until_warm_and_capped_by_base() {
+        let mut c = DeadlineController::new(500, true);
+        assert_eq!(c.next_deadline_ms(), 500, "cold start: configured value");
+        for _ in 0..5 {
+            c.observe(0.010, false);
+        }
+        let d = c.next_deadline_ms();
+        assert!(d >= MIN_DEADLINE_MS && d <= 500, "tightened: {d}");
+        assert!(d < 500, "uniform 10 ms rounds must tighten a 500 ms deadline");
+
+        // Non-adaptive: always the configured value.
+        let mut c2 = DeadlineController::new(500, false);
+        for _ in 0..5 {
+            c2.observe(0.010, false);
+        }
+        assert_eq!(c2.next_deadline_ms(), 500);
+    }
+
+    #[test]
+    fn controller_pre_arms_after_expiry_streak() {
+        let mut c = DeadlineController::new(100, true);
+        assert!(!c.pre_arm_approx());
+        c.observe(0.1, true);
+        assert!(!c.pre_arm_approx());
+        c.observe(0.1, true);
+        assert!(c.pre_arm_approx());
+        c.observe(0.05, false);
+        assert!(!c.pre_arm_approx(), "a clean round clears the streak");
+        assert_eq!(c.observed_rounds(), 1, "expired rounds never feed the estimate");
+    }
+}

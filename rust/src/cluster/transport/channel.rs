@@ -15,6 +15,7 @@ use std::thread::JoinHandle;
 use super::frame;
 use super::{Transport, TransportEvent};
 use crate::cluster::worker::{ClusterError, StepResult, WorkerEngine, WorkerSpec};
+use crate::util::timer::Deadline;
 
 /// Master → worker messages (the in-memory mirror of
 /// [`frame::MasterFrame`], minus Hello: the spec rides into the thread at
@@ -36,6 +37,9 @@ struct WorkerHandle {
 pub struct ChannelTransport {
     workers: Vec<WorkerHandle>,
     results_rx: mpsc::Receiver<StepResult>,
+    /// Kept so [`Transport::reconnect`] can hand replacement threads a
+    /// sender for the shared results channel.
+    results_tx: mpsc::Sender<StepResult>,
     sent: u64,
     received: u64,
 }
@@ -94,7 +98,7 @@ impl ChannelTransport {
                 Err(_) => return Err(ClusterError::WorkerLost(i)),
             }
         }
-        Ok(ChannelTransport { workers, results_rx, sent: 0, received: 0 })
+        Ok(ChannelTransport { workers, results_rx, results_tx, sent: 0, received: 0 })
     }
 
     fn stop(&mut self) {
@@ -146,13 +150,56 @@ impl Transport for ChannelTransport {
         Ok(())
     }
 
-    fn recv(&mut self) -> Result<TransportEvent, ClusterError> {
-        let res = self
-            .results_rx
-            .recv()
-            .map_err(|_| ClusterError::Channel("results"))?;
+    fn recv_deadline(
+        &mut self,
+        deadline: &Deadline,
+    ) -> Result<Option<TransportEvent>, ClusterError> {
+        let res = match deadline.remaining() {
+            None => self
+                .results_rx
+                .recv()
+                .map_err(|_| ClusterError::Channel("results"))?,
+            Some(left) => match self.results_rx.recv_timeout(left) {
+                Ok(r) => r,
+                Err(mpsc::RecvTimeoutError::Timeout) => return Ok(None),
+                Err(mpsc::RecvTimeoutError::Disconnected) => {
+                    return Err(ClusterError::Channel("results"))
+                }
+            },
+        };
         self.received += frame::frame_len(frame::result_payload_len(&res)) as u64;
-        Ok(TransportEvent::Result(res))
+        Ok(Some(TransportEvent::Result(res)))
+    }
+
+    fn reconnect(&mut self, spec: &WorkerSpec) -> Result<(), String> {
+        let worker = spec.id;
+        if worker >= self.workers.len() {
+            return Err(format!("no worker slot {worker}"));
+        }
+        let (tx, rx) = mpsc::channel();
+        let (ready_tx, ready_rx) = mpsc::channel();
+        let rtx = self.results_tx.clone();
+        let spec = spec.clone();
+        let join = std::thread::Builder::new()
+            .name(format!("worker-{worker}-respawn"))
+            .spawn(move || worker_thread(spec, rx, rtx, ready_tx))
+            .map_err(|e| format!("spawn replacement: {e}"))?;
+        match ready_rx.recv() {
+            Ok(Ok(())) => {}
+            Ok(Err(e)) => return Err(format!("replacement backend: {e}")),
+            Err(_) => return Err("replacement died before ready".to_string()),
+        }
+        // Retire the old handle: best-effort shutdown, then detach. Any
+        // results the old thread already sent drain as late/stale through
+        // the round engine; nothing new reaches it once its command
+        // channel drops here.
+        let old = std::mem::replace(
+            &mut self.workers[worker],
+            WorkerHandle { tx, join: Some(join) },
+        );
+        let _ = old.tx.send(ToWorker::Shutdown);
+        drop(old);
+        Ok(())
     }
 
     fn shutdown(&mut self) {

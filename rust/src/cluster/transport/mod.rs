@@ -28,7 +28,8 @@ pub mod tcp;
 pub use channel::ChannelTransport;
 pub use tcp::TcpTransport;
 
-use crate::cluster::worker::{ClusterError, StepResult};
+use crate::cluster::worker::{ClusterError, StepResult, WorkerSpec};
+use crate::util::timer::Deadline;
 
 /// One message from the worker side of a transport.
 #[derive(Debug)]
@@ -65,7 +66,32 @@ pub trait Transport: Send {
     fn send_step(&mut self, worker: usize, iter: u64, w: Vec<u64>) -> Result<(), String>;
 
     /// Block for the next worker event, whichever worker it comes from.
-    fn recv(&mut self) -> Result<TransportEvent, ClusterError>;
+    fn recv(&mut self) -> Result<TransportEvent, ClusterError> {
+        match self.recv_deadline(&Deadline::none())? {
+            Some(ev) => Ok(ev),
+            // Unreachable by the recv_deadline contract (an unbounded
+            // deadline never times out) — surfaced as a transport error
+            // rather than a panic (`no-panic-in-library`).
+            None => Err(ClusterError::Channel("unbounded recv returned empty")),
+        }
+    }
+
+    /// Block for the next worker event or until `deadline` expires.
+    /// `Ok(None)` = the deadline fired with nothing to deliver; a
+    /// [`Deadline::none`] never yields `Ok(None)`. This is what turns a
+    /// silently-stalled worker (hung socket, no FIN) into a counted
+    /// failure instead of a master hang.
+    fn recv_deadline(
+        &mut self,
+        deadline: &Deadline,
+    ) -> Result<Option<TransportEvent>, ClusterError>;
+
+    /// Re-admit a lost worker: the TCP backend redials `spec.id`'s address
+    /// (fresh Hello handshake, new reader thread, stale events from the
+    /// dead connection suppressed); the in-memory backend spawns a
+    /// replacement thread. `Err` = still unreachable — the caller keeps
+    /// the worker marked down and may retry on a later round.
+    fn reconnect(&mut self, spec: &WorkerSpec) -> Result<(), String>;
 
     /// Tear down: best-effort notify workers, release connections, join
     /// any internal threads. Must be idempotent (called from both

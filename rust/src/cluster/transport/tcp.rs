@@ -36,6 +36,8 @@ use crate::cluster::worker::{ClusterError, WorkerEngine, WorkerOp, WorkerSpec};
 use crate::field::PrimeField;
 use crate::runtime::BackendKind;
 use crate::util::par::Parallelism;
+use crate::util::rng::Rng;
+use crate::util::timer::Deadline;
 
 // --- WorkerSpec ↔ HelloSpec (the only code that needs the wire codes) ---
 
@@ -109,7 +111,17 @@ fn spec_from_hello(h: HelloSpec) -> Result<WorkerSpec, String> {
 pub struct TcpTransport {
     /// Write half per worker; `None` once the worker is down.
     streams: Vec<Option<TcpStream>>,
-    events_rx: mpsc::Receiver<TransportEvent>,
+    /// Events arrive tagged with the connection generation that produced
+    /// them; [`Transport::recv_deadline`] drops `Down` events from
+    /// generations a [`Transport::reconnect`] has since replaced.
+    events_rx: mpsc::Receiver<(u64, TransportEvent)>,
+    /// Kept so reconnects can hand fresh reader threads a sender.
+    events_tx: mpsc::Sender<(u64, TransportEvent)>,
+    /// Current connection generation per worker (starts at 0, bumps on
+    /// every reconnect).
+    conn_gen: Vec<u64>,
+    /// Dial/handshake knobs, kept for redials.
+    cfg: TcpConfig,
     readers: Vec<JoinHandle<()>>,
     sent: u64,
     received: Arc<AtomicU64>,
@@ -122,15 +134,37 @@ fn resolve(addr: &str) -> Result<SocketAddr, String> {
         .ok_or_else(|| format!("resolve {addr}: no addresses"))
 }
 
-/// Dial with retry/backoff. Each attempt gets its own connect timeout;
-/// attempts after the first are preceded by a backoff sleep.
+/// FNV-1a over the address string: a deterministic per-address seed so
+/// each worker's jitter stream is decorrelated from its neighbors'
+/// without any wall-clock entropy (`no-wallclock-nondeterminism`).
+fn addr_seed(addr: &str) -> u64 {
+    let mut h = 0xcbf29ce484222325u64;
+    for b in addr.as_bytes() {
+        h ^= *b as u64;
+        h = h.wrapping_mul(0x100000001b3);
+    }
+    h
+}
+
+/// Dial with retry and capped exponential backoff plus ±50% jitter. Each
+/// attempt gets its own connect timeout. The jitter decorrelates N
+/// workers redialing a restarted peer (no thundering herd) while staying
+/// deterministic per address — the sleep sequence is a pure function of
+/// `(addr, cfg)`.
 fn dial(addr: &str, cfg: &TcpConfig) -> Result<TcpStream, String> {
     let target = resolve(addr)?;
     let timeout = Duration::from_millis(cfg.connect_timeout_ms.max(1));
+    let mut rng = Rng::new(addr_seed(addr));
     let mut last = String::new();
     for attempt in 0..=cfg.connect_retries {
         if attempt > 0 {
-            std::thread::sleep(Duration::from_millis(cfg.connect_backoff_ms));
+            // Base doubles per attempt, capped at 8× the configured
+            // backoff; actual sleep is uniform in [base/2, 3·base/2).
+            let base = cfg
+                .connect_backoff_ms
+                .saturating_mul(1u64 << (attempt - 1).min(3));
+            let sleep = base / 2 + rng.below(base.max(1));
+            std::thread::sleep(Duration::from_millis(sleep));
         }
         match TcpStream::connect_timeout(&target, timeout) {
             Ok(s) => return Ok(s),
@@ -142,18 +176,19 @@ fn dial(addr: &str, cfg: &TcpConfig) -> Result<TcpStream, String> {
 
 fn reader_loop(
     worker: usize,
+    gen: u64,
     stream: TcpStream,
-    tx: mpsc::Sender<TransportEvent>,
+    tx: mpsc::Sender<(u64, TransportEvent)>,
     received: Arc<AtomicU64>,
 ) {
     let mut r = BufReader::new(stream);
     loop {
         match read_frame(&mut r) {
             Ok(None) => {
-                let _ = tx.send(TransportEvent::Down {
-                    worker,
-                    error: "connection closed".to_string(),
-                });
+                let _ = tx.send((
+                    gen,
+                    TransportEvent::Down { worker, error: "connection closed".to_string() },
+                ));
                 return;
             }
             Ok(Some((op, payload))) => {
@@ -161,37 +196,46 @@ fn reader_loop(
                 match WorkerFrame::decode(op, &payload) {
                     Ok(WorkerFrame::Result(res)) => {
                         if res.worker != worker {
-                            let _ = tx.send(TransportEvent::Down {
-                                worker,
-                                error: format!(
-                                    "protocol: result for worker {} on connection {worker}",
-                                    res.worker
-                                ),
-                            });
+                            let _ = tx.send((
+                                gen,
+                                TransportEvent::Down {
+                                    worker,
+                                    error: format!(
+                                        "protocol: result for worker {} on connection {worker}",
+                                        res.worker
+                                    ),
+                                },
+                            ));
                             return;
                         }
-                        if tx.send(TransportEvent::Result(res)).is_err() {
+                        if tx.send((gen, TransportEvent::Result(res))).is_err() {
                             return; // master gone
                         }
                     }
                     Ok(WorkerFrame::Ready { .. }) => {
-                        let _ = tx.send(TransportEvent::Down {
-                            worker,
-                            error: "protocol: Ready after handshake".to_string(),
-                        });
+                        let _ = tx.send((
+                            gen,
+                            TransportEvent::Down {
+                                worker,
+                                error: "protocol: Ready after handshake".to_string(),
+                            },
+                        ));
                         return;
                     }
                     Err(e) => {
-                        let _ = tx.send(TransportEvent::Down {
-                            worker,
-                            error: format!("bad frame: {e}"),
-                        });
+                        let _ = tx.send((
+                            gen,
+                            TransportEvent::Down { worker, error: format!("bad frame: {e}") },
+                        ));
                         return;
                     }
                 }
             }
             Err(e) => {
-                let _ = tx.send(TransportEvent::Down { worker, error: format!("read: {e}") });
+                let _ = tx.send((
+                    gen,
+                    TransportEvent::Down { worker, error: format!("read: {e}") },
+                ));
                 return;
             }
         }
@@ -233,7 +277,7 @@ impl TcpTransport {
                             let rcv = Arc::clone(&received);
                             match std::thread::Builder::new()
                                 .name(format!("tcp-reader-{i}"))
-                                .spawn(move || reader_loop(i, read_half, tx, rcv))
+                                .spawn(move || reader_loop(i, 0, read_half, tx, rcv))
                             {
                                 Ok(j) => {
                                     readers.push(j);
@@ -263,8 +307,20 @@ impl TcpTransport {
                 }
             }
         }
-        drop(events_tx); // readers hold the only senders now
-        Ok((TcpTransport { streams, events_rx, readers, sent, received }, down))
+        let conn_gen = vec![0u64; specs.len()];
+        Ok((
+            TcpTransport {
+                streams,
+                events_rx,
+                events_tx,
+                conn_gen,
+                cfg: cfg.clone(),
+                readers,
+                sent,
+                received,
+            },
+            down,
+        ))
     }
 
     fn handshake(
@@ -379,10 +435,69 @@ impl Transport for TcpTransport {
         self.send_frame(worker, &MasterFrame::Step { iter, w })
     }
 
-    fn recv(&mut self) -> Result<TransportEvent, ClusterError> {
-        self.events_rx
-            .recv()
-            .map_err(|_| ClusterError::Channel("tcp events"))
+    fn recv_deadline(
+        &mut self,
+        deadline: &Deadline,
+    ) -> Result<Option<TransportEvent>, ClusterError> {
+        loop {
+            let (gen, ev) = match deadline.remaining() {
+                None => self
+                    .events_rx
+                    .recv()
+                    .map_err(|_| ClusterError::Channel("tcp events"))?,
+                Some(left) => match self.events_rx.recv_timeout(left) {
+                    Ok(pair) => pair,
+                    Err(mpsc::RecvTimeoutError::Timeout) => return Ok(None),
+                    Err(mpsc::RecvTimeoutError::Disconnected) => {
+                        return Err(ClusterError::Channel("tcp events"))
+                    }
+                },
+            };
+            // A Down from a connection that reconnect() has since replaced
+            // describes the *old* socket — swallowing it keeps a revived
+            // worker from being immediately re-marked dead. Results are
+            // never filtered: a value computed on the old connection is
+            // still a genuine (deterministic) worker result, and the round
+            // engine's iteration tags handle staleness.
+            if let TransportEvent::Down { worker, .. } = &ev {
+                if gen < self.conn_gen[*worker] {
+                    continue;
+                }
+            }
+            return Ok(Some(ev));
+        }
+    }
+
+    fn reconnect(&mut self, spec: &WorkerSpec) -> Result<(), String> {
+        let i = spec.id;
+        if i >= self.streams.len() {
+            return Err(format!("no worker slot {i}"));
+        }
+        // Retire any half-dead connection first so its reader unblocks and
+        // its Down lands in a now-stale generation.
+        if let Some(s) = self.streams[i].take() {
+            let _ = s.shutdown(Shutdown::Both);
+        }
+        self.conn_gen[i] += 1;
+        let gen = self.conn_gen[i];
+        let timeout = Duration::from_millis(self.cfg.connect_timeout_ms.max(1));
+        let cfg = self.cfg.clone();
+        let stream = match Self::handshake(i, spec, &cfg, timeout, &self.received, &mut self.sent)
+        {
+            Ok(s) => s,
+            Err(HandshakeError::Backend(e)) => return Err(format!("backend: {e}")),
+            Err(HandshakeError::Unreachable(e)) => return Err(e),
+        };
+        let read_half = stream.try_clone().map_err(|e| format!("clone stream: {e}"))?;
+        let tx = self.events_tx.clone();
+        let rcv = Arc::clone(&self.received);
+        let j = std::thread::Builder::new()
+            .name(format!("tcp-reader-{i}-g{gen}"))
+            .spawn(move || reader_loop(i, gen, read_half, tx, rcv))
+            .map_err(|e| format!("spawn reader: {e}"))?;
+        self.readers.push(j);
+        self.streams[i] = Some(stream);
+        Ok(())
     }
 
     fn shutdown(&mut self) {
@@ -412,10 +527,13 @@ fn reply(w: &mut BufWriter<TcpStream>, f: &WorkerFrame) -> Result<(), String> {
 /// master shuts down or disconnects. Used by the CLI's
 /// `--worker --listen <addr>` mode; prints nothing (the CLI owns all I/O).
 ///
-/// A backend build failure is reported to the master in the Ready frame
-/// and then the function returns `Ok` — the *master* decides whether that
-/// aborts training. `Err` is reserved for transport/protocol breakage.
-pub fn serve(stream: TcpStream) -> Result<(), String> {
+/// Returns `Ok(true)` only on an explicit Shutdown frame — the master
+/// really is done and the worker process should exit. `Ok(false)` means
+/// the connection ended some other way (master disconnect, backend build
+/// failure reported via Ready); the CLI keeps listening so a supervising
+/// master can redial and the worker rejoins the pool. `Err` is reserved
+/// for transport/protocol breakage on this one connection.
+pub fn serve(stream: TcpStream) -> Result<bool, String> {
     let _ = stream.set_nodelay(true);
     let read_half = stream.try_clone().map_err(|e| format!("clone stream: {e}"))?;
     let mut reader = BufReader::new(read_half);
@@ -424,7 +542,7 @@ pub fn serve(stream: TcpStream) -> Result<(), String> {
     loop {
         let (op, payload) = match read_frame(&mut reader) {
             Ok(Some(f)) => f,
-            Ok(None) => return Ok(()), // master disconnected
+            Ok(None) => return Ok(false), // master disconnected
             Err(e) => return Err(format!("read: {e}")),
         };
         let frame = MasterFrame::decode(op, &payload).map_err(|e| format!("decode: {e}"))?;
@@ -438,7 +556,7 @@ pub fn serve(stream: TcpStream) -> Result<(), String> {
                     }
                     Err(e) => {
                         reply(&mut writer, &WorkerFrame::Ready { error: Some(e) })?;
-                        return Ok(());
+                        return Ok(false);
                     }
                 }
             }
@@ -450,7 +568,7 @@ pub fn serve(stream: TcpStream) -> Result<(), String> {
                 Some(en) => reply(&mut writer, &WorkerFrame::Result(en.step(iter, &w)))?,
                 None => return Err("protocol: Step before Hello".to_string()),
             },
-            MasterFrame::Shutdown => return Ok(()),
+            MasterFrame::Shutdown => return Ok(true),
         }
     }
 }
@@ -553,6 +671,65 @@ mod tests {
         assert!(sent > 0 && received > 0, "handshake + step must be charged");
         t.shutdown();
         server.join().unwrap();
+    }
+
+    #[test]
+    fn reconnect_redials_and_suppresses_stale_down() {
+        use crate::compute::WorkerComputation;
+        let listener = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap().to_string();
+        // Worker side: keep accepting until an explicit Shutdown, exactly
+        // like the CLI's `--worker` loop — this is what lets a supervising
+        // master redial after a connection dies.
+        let server = std::thread::spawn(move || loop {
+            let (stream, _) = listener.accept().unwrap();
+            if serve(stream).unwrap_or(false) {
+                return;
+            }
+        });
+
+        let mut s = spec();
+        s.id = 0;
+        s.fail_from_iter = None;
+        s.slow_ms = 0;
+        let f = s.field;
+        let (rows, d) = (s.rows, s.d);
+        let wc = WorkerComputation::new(f, rows, d, s.coeffs.clone());
+        let cfg = TcpConfig { workers: vec![addr], ..TcpConfig::default() };
+        let (mut t, down) = TcpTransport::connect(&[s.clone()], &cfg).unwrap();
+        assert_eq!(down, vec![None]);
+
+        let x: Vec<u64> = (1..=(rows * d) as u64).collect();
+        let w = vec![2u64, 4, 6];
+        t.send_load(0, x.clone(), None).unwrap();
+
+        // Reconnect replaces the live connection (the worker loops back to
+        // accept), bumps the generation, and the old reader's Down must
+        // not surface afterwards.
+        t.reconnect(&s).unwrap();
+        t.send_load(0, x.clone(), None).unwrap();
+        t.send_step(0, 1, w.clone()).unwrap();
+        match t
+            .recv_deadline(&Deadline::after_ms(5000))
+            .unwrap()
+            .expect("result before deadline")
+        {
+            TransportEvent::Result(res) => {
+                assert_eq!((res.worker, res.iter), (0, 1));
+                assert_eq!(res.data.unwrap(), wc.compute(&x, &w));
+            }
+            TransportEvent::Down { error, .. } => {
+                panic!("stale Down leaked through reconnect: {error}")
+            }
+        }
+        t.shutdown();
+        server.join().unwrap();
+    }
+
+    #[test]
+    fn addr_seed_is_deterministic_and_decorrelated() {
+        assert_eq!(addr_seed("127.0.0.1:4001"), addr_seed("127.0.0.1:4001"));
+        assert_ne!(addr_seed("127.0.0.1:4001"), addr_seed("127.0.0.1:4002"));
     }
 
     #[test]

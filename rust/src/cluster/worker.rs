@@ -23,7 +23,7 @@ use super::transport::{
 use crate::field::PrimeField;
 use crate::runtime::{BackendKind, WorkerBackend};
 use crate::util::par::Parallelism;
-use crate::util::timer::timed;
+use crate::util::timer::{timed, Deadline};
 use std::path::PathBuf;
 
 /// What the worker computes each step.
@@ -346,23 +346,53 @@ impl Cluster {
     /// worker eventually answers or dies. Passing `need = n()` degenerates
     /// to a full collection.
     pub fn collect_first(&mut self, need: usize, iter: u64) -> Result<Round, ClusterError> {
+        self.collect_deadline(need, iter, &Deadline::none())
+    }
+
+    /// [`Cluster::collect_first`] with a wall-clock budget: when `deadline`
+    /// expires first, every still-outstanding worker is charged a
+    /// synthesized `"round deadline expired"` failure, the round's
+    /// `deadline_expired` flag is set, and the (now complete) round is
+    /// returned — a silently-stalled worker becomes a counted failure
+    /// instead of a master hang. [`Deadline::none`] restores the
+    /// unbounded behavior exactly.
+    pub fn collect_deadline(
+        &mut self,
+        need: usize,
+        iter: u64,
+        deadline: &Deadline,
+    ) -> Result<Round, ClusterError> {
         let n = self.transport.n();
-        let (collected, wall_secs) = timed(|| -> Result<Round, ClusterError> {
-            let mut round = Round::new(iter, need, n);
-            for w in 0..n {
-                if let Some(e) = &self.down[w] {
-                    round.absorb(StepResult {
-                        worker: w,
-                        iter,
-                        data: Err(format!("worker down: {e}")),
-                        compute_secs: 0.0,
-                    });
-                }
+        let mut round = Round::new(iter, need, n);
+        for w in 0..n {
+            if let Some(e) = &self.down[w] {
+                round.absorb(StepResult {
+                    worker: w,
+                    iter,
+                    data: Err(format!("worker down: {e}")),
+                    compute_secs: 0.0,
+                });
             }
+        }
+        self.collect_resume(&mut round, deadline)?;
+        Ok(round)
+    }
+
+    /// Continue collecting into an existing round until it completes or
+    /// `deadline` expires. Used for the initial collection and again by
+    /// the supervisor after it heals failures mid-round (revive +
+    /// re-dispatch): healed workers reopen the round, and this waits for
+    /// their replacement results. Wall time accumulates across resumes.
+    pub fn collect_resume(
+        &mut self,
+        round: &mut Round,
+        deadline: &Deadline,
+    ) -> Result<(), ClusterError> {
+        let (res, wall_secs) = timed(|| -> Result<(), ClusterError> {
             while !round.complete() {
-                match self.transport.recv()? {
-                    TransportEvent::Result(res) => round.absorb(res),
-                    TransportEvent::Down { worker, error } => {
+                match self.transport.recv_deadline(deadline)? {
+                    Some(TransportEvent::Result(res)) => round.absorb(res),
+                    Some(TransportEvent::Down { worker, error }) => {
                         // First notice of this death: count it against the
                         // current round. (Subsequent rounds charge it via
                         // the up-front down scan above.)
@@ -370,19 +400,87 @@ impl Cluster {
                             self.down[worker] = Some(error.clone());
                             round.absorb(StepResult {
                                 worker,
-                                iter,
+                                iter: round.iter,
                                 data: Err(format!("worker down: {error}")),
                                 compute_secs: 0.0,
                             });
                         }
                     }
+                    None => {
+                        // Deadline expired. Charge every outstanding worker
+                        // one synthesized failure so the round completes
+                        // and the caller can decide: heal, degrade to
+                        // approximate decode, or abort.
+                        round.deadline_expired = true;
+                        for w in self.outstanding(round) {
+                            round.absorb(StepResult {
+                                worker: w,
+                                iter: round.iter,
+                                data: Err("round deadline expired".to_string()),
+                                compute_secs: 0.0,
+                            });
+                        }
+                        return Ok(());
+                    }
                 }
             }
-            Ok(round)
+            Ok(())
         });
-        let mut round = collected?;
-        round.wall_secs = wall_secs;
-        Ok(round)
+        round.wall_secs += wall_secs;
+        res
+    }
+
+    /// Workers with no entry yet in this round's accounting (no result,
+    /// no live failure, no healed failure).
+    fn outstanding(&self, round: &Round) -> Vec<usize> {
+        let n = self.transport.n();
+        let mut seen = vec![false; n];
+        for r in &round.results {
+            if r.worker < n {
+                seen[r.worker] = true;
+            }
+        }
+        for (w, _) in round.failures.iter().chain(round.healed.iter()) {
+            if *w < n {
+                seen[*w] = true;
+            }
+        }
+        (0..n).filter(|&w| !seen[w]).collect()
+    }
+
+    /// Re-admit a down (or stalled) worker: reconnect its transport slot,
+    /// clear the down mark, and re-ship its coded data share. On failure
+    /// the worker stays down and the error says why — the supervisor may
+    /// retry on a later round.
+    pub fn revive(
+        &mut self,
+        spec: &WorkerSpec,
+        x: Vec<u64>,
+        y: Option<Vec<u64>>,
+    ) -> Result<(), String> {
+        let w = spec.id;
+        assert!(w < self.down.len(), "worker id {w} out of range");
+        self.transport.reconnect(spec)?;
+        self.down[w] = None;
+        if let Err(e) = self.transport.send_load(w, x, y) {
+            self.down[w] = Some(e.clone());
+            return Err(e);
+        }
+        Ok(())
+    }
+
+    /// Send iteration `iter`'s coded weights to one worker (used to bring
+    /// a freshly revived worker into the current round). A send failure
+    /// re-marks it down.
+    pub fn dispatch_to(&mut self, worker: usize, iter: u64, w: Vec<u64>) -> Result<(), String> {
+        if let Some(e) = &self.down[worker] {
+            return Err(format!("worker down: {e}"));
+        }
+        if let Err(e) = self.transport.send_step(worker, iter, w) {
+            self.down[worker] = Some(e.clone());
+            return Err(e);
+        }
+        Ok(())
     }
 }
 
@@ -522,6 +620,49 @@ mod tests {
         let got = round.results[0].data.as_ref().unwrap().clone();
         // Xw = [3, 7]; resid = [-2, 1]; Xᵀresid = [1·-2+3·1, 2·-2+4·1] = [1, 0]
         assert_eq!(got, vec![f.from_i64(1), f.from_i64(0)]);
+    }
+
+    #[test]
+    fn collect_deadline_turns_stalled_worker_into_failure() {
+        // Worker 1 sleeps 500 ms per step; a 100 ms round deadline must
+        // convert it into a counted failure instead of a hang.
+        let mut s = specs(2, 2, 2, WorkerOp::Logistic);
+        s[1].slow_ms = 500;
+        let mut cluster = Cluster::spawn(s).unwrap();
+        cluster.load_data(vec![vec![1, 2, 3, 4]; 2], None).unwrap();
+        cluster.dispatch(0, vec![vec![1, 2]; 2]).unwrap();
+        let round = cluster
+            .collect_deadline(2, 0, &Deadline::after_ms(100))
+            .unwrap();
+        assert!(round.deadline_expired);
+        assert!(round.complete() && !round.ok());
+        assert_eq!(round.results.len(), 1);
+        assert_eq!(round.failures.len(), 1);
+        assert_eq!(round.failures[0].0, 1);
+        assert!(round.failures[0].1.contains("deadline"), "{:?}", round.failures);
+    }
+
+    #[test]
+    fn revive_respawns_inmemory_worker_and_it_rejoins() {
+        let mut s = specs(2, 2, 2, WorkerOp::Logistic);
+        s[1].fail_from_iter = Some(0); // fails every step from the start
+        let mut cluster = Cluster::spawn(s.clone()).unwrap();
+        cluster.load_data(vec![vec![1, 2, 3, 4]; 2], None).unwrap();
+        cluster.dispatch(0, vec![vec![1, 2]; 2]).unwrap();
+        let round = cluster.collect_first(2, 0).unwrap();
+        assert!(!round.ok(), "chaos worker must fail the full collection");
+
+        // Supervisor-style heal: replacement spec without the chaos hook,
+        // share re-shipped, and the worker answers from the next dispatch.
+        let mut healthy = s[1].clone();
+        healthy.fail_from_iter = None;
+        cluster.revive(&healthy, vec![1, 2, 3, 4], None).unwrap();
+        cluster.dispatch(1, vec![vec![1, 2]; 2]).unwrap();
+        let round1 = cluster.collect_first(2, 1).unwrap();
+        assert!(round1.ok(), "revived worker rejoins: {:?}", round1.failures);
+        let mut workers: Vec<usize> = round1.results.iter().map(|r| r.worker).collect();
+        workers.sort_unstable();
+        assert_eq!(workers, vec![0, 1]);
     }
 
     #[test]

@@ -66,6 +66,30 @@ pub struct WorkerResult {
     pub data: Vec<u64>,
 }
 
+/// Result of a degraded-mode decode ([`Decoder::decode_approx`]).
+#[derive(Debug, Clone)]
+pub struct ApproxDecode {
+    /// One decoded vector per requested block (order follows the `blocks`
+    /// argument), same shape as the exact path's output.
+    pub blocks: Vec<Vec<u64>>,
+    /// RMS least-squares fit residual in centered-lift units, over all
+    /// (result, element) pairs. 0.0 when the exact path was taken. Large
+    /// residuals mean the available evaluations are not consistent with a
+    /// low-degree real polynomial — i.e. the estimate is unreliable (with
+    /// T ≥ 1 masks that is the *expected* regime; see the method docs).
+    pub residual: f64,
+    /// Results actually consumed (R′).
+    pub used: usize,
+    /// True when ≥ R results were available and the exact decoder ran.
+    pub exact: bool,
+}
+
+/// Degree cap for the degraded-mode least-squares fit.
+const APPROX_DEGREE_CAP: usize = 3;
+/// Ridge regularizer added to the normal equations — keeps them SPD (and
+/// every elimination pivot nonzero) even for degenerate abscissae.
+const APPROX_RIDGE: f64 = 1e-9;
+
 /// Decoder with per-subset coefficient cache.
 #[derive(Debug)]
 pub struct Decoder {
@@ -237,6 +261,161 @@ impl Decoder {
         Ok(out)
     }
 
+    /// Degraded-mode decode from R′ < R results (least-squares over the
+    /// available evaluations), falling through to the exact path whenever
+    /// ≥ R results are present.
+    ///
+    /// **What this is — and is not.** With privacy masks (T ≥ 1) the
+    /// coded evaluations are information-theoretically uniform to any
+    /// R′ < R subset: no estimator can recover the true sub-results from
+    /// too few shares, and this method does not claim to. It is a
+    /// *liveness* mechanism in the spirit of Approximated Coded Computing
+    /// (arXiv:2406.04747): when the live pool dips below R mid-training,
+    /// the session can keep stepping on a bounded surrogate gradient
+    /// instead of aborting, then resume exact decoding the moment the
+    /// pool heals. The surrogate is a degree-capped polynomial fit in a
+    /// *real* surrogate coordinate (worker index mapped into [−1, 1], the
+    /// same for the K block targets), on the centered lifts of the
+    /// available values, ridge-regularized and clipped to ±`clip`. The
+    /// returned [`ApproxDecode::residual`] quantifies how badly the fit
+    /// explains the data — callers surface it per-iteration so the
+    /// degraded rounds are auditable, and the accompanying weight-clip
+    /// keeps a garbage round from destroying the trajectory. Exact rounds
+    /// (the common case) are bit-identical to [`Decoder::decode_blocks`].
+    ///
+    /// `clip` bounds each output's centered magnitude; 0 means "field
+    /// half-range" (no extra clipping). Callers are expected to enforce
+    /// their R_min floor *before* calling; here only R′ ≥ 1 plus the
+    /// usual validation is required.
+    pub fn decode_approx(
+        &mut self,
+        results: &[WorkerResult],
+        d: usize,
+        blocks: &[usize],
+        clip: u64,
+    ) -> Result<ApproxDecode, DecodeError> {
+        let need = self.params.recovery_threshold();
+        if results.len() >= need {
+            let out = self.decode_blocks(results, d, blocks)?;
+            return Ok(ApproxDecode { blocks: out, residual: 0.0, used: need, exact: true });
+        }
+        assert!(
+            blocks.iter().all(|&b| b < self.params.k),
+            "block index out of range (K = {})",
+            self.params.k
+        );
+        if results.is_empty() {
+            return Err(DecodeError::NotEnoughResults { need, have: 0 });
+        }
+        let mut seen = vec![false; self.params.n];
+        for r in results {
+            if r.worker >= self.params.n {
+                return Err(DecodeError::UnknownWorker(r.worker));
+            }
+            if seen[r.worker] {
+                return Err(DecodeError::DuplicateWorker(r.worker));
+            }
+            seen[r.worker] = true;
+            if r.data.len() != d {
+                return Err(DecodeError::ShapeMismatch { want: d, got: r.data.len() });
+            }
+        }
+
+        let rp = results.len();
+        let n = self.params.n as f64;
+        let cols = rp.saturating_sub(1).min(APPROX_DEGREE_CAP) + 1;
+        // Surrogate abscissae: worker / block indices mapped into [−1, 1].
+        let u: Vec<f64> = results
+            .iter()
+            .map(|r| -1.0 + 2.0 * (r.worker as f64 + 0.5) / n)
+            .collect();
+        // Vandermonde A (R′ × cols), normal matrix M = AᵀA + λI, and the
+        // pseudo-inverse apply P = M⁻¹Aᵀ (cols × R′).
+        let a: Vec<Vec<f64>> = u
+            .iter()
+            .map(|&ui| {
+                let mut row = Vec::with_capacity(cols);
+                let mut pw = 1.0;
+                for _ in 0..cols {
+                    row.push(pw);
+                    pw *= ui;
+                }
+                row
+            })
+            .collect();
+        let mut m = vec![vec![0.0f64; cols]; cols];
+        for i in 0..cols {
+            for j in 0..cols {
+                m[i][j] = (0..rp).map(|r| a[r][i] * a[r][j]).sum();
+            }
+            m[i][i] += APPROX_RIDGE;
+        }
+        let at: Vec<Vec<f64>> = (0..cols).map(|j| (0..rp).map(|i| a[i][j]).collect()).collect();
+        let p_mat = solve_spd(m, at);
+        // G = E·P: one weight row per requested block; estimate_k = G_k·y.
+        let kf = self.params.k as f64;
+        let g: Vec<Vec<f64>> = blocks
+            .iter()
+            .map(|&b| {
+                let v = -1.0 + 2.0 * (b as f64 + 0.5) / kf;
+                (0..rp)
+                    .map(|i| {
+                        let mut s = 0.0;
+                        let mut pw = 1.0;
+                        for row in p_mat.iter() {
+                            s += pw * row[i];
+                            pw *= v;
+                        }
+                        s
+                    })
+                    .collect()
+            })
+            .collect();
+
+        let f = self.field;
+        let p_mod = f.modulus();
+        let half = (p_mod - 1) / 2;
+        let bound = if clip == 0 { half as f64 } else { clip.min(half) as f64 };
+        let mut sq = 0.0f64;
+        let mut out: Vec<Vec<u64>> = blocks.iter().map(|_| vec![0u64; d]).collect();
+        for e in 0..d {
+            // Centered lifts of the available evaluations.
+            let y: Vec<f64> = results
+                .iter()
+                .map(|r| {
+                    let v = r.data[e];
+                    if v > half {
+                        v as f64 - p_mod as f64
+                    } else {
+                        v as f64
+                    }
+                })
+                .collect();
+            // Fit residual: y − A·(P·y), accumulated across elements.
+            let c: Vec<f64> = p_mat
+                .iter()
+                .map(|row| (0..rp).map(|i| row[i] * y[i]).sum())
+                .collect();
+            for i in 0..rp {
+                let fit: f64 = (0..cols).map(|j| a[i][j] * c[j]).sum();
+                let res = y[i] - fit;
+                sq += res * res;
+            }
+            for (kk, grow) in g.iter().enumerate() {
+                let est: f64 = (0..rp).map(|i| grow[i] * y[i]).sum();
+                let est = est.clamp(-bound, bound).round();
+                out[kk][e] = if est < 0.0 {
+                    p_mod - ((-est) as u64)
+                } else {
+                    est as u64
+                };
+                debug_assert!(out[kk][e] < p_mod);
+            }
+        }
+        let residual = (sq / (rp * d) as f64).sqrt();
+        Ok(ApproxDecode { blocks: out, residual, used: rp, exact: false })
+    }
+
     /// The K×R coefficient matrix for one sorted worker subset.
     fn subset_rows(&self, key: &[u32]) -> Vec<Vec<u64>> {
         if let Some(layout) = self.points.coset {
@@ -325,6 +504,51 @@ impl Decoder {
             })
             .collect()
     }
+}
+
+/// Gauss–Jordan solve of M·X = B for the degraded-mode fit. M is the
+/// ridge-regularized normal matrix ((q+1)² with q ≤ 3, SPD by
+/// construction — the λI term bounds every pivot away from zero), B holds
+/// Aᵀ's rows. Partial pivoting plus a zero-pivot guard keep this total:
+/// no division by zero, no panic path.
+fn solve_spd(mut m: Vec<Vec<f64>>, mut b: Vec<Vec<f64>>) -> Vec<Vec<f64>> {
+    let nn = m.len();
+    for col in 0..nn {
+        let mut piv = col;
+        for r in col + 1..nn {
+            if m[r][col].abs() > m[piv][col].abs() {
+                piv = r;
+            }
+        }
+        m.swap(col, piv);
+        b.swap(col, piv);
+        let diag = m[col][col];
+        let inv = if diag.abs() > f64::MIN_POSITIVE { 1.0 / diag } else { 0.0 };
+        for j in col..nn {
+            m[col][j] *= inv;
+        }
+        for v in b[col].iter_mut() {
+            *v *= inv;
+        }
+        for r in 0..nn {
+            if r == col {
+                continue;
+            }
+            let factor = m[r][col];
+            if factor == 0.0 {
+                continue;
+            }
+            for j in col..nn {
+                let sub = factor * m[col][j];
+                m[r][j] -= sub;
+            }
+            for j in 0..b[r].len() {
+                let sub = factor * b[col][j];
+                b[r][j] -= sub;
+            }
+        }
+    }
+    b
 }
 
 #[cfg(test)]
@@ -610,6 +834,124 @@ mod tests {
         results.reverse();
         let b = dec.decode(&results, d).unwrap();
         assert_eq!(a, b);
+    }
+
+    #[test]
+    fn approx_with_enough_results_delegates_to_exact() {
+        let f = PrimeField::new(PAPER_PRIME);
+        let params = CodingParams::new(10, 3, 1, 1).unwrap();
+        let enc = Encoder::new(f, params);
+        let mut rng = Rng::new(55);
+        let d = 4;
+        let results: Vec<WorkerResult> = (0..params.recovery_threshold())
+            .map(|w| WorkerResult { worker: w, data: f.random_matrix(&mut rng, d, 1) })
+            .collect();
+        let all: Vec<usize> = (0..3).collect();
+        let mut dec = Decoder::new(f, params, enc.points.clone());
+        let exact = dec.decode(&results, d).unwrap();
+        let approx = dec.decode_approx(&results, d, &all, 0).unwrap();
+        assert!(approx.exact);
+        assert_eq!(approx.residual, 0.0);
+        assert_eq!(approx.used, params.recovery_threshold());
+        assert_eq!(approx.blocks, exact, "≥R results must be bit-identical to decode()");
+    }
+
+    #[test]
+    fn approx_recovers_constant_signal_from_partial_results() {
+        // Every worker reporting the same vector is a degree-0 polynomial
+        // in any coordinate system: the fit is exact, the residual ~0, and
+        // every block estimate equals the shared value — including
+        // negative (centered) values.
+        let f = PrimeField::new(PAPER_PRIME);
+        let params = CodingParams::new(10, 3, 1, 1).unwrap(); // need 10
+        let enc = Encoder::new(f, params);
+        let mut dec = Decoder::new(f, params, enc.points.clone());
+        let value = vec![5u64, f.from_i64(-3), 17];
+        let results: Vec<WorkerResult> = (0..6)
+            .map(|w| WorkerResult { worker: w, data: value.clone() })
+            .collect();
+        let out = dec.decode_approx(&results, 3, &[0, 1, 2], 0).unwrap();
+        assert!(!out.exact);
+        assert_eq!(out.used, 6);
+        assert!(out.residual < 1e-6, "residual {}", out.residual);
+        for (kk, block) in out.blocks.iter().enumerate() {
+            assert_eq!(block, &value, "block {kk}");
+        }
+    }
+
+    #[test]
+    fn approx_clip_bounds_every_output() {
+        let f = PrimeField::new(PAPER_PRIME);
+        let params = CodingParams::new(10, 2, 1, 1).unwrap();
+        let enc = Encoder::new(f, params);
+        let mut dec = Decoder::new(f, params, enc.points.clone());
+        let results: Vec<WorkerResult> = (0..4)
+            .map(|w| WorkerResult { worker: w, data: vec![100_000, f.from_i64(-100_000)] })
+            .collect();
+        let out = dec.decode_approx(&results, 2, &[0, 1], 10).unwrap();
+        let half = (PAPER_PRIME - 1) / 2;
+        for block in &out.blocks {
+            for &v in block {
+                let centered = if v > half { v as i64 - PAPER_PRIME as i64 } else { v as i64 };
+                assert!(centered.abs() <= 10, "clip violated: {centered}");
+            }
+        }
+        assert_eq!(out.blocks[0][0], 10);
+        assert_eq!(out.blocks[0][1], f.from_i64(-10));
+    }
+
+    #[test]
+    fn approx_validates_like_exact_decode() {
+        let f = PrimeField::new(PAPER_PRIME);
+        let params = CodingParams::new(10, 2, 1, 1).unwrap();
+        let enc = Encoder::new(f, params);
+        let mut dec = Decoder::new(f, params, enc.points.clone());
+        let blocks = [0usize, 1];
+        assert_eq!(
+            dec.decode_approx(&[], 2, &blocks, 0).unwrap_err(),
+            DecodeError::NotEnoughResults { need: 10, have: 0 }
+        );
+        let dup = vec![
+            WorkerResult { worker: 1, data: vec![1, 2] },
+            WorkerResult { worker: 1, data: vec![3, 4] },
+        ];
+        assert_eq!(
+            dec.decode_approx(&dup, 2, &blocks, 0).unwrap_err(),
+            DecodeError::DuplicateWorker(1)
+        );
+        let bad = vec![WorkerResult { worker: 0, data: vec![1] }];
+        assert_eq!(
+            dec.decode_approx(&bad, 2, &blocks, 0).unwrap_err(),
+            DecodeError::ShapeMismatch { want: 2, got: 1 }
+        );
+        let unk = vec![WorkerResult { worker: 42, data: vec![1, 2] }];
+        assert_eq!(
+            dec.decode_approx(&unk, 2, &blocks, 0).unwrap_err(),
+            DecodeError::UnknownWorker(42)
+        );
+    }
+
+    #[test]
+    fn approx_fits_linear_trend_with_small_residual() {
+        // Values linear in the surrogate coordinate u_w = −1 + 2(w+.5)/N:
+        // with N = 10, y_w = 2w − 9 = 10·u_w is exactly representable by
+        // the degree-capped fit, so estimates interpolate the trend and
+        // the residual collapses.
+        let f = PrimeField::new(PAPER_PRIME);
+        let params = CodingParams::new(10, 2, 1, 1).unwrap();
+        let enc = Encoder::new(f, params);
+        let mut dec = Decoder::new(f, params, enc.points.clone());
+        let results: Vec<WorkerResult> = (0..5)
+            .map(|w| WorkerResult {
+                worker: w,
+                data: vec![f.from_i64(2 * w as i64 - 9)],
+            })
+            .collect();
+        let out = dec.decode_approx(&results, 1, &[0, 1], 0).unwrap();
+        assert!(out.residual < 1e-6, "residual {}", out.residual);
+        // Block targets v_0 = −0.5, v_1 = 0.5 → estimates 10·v = ∓5.
+        assert_eq!(out.blocks[0][0], f.from_i64(-5));
+        assert_eq!(out.blocks[1][0], f.from_i64(5));
     }
 
     #[test]

@@ -27,7 +27,7 @@ pub mod decoder;
 mod encoder;
 mod params;
 
-pub use decoder::{DecodeError, Decoder, WorkerResult};
+pub use decoder::{ApproxDecode, DecodeError, Decoder, WorkerResult};
 pub use encoder::{EncodedShare, Encoder};
 pub use params::{CodingParams, ParamError};
 

@@ -181,6 +181,31 @@ pub struct CodedMlConfig {
     /// Max cached decoder subsets (LRU; 0 = unbounded). CLI
     /// `--decode-cache-cap`, JSON `decode_cache_cap`.
     pub decode_cache_cap: usize,
+    /// Per-round collection deadline in milliseconds (0 = wait forever,
+    /// the pre-supervision behavior). When it fires, workers that have
+    /// neither answered nor failed are charged a round failure and the
+    /// round proceeds with whatever arrived — feeding the supervision /
+    /// degraded-decode ladder. CLI `--round-deadline-ms`.
+    pub round_deadline_ms: u64,
+    /// Degraded mode: when a round ends with fewer than R usable results,
+    /// fall back to least-squares approximate decoding
+    /// ([`crate::coding::Decoder::decode_approx`]) instead of aborting.
+    /// The per-iteration fit residual is surfaced via tracer events and
+    /// [`super::report::TrainReport::max_approx_residual`]. CLI
+    /// `--approx-decode`.
+    pub approx_decode: bool,
+    /// Hard floor for degraded mode: abort (structured error) when fewer
+    /// than this many usable results remain. 0 = auto (K + T). The
+    /// effective floor is always at least K + T. CLI `--approx-r-min`.
+    pub approx_r_min: usize,
+    /// Per-worker heal budget: how many times the supervisor may revive a
+    /// failed worker (TCP redial / in-memory respawn + share re-ship).
+    /// 0 disables supervision entirely. CLI `--max-respawns`.
+    pub max_respawns: u32,
+    /// Let the [`crate::cluster::DeadlineController`] tighten the round
+    /// deadline to mean + 4σ of observed round wall times (never above
+    /// `round_deadline_ms` when that is set). CLI `--adaptive-deadline`.
+    pub adaptive_deadline: bool,
 }
 
 impl Default for CodedMlConfig {
@@ -216,6 +241,11 @@ impl Default for CodedMlConfig {
             transport: TransportConfig::default(),
             coding_backend: CodingBackendChoice::Auto,
             decode_cache_cap: crate::coding::decoder::DEFAULT_CACHE_CAP,
+            round_deadline_ms: 0,
+            approx_decode: false,
+            approx_r_min: 0,
+            max_respawns: 0,
+            adaptive_deadline: false,
         }
     }
 }
@@ -273,6 +303,12 @@ impl CodedMlConfig {
             return Err(ConfigError::BadShape(format!(
                 "batch_blocks={} exceeds K={}",
                 self.batch_blocks, self.k
+            )));
+        }
+        if self.approx_r_min > self.n {
+            return Err(ConfigError::BadShape(format!(
+                "approx_r_min={} exceeds n={} (no round can ever reach it)",
+                self.approx_r_min, self.n
             )));
         }
         if self.transport.kind == TransportKind::Tcp
@@ -451,6 +487,24 @@ impl CodedMlConfig {
                     self.decode_cache_cap =
                         val.as_usize().ok_or("decode_cache_cap: want integer")?
                 }
+                "round_deadline_ms" => {
+                    self.round_deadline_ms =
+                        val.as_u64().ok_or("round_deadline_ms: want integer")?
+                }
+                "approx_decode" => {
+                    self.approx_decode = val.as_bool().ok_or("approx_decode: want bool")?
+                }
+                "approx_r_min" => {
+                    self.approx_r_min = val.as_usize().ok_or("approx_r_min: want integer")?
+                }
+                "max_respawns" => {
+                    self.max_respawns =
+                        val.as_u64().ok_or("max_respawns: want integer")? as u32
+                }
+                "adaptive_deadline" => {
+                    self.adaptive_deadline =
+                        val.as_bool().ok_or("adaptive_deadline: want bool")?
+                }
                 other => return Err(format!("unknown config key '{other}'")),
             }
         }
@@ -527,6 +581,11 @@ impl CodedMlConfig {
             ),
             ("coding_backend", Json::Str(self.coding_backend.to_string())),
             ("decode_cache_cap", Json::Num(self.decode_cache_cap as f64)),
+            ("round_deadline_ms", Json::Num(self.round_deadline_ms as f64)),
+            ("approx_decode", Json::Bool(self.approx_decode)),
+            ("approx_r_min", Json::Num(self.approx_r_min as f64)),
+            ("max_respawns", Json::Num(self.max_respawns as f64)),
+            ("adaptive_deadline", Json::Bool(self.adaptive_deadline)),
         ];
         if let Some(eta) = self.eta {
             fields.push(("eta", Json::Num(eta)));
@@ -659,6 +718,11 @@ mod tests {
             },
             coding_backend: CodingBackendChoice::Ntt,
             decode_cache_cap: 64,
+            round_deadline_ms: 250,
+            approx_decode: true,
+            approx_r_min: 6,
+            max_respawns: 2,
+            adaptive_deadline: true,
         };
         let text = cfg.to_json().to_string();
         let mut restored = CodedMlConfig::default();
@@ -737,6 +801,34 @@ mod tests {
         assert_eq!(cfg.coding_backend, CodingBackendChoice::Dense);
         assert!(cfg.apply_json(r#"{"coding_backend": "fft"}"#).is_err());
         assert!(cfg.apply_json(r#"{"decode_cache_cap": "lots"}"#).is_err());
+    }
+
+    #[test]
+    fn json_fault_tolerance_keys_apply() {
+        let mut cfg = CodedMlConfig::default();
+        cfg.apply_json(
+            r#"{"round_deadline_ms": 150, "approx_decode": true,
+                "approx_r_min": 5, "max_respawns": 3,
+                "adaptive_deadline": true}"#,
+        )
+        .unwrap();
+        assert_eq!(cfg.round_deadline_ms, 150);
+        assert!(cfg.approx_decode);
+        assert_eq!(cfg.approx_r_min, 5);
+        assert_eq!(cfg.max_respawns, 3);
+        assert!(cfg.adaptive_deadline);
+        assert!(cfg.apply_json(r#"{"approx_decode": "yes"}"#).is_err());
+    }
+
+    #[test]
+    fn approx_r_min_bounded_by_n() {
+        let cfg = CodedMlConfig { approx_r_min: 11, ..Default::default() }; // n = 10
+        match cfg.validate(300, 1.0) {
+            Err(ConfigError::BadShape(msg)) => assert!(msg.contains("approx_r_min"), "{msg}"),
+            other => panic!("expected BadShape, got {other:?}"),
+        }
+        let cfg = CodedMlConfig { approx_r_min: 10, ..Default::default() };
+        cfg.validate(300, 1.0).unwrap();
     }
 
     #[test]

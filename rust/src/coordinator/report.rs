@@ -67,6 +67,17 @@ pub struct TrainReport {
     /// Results that arrived after their round had already completed and
     /// were drained without decoding (the early-exit engine's discards).
     pub late_results: u64,
+    /// Rounds decoded in degraded (approximate least-squares) mode
+    /// because fewer than R usable results arrived before the deadline.
+    pub approx_rounds: u64,
+    /// Largest RMS fit residual any approximate decode reported
+    /// (centered-lift units; 0.0 when every round decoded exactly).
+    pub max_approx_residual: f64,
+    /// Failed workers the supervisor successfully revived (TCP redial or
+    /// in-memory respawn, plus share re-ship).
+    pub respawns: u64,
+    /// Rounds whose collection deadline fired before R results arrived.
+    pub deadline_expired_rounds: u64,
 }
 
 impl TrainReport {
@@ -98,6 +109,13 @@ impl TrainReport {
             ("bytes_received", Json::Num(self.bytes_received as f64)),
             ("worker_failures", Json::Num(self.worker_failures as f64)),
             ("late_results", Json::Num(self.late_results as f64)),
+            ("approx_rounds", Json::Num(self.approx_rounds as f64)),
+            ("max_approx_residual", Json::Num(self.max_approx_residual)),
+            ("respawns", Json::Num(self.respawns as f64)),
+            (
+                "deadline_expired_rounds",
+                Json::Num(self.deadline_expired_rounds as f64),
+            ),
             (
                 "loss_curve",
                 Json::Arr(self.iterations.iter().map(|m| Json::Num(m.train_loss)).collect()),
@@ -143,6 +161,10 @@ mod tests {
         assert_eq!(parsed.get("total_s").unwrap().as_f64(), Some(3.5));
         assert_eq!(parsed.get("worker_failures").unwrap().as_u64(), Some(0));
         assert_eq!(parsed.get("late_results").unwrap().as_u64(), Some(0));
+        assert_eq!(parsed.get("approx_rounds").unwrap().as_u64(), Some(0));
+        assert_eq!(parsed.get("max_approx_residual").unwrap().as_f64(), Some(0.0));
+        assert_eq!(parsed.get("respawns").unwrap().as_u64(), Some(0));
+        assert_eq!(parsed.get("deadline_expired_rounds").unwrap().as_u64(), Some(0));
         let curve = parsed.get("loss_curve").unwrap().as_arr().unwrap();
         assert_eq!(curve.len(), 2);
         assert_eq!(parsed.get("accuracy_curve").unwrap().as_arr().unwrap()[1], Json::Null);

@@ -6,7 +6,7 @@
 use super::config::{CodedMlConfig, CompMode, ConfigError};
 use super::objective::{CodedObjective, LinearObjective, LogisticObjective};
 use super::report::{IterationMetrics, TimingBreakdown, TrainReport};
-use crate::cluster::{Cluster, ClusterError, WorkerSpec};
+use crate::cluster::{Cluster, ClusterError, DeadlineController, Supervisor, WorkerSpec};
 use crate::coding::decoder::WorkerResult;
 use crate::coding::{
     CodingBackend, CodingBackendChoice, CodingParams, DecodeError, Decoder, Encoder, EvalPoints,
@@ -15,6 +15,7 @@ use crate::data::Dataset;
 use crate::field::PrimeField;
 use crate::model::matvec;
 use crate::quant::{DatasetQuantizer, WeightQuantizer};
+use crate::util::timer::Deadline;
 use crate::util::{Rng, Stopwatch};
 
 /// Errors surfaced during training.
@@ -102,6 +103,21 @@ pub struct CodedMlSession<O: CodedObjective = LogisticObjective> {
     failures: u64,
     /// Stale results drained by later rounds without decoding.
     late: u64,
+    /// Worker supervision (revive + re-dispatch), present when
+    /// `cfg.max_respawns > 0`. Owns clones of the specs and encoded
+    /// shares so a revived worker is handed exactly its predecessor's
+    /// data — never re-encoded, so exact decodes stay bit-identical.
+    supervisor: Option<Supervisor>,
+    /// Per-round deadline policy (static and/or adaptive).
+    deadline_ctl: DeadlineController,
+    /// Clip bound handed to approximate decodes: tracked from the exact
+    /// decodes actually seen (2× the largest centered lift), so a
+    /// degraded round cannot produce estimates wildly outside the
+    /// gradient range the run has exhibited.
+    approx_clip: u64,
+    approx_rounds: u64,
+    max_approx_residual: f64,
+    deadline_expired_rounds: u64,
     /// Overflow-budget warning from configuration time, surfaced through
     /// [`CodedMlSession::budget_warning`] instead of printed (the library
     /// never writes to stdio; the CLI decides what to show).
@@ -246,13 +262,23 @@ impl<O: CodedObjective> CodedMlSession<O> {
                 par: cfg.parallelism,
             })
             .collect();
+        // Supervision needs the specs and the exact encoded shares kept
+        // around so a revived worker can be re-shipped its predecessor's
+        // data verbatim (re-encoding would draw fresh masks and break
+        // bit-identical trajectories). Clone only when it is enabled.
+        let sup_specs = (cfg.max_respawns > 0).then(|| specs.clone());
         let mut cluster = Cluster::connect(specs, &cfg.transport)?;
-        cluster.load_data(shares.into_iter().map(|s| s.data).collect(), y_shares)?;
+        let x_data: Vec<Vec<u64>> = shares.into_iter().map(|s| s.data).collect();
+        let supervisor = sup_specs.map(|sp| {
+            Supervisor::new(sp, x_data.clone(), y_shares.clone(), cfg.max_respawns)
+        });
+        cluster.load_data(x_data, y_shares)?;
 
         let eta = cfg
             .eta
             .unwrap_or_else(|| objective.default_eta(&xbar_real, m, d));
         let wquant = WeightQuantizer::new(field, cfg.lw, objective.weight_draws() as u32);
+        let deadline_ctl = DeadlineController::new(cfg.round_deadline_ms, cfg.adaptive_deadline);
 
         Ok(CodedMlSession {
             cfg,
@@ -281,6 +307,12 @@ impl<O: CodedObjective> CodedMlSession<O> {
             iter: 0,
             failures: 0,
             late: 0,
+            supervisor,
+            deadline_ctl,
+            approx_clip: (field.modulus() - 1) / 2,
+            approx_rounds: 0,
+            max_approx_residual: 0.0,
+            deadline_expired_rounds: 0,
             budget_warning,
             tracer: super::trace::Tracer::disabled(),
         })
@@ -364,6 +396,18 @@ impl<O: CodedObjective> CodedMlSession<O> {
         (self.failures, self.late)
     }
 
+    /// (approx rounds, max approx residual, respawns, deadline-expired
+    /// rounds) so far — the supervision/degradation counters, also
+    /// carried by [`TrainReport`].
+    pub fn fault_stats(&self) -> (u64, f64, u64, u64) {
+        (
+            self.approx_rounds,
+            self.max_approx_residual,
+            self.supervisor.as_ref().map(|s| s.respawns).unwrap_or(0),
+            self.deadline_expired_rounds,
+        )
+    }
+
     /// Overflow-budget warning raised at configuration time, if any.
     /// The session never prints; callers decide whether to surface this.
     pub fn budget_warning(&self) -> Option<&str> {
@@ -433,18 +477,67 @@ impl<O: CodedObjective> CodedMlSession<O> {
         let wbytes = self.wire_bytes(d * draws);
         self.t_comm.add_seconds(self.cfg.net.fanout_time(n, wbytes));
         self.bytes_sent += wbytes * n as u64;
-        self.cluster
-            .dispatch(self.iter, w_shares.into_iter().map(|s| s.data).collect())?;
+        let w_data: Vec<Vec<u64>> = w_shares.into_iter().map(|s| s.data).collect();
+        // Supervision may need to re-dispatch this iteration's weights to
+        // a revived worker mid-round; keep a copy only in that case.
+        let w_kept: Option<Vec<Vec<u64>>> = self.supervisor.is_some().then(|| w_data.clone());
+        self.cluster.dispatch(self.iter, w_data)?;
 
-        // (3) Stream arrivals; stop at the fastest R usable results.
-        let round = self.cluster.collect_first(need, self.iter)?;
+        // (3) Stream arrivals; stop at the fastest R usable results, or
+        //     at the round deadline (static and/or adaptive) — whichever
+        //     comes first. An expired deadline charges every silent
+        //     worker a round failure instead of blocking forever.
+        let deadline_ms = self.deadline_ctl.next_deadline_ms();
+        let mut round = self
+            .cluster
+            .collect_deadline(need, self.iter, &Deadline::after_ms(deadline_ms))?;
+
+        // (3b) Supervision: revive this round's failed workers within the
+        //      respawn budget. A mid-round heal re-dispatches the weights
+        //      and reopens the round, and collection resumes under a
+        //      fresh deadline — unless the controller pre-armed degraded
+        //      mode after a streak of expired rounds.
+        if let Some(mut sup) = self.supervisor.take() {
+            sup.observe_round(&round);
+            let w_ref: &[Vec<u64>] = w_kept.as_deref().unwrap_or(&[]);
+            let outcomes = sup.heal(&mut self.cluster, &mut round, w_ref);
+            if self.tracer.enabled() {
+                use crate::util::json::Json;
+                for o in &outcomes {
+                    self.tracer.event(
+                        "worker.respawn",
+                        self.iter,
+                        &[
+                            ("worker", Json::Num(o.worker as f64)),
+                            ("attempt", Json::Num(o.respawn as f64)),
+                            ("ok", Json::Bool(o.result.is_ok())),
+                            ("redispatched", Json::Bool(o.redispatched)),
+                        ],
+                    );
+                }
+            }
+            let reopened = outcomes.iter().any(|o| o.redispatched);
+            if reopened && !round.ok() && !self.deadline_ctl.pre_arm_approx() {
+                self.cluster
+                    .collect_resume(&mut round, &Deadline::after_ms(deadline_ms))?;
+            }
+            self.supervisor = Some(sup);
+        }
+
         self.late += round.late_drained as u64;
         // A failure is a failure whichever round's drain observed it —
-        // stale Errs (late_failures) still count and still trace.
-        self.failures += (round.failures.len() + round.late_failures.len()) as u64;
+        // stale Errs (late_failures) still count and still trace, and so
+        // do failures that a mid-round heal later recovered from.
+        self.failures +=
+            (round.failures.len() + round.late_failures.len() + round.healed.len()) as u64;
         if self.tracer.enabled() {
             use crate::util::json::Json;
-            for (worker, error) in round.failures.iter().chain(round.late_failures.iter()) {
+            for (worker, error) in round
+                .failures
+                .iter()
+                .chain(round.late_failures.iter())
+                .chain(round.healed.iter())
+            {
                 self.tracer.event(
                     "worker_failure",
                     self.iter,
@@ -455,8 +548,32 @@ impl<O: CodedObjective> CodedMlSession<O> {
                 );
             }
         }
-        if !round.ok() {
-            return Err(TrainError::TooManyFailures { ok: round.results.len(), need });
+        if round.deadline_expired {
+            self.deadline_expired_rounds += 1;
+            if self.tracer.enabled() {
+                use crate::util::json::Json;
+                self.tracer.event(
+                    "round.deadline",
+                    self.iter,
+                    &[
+                        ("deadline_ms", Json::Num(deadline_ms as f64)),
+                        ("results", Json::Num(round.results.len() as f64)),
+                        ("need", Json::Num(need as f64)),
+                        ("pre_armed", Json::Bool(self.deadline_ctl.pre_arm_approx())),
+                    ],
+                );
+            }
+        }
+
+        // Degrade-or-abort ladder: a round short of R either falls back
+        // to approximate decoding (when enabled and at least
+        // max(approx_r_min, K+T) usable results arrived) or aborts with a
+        // structured error.
+        let usable = round.results.len();
+        let r_min = self.cfg.approx_r_min.max(self.params.k + self.params.t);
+        let use_approx = !round.ok() && self.cfg.approx_decode && usable >= r_min;
+        if !round.ok() && !use_approx {
+            return Err(TrainError::TooManyFailures { ok: usable, need });
         }
 
         // Modeled parallel time (the paper's N-independent-machines
@@ -479,7 +596,13 @@ impl<O: CodedObjective> CodedMlSession<O> {
             .collect();
         arrivals.sort_by(f64::total_cmp);
         let iter_comp = match self.cfg.comp_mode {
-            CompMode::ModeledParallel => arrivals[need - 1],
+            // Degraded rounds can leave fewer than R healthy workers; the
+            // R-th order statistic then degenerates to the slowest
+            // arrival actually observed.
+            CompMode::ModeledParallel => {
+                let idx = (need - 1).min(arrivals.len().saturating_sub(1));
+                arrivals.get(idx).copied().unwrap_or(round.wall_secs)
+            }
             CompMode::Wall => round.wall_secs,
         };
         self.t_comp.add_seconds(iter_comp);
@@ -507,10 +630,12 @@ impl<O: CodedObjective> CodedMlSession<O> {
             );
         }
 
-        // (4) Workers → master: R result vectors.
+        // (4) Workers → master: the result vectors that actually arrived
+        //     (exactly R on a full round, R′ < R on a degraded one).
+        let got = round.results.len();
         let rbytes = self.wire_bytes(d);
-        self.t_comm.add_seconds(self.cfg.net.fanin_time(need, rbytes));
-        self.bytes_received += rbytes * need as u64;
+        self.t_comm.add_seconds(self.cfg.net.fanin_time(got, rbytes));
+        self.bytes_received += rbytes * got as u64;
 
         // (5) Decode this round's batch blocks and assemble the gradient
         //     (per-block dequantization keeps the overflow budget at m/K
@@ -540,10 +665,55 @@ impl<O: CodedObjective> CodedMlSession<O> {
             }
         }
         let batch = self.batch_for(self.iter);
-        let decoded = {
+        let decoded = if use_approx {
+            // Degraded mode: least-squares fit over the R′ < R available
+            // evaluations. This is a liveness heuristic, not recovery —
+            // with T ≥ 1 the missing information is cryptographically
+            // gone — so the fit residual is surfaced for auditability
+            // and the estimates are clipped to the range exact decodes
+            // have exhibited.
+            let clip = self.approx_clip;
             let decoder = &mut self.decoder;
-            self.t_decode
-                .time(|| decoder.decode_blocks(&worker_results, d, &batch))?
+            let approx = self
+                .t_decode
+                .time(|| decoder.decode_approx(&worker_results, d, &batch, clip))?;
+            self.approx_rounds += 1;
+            if approx.residual > self.max_approx_residual {
+                self.max_approx_residual = approx.residual;
+            }
+            if self.tracer.enabled() {
+                use crate::util::json::Json;
+                self.tracer.event(
+                    "decode.approx",
+                    self.iter,
+                    &[
+                        ("r_prime", Json::Num(approx.used as f64)),
+                        ("need", Json::Num(need as f64)),
+                        ("residual", Json::Num(approx.residual)),
+                        ("clip", Json::Num(clip as f64)),
+                    ],
+                );
+            }
+            approx.blocks
+        } else {
+            let decoder = &mut self.decoder;
+            let decoded = self
+                .t_decode
+                .time(|| decoder.decode_blocks(&worker_results, d, &batch))?;
+            // Keep the degraded-mode clip bound tracking reality: 2× the
+            // largest centered lift the exact decodes have produced.
+            if self.cfg.approx_decode {
+                let p = self.field.modulus();
+                let half = (p - 1) / 2;
+                let max_lift = decoded
+                    .iter()
+                    .flat_map(|b| b.iter())
+                    .map(|&v| if v > half { p - v } else { v })
+                    .max()
+                    .unwrap_or(0);
+                self.approx_clip = max_lift.saturating_mul(2).clamp(1, half);
+            }
+            decoded
         };
         let blocks: Vec<(usize, Vec<u64>)> = batch.into_iter().zip(decoded).collect();
         let grad = self.objective.gradient(&blocks);
@@ -569,6 +739,9 @@ impl<O: CodedObjective> CodedMlSession<O> {
                 ],
             );
         }
+        // Feed the controller: observed wall time sharpens the next
+        // adaptive deadline; an expiry extends the pre-arm streak.
+        self.deadline_ctl.observe(round.wall_secs, round.deadline_expired);
         self.iter += 1;
         Ok(grad)
     }
@@ -627,6 +800,10 @@ impl<O: CodedObjective> CodedMlSession<O> {
             bytes_received: self.bytes_received,
             worker_failures: self.failures,
             late_results: self.late,
+            approx_rounds: self.approx_rounds,
+            max_approx_residual: self.max_approx_residual,
+            respawns: self.supervisor.as_ref().map(|s| s.respawns).unwrap_or(0),
+            deadline_expired_rounds: self.deadline_expired_rounds,
         }
     }
 }
@@ -918,6 +1095,97 @@ mod tests {
         assert_eq!(sess.batch_for(0), vec![0, 1]);
         assert_eq!(sess.batch_for(1), vec![2, 0]);
         assert_eq!(sess.batch_for(2), vec![1, 2]);
+    }
+
+    #[test]
+    fn approx_decode_keeps_training_alive_below_threshold() {
+        // n = 10, K = 3, T = 1 → R = 10: zero slack, so two chaos deaths
+        // from iteration 1 leave every later round short. With degraded
+        // mode on, training must keep going (approximately) instead of
+        // aborting; the residual must be surfaced.
+        let train = synthetic_3v7(120, 41);
+        let mut cfg = quick_cfg(10, 3, 1);
+        cfg.chaos_failures = 2;
+        cfg.chaos_from_iter = 1;
+        cfg.approx_decode = true;
+        let mut sess = CodedMlSession::new(cfg, &train).unwrap();
+        sess.set_tracer(crate::coordinator::Tracer::memory());
+        let report = sess.train(4, None).unwrap();
+        assert_eq!(report.approx_rounds, 3, "rounds 1..3 degrade");
+        assert!(report.worker_failures > 0);
+        assert!(report.max_approx_residual > 0.0, "masked shares cannot fit exactly");
+        assert!(report.final_loss().unwrap().is_finite());
+        let approx_events: Vec<_> = sess
+            .tracer()
+            .events()
+            .iter()
+            .filter(|e| e.get("event").and_then(|v| v.as_str()) == Some("decode.approx"))
+            .collect();
+        assert_eq!(approx_events.len(), 3);
+        assert!(approx_events[0].get("residual").unwrap().as_f64().unwrap() > 0.0);
+        assert_eq!(approx_events[0].get("r_prime").unwrap().as_u64(), Some(8));
+    }
+
+    #[test]
+    fn approx_decode_respects_r_min_floor() {
+        // 7 of 10 workers die → 3 usable < K + T = 4: even with degraded
+        // mode on, the session must abort with the structured error.
+        let train = synthetic_3v7(120, 42);
+        let mut cfg = quick_cfg(10, 3, 1);
+        cfg.chaos_failures = 7;
+        cfg.chaos_from_iter = 0;
+        cfg.approx_decode = true;
+        let mut sess = CodedMlSession::new(cfg, &train).unwrap();
+        match sess.step() {
+            Err(TrainError::TooManyFailures { ok, need }) => {
+                assert_eq!((ok, need), (3, 10));
+            }
+            other => panic!("expected TooManyFailures, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn supervised_respawn_restores_bit_identical_trajectory() {
+        // One worker dies at iteration 1; the supervisor revives an
+        // in-memory replacement mid-round, re-ships the original encoded
+        // share, and re-dispatches the weights. Every decode then runs on
+        // the exact path with the same data a fault-free run would use,
+        // so the weights must match bit for bit.
+        let train = synthetic_3v7(120, 43);
+        let clean_cfg = quick_cfg(10, 3, 1);
+        let mut chaos_cfg = clean_cfg.clone();
+        chaos_cfg.chaos_failures = 1;
+        chaos_cfg.chaos_from_iter = 1;
+        chaos_cfg.max_respawns = 2;
+        let mut clean = CodedMlSession::new(clean_cfg, &train).unwrap();
+        let mut healed = CodedMlSession::new(chaos_cfg, &train).unwrap();
+        let r_clean = clean.train(5, None).unwrap();
+        let r_healed = healed.train(5, None).unwrap();
+        assert_eq!(r_clean.weights, r_healed.weights, "exact decode ⇒ bit-identical");
+        assert_eq!(r_healed.approx_rounds, 0);
+        assert_eq!(r_healed.respawns, 1);
+        assert!(r_healed.worker_failures >= 1, "the death was still recorded");
+        assert_eq!(r_clean.respawns, 0);
+    }
+
+    #[test]
+    fn round_deadline_degrades_instead_of_waiting() {
+        // 3 real-slow workers on a pool with slack 2: the round needs one
+        // of them, so without a deadline every iteration waits the full
+        // 400 ms. With a 100 ms deadline the stalled workers are charged
+        // failures and the round degrades to approximate decoding.
+        let train = synthetic_3v7(120, 44);
+        let mut cfg = quick_cfg(12, 3, 1); // R = 10
+        cfg.chaos_slow_workers = 3;
+        cfg.chaos_slow_ms = 400;
+        cfg.round_deadline_ms = 100;
+        cfg.approx_decode = true;
+        let mut sess = CodedMlSession::new(cfg, &train).unwrap();
+        let report = sess.train(2, None).unwrap();
+        assert_eq!(report.deadline_expired_rounds, 2);
+        assert_eq!(report.approx_rounds, 2);
+        assert!(report.worker_failures >= 2, "stalled workers charged as failures");
+        assert!(report.final_loss().unwrap().is_finite());
     }
 
     #[test]

@@ -63,6 +63,49 @@ pub fn timed<T>(f: impl FnOnce() -> T) -> (T, f64) {
     (out, t0.elapsed().as_secs_f64())
 }
 
+/// A wall-clock budget for a blocking operation — the round engine's
+/// per-round deadline (`--round-deadline-ms`). Wall-clock access is
+/// confined to this module (`no-wallclock-nondeterminism`), so callers
+/// carry a `Deadline` value instead of touching `Instant` themselves.
+///
+/// `Deadline::none()` never expires: `remaining()` is `None` and blocking
+/// receives degrade to plain blocking receives.
+#[derive(Debug, Clone, Copy)]
+pub struct Deadline {
+    end: Option<Instant>,
+}
+
+impl Deadline {
+    /// A deadline that never fires.
+    pub fn none() -> Self {
+        Deadline { end: None }
+    }
+
+    /// Expire `ms` milliseconds from now; `ms == 0` means no deadline.
+    pub fn after_ms(ms: u64) -> Self {
+        if ms == 0 {
+            Deadline::none()
+        } else {
+            Deadline { end: Some(Instant::now() + Duration::from_millis(ms)) }
+        }
+    }
+
+    /// Is this the never-expiring deadline?
+    pub fn is_none(&self) -> bool {
+        self.end.is_none()
+    }
+
+    /// Time left before expiry (`None` = unbounded, zero = expired).
+    pub fn remaining(&self) -> Option<Duration> {
+        self.end.map(|e| e.saturating_duration_since(Instant::now()))
+    }
+
+    /// Has the budget run out? (Never true for [`Deadline::none`].)
+    pub fn expired(&self) -> bool {
+        self.remaining().is_some_and(|r| r.is_zero())
+    }
+}
+
 /// Run a closure repeatedly for at least `min_seconds` (and at least
 /// `min_iters` times), returning the mean seconds per call. Used by the
 /// hand-rolled bench harness (criterion is unavailable offline).

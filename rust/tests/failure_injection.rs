@@ -202,3 +202,132 @@ fn tcp_connect_timeout_at_spawn_lands_in_worker_failures() {
         report.worker_failures
     );
 }
+
+// --- Aggressive chaos: sustained loss beyond the slack, both transports ---
+//
+// These run at a modest scale in the regular suite; the CI chaos job sets
+// `CODEDML_CHAOS_AGGRESSIVE=1` to raise the kill counts and iteration
+// counts, and `CHAOS_TRACE_DIR` to persist each run's trace as an upload
+// artifact.
+
+/// True when the CI chaos job asked for the aggressive profile.
+fn aggressive() -> bool {
+    std::env::var("CODEDML_CHAOS_AGGRESSIVE").map(|v| v != "0").unwrap_or(false)
+}
+
+/// Persist a chaos run's trace as newline-delimited JSON when
+/// `CHAOS_TRACE_DIR` is set.
+fn write_trace(name: &str, tracer: &codedml::coordinator::Tracer) {
+    let Ok(dir) = std::env::var("CHAOS_TRACE_DIR") else { return };
+    let path = std::path::Path::new(&dir);
+    std::fs::create_dir_all(path).unwrap();
+    let mut lines = String::new();
+    for e in tracer.events().iter() {
+        lines.push_str(&e.to_string());
+        lines.push('\n');
+    }
+    std::fs::write(path.join(format!("chaos_{name}.jsonl")), lines).unwrap();
+}
+
+/// Memory transport under sustained loss beyond the slack: with no
+/// respawn budget, every post-kill round must degrade to approximate
+/// decode — training finishes, every degraded round emits a
+/// `decode.approx` event with a finite residual, and the loss stays in a
+/// sane band (approximate decode is a *liveness* mode: with T ≥ 1 the
+/// lost evaluations are information-theoretically irrecoverable, so the
+/// run honestly reports residuals instead of pretending accuracy).
+#[test]
+fn aggressive_chaos_memory_degrades_to_approx_and_survives() {
+    let (iters, kills) = if aggressive() { (10usize, 6usize) } else { (5, 4) };
+    let train = synthetic_3v7(120, 31);
+
+    let mut clean = CodedMlSession::new(base_cfg(), &train).unwrap();
+    let ref_loss = clean.train(iters, None).unwrap().final_loss().unwrap();
+
+    // Slack is 3: killing `kills ≥ 4` leaves every post-kill round short.
+    let mut cfg = base_cfg();
+    cfg.chaos_failures = kills;
+    cfg.chaos_from_iter = 2;
+    cfg.approx_decode = true; // r_min auto: K+T = 4 ≤ 13 − kills
+    let mut sess = CodedMlSession::new(cfg, &train).unwrap();
+    sess.set_tracer(codedml::coordinator::Tracer::memory());
+    let report = sess.train(iters, None).unwrap();
+
+    assert!(report.worker_failures > 0);
+    assert_eq!(report.approx_rounds, (iters - 2) as u64);
+    assert!(report.max_approx_residual > 0.0 && report.max_approx_residual.is_finite());
+    let approx_events: Vec<_> = sess
+        .tracer()
+        .events()
+        .iter()
+        .filter(|e| e.get("event").and_then(|v| v.as_str()) == Some("decode.approx"))
+        .cloned()
+        .collect();
+    assert_eq!(approx_events.len() as u64, report.approx_rounds);
+    for e in &approx_events {
+        let residual = e.get("residual").unwrap().as_f64().unwrap();
+        assert!(residual.is_finite() && residual >= 0.0, "residual {residual}");
+        let r_prime = e.get("r_prime").unwrap().as_u64().unwrap();
+        assert!(r_prime < 10, "degraded rounds decode from fewer than R results");
+    }
+    // The clip bound keeps every degraded update — and therefore the loss
+    // — finite and near the fault-free run's scale, even though the
+    // trajectory itself is not recoverable.
+    let loss = report.final_loss().unwrap();
+    assert!(
+        loss.is_finite() && (loss - ref_loss).abs() < 10.0,
+        "loss {loss} vs fault-free {ref_loss}"
+    );
+    write_trace("memory", sess.tracer());
+}
+
+/// TCP under sustained process loss beyond the slack: the supervisor
+/// burns its respawn budget redialing addresses nothing listens on
+/// (`worker.respawn` events with ok=false), then every short round
+/// degrades to approximate decode — training finishes on the real wire
+/// with zero live spare capacity.
+#[test]
+fn aggressive_chaos_tcp_degrades_when_redial_fails() {
+    let (iters, kills) = if aggressive() { (8usize, 3usize) } else { (4, 2) };
+    let train = synthetic_3v7(40, 37);
+    let n = 5usize; // threshold 4 → slack 1 < kills
+
+    let mut procs: Vec<WorkerProc> = (0..n).map(|_| spawn_worker()).collect();
+    let addrs = procs.iter().map(|p| p.addr.clone()).collect();
+    let mut cfg = tcp_cfg(n, addrs);
+    cfg.approx_decode = true; // r_min auto: K+T = 2
+    cfg.max_respawns = 1;
+    cfg.transport.tcp.connect_timeout_ms = 300;
+    cfg.transport.tcp.connect_retries = 1;
+    cfg.transport.tcp.connect_backoff_ms = 10;
+    let mut sess = CodedMlSession::new(cfg, &train).unwrap();
+    sess.set_tracer(codedml::coordinator::Tracer::memory());
+
+    sess.step().unwrap();
+    for p in procs.iter_mut().take(kills) {
+        let _ = p.child.kill();
+        let _ = p.child.wait();
+    }
+    let report = sess.train(iters - 1, None).unwrap();
+
+    assert!(report.worker_failures > 0);
+    assert!(report.approx_rounds >= 1, "short rounds must degrade: {report:?}");
+    assert_eq!(report.respawns, 0, "nothing listens on the dead ports");
+    assert!(report.final_loss().unwrap().is_finite());
+    let events = sess.tracer().events();
+    let respawn_attempts: Vec<_> = events
+        .iter()
+        .filter(|e| e.get("event").and_then(|v| v.as_str()) == Some("worker.respawn"))
+        .collect();
+    assert!(
+        !respawn_attempts.is_empty(),
+        "supervision must have attempted a redial before degrading"
+    );
+    assert!(respawn_attempts
+        .iter()
+        .all(|e| e.get("ok").unwrap().as_bool() == Some(false)));
+    assert!(events
+        .iter()
+        .any(|e| e.get("event").and_then(|v| v.as_str()) == Some("decode.approx")));
+    write_trace("tcp", sess.tracer());
+}

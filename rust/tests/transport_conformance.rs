@@ -17,10 +17,11 @@ use std::process::{Child, Command, Stdio};
 use std::time::Duration;
 
 use codedml::cluster::transport::TcpConfig;
-use codedml::cluster::{Cluster, TransportConfig, TransportKind, WorkerOp, WorkerSpec};
+use codedml::cluster::{Cluster, Supervisor, TransportConfig, TransportKind, WorkerOp, WorkerSpec};
 use codedml::coding::{CodingParams, Decoder, Encoder, WorkerResult};
 use codedml::compute::WorkerComputation;
 use codedml::field::{PrimeField, PAPER_PRIME};
+use codedml::util::timer::Deadline;
 use codedml::util::{Parallelism, Rng};
 
 /// A `codedml --worker` child process bound to an ephemeral loopback
@@ -361,4 +362,218 @@ fn mid_round_death_is_counted_and_survivable_on_both_backends() {
             assert_eq!(decoded[0], truth, "{name} iter {iter}: decode still exact");
         }
     }
+}
+
+/// Total loss: every worker dies mid-run. The collection must still
+/// terminate with a fully-accounted round — all N workers charged a
+/// structured failure, zero results, no deadlock, no panic — on both
+/// backends. (The session layer then turns this shortfall into
+/// `TrainError::TooManyFailures` or, when armed, approximate decode.)
+#[test]
+fn total_worker_loss_terminates_with_structured_failures_on_both_backends() {
+    let f = PrimeField::new(PAPER_PRIME);
+    let (n, k, t) = (4usize, 1usize, 1usize);
+    let params = CodingParams::new(n, k, t, 1).unwrap();
+    let need = params.recovery_threshold(); // 4 → zero slack
+    assert_eq!(need, n);
+    let (rows, d) = (4usize, 6usize);
+    let coeffs = vec![3u64, 7];
+
+    let mut rng = Rng::new(11);
+    let xq = f.random_matrix(&mut rng, rows * k, d);
+    let enc = Encoder::new(f, params);
+    let x_shares: Vec<Vec<u64>> = enc
+        .encode_dataset(&xq, rows * k, d, &mut rng)
+        .into_iter()
+        .map(|s| s.data)
+        .collect();
+    let w_shares: Vec<Vec<u64>> = enc
+        .encode_weights(&f.random_matrix(&mut rng, d, 1), d, 1, &mut rng)
+        .into_iter()
+        .map(|s| s.data)
+        .collect();
+
+    // In-memory: every worker starts failing at iteration 1.
+    let mut mem_specs = specs(n, rows, d, &coeffs, Parallelism::Serial);
+    for s in mem_specs.iter_mut() {
+        s.fail_from_iter = Some(1);
+    }
+    let mut mem = Cluster::spawn(mem_specs).unwrap();
+
+    // TCP: every worker *process* is killed after iteration 0.
+    let mut procs = spawn_workers(n);
+    let mut tcp =
+        Cluster::connect(specs(n, rows, d, &coeffs, Parallelism::Serial), &tcp_config(&procs))
+            .unwrap();
+
+    for (name, cluster) in [("memory", &mut mem), ("tcp", &mut tcp)] {
+        cluster.load_data(x_shares.clone(), None).unwrap();
+        cluster.dispatch(0, w_shares.clone()).unwrap();
+        let r0 = cluster.collect_first(need, 0).unwrap();
+        assert!(r0.ok(), "{name}: healthy round must succeed");
+    }
+    for p in procs.iter_mut() {
+        let _ = p.child.kill();
+        let _ = p.child.wait();
+    }
+
+    for (name, cluster) in [("memory", &mut mem), ("tcp", &mut tcp)] {
+        cluster.dispatch(1, w_shares.clone()).unwrap();
+        // The deadline is a belt only: dead sockets EOF promptly, so the
+        // Down events (or send-failure down marks) complete the round on
+        // their own long before it fires.
+        let round = cluster
+            .collect_deadline(need, 1, &Deadline::after_ms(10_000))
+            .unwrap();
+        assert!(round.complete(), "{name}: round must terminate, got {round:?}");
+        assert!(!round.ok(), "{name}: total loss cannot reach the threshold");
+        assert!(round.results.is_empty(), "{name}: dead workers cannot answer");
+        assert_eq!(
+            round.failures.len(),
+            n,
+            "{name}: every worker must be charged a structured failure: {:?}",
+            round.failures
+        );
+    }
+}
+
+/// Spawn a replacement `codedml --worker` bound to the *exact* address a
+/// killed worker held, so the master's supervisor can redial it. std's
+/// `TcpListener::bind` sets SO_REUSEADDR on Unix, so the port is
+/// rebindable as soon as the old listener is gone; retry briefly while
+/// the kernel reaps the killed process.
+fn spawn_worker_at(addr: &str) -> WorkerProc {
+    for _ in 0..50 {
+        let mut child = Command::new(env!("CARGO_BIN_EXE_codedml"))
+            .args(["--worker", "--listen", addr])
+            .stdout(Stdio::piped())
+            .stderr(Stdio::null())
+            .spawn()
+            .unwrap();
+        let stdout = child.stdout.take().unwrap();
+        let mut line = String::new();
+        let _ = BufReader::new(stdout).read_line(&mut line);
+        if line.contains(addr) {
+            return WorkerProc { child, addr: addr.to_string() };
+        }
+        let _ = child.kill();
+        let _ = child.wait();
+        std::thread::sleep(Duration::from_millis(100));
+    }
+    panic!("could not rebind a replacement worker at {addr}");
+}
+
+/// Recovery conformance (tentpole): a TCP worker process is killed
+/// mid-training and a replacement is started on the same address. The
+/// supervisor redials it, re-ships its encoded share, re-dispatches the
+/// in-flight iteration, and the resumed round completes — and because
+/// the replacement holds the predecessor's exact share, every decoded
+/// gradient is bit-identical to an uninterrupted in-memory run.
+#[test]
+fn killed_tcp_worker_respawns_and_trajectory_matches_uninterrupted_run() {
+    let f = PrimeField::new(PAPER_PRIME);
+    let (n, k, t) = (4usize, 1usize, 1usize);
+    let params = CodingParams::new(n, k, t, 1).unwrap();
+    let need = params.recovery_threshold(); // 4 → zero slack: healing is the
+    assert_eq!(need, n); // only way a short round can complete
+    let (rows, d) = (4usize, 6usize);
+    let coeffs = vec![3u64, 7];
+
+    let mut rng = Rng::new(12);
+    let xq = f.random_matrix(&mut rng, rows * k, d);
+    let enc = Encoder::new(f, params);
+    let x_shares: Vec<Vec<u64>> = enc
+        .encode_dataset(&xq, rows * k, d, &mut rng)
+        .into_iter()
+        .map(|s| s.data)
+        .collect();
+    let iters = 3usize;
+    let mut w_shares_per_iter = Vec::new();
+    for _ in 0..iters {
+        let shares: Vec<Vec<u64>> = enc
+            .encode_weights(&f.random_matrix(&mut rng, d, 1), d, 1, &mut rng)
+            .into_iter()
+            .map(|s| s.data)
+            .collect();
+        w_shares_per_iter.push(shares);
+    }
+
+    // Uninterrupted in-memory reference run.
+    let mut mem = Cluster::spawn(specs(n, rows, d, &coeffs, Parallelism::Serial)).unwrap();
+    mem.load_data(x_shares.clone(), None).unwrap();
+    let reference = run_rounds(&mut mem, &enc, f, params, d, &w_shares_per_iter);
+
+    // TCP run with a mid-training kill + same-address respawn.
+    let worker_specs = specs(n, rows, d, &coeffs, Parallelism::Serial);
+    let mut procs = spawn_workers(n);
+    let mut cfg = tcp_config(&procs);
+    cfg.tcp.connect_timeout_ms = 2000;
+    cfg.tcp.connect_retries = 5;
+    cfg.tcp.connect_backoff_ms = 10;
+    let mut tcp = Cluster::connect(worker_specs.clone(), &cfg).unwrap();
+    tcp.load_data(x_shares.clone(), None).unwrap();
+    let mut sup = Supervisor::new(worker_specs, x_shares.clone(), None, 1);
+    let mut dec = Decoder::new(f, params, enc.points.clone());
+    let mut decoded = Vec::new();
+
+    // Iteration 0: healthy.
+    tcp.dispatch(0, w_shares_per_iter[0].clone()).unwrap();
+    let r0 = tcp.collect_first(need, 0).unwrap();
+    assert!(r0.ok(), "{r0:?}");
+    let subset: Vec<WorkerResult> = r0
+        .results
+        .iter()
+        .map(|r| WorkerResult { worker: r.worker, data: r.data.clone().unwrap() })
+        .collect();
+    decoded.push(dec.decode(&subset, d).unwrap());
+
+    // Kill worker 1's process, then bring a replacement up on its port.
+    let victim_addr = procs[1].addr.clone();
+    let _ = procs[1].child.kill();
+    let _ = procs[1].child.wait();
+    procs[1] = spawn_worker_at(&victim_addr);
+
+    // Iteration 1 falls short (zero slack), the supervisor heals it
+    // mid-round, and the resumed collection completes exactly.
+    tcp.dispatch(1, w_shares_per_iter[1].clone()).unwrap();
+    let mut r1 = tcp
+        .collect_deadline(need, 1, &Deadline::after_ms(10_000))
+        .unwrap();
+    assert!(!r1.ok(), "zero slack: the killed worker must leave iter 1 short");
+    assert!(r1.failures.iter().any(|(w, _)| *w == 1), "{:?}", r1.failures);
+    sup.observe_round(&r1);
+    let outcomes = sup.heal(&mut tcp, &mut r1, &w_shares_per_iter[1]);
+    assert_eq!(outcomes.len(), 1);
+    assert_eq!(outcomes[0].worker, 1);
+    assert!(outcomes[0].result.is_ok(), "redial failed: {:?}", outcomes[0].result);
+    assert!(outcomes[0].redispatched, "mid-round heal must re-dispatch");
+    tcp.collect_resume(&mut r1, &Deadline::after_ms(10_000)).unwrap();
+    assert!(r1.ok(), "healed round must complete: {:?}", r1.failures);
+    assert_eq!(r1.healed.len(), 1, "the death stays on the books");
+    let subset: Vec<WorkerResult> = r1
+        .results
+        .iter()
+        .map(|r| WorkerResult { worker: r.worker, data: r.data.clone().unwrap() })
+        .collect();
+    decoded.push(dec.decode(&subset, d).unwrap());
+
+    // Iteration 2: the replacement is a full citizen again.
+    tcp.dispatch(2, w_shares_per_iter[2].clone()).unwrap();
+    let r2 = tcp.collect_first(need, 2).unwrap();
+    assert!(r2.ok(), "{r2:?}");
+    assert!(r2.results.iter().any(|r| r.worker == 1), "replacement must answer");
+    let subset: Vec<WorkerResult> = r2
+        .results
+        .iter()
+        .map(|r| WorkerResult { worker: r.worker, data: r.data.clone().unwrap() })
+        .collect();
+    decoded.push(dec.decode(&subset, d).unwrap());
+
+    assert_eq!(sup.respawns, 1);
+    assert_eq!(
+        decoded, reference,
+        "kill + respawn must not perturb the trajectory: LCC decoding is \
+         exact for any fastest-R subset and the replacement holds the \
+         predecessor's share"
+    );
 }

@@ -1,33 +1,35 @@
 #!/usr/bin/env python3
-"""Gate the coding-bench JSON: the NTT path must actually engage and win.
+"""Gate bench JSON outputs, dispatching on the file name.
 
-Usage: check_bench.py [BENCH_coding.json]
+Usage: check_bench.py [BENCH_<target>.json]
 
-Fails (exit 1) when:
-  * the "ntt backend engaged" metric row is missing or != 1 — i.e. the
-    auto backend silently fell back to dense on an NTT-friendly modulus;
-  * the combined "ntt vs dense encode+decode ... [speedup x]" row is
-    missing or <= 1.0 — i.e. the fast path stopped being fast.
+BENCH_coding.json (default) — the NTT path must engage and win:
+  * the "ntt backend engaged" metric row must exist and equal 1 — i.e.
+    the auto backend must not silently fall back to dense on an
+    NTT-friendly modulus;
+  * the combined "ntt vs dense encode+decode ... [speedup x]" row must
+    exist and exceed 1.0 — i.e. the fast path must stay fast.
+
+BENCH_supervisor.json — fault tolerance must be strictly passive on a
+healthy pool, and actually engage under chaos:
+  * every "... (zero chaos)" counter (approx rounds, respawns,
+    deadline-expired rounds) must be exactly 0 — degraded mode engaging
+    with no fault injected is a correctness regression, not a perf one;
+  * "respawns (healed run)" must be > 0 (the heal path really ran);
+  * "approx rounds (degraded run)" must be > 0 (the degraded path
+    really ran).
 
 Run against a fresh BENCH_JSON=1 output (see .github/workflows/ci.yml
-bench-smoke), not against the committed baselines in benchmarks/baseline.
+bench-smoke and chaos jobs), not against the committed baselines in
+benchmarks/baseline.
 """
 
 import json
+import os
 import sys
 
 
-def main() -> int:
-    path = sys.argv[1] if len(sys.argv) > 1 else "BENCH_coding.json"
-    try:
-        with open(path) as fh:
-            rows = json.load(fh)["rows"]
-    except (OSError, KeyError, json.JSONDecodeError) as e:
-        print(f"check_bench: cannot read rows from {path}: {e}")
-        return 1
-
-    failures = []
-
+def check_coding(rows, failures):
     engaged = [r for r in rows if r["name"].startswith("ntt backend engaged")]
     if not engaged:
         failures.append("no 'ntt backend engaged' metric row in the bench output")
@@ -51,6 +53,61 @@ def main() -> int:
             failures.append(f"{r['name']!r}: speedup {speedup} <= 1.0")
         else:
             print(f"ok: {r['name']} = {speedup:.2f}x")
+
+
+def check_supervisor(rows, failures):
+    zero_chaos = [r for r in rows if "(zero chaos)" in r["name"]]
+    if len(zero_chaos) < 3:
+        failures.append(
+            f"expected the 3 '(zero chaos)' counter rows, found {len(zero_chaos)}"
+        )
+    for r in zero_chaos:
+        if r.get("value") != 0:
+            failures.append(
+                f"{r['name']!r}: value {r.get('value')!r} — degraded mode must "
+                "never engage when no fault is injected"
+            )
+        else:
+            print(f"ok: {r['name']} = 0")
+
+    for name in ("respawns (healed run)", "approx rounds (degraded run)"):
+        found = [r for r in rows if r["name"] == name]
+        if not found:
+            failures.append(f"no {name!r} metric row in the bench output")
+        elif not found[0].get("value", 0.0) > 0:
+            failures.append(
+                f"{name!r}: value {found[0].get('value')!r} — the chaos run "
+                "did not exercise this recovery path"
+            )
+        else:
+            print(f"ok: {name} = {found[0]['value']:g}")
+
+
+CHECKS = {
+    "BENCH_coding.json": check_coding,
+    "BENCH_supervisor.json": check_supervisor,
+}
+
+
+def main() -> int:
+    path = sys.argv[1] if len(sys.argv) > 1 else "BENCH_coding.json"
+    try:
+        with open(path) as fh:
+            rows = json.load(fh)["rows"]
+    except (OSError, KeyError, json.JSONDecodeError) as e:
+        print(f"check_bench: cannot read rows from {path}: {e}")
+        return 1
+
+    check = CHECKS.get(os.path.basename(path))
+    if check is None:
+        print(
+            f"check_bench: no gate registered for {os.path.basename(path)!r} "
+            f"(known: {', '.join(sorted(CHECKS))})"
+        )
+        return 1
+
+    failures = []
+    check(rows, failures)
 
     for msg in failures:
         print(f"check_bench: FAIL: {msg}")
