@@ -24,6 +24,7 @@ fn specs(n: usize, rows: usize, d: usize, coeffs: &[u64], slow_ms: u64) -> Vec<W
     (0..n)
         .map(|id| WorkerSpec {
             id,
+            session: 0,
             kind: BackendKind::Native,
             artifact_dir: PathBuf::from("artifacts"),
             field: f,

@@ -1,0 +1,102 @@
+//! Serve bench: what multiplexing buys. Four small sessions, each
+//! straggling on its own disjoint pair of shared workers
+//! (`chaos_slow_from` offsets the span), run two ways:
+//!
+//!   1. dedicated clusters, back-to-back — every session pays its
+//!      stragglers' wall-clock in sequence;
+//!   2. one `Scheduler` over one shared pool — all four sessions' rounds
+//!      are in flight at once, so their straggler waits overlap.
+//!
+//! `scripts/check_bench.py` gates the speedup at ≥ 1.5× in CI (the
+//! overlap typically lands near the session count). The trajectories are
+//! asserted bit-identical across the two runs first — the speedup must
+//! never come at the cost of the isolation invariant.
+
+mod bench_util;
+use bench_util::{finish, report, report_metric, report_speedup};
+
+use std::time::Instant;
+
+use codedml::cluster::{NetworkModel, StragglerModel, TransportConfig};
+use codedml::coordinator::{CodedMlConfig, CodedMlSession};
+use codedml::data::synthetic_3v7;
+use codedml::serve::{JobSpec, Scheduler, ServeSpec};
+
+const SESSIONS: usize = 4;
+const ITERS: usize = 4;
+const SLOW_MS: u64 = 20;
+
+/// Session `s`: N=8 K=2 T=1 (R=7, slack 1) with workers {2s, 2s+1} slow —
+/// two stragglers against one slot of slack force every round to wait
+/// ~SLOW_MS for one of them.
+fn job(s: usize) -> JobSpec {
+    JobSpec {
+        name: format!("job-{}", s + 1),
+        m: 60,
+        d: 4,
+        data_seed: 3 + s as u64,
+        cfg: CodedMlConfig {
+            n: 8,
+            k: 2,
+            t: 1,
+            iters: ITERS,
+            chaos_slow_from: 2 * s,
+            chaos_slow_workers: 2,
+            chaos_slow_ms: SLOW_MS,
+            net: NetworkModel::free(),
+            straggler: StragglerModel::none(),
+            ..Default::default()
+        },
+    }
+}
+
+fn main() {
+    println!(
+        "== serve ({SESSIONS} sessions, N=8 K=2 T=1, {SLOW_MS} ms stragglers \
+         on disjoint worker pairs) =="
+    );
+
+    // 1. Serial baseline: dedicated clusters, back-to-back.
+    let t0 = Instant::now();
+    let mut dedicated = Vec::with_capacity(SESSIONS);
+    for s in 0..SESSIONS {
+        let j = job(s);
+        let ds = synthetic_3v7(j.m, j.data_seed);
+        let mut sess = CodedMlSession::new(j.cfg.clone(), &ds).unwrap();
+        dedicated.push(sess.train(ITERS, None).unwrap());
+    }
+    let serial_secs = t0.elapsed().as_secs_f64();
+    report(
+        "4 sessions, dedicated clusters back-to-back",
+        serial_secs,
+        None,
+    );
+
+    // 2. Multiplexed: one scheduler, one shared 8-worker pool. Encode +
+    //    pool spawn are inside the timer, matching the baseline's
+    //    per-session construction cost.
+    let spec = ServeSpec {
+        transport: TransportConfig::default(),
+        jobs: (0..SESSIONS).map(job).collect(),
+    };
+    let t0 = Instant::now();
+    let mut sched = Scheduler::new(spec).unwrap();
+    let rep = sched.run().unwrap();
+    let serve_secs = t0.elapsed().as_secs_f64();
+    report("4 sessions, multiplexed on one shared pool", serve_secs, None);
+
+    report_metric("misrouted results (must be 0)", rep.misrouted as f64);
+    for (s, reference) in rep.sessions.iter().zip(&dedicated) {
+        assert_eq!(s.error, None, "session '{}' failed under serve", s.name);
+        assert_eq!(
+            s.report.weights, reference.weights,
+            "session '{}': the speedup must not perturb the trajectory",
+            s.name
+        );
+    }
+    assert_eq!(rep.misrouted, 0, "session routing must be airtight");
+
+    report_speedup("serve: shared pool vs back-to-back", serial_secs, serve_secs);
+
+    finish("serve");
+}

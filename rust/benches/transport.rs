@@ -54,6 +54,7 @@ fn specs(n: usize, rows: usize, d: usize, coeffs: &[u64]) -> Vec<WorkerSpec> {
     (0..n)
         .map(|id| WorkerSpec {
             id,
+            session: 0,
             kind: BackendKind::Native,
             artifact_dir: PathBuf::from("artifacts"),
             field: f,

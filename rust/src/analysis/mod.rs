@@ -6,7 +6,7 @@
 //! boundary that keeps plaintext datasets away from worker code, no
 //! nondeterminism or aborts inside the training loop. This module walks
 //! `rust/src`, scrubs each file with a comment/string-aware mini-lexer
-//! (no external parser), and runs six rules over the result — see
+//! (no external parser), and runs seven rules over the result — see
 //! `rules::RULES` and the "Machine-checked invariants" section of
 //! `docs/ARCHITECTURE.md`.
 //!

@@ -1,4 +1,4 @@
-//! The six invariant rules behind `codedml lint`.
+//! The seven invariant rules behind `codedml lint`.
 //!
 //! Each rule guards an invariant the compiler cannot see but the paper's
 //! guarantees rely on (see `docs/ARCHITECTURE.md`, "Machine-checked
@@ -26,11 +26,12 @@ pub const NO_PANIC_IN_LIBRARY: &str = "no-panic-in-library";
 pub const NO_STRAY_IO: &str = "no-stray-io";
 pub const NO_WALLCLOCK: &str = "no-wallclock-nondeterminism";
 pub const CANONICAL_DEBUG_ASSERTS: &str = "canonical-field-debug-asserts";
+pub const NO_CROSS_SESSION_STATE: &str = "no-cross-session-state";
 /// Pseudo-rule for `lint: allow(...)` annotations that are malformed
 /// (no justification) or name an unknown rule. Not suppressible.
 pub const MALFORMED_ALLOW: &str = "malformed-allow";
 
-pub const RULES: [RuleInfo; 6] = [
+pub const RULES: [RuleInfo; 7] = [
     RuleInfo {
         id: NO_HARDWARE_MODULO,
         summary: "no hardware `%` on field values in field/, compute/, coding/, mpc/",
@@ -41,7 +42,7 @@ pub const RULES: [RuleInfo; 6] = [
     },
     RuleInfo {
         id: NO_PANIC_IN_LIBRARY,
-        summary: "no unwrap()/expect()/panic! in cluster/, coordinator/, coding/",
+        summary: "no unwrap()/expect()/panic! in cluster/, coordinator/, coding/, serve/",
     },
     RuleInfo {
         id: NO_STRAY_IO,
@@ -55,6 +56,11 @@ pub const RULES: [RuleInfo; 6] = [
         id: CANONICAL_DEBUG_ASSERTS,
         summary: "pub field-element returns in field/prime.rs carry debug_assert!(out < p)",
     },
+    RuleInfo {
+        id: NO_CROSS_SESSION_STATE,
+        summary: "serve/ never absorbs a StepResult directly; results route through \
+                  the cluster's session-checked collects",
+    },
 ];
 
 /// Run every rule over the tree; findings come back sorted and deduped.
@@ -66,6 +72,7 @@ pub fn run_all(tree: &SourceTree) -> Vec<Finding> {
     no_stray_io(tree, &mut out);
     no_wallclock(tree, &mut out);
     canonical_field_debug_asserts(tree, &mut out);
+    no_cross_session_state(tree, &mut out);
     malformed_allows(tree, &mut out);
     super::report::sort_findings(&mut out);
     out.dedup();
@@ -274,7 +281,7 @@ fn no_plaintext_to_workers(tree: &SourceTree, out: &mut Vec<Finding>) {
 /// `TrainReport::worker_failures`, not abort: no `.unwrap()`, `.expect(`
 /// or `panic!` in non-test code of cluster/, coordinator/, coding/.
 fn no_panic_in_library(tree: &SourceTree, out: &mut Vec<Finding>) {
-    const SCOPE: [&str; 3] = ["cluster/", "coordinator/", "coding/"];
+    const SCOPE: [&str; 4] = ["cluster/", "coordinator/", "coding/", "serve/"];
     const PATTERNS: [&str; 3] = [".unwrap()", ".expect(", "panic!"];
     for file in &tree.files {
         if !under(&file.path, &SCOPE) {
@@ -460,6 +467,41 @@ fn check_field_asserts(file: &ScrubbedFile, out: &mut Vec<Finding>) {
 }
 
 // ---------------------------------------------------------------------------
+// Rule 7: no-cross-session-state
+// ---------------------------------------------------------------------------
+
+/// The serve layer's isolation invariant hangs on routing: a worker
+/// result must only ever enter a round through the cluster's
+/// session-checked collect paths (`collect_deadline_for` /
+/// `collect_resume`), which verify the frame's session id and park or
+/// reject mismatches. Calling `Round::absorb` directly from scheduler
+/// code would bypass that check and let one session's result corrupt a
+/// sibling's decode, so any `.absorb(` in `serve/` is a finding.
+fn no_cross_session_state(tree: &SourceTree, out: &mut Vec<Finding>) {
+    const SCOPE: [&str; 1] = ["serve/"];
+    for file in &tree.files {
+        if !under(&file.path, &SCOPE) {
+            continue;
+        }
+        for (i, line) in file.lines.iter().enumerate() {
+            if line.in_test || line.allowed(NO_CROSS_SESSION_STATE) {
+                continue;
+            }
+            if line.code.contains(".absorb(") {
+                out.push(Finding::new(
+                    &file.path,
+                    i + 1,
+                    NO_CROSS_SESSION_STATE,
+                    "direct Round::absorb in serve code bypasses session-id routing; \
+                     collect through the cluster's session-checked paths"
+                        .to_string(),
+                ));
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
 // Allow hygiene
 // ---------------------------------------------------------------------------
 
@@ -639,6 +681,38 @@ pub fn add(&self, a: u64, b: u64) -> u64 {
         let mut got = ids(&run_all(&t));
         got.sort_unstable();
         assert_eq!(got, vec![MALFORMED_ALLOW, NO_HARDWARE_MODULO]);
+    }
+
+    #[test]
+    fn cross_session_rule_scoped_to_serve() {
+        let t = tree(&[
+            (
+                "serve/scheduler.rs",
+                "pub fn collect(r: &mut Round, res: StepResult) { r.absorb(res); }\n",
+            ),
+            // The cluster layer owns the session-checked absorb path.
+            (
+                "cluster/mod.rs",
+                "pub fn park(r: &mut Round, res: StepResult) { r.absorb(res); }\n",
+            ),
+        ]);
+        let fs = run_all(&t);
+        assert_eq!(ids(&fs), vec![NO_CROSS_SESSION_STATE]);
+        assert_eq!(fs[0].file, "serve/scheduler.rs");
+    }
+
+    #[test]
+    fn cross_session_rule_exempts_tests_and_allows() {
+        let src = "\
+pub fn route(r: &mut Round) { let _ = r; }
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn t(r: &mut super::Round, res: StepResult) { r.absorb(res); }
+}
+";
+        assert!(run_all(&tree(&[("serve/scheduler.rs", src)])).is_empty());
     }
 
     #[test]

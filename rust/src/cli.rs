@@ -11,6 +11,10 @@
 //!                      --connect-backoff-ms 100 --round-deadline-ms 0
 //!                      --approx-decode --approx-r-min 0 --max-respawns 0
 //!                      --adaptive-deadline]
+//! codedml serve       --sessions spec.json [--report-json out.json]
+//!                     multiplex several training sessions over one shared
+//!                     worker pool (see `serve` module docs for the spec
+//!                     format and the bit-identical isolation invariant)
 //! codedml --worker    [--listen 127.0.0.1:0]   run one TCP worker process:
 //!                     bind, print "worker listening on <addr>", serve
 //!                     master connections until a Shutdown frame (a lost
@@ -51,9 +55,12 @@ use crate::runtime::{BackendKind, XlaRuntime};
 use crate::util::args::Args;
 use crate::util::json::Json;
 
-const USAGE: &str = "usage: codedml <train|mpc|reproduce|budget|artifacts|lint|list> [options]
+const USAGE: &str = "usage: codedml <train|serve|mpc|reproduce|budget|artifacts|lint|list> [options]
        codedml --worker [--listen <addr>]
   train      run one CodedPrivateML training session
+  serve      multiplex several training sessions over one shared worker
+             pool (--sessions spec.json; --report-json writes the
+             per-session ServeReport)
   mpc        run the BGW MPC baseline
   reproduce  regenerate a paper table/figure (or 'all')
   budget     overflow-budget analysis for a parameter set
@@ -96,7 +103,9 @@ common options:
                               workers (TCP redial / in-memory respawn and
                               share re-ship; default 0 = off)
   --adaptive-deadline         tighten the round deadline to mean + 4 sigma
-                              of observed round times";
+                              of observed round times
+  --report-json <path>        write the run's full report (train: the
+                              TrainReport; serve: the ServeReport) as JSON";
 
 /// Entry point; returns the process exit code.
 pub fn run() -> i32 {
@@ -124,6 +133,7 @@ fn dispatch(args: &Args) -> Result<(), String> {
     }
     match args.positional.first().map(String::as_str) {
         Some("train") => cmd_train(args),
+        Some("serve") => cmd_serve(args),
         Some("mpc") => cmd_mpc(args),
         Some("reproduce") => cmd_reproduce(args),
         Some("budget") => cmd_budget(args),
@@ -183,6 +193,79 @@ fn maybe_write_json(args: &Args, json: &Json) -> Result<(), String> {
     if let Some(path) = args.get("json") {
         std::fs::write(path, json.to_string()).map_err(|e| format!("write {path}: {e}"))?;
         eprintln!("wrote {path}");
+    }
+    Ok(())
+}
+
+/// `--report-json <path>`: the machine-readable twin of the printed
+/// summary, uniform across `train` (TrainReport) and `serve`
+/// (ServeReport). Distinct from `--json`, whose payload varies per
+/// subcommand (reproduce emits experiment outputs, lint a findings map).
+fn maybe_write_report_json(args: &Args, json: &Json) -> Result<(), String> {
+    if let Some(path) = args.get("report-json") {
+        std::fs::write(path, json.to_string()).map_err(|e| format!("write {path}: {e}"))?;
+        eprintln!("wrote {path}");
+    }
+    Ok(())
+}
+
+/// `codedml serve --sessions <spec.json>`: build the scheduler from the
+/// spec, drive every session to completion over the shared pool, print
+/// one line per session plus pool totals. Per-session failures are
+/// reported but only fail the command if *no* session completed.
+fn cmd_serve(args: &Args) -> Result<(), String> {
+    let path = args
+        .get("sessions")
+        .ok_or("serve needs --sessions <spec.json> (see `codedml` usage)")?;
+    let text = std::fs::read_to_string(path).map_err(|e| format!("read {path}: {e}"))?;
+    let spec = crate::serve::ServeSpec::from_json(&text)?;
+    let njobs = spec.jobs.len();
+    let mut sched = crate::serve::Scheduler::new(spec).map_err(|e| e.to_string())?;
+    println!(
+        "serve: {njobs} session(s) over a shared {}-worker pool",
+        sched.pool_workers()
+    );
+    let report = sched.run().map_err(|e| e.to_string())?;
+    for s in &report.sessions {
+        match &s.error {
+            Some(e) => println!(
+                "session '{}' (id {}, {}): FAILED after {} round(s): {e}",
+                s.name,
+                s.session_id,
+                s.objective,
+                s.report.iterations.len()
+            ),
+            None => println!(
+                "session '{}' (id {}, {}, priority {}): {} round(s), final loss {:.5}",
+                s.name,
+                s.session_id,
+                s.objective,
+                s.priority,
+                s.report.iterations.len(),
+                s.report.iterations.last().map(|it| it.train_loss).unwrap_or(f64::NAN)
+            ),
+        }
+    }
+    println!(
+        "pool: transport {}, {} worker(s); wire {} B sent / {} B received; \
+         {} respawn(s); {} misrouted result(s)",
+        report.transport,
+        report.pool_workers,
+        report.wire_sent,
+        report.wire_received,
+        report.respawns,
+        report.misrouted
+    );
+    maybe_write_report_json(args, &report.to_json())?;
+    maybe_write_json(args, &report.to_json())?;
+    if report.misrouted > 0 {
+        return Err(format!(
+            "{} result(s) crossed a session boundary — routing bug",
+            report.misrouted
+        ));
+    }
+    if report.sessions.iter().all(|s| s.error.is_some()) {
+        return Err("every session failed".to_string());
     }
     Ok(())
 }
@@ -380,6 +463,7 @@ fn train_logistic(args: &Args, cfg: CodedMlConfig) -> Result<(), String> {
         );
     }
     print_report(&report);
+    maybe_write_report_json(args, &report.to_json())?;
     maybe_write_json(args, &report.to_json())
 }
 
@@ -415,6 +499,7 @@ fn train_linear(args: &Args, cfg: CodedMlConfig) -> Result<(), String> {
         .distance_to(&w_star);
     println!("planted-model recovery error ‖w − w*‖ = {err:.4}");
     print_report(&report);
+    maybe_write_report_json(args, &report.to_json())?;
     maybe_write_json(args, &report.to_json())
 }
 
@@ -791,5 +876,65 @@ mod tests {
     fn worker_mode_rejects_bad_listen_addr() {
         let err = dispatch(&args("--worker --listen not-an-address")).unwrap_err();
         assert!(err.contains("bind"), "{err}");
+    }
+
+    #[test]
+    fn serve_requires_sessions_flag() {
+        let err = dispatch(&args("serve")).unwrap_err();
+        assert!(err.contains("--sessions"), "{err}");
+    }
+
+    #[test]
+    fn serve_rejects_missing_spec_file() {
+        let err = dispatch(&args("serve --sessions does/not/exist.json")).unwrap_err();
+        assert!(err.contains("read"), "{err}");
+    }
+
+    #[test]
+    fn serve_micro_run_writes_report_json() {
+        let spec_path = std::env::temp_dir().join("codedml_cli_serve_spec.json");
+        let report_path = std::env::temp_dir().join("codedml_cli_serve_report.json");
+        std::fs::write(
+            &spec_path,
+            r#"{ "sessions": [
+                { "name": "log", "m": 60, "data_seed": 3,
+                  "config": { "n": 8, "k": 2, "t": 1, "iters": 2 } },
+                { "name": "lin", "m": 60, "d": 4, "data_seed": 5,
+                  "config": { "model": "linear", "n": 6, "k": 1, "t": 1,
+                              "iters": 2, "priority": 2 } }
+            ] }"#,
+        )
+        .unwrap();
+        let cmd = format!(
+            "serve --sessions {} --report-json {}",
+            spec_path.display(),
+            report_path.display()
+        );
+        assert!(dispatch(&args(&cmd)).is_ok());
+        let doc = Json::parse(&std::fs::read_to_string(&report_path).unwrap()).unwrap();
+        assert_eq!(doc.get("misrouted").unwrap().as_u64(), Some(0));
+        let sessions = doc.get("sessions").unwrap().as_arr().unwrap();
+        assert_eq!(sessions.len(), 2);
+        for s in sessions {
+            assert_eq!(s.get("error"), Some(&Json::Null));
+            let curve = s.get("report").unwrap().get("loss_curve").unwrap();
+            assert_eq!(curve.as_arr().unwrap().len(), 2);
+        }
+        let _ = std::fs::remove_file(&spec_path);
+        let _ = std::fs::remove_file(&report_path);
+    }
+
+    #[test]
+    fn train_report_json_writes_train_report() {
+        let path = std::env::temp_dir().join("codedml_cli_train_report.json");
+        let cmd = format!(
+            "train --n 10 --k 3 --t 1 --iters 1 --m 120 --no-straggle --free-net \
+             --report-json {}",
+            path.display()
+        );
+        assert!(dispatch(&args(&cmd)).is_ok());
+        let doc = Json::parse(&std::fs::read_to_string(&path).unwrap()).unwrap();
+        assert_eq!(doc.get("loss_curve").unwrap().as_arr().unwrap().len(), 1);
+        let _ = std::fs::remove_file(&path);
     }
 }

@@ -13,6 +13,10 @@ use super::worker::StepResult;
 /// Collection state for a single iteration.
 #[derive(Debug)]
 pub struct Round {
+    /// Session this round collects for. Results stamped with any other
+    /// session id are rejected (counted in `misrouted`) — interleaved
+    /// jobs sharing one pool must never leak results into each other.
+    pub session: u64,
     /// Iteration this round collects for; results tagged with an earlier
     /// iteration are stale leftovers and are dropped.
     pub iter: u64,
@@ -39,6 +43,9 @@ pub struct Round {
     /// original failure no longer blocks completion accounting — but it
     /// still happened and still reaches `TrainReport::worker_failures`.
     pub healed: Vec<(usize, String)>,
+    /// Results rejected because their session id did not match this
+    /// round's. They never touch completion accounting or the decoder.
+    pub misrouted: u64,
     /// Set when collection stopped because the per-round deadline
     /// (`--round-deadline-ms`) expired with workers still outstanding;
     /// each outstanding worker also gets a synthesized failure entry.
@@ -49,8 +56,15 @@ pub struct Round {
 
 impl Round {
     pub fn new(iter: u64, need: usize, expected: usize) -> Self {
+        Round::for_session(0, iter, need, expected)
+    }
+
+    /// A round scoped to one session of a shared pool. [`Round::new`] is
+    /// the dedicated-cluster special case (session 0).
+    pub fn for_session(session: u64, iter: u64, need: usize, expected: usize) -> Self {
         assert!(need <= expected, "need {need} results from {expected} workers");
         Round {
+            session,
             iter,
             need,
             expected,
@@ -59,6 +73,7 @@ impl Round {
             late_drained: 0,
             late_failures: Vec::new(),
             healed: Vec::new(),
+            misrouted: 0,
             deadline_expired: false,
             wall_secs: 0.0,
         }
@@ -84,6 +99,12 @@ impl Round {
     /// counted as late and dropped; results for this iteration land in
     /// `results` or `failures`.
     pub fn absorb(&mut self, res: StepResult) {
+        if res.session != self.session {
+            // A result from another session must never be decoded here —
+            // not even as a late drain. Reject and count.
+            self.misrouted += 1;
+            return;
+        }
         if res.iter != self.iter {
             if res.iter > self.iter {
                 // A result tagged for a *future* iteration means dispatch
@@ -102,6 +123,13 @@ impl Round {
             return;
         }
         match res.data {
+            // A second usable result from a worker already on the books
+            // (a heal re-dispatch racing the old incarnation's in-flight
+            // answer) would make the decoder see a duplicate eval point;
+            // keep the first arrival, drain the echo.
+            Ok(_) if self.results.iter().any(|r| r.worker == res.worker) => {
+                self.late_drained += 1
+            }
             Ok(_) if self.results.len() < self.need => self.results.push(res),
             // A usable result past the threshold (only possible when the
             // caller keeps feeding a completed round) is as good as late.
@@ -131,11 +159,11 @@ mod tests {
     use super::*;
 
     fn ok_result(worker: usize, iter: u64) -> StepResult {
-        StepResult { worker, iter, data: Ok(vec![worker as u64]), compute_secs: 0.001 }
+        StepResult { worker, session: 0, iter, data: Ok(vec![worker as u64]), compute_secs: 0.001 }
     }
 
     fn err_result(worker: usize, iter: u64) -> StepResult {
-        StepResult { worker, iter, data: Err("boom".into()), compute_secs: 0.0 }
+        StepResult { worker, session: 0, iter, data: Err("boom".into()), compute_secs: 0.0 }
     }
 
     #[test]
@@ -190,12 +218,54 @@ mod tests {
     }
 
     #[test]
+    fn duplicate_worker_result_is_drained_first_arrival_wins() {
+        let mut r = Round::new(0, 2, 3);
+        r.absorb(StepResult {
+            worker: 1,
+            session: 0,
+            iter: 0,
+            data: Ok(vec![10]),
+            compute_secs: 0.001,
+        });
+        // The same worker answers again (old incarnation's in-flight
+        // result racing a heal re-dispatch): drained, not decoded twice.
+        r.absorb(StepResult {
+            worker: 1,
+            session: 0,
+            iter: 0,
+            data: Ok(vec![99]),
+            compute_secs: 0.001,
+        });
+        assert_eq!(r.results.len(), 1);
+        assert_eq!(r.results[0].data, Ok(vec![10]), "first arrival wins");
+        assert_eq!(r.late_drained, 1);
+        assert!(!r.complete(), "the echo must not count toward need");
+        r.absorb(ok_result(2, 0));
+        assert!(r.complete() && r.ok());
+    }
+
+    #[test]
     fn extra_results_past_need_are_dropped() {
         let mut r = Round::new(0, 1, 3);
         r.absorb(ok_result(0, 0));
         r.absorb(ok_result(1, 0));
         assert_eq!(r.results.len(), 1);
         assert_eq!(r.late_drained, 1);
+    }
+
+    #[test]
+    fn cross_session_result_is_rejected_and_counted() {
+        let mut r = Round::for_session(7, 0, 1, 2);
+        let mut foreign = ok_result(0, 0);
+        foreign.session = 3;
+        r.absorb(foreign);
+        assert!(r.results.is_empty(), "foreign session must not be decoded");
+        assert_eq!(r.misrouted, 1);
+        assert!(!r.complete(), "misroutes never feed completion accounting");
+        let mut own = ok_result(1, 0);
+        own.session = 7;
+        r.absorb(own);
+        assert!(r.complete() && r.ok());
     }
 
     #[test]

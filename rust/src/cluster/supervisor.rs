@@ -156,7 +156,12 @@ impl Supervisor {
                 self.respawns += 1;
                 if mid_round && round.heal(w) {
                     match w_shares.get(w) {
-                        Some(ws) => match cluster.dispatch_to(w, round.iter, ws.clone()) {
+                        Some(ws) => match cluster.dispatch_to_for(
+                            round.session,
+                            w,
+                            round.iter,
+                            ws.clone(),
+                        ) {
                             Ok(()) => {
                                 redispatched = true;
                                 self.redispatches += 1;
@@ -167,6 +172,7 @@ impl Supervisor {
                                 // accounting so completion stays sound.
                                 round.absorb(super::worker::StepResult {
                                     worker: w,
+                                    session: round.session,
                                     iter: round.iter,
                                     data: Err(format!("re-dispatch: {e}")),
                                     compute_secs: 0.0,
@@ -176,6 +182,7 @@ impl Supervisor {
                         None => {
                             round.absorb(super::worker::StepResult {
                                 worker: w,
+                                session: round.session,
                                 iter: round.iter,
                                 data: Err("re-dispatch: no weight share".to_string()),
                                 compute_secs: 0.0,
@@ -284,6 +291,7 @@ mod tests {
         (0..n)
             .map(|id| WorkerSpec {
                 id,
+                session: 0,
                 kind: BackendKind::Native,
                 artifact_dir: PathBuf::from("artifacts"),
                 field: f,
@@ -299,11 +307,11 @@ mod tests {
     }
 
     fn ok_result(worker: usize, iter: u64) -> StepResult {
-        StepResult { worker, iter, data: Ok(vec![1]), compute_secs: 0.001 }
+        StepResult { worker, session: 0, iter, data: Ok(vec![1]), compute_secs: 0.001 }
     }
 
     fn err_result(worker: usize, iter: u64) -> StepResult {
-        StepResult { worker, iter, data: Err("boom".into()), compute_secs: 0.0 }
+        StepResult { worker, session: 0, iter, data: Err("boom".into()), compute_secs: 0.0 }
     }
 
     #[test]

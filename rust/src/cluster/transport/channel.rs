@@ -9,6 +9,7 @@
 //! accounting is backend-independent and the TCP bench compares real
 //! wire costs against the same denominator.
 
+use std::collections::HashMap;
 use std::sync::mpsc;
 use std::thread::JoinHandle;
 
@@ -21,10 +22,14 @@ use crate::util::timer::Deadline;
 /// [`frame::MasterFrame`], minus Hello: the spec rides into the thread at
 /// spawn).
 enum ToWorker {
-    /// One-time delivery of the coded dataset share (and labels for Linear).
-    LoadData { x: Vec<u64>, y: Option<Vec<u64>> },
-    /// Per-iteration coded weights.
-    Step { iter: u64, w: Vec<u64> },
+    /// Build an engine for one more session on this worker (the serve
+    /// scheduler sharing a pool between jobs).
+    Attach(Box<WorkerSpec>),
+    /// One-time delivery of one session's coded dataset share (and labels
+    /// for Linear).
+    LoadData { session: u64, x: Vec<u64>, y: Option<Vec<u64>> },
+    /// Per-iteration coded weights for one session.
+    Step { session: u64, iter: u64, w: Vec<u64> },
     Shutdown,
 }
 
@@ -50,21 +55,57 @@ fn worker_thread(
     tx: mpsc::Sender<StepResult>,
     ready: mpsc::Sender<Result<(), String>>,
 ) {
-    let mut engine = match WorkerEngine::new(spec) {
+    let id = spec.id;
+    let first_session = spec.session;
+    // One engine per attached session; the spawn spec's session is the
+    // first. An attach failure poisons only that session's steps (the
+    // master sees Err results on it), never the whole worker.
+    let mut engines: HashMap<u64, WorkerEngine> = HashMap::new();
+    let mut attach_errors: HashMap<u64, String> = HashMap::new();
+    match WorkerEngine::new(spec) {
         Ok(e) => {
             let _ = ready.send(Ok(()));
-            e
+            engines.insert(first_session, e);
         }
         Err(e) => {
             let _ = ready.send(Err(e));
             return;
         }
-    };
+    }
     while let Ok(msg) = rx.recv() {
         match msg {
-            ToWorker::LoadData { x, y } => engine.load(x, y),
-            ToWorker::Step { iter, w } => {
-                if tx.send(engine.step(iter, &w)).is_err() {
+            ToWorker::Attach(spec) => {
+                let session = spec.session;
+                match WorkerEngine::new(*spec) {
+                    Ok(e) => {
+                        engines.insert(session, e);
+                        attach_errors.remove(&session);
+                    }
+                    Err(e) => {
+                        attach_errors.insert(session, e);
+                    }
+                }
+            }
+            ToWorker::LoadData { session, x, y } => {
+                if let Some(en) = engines.get_mut(&session) {
+                    en.load(x, y);
+                }
+            }
+            ToWorker::Step { session, iter, w } => {
+                let res = match engines.get(&session) {
+                    Some(en) => en.step(iter, &w),
+                    None => StepResult {
+                        worker: id,
+                        session,
+                        iter,
+                        data: Err(match attach_errors.get(&session) {
+                            Some(e) => format!("attach failed: {e}"),
+                            None => format!("no engine for session {session}"),
+                        }),
+                        compute_secs: 0.0,
+                    },
+                };
+                if tx.send(res).is_err() {
                     return; // master gone
                 }
             }
@@ -125,6 +166,7 @@ impl Transport for ChannelTransport {
     fn send_load(
         &mut self,
         worker: usize,
+        session: u64,
         x: Vec<u64>,
         y: Option<Vec<u64>>,
     ) -> Result<(), String> {
@@ -134,17 +176,36 @@ impl Transport for ChannelTransport {
         )) as u64;
         self.workers[worker]
             .tx
-            .send(ToWorker::LoadData { x, y })
+            .send(ToWorker::LoadData { session, x, y })
             .map_err(|_| "worker channel closed".to_string())?;
         self.sent += cost;
         Ok(())
     }
 
-    fn send_step(&mut self, worker: usize, iter: u64, w: Vec<u64>) -> Result<(), String> {
+    fn send_step(
+        &mut self,
+        worker: usize,
+        session: u64,
+        iter: u64,
+        w: Vec<u64>,
+    ) -> Result<(), String> {
         let cost = frame::frame_len(frame::step_payload_len(w.len())) as u64;
         self.workers[worker]
             .tx
-            .send(ToWorker::Step { iter, w })
+            .send(ToWorker::Step { session, iter, w })
+            .map_err(|_| "worker channel closed".to_string())?;
+        self.sent += cost;
+        Ok(())
+    }
+
+    fn send_attach(&mut self, worker: usize, spec: &WorkerSpec) -> Result<(), String> {
+        let cost = frame::frame_len(frame::hello_payload_len(
+            spec.artifact_dir.as_os_str().len(),
+            spec.coeffs.len(),
+        )) as u64;
+        self.workers[worker]
+            .tx
+            .send(ToWorker::Attach(Box::new(spec.clone())))
             .map_err(|_| "worker channel closed".to_string())?;
         self.sent += cost;
         Ok(())

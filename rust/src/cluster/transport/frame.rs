@@ -5,7 +5,7 @@
 //! ```text
 //! offset  size  field
 //! 0       4     magic  "CPML"
-//! 4       2     version (little-endian u16, currently 1)
+//! 4       2     version (little-endian u16, currently 2)
 //! 6       1     opcode  (1=Hello 2=LoadData 3=Step 4=Shutdown 5=Ready 6=Result)
 //! 7       1     reserved (0)
 //! 8       4     payload length (little-endian u32, ≤ MAX_PAYLOAD)
@@ -27,8 +27,10 @@ use crate::cluster::worker::StepResult;
 
 /// Frame magic: "CPML".
 pub const MAGIC: [u8; 4] = *b"CPML";
-/// Protocol version carried in every header.
-pub const VERSION: u16 = 1;
+/// Protocol version carried in every header. Version 2 added session ids
+/// to Hello/LoadData/Step/Result so one worker process can serve several
+/// concurrent training sessions without mixing their traffic.
+pub const VERSION: u16 = 2;
 /// Fixed header size in bytes.
 pub const HEADER_LEN: usize = 12;
 /// Hard cap on a single payload (1 GiB) — anything larger is a corrupt or
@@ -271,14 +273,15 @@ pub fn frame_len(payload_len: usize) -> usize {
 }
 
 /// Payload size of a [`MasterFrame::LoadData`] carrying `x` words and
-/// optionally `y` words.
+/// optionally `y` words (8-byte session id + presence flag up front).
 pub fn load_data_payload_len(x: usize, y: Option<usize>) -> usize {
-    1 + vec_u64_len(x) + y.map(vec_u64_len).unwrap_or(0)
+    8 + 1 + vec_u64_len(x) + y.map(vec_u64_len).unwrap_or(0)
 }
 
-/// Payload size of a [`MasterFrame::Step`] carrying `w` words.
+/// Payload size of a [`MasterFrame::Step`] carrying `w` words (session +
+/// iteration ids up front).
 pub fn step_payload_len(w: usize) -> usize {
-    8 + vec_u64_len(w)
+    8 + 8 + vec_u64_len(w)
 }
 
 /// Payload size of a [`WorkerFrame::Result`] for `res`.
@@ -287,7 +290,15 @@ pub fn result_payload_len(res: &StepResult) -> usize {
         Ok(v) => vec_u64_len(v.len()),
         Err(e) => string_len(e),
     };
-    4 + 8 + 1 + body + 8
+    4 + 8 + 8 + 1 + body + 8
+}
+
+/// Payload size of a [`MasterFrame::Hello`] whose artifact dir is
+/// `artifact_dir_len` bytes and whose coefficient vector holds `coeffs`
+/// words. Fixed fields: id(4) + session(8) + backend(1) + op(1) + par(4)
+/// + p(8) + rows(4) + d(4) + fail flag(1) + fail iter(8) + slow_ms(8).
+pub fn hello_payload_len(artifact_dir_len: usize, coeffs: usize) -> usize {
+    51 + vec_u64_len(coeffs) + 4 + artifact_dir_len
 }
 
 // ---------------------------------------------------------------------------
@@ -301,6 +312,9 @@ pub fn result_payload_len(res: &StepResult) -> usize {
 #[derive(Debug, Clone, PartialEq, Eq)]
 pub struct HelloSpec {
     pub id: u32,
+    /// Session the engine computes for. The first Hello on a connection
+    /// is the handshake; later Hellos attach additional sessions.
+    pub session: u64,
     /// 0 = native, 1 = xla.
     pub backend: u8,
     /// 0 = logistic, 1 = linear.
@@ -321,8 +335,8 @@ pub struct HelloSpec {
 #[derive(Debug, Clone, PartialEq)]
 pub enum MasterFrame {
     Hello(HelloSpec),
-    LoadData { x: Vec<u64>, y: Option<Vec<u64>> },
-    Step { iter: u64, w: Vec<u64> },
+    LoadData { session: u64, x: Vec<u64>, y: Option<Vec<u64>> },
+    Step { session: u64, iter: u64, w: Vec<u64> },
     Shutdown,
 }
 
@@ -333,6 +347,7 @@ impl MasterFrame {
             MasterFrame::Hello(h) => {
                 let mut out = Vec::new();
                 put_u32(&mut out, h.id);
+                put_u64(&mut out, h.session);
                 out.push(h.backend);
                 out.push(h.op);
                 put_u32(&mut out, h.par);
@@ -354,8 +369,9 @@ impl MasterFrame {
                 put_string(&mut out, &h.artifact_dir);
                 (opcode::HELLO, out)
             }
-            MasterFrame::LoadData { x, y } => {
+            MasterFrame::LoadData { session, x, y } => {
                 let mut out = Vec::new();
+                put_u64(&mut out, *session);
                 match y {
                     Some(ys) => {
                         out.push(1);
@@ -369,8 +385,9 @@ impl MasterFrame {
                 }
                 (opcode::LOAD_DATA, out)
             }
-            MasterFrame::Step { iter, w } => {
+            MasterFrame::Step { session, iter, w } => {
                 let mut out = Vec::new();
+                put_u64(&mut out, *session);
                 put_u64(&mut out, *iter);
                 put_vec_u64(&mut out, w);
                 (opcode::STEP, out)
@@ -384,6 +401,7 @@ impl MasterFrame {
         let frame = match op {
             opcode::HELLO => {
                 let id = r.u32()?;
+                let session = r.u64()?;
                 let backend = r.u8()?;
                 let op_code = r.u8()?;
                 let par = r.u32()?;
@@ -397,6 +415,7 @@ impl MasterFrame {
                 let artifact_dir = r.string()?;
                 MasterFrame::Hello(HelloSpec {
                     id,
+                    session,
                     backend,
                     op: op_code,
                     par,
@@ -410,15 +429,17 @@ impl MasterFrame {
                 })
             }
             opcode::LOAD_DATA => {
+                let session = r.u64()?;
                 let has_y = r.u8()?;
                 let x = r.vec_u64()?;
                 let y = if has_y != 0 { Some(r.vec_u64()?) } else { None };
-                MasterFrame::LoadData { x, y }
+                MasterFrame::LoadData { session, x, y }
             }
             opcode::STEP => {
+                let session = r.u64()?;
                 let iter = r.u64()?;
                 let w = r.vec_u64()?;
-                MasterFrame::Step { iter, w }
+                MasterFrame::Step { session, iter, w }
             }
             opcode::SHUTDOWN => MasterFrame::Shutdown,
             other => return Err(WireError::BadOpcode(other)),
@@ -460,6 +481,7 @@ impl WorkerFrame {
             WorkerFrame::Result(res) => {
                 let mut out = Vec::new();
                 put_u32(&mut out, res.worker as u32);
+                put_u64(&mut out, res.session);
                 put_u64(&mut out, res.iter);
                 match &res.data {
                     Ok(v) => {
@@ -487,11 +509,12 @@ impl WorkerFrame {
             }
             opcode::RESULT => {
                 let worker = r.u32()? as usize;
+                let session = r.u64()?;
                 let iter = r.u64()?;
                 let ok = r.u8()?;
                 let data = if ok != 0 { Ok(r.vec_u64()?) } else { Err(r.string()?) };
                 let compute_secs = f64::from_bits(r.u64()?);
-                WorkerFrame::Result(StepResult { worker, iter, data, compute_secs })
+                WorkerFrame::Result(StepResult { worker, session, iter, data, compute_secs })
             }
             other => return Err(WireError::BadOpcode(other)),
         };
@@ -527,6 +550,7 @@ mod tests {
     fn sample_hello(rng: &mut Rng) -> HelloSpec {
         HelloSpec {
             id: rng.below(64) as u32,
+            session: rng.below(8),
             backend: rng.below(2) as u8,
             op: rng.below(2) as u8,
             par: rng.below(9) as u32,
@@ -549,14 +573,15 @@ mod tests {
             let y = rng
                 .bernoulli(0.5)
                 .then(|| (0..rng.below_usize(16)).map(|_| rng.next_u64()).collect());
-            round_trip_master(MasterFrame::LoadData { x, y });
+            round_trip_master(MasterFrame::LoadData { session: rng.below(4), x, y });
             round_trip_master(MasterFrame::Step {
+                session: rng.below(4),
                 iter: rng.next_u64(),
                 w: (0..rng.below_usize(64)).map(|_| rng.next_u64()).collect(),
             });
         }
         round_trip_master(MasterFrame::Shutdown);
-        round_trip_master(MasterFrame::LoadData { x: vec![], y: Some(vec![]) });
+        round_trip_master(MasterFrame::LoadData { session: 0, x: vec![], y: Some(vec![]) });
     }
 
     #[test]
@@ -572,6 +597,7 @@ mod tests {
             };
             round_trip_worker(WorkerFrame::Result(StepResult {
                 worker: rng.below_usize(64),
+                session: rng.below(16),
                 iter: rng.next_u64(),
                 data,
                 compute_secs: rng.f64(),
@@ -587,15 +613,24 @@ mod tests {
             let y: Option<Vec<u64>> = rng
                 .bernoulli(0.5)
                 .then(|| (0..rng.below_usize(40)).map(|_| rng.next_u64()).collect());
-            let (_, p) = MasterFrame::LoadData { x: x.clone(), y: y.clone() }.encode();
+            let (_, p) =
+                MasterFrame::LoadData { session: 1, x: x.clone(), y: y.clone() }.encode();
             assert_eq!(p.len(), load_data_payload_len(x.len(), y.as_ref().map(Vec::len)));
 
             let w: Vec<u64> = (0..rng.below_usize(40)).map(|_| rng.next_u64()).collect();
-            let (_, p) = MasterFrame::Step { iter: 3, w: w.clone() }.encode();
+            let (_, p) = MasterFrame::Step { session: 1, iter: 3, w: w.clone() }.encode();
             assert_eq!(p.len(), step_payload_len(w.len()));
+
+            let hello = sample_hello(&mut rng);
+            let (_, p) = MasterFrame::Hello(hello.clone()).encode();
+            assert_eq!(
+                p.len(),
+                hello_payload_len(hello.artifact_dir.len(), hello.coeffs.len())
+            );
 
             let res = StepResult {
                 worker: 2,
+                session: 6,
                 iter: 5,
                 data: if rng.bernoulli(0.5) {
                     Ok(w.clone())
@@ -640,7 +675,8 @@ mod tests {
 
     #[test]
     fn truncation_at_every_cut_is_typed_not_a_panic() {
-        let (op, payload) = MasterFrame::Step { iter: 9, w: vec![1, 2, 3] }.encode();
+        let (op, payload) =
+            MasterFrame::Step { session: 0, iter: 9, w: vec![1, 2, 3] }.encode();
         let mut wire = Vec::new();
         write_frame(&mut wire, op, &payload).unwrap();
         for cut in 0..wire.len() {
@@ -666,13 +702,18 @@ mod tests {
             let mut w = Vec::new();
             write_frame(&mut w, op, &p).unwrap();
             out.push(w);
-            let (op, p) =
-                MasterFrame::LoadData { x: vec![5; 12], y: Some(vec![7; 12]) }.encode();
+            let (op, p) = MasterFrame::LoadData {
+                session: 2,
+                x: vec![5; 12],
+                y: Some(vec![7; 12]),
+            }
+            .encode();
             let mut w = Vec::new();
             write_frame(&mut w, op, &p).unwrap();
             out.push(w);
             let (op, p) = WorkerFrame::Result(StepResult {
                 worker: 1,
+                session: 0,
                 iter: 2,
                 data: Ok(vec![3; 9]),
                 compute_secs: 0.5,

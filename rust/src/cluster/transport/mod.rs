@@ -57,13 +57,32 @@ pub trait Transport: Send {
     /// Backend name for traces and benches ("memory" / "tcp").
     fn name(&self) -> &'static str;
 
-    /// Deliver worker `worker`'s coded data share (labels only for the
-    /// Linear op). `Err` = that worker is unreachable.
-    fn send_load(&mut self, worker: usize, x: Vec<u64>, y: Option<Vec<u64>>)
-        -> Result<(), String>;
+    /// Deliver worker `worker`'s coded data share for `session` (labels
+    /// only for the Linear op). `Err` = that worker is unreachable.
+    fn send_load(
+        &mut self,
+        worker: usize,
+        session: u64,
+        x: Vec<u64>,
+        y: Option<Vec<u64>>,
+    ) -> Result<(), String>;
 
-    /// Deliver coded weights for iteration `iter` to worker `worker`.
-    fn send_step(&mut self, worker: usize, iter: u64, w: Vec<u64>) -> Result<(), String>;
+    /// Deliver coded weights for iteration `iter` of `session` to worker
+    /// `worker`.
+    fn send_step(
+        &mut self,
+        worker: usize,
+        session: u64,
+        iter: u64,
+        w: Vec<u64>,
+    ) -> Result<(), String>;
+
+    /// Build an engine for `spec`'s session on an already-connected
+    /// worker, leaving every other session's engine on that worker
+    /// intact. This is how the serve scheduler multiplexes jobs over one
+    /// pool; `spec.id` names the worker. `Err` = that worker is
+    /// unreachable.
+    fn send_attach(&mut self, worker: usize, spec: &WorkerSpec) -> Result<(), String>;
 
     /// Block for the next worker event, whichever worker it comes from.
     fn recv(&mut self) -> Result<TransportEvent, ClusterError> {

@@ -32,7 +32,7 @@ use super::frame::{
     frame_len, read_frame, write_frame, HelloSpec, MasterFrame, WorkerFrame,
 };
 use super::{TcpConfig, Transport, TransportEvent};
-use crate::cluster::worker::{ClusterError, WorkerEngine, WorkerOp, WorkerSpec};
+use crate::cluster::worker::{ClusterError, StepResult, WorkerEngine, WorkerOp, WorkerSpec};
 use crate::field::PrimeField;
 use crate::runtime::BackendKind;
 use crate::util::par::Parallelism;
@@ -66,6 +66,7 @@ fn par_code(par: Parallelism) -> u32 {
 fn hello_from_spec(spec: &WorkerSpec) -> HelloSpec {
     HelloSpec {
         id: spec.id as u32,
+        session: spec.session,
         backend: backend_code(spec.kind),
         op: op_code(spec.op),
         par: par_code(spec.par),
@@ -92,6 +93,7 @@ fn spec_from_hello(h: HelloSpec) -> Result<WorkerSpec, String> {
     };
     Ok(WorkerSpec {
         id: h.id as usize,
+        session: h.session,
         kind,
         artifact_dir: PathBuf::from(h.artifact_dir),
         field: PrimeField::new(h.p),
@@ -425,14 +427,28 @@ impl Transport for TcpTransport {
     fn send_load(
         &mut self,
         worker: usize,
+        session: u64,
         x: Vec<u64>,
         y: Option<Vec<u64>>,
     ) -> Result<(), String> {
-        self.send_frame(worker, &MasterFrame::LoadData { x, y })
+        self.send_frame(worker, &MasterFrame::LoadData { session, x, y })
     }
 
-    fn send_step(&mut self, worker: usize, iter: u64, w: Vec<u64>) -> Result<(), String> {
-        self.send_frame(worker, &MasterFrame::Step { iter, w })
+    fn send_step(
+        &mut self,
+        worker: usize,
+        session: u64,
+        iter: u64,
+        w: Vec<u64>,
+    ) -> Result<(), String> {
+        self.send_frame(worker, &MasterFrame::Step { session, iter, w })
+    }
+
+    fn send_attach(&mut self, worker: usize, spec: &WorkerSpec) -> Result<(), String> {
+        // A non-handshake Hello: the worker builds the engine silently (a
+        // second Ready would read as a protocol violation on our reader);
+        // attach failures surface as Err results on that session's steps.
+        self.send_frame(worker, &MasterFrame::Hello(hello_from_spec(spec)))
     }
 
     fn recv_deadline(
@@ -538,7 +554,16 @@ pub fn serve(stream: TcpStream) -> Result<bool, String> {
     let read_half = stream.try_clone().map_err(|e| format!("clone stream: {e}"))?;
     let mut reader = BufReader::new(read_half);
     let mut writer = BufWriter::new(stream);
-    let mut engine: Option<WorkerEngine> = None;
+    // One engine per attached session. The first Hello is the handshake
+    // (answered with Ready); later Hellos attach more sessions *silently*
+    // — the master's reader treats any Ready after the handshake as a
+    // protocol violation, so attach failures poison only that session's
+    // steps (Err results) instead of being acknowledged.
+    let mut engines: std::collections::HashMap<u64, WorkerEngine> =
+        std::collections::HashMap::new();
+    let mut attach_errors: std::collections::HashMap<u64, String> =
+        std::collections::HashMap::new();
+    let mut worker_id: Option<usize> = None;
     loop {
         let (op, payload) = match read_frame(&mut reader) {
             Ok(Some(f)) => f,
@@ -548,26 +573,60 @@ pub fn serve(stream: TcpStream) -> Result<bool, String> {
         let frame = MasterFrame::decode(op, &payload).map_err(|e| format!("decode: {e}"))?;
         match frame {
             MasterFrame::Hello(h) => {
-                let built = spec_from_hello(h).and_then(WorkerEngine::new);
+                let session = h.session;
+                let handshake = worker_id.is_none();
+                let built = spec_from_hello(h).and_then(|s| {
+                    let id = s.id;
+                    WorkerEngine::new(s).map(|e| (id, e))
+                });
                 match built {
-                    Ok(e) => {
-                        engine = Some(e);
-                        reply(&mut writer, &WorkerFrame::Ready { error: None })?;
+                    Ok((id, e)) => {
+                        if handshake {
+                            worker_id = Some(id);
+                            reply(&mut writer, &WorkerFrame::Ready { error: None })?;
+                        }
+                        engines.insert(session, e);
+                        attach_errors.remove(&session);
                     }
                     Err(e) => {
-                        reply(&mut writer, &WorkerFrame::Ready { error: Some(e) })?;
-                        return Ok(false);
+                        if handshake {
+                            reply(&mut writer, &WorkerFrame::Ready { error: Some(e) })?;
+                            return Ok(false);
+                        }
+                        attach_errors.insert(session, e);
                     }
                 }
             }
-            MasterFrame::LoadData { x, y } => match engine.as_mut() {
-                Some(en) => en.load(x, y),
-                None => return Err("protocol: LoadData before Hello".to_string()),
-            },
-            MasterFrame::Step { iter, w } => match engine.as_ref() {
-                Some(en) => reply(&mut writer, &WorkerFrame::Result(en.step(iter, &w)))?,
-                None => return Err("protocol: Step before Hello".to_string()),
-            },
+            MasterFrame::LoadData { session, x, y } => {
+                if worker_id.is_none() {
+                    return Err("protocol: LoadData before Hello".to_string());
+                }
+                if let Some(en) = engines.get_mut(&session) {
+                    en.load(x, y);
+                }
+                // No engine: the attach failed — the error surfaces on
+                // this session's next Step.
+            }
+            MasterFrame::Step { session, iter, w } => {
+                let id = match worker_id {
+                    Some(id) => id,
+                    None => return Err("protocol: Step before Hello".to_string()),
+                };
+                let res = match engines.get(&session) {
+                    Some(en) => en.step(iter, &w),
+                    None => StepResult {
+                        worker: id,
+                        session,
+                        iter,
+                        data: Err(match attach_errors.get(&session) {
+                            Some(e) => format!("attach failed: {e}"),
+                            None => format!("no engine for session {session}"),
+                        }),
+                        compute_secs: 0.0,
+                    },
+                };
+                reply(&mut writer, &WorkerFrame::Result(res))?;
+            }
             MasterFrame::Shutdown => return Ok(true),
         }
     }
@@ -581,6 +640,7 @@ mod tests {
     fn spec() -> WorkerSpec {
         WorkerSpec {
             id: 3,
+            session: 7,
             kind: BackendKind::Native,
             artifact_dir: PathBuf::from("artifacts"),
             field: PrimeField::new(PAPER_PRIME),
@@ -599,6 +659,7 @@ mod tests {
         let s = spec();
         let got = spec_from_hello(hello_from_spec(&s)).unwrap();
         assert_eq!(got.id, s.id);
+        assert_eq!(got.session, s.session);
         assert_eq!(got.kind, s.kind);
         assert_eq!(got.artifact_dir, s.artifact_dir);
         assert_eq!(got.field.modulus(), s.field.modulus());
@@ -644,6 +705,7 @@ mod tests {
 
         let mut s = spec();
         s.id = 0;
+        s.session = 0;
         s.fail_from_iter = None;
         s.slow_ms = 0;
         let f = s.field;
@@ -656,11 +718,12 @@ mod tests {
 
         let x: Vec<u64> = (1..=(rows * d) as u64).collect();
         let w = vec![2u64, 4, 6];
-        t.send_load(0, x.clone(), None).unwrap();
-        t.send_step(0, 9, w.clone()).unwrap();
+        t.send_load(0, 0, x.clone(), None).unwrap();
+        t.send_step(0, 0, 9, w.clone()).unwrap();
         match t.recv().unwrap() {
             TransportEvent::Result(res) => {
                 assert_eq!(res.worker, 0);
+                assert_eq!(res.session, 0);
                 assert_eq!(res.iter, 9);
                 let wc = WorkerComputation::new(f, rows, d, vec![3, 7]);
                 assert_eq!(res.data.unwrap(), wc.compute(&x, &w));
@@ -669,6 +732,58 @@ mod tests {
         }
         let (sent, received) = t.bytes();
         assert!(sent > 0 && received > 0, "handshake + step must be charged");
+        t.shutdown();
+        server.join().unwrap();
+    }
+
+    #[test]
+    fn serve_attaches_second_session_silently() {
+        use crate::compute::WorkerComputation;
+        let listener = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap().to_string();
+        let server = std::thread::spawn(move || {
+            let (stream, _) = listener.accept().unwrap();
+            serve(stream).unwrap();
+        });
+
+        let mut s = spec();
+        s.id = 0;
+        s.session = 0;
+        s.fail_from_iter = None;
+        s.slow_ms = 0;
+        let f = s.field;
+        let (rows, d) = (s.rows, s.d);
+        let cfg = TcpConfig { workers: vec![addr], ..TcpConfig::default() };
+        let (mut t, down) = TcpTransport::connect(&[s.clone()], &cfg).unwrap();
+        assert_eq!(down, vec![None]);
+
+        // Attach a second session on the same connection: no Ready comes
+        // back (the reader would treat one as a protocol violation), and
+        // both sessions answer steps tagged with their own ids and data.
+        let mut s2 = s.clone();
+        s2.session = 5;
+        t.send_attach(0, &s2).unwrap();
+
+        let x0: Vec<u64> = (1..=(rows * d) as u64).collect();
+        let x5: Vec<u64> = (2..=(rows * d) as u64 + 1).collect();
+        let w = vec![2u64, 4, 6];
+        t.send_load(0, 0, x0.clone(), None).unwrap();
+        t.send_load(0, 5, x5.clone(), None).unwrap();
+        t.send_step(0, 5, 1, w.clone()).unwrap();
+        t.send_step(0, 0, 1, w.clone()).unwrap();
+        let wc = WorkerComputation::new(f, rows, d, vec![3, 7]);
+        let mut got = Vec::new();
+        for _ in 0..2 {
+            match t.recv().unwrap() {
+                TransportEvent::Result(res) => got.push(res),
+                other => panic!("expected Result, got {other:?}"),
+            }
+        }
+        got.sort_by_key(|r| r.session);
+        assert_eq!(got[0].session, 0);
+        assert_eq!(got[0].data.as_ref().unwrap(), &wc.compute(&x0, &w));
+        assert_eq!(got[1].session, 5);
+        assert_eq!(got[1].data.as_ref().unwrap(), &wc.compute(&x5, &w));
         t.shutdown();
         server.join().unwrap();
     }
@@ -690,6 +805,7 @@ mod tests {
 
         let mut s = spec();
         s.id = 0;
+        s.session = 0;
         s.fail_from_iter = None;
         s.slow_ms = 0;
         let f = s.field;
@@ -701,14 +817,14 @@ mod tests {
 
         let x: Vec<u64> = (1..=(rows * d) as u64).collect();
         let w = vec![2u64, 4, 6];
-        t.send_load(0, x.clone(), None).unwrap();
+        t.send_load(0, 0, x.clone(), None).unwrap();
 
         // Reconnect replaces the live connection (the worker loops back to
         // accept), bumps the generation, and the old reader's Down must
         // not surface afterwards.
         t.reconnect(&s).unwrap();
-        t.send_load(0, x.clone(), None).unwrap();
-        t.send_step(0, 1, w.clone()).unwrap();
+        t.send_load(0, 0, x.clone(), None).unwrap();
+        t.send_step(0, 0, 1, w.clone()).unwrap();
         match t
             .recv_deadline(&Deadline::after_ms(5000))
             .unwrap()

@@ -14,6 +14,7 @@
 //! becomes per-round failures (counted by the session into
 //! `TrainReport::worker_failures`) instead of an abort.
 
+use std::collections::{HashMap, VecDeque};
 use std::time::Duration;
 
 use super::round::Round;
@@ -41,6 +42,10 @@ pub enum WorkerOp {
 #[derive(Debug, Clone)]
 pub struct WorkerSpec {
     pub id: usize,
+    /// Owning session (0 for a dedicated single-job cluster). The engine
+    /// stamps it into every [`StepResult`] so the master can route
+    /// interleaved rounds from concurrent sessions without mixing them.
+    pub session: u64,
     pub kind: BackendKind,
     pub artifact_dir: PathBuf,
     pub field: PrimeField,
@@ -66,6 +71,9 @@ pub struct WorkerSpec {
 #[derive(Debug, Clone, PartialEq)]
 pub struct StepResult {
     pub worker: usize,
+    /// Session this result belongs to. Routing rejects mismatches: a
+    /// result is only absorbed into a round with the same session id.
+    pub session: u64,
     pub iter: u64,
     /// f(X̃_i, W̃_i) — or an error message if the backend failed.
     pub data: Result<Vec<u64>, String>,
@@ -104,6 +112,7 @@ impl std::error::Error for ClusterError {}
 /// is driven by exactly three operations: build, load, step.
 pub struct WorkerEngine {
     id: usize,
+    session: u64,
     op: WorkerOp,
     field: PrimeField,
     rows: usize,
@@ -136,6 +145,7 @@ impl WorkerEngine {
         .map_err(|e| e.to_string())?;
         Ok(WorkerEngine {
             id: spec.id,
+            session: spec.session,
             op: spec.op,
             field: spec.field,
             rows: spec.rows,
@@ -170,6 +180,7 @@ impl WorkerEngine {
         if self.fail_from_iter.map(|from| iter >= from).unwrap_or(false) {
             return StepResult {
                 worker: self.id,
+                session: self.session,
                 iter,
                 data: Err("injected fault".to_string()),
                 compute_secs: 0.0,
@@ -178,6 +189,7 @@ impl WorkerEngine {
         if let Some(e) = &self.data_error {
             return StepResult {
                 worker: self.id,
+                session: self.session,
                 iter,
                 data: Err(e.clone()),
                 compute_secs: 0.0,
@@ -206,7 +218,12 @@ impl WorkerEngine {
             }
             data
         });
-        StepResult { worker: self.id, iter, data, compute_secs }
+        StepResult { worker: self.id, session: self.session, iter, data, compute_secs }
+    }
+
+    /// Session this engine computes for.
+    pub fn session(&self) -> u64 {
+        self.session
     }
 }
 
@@ -240,6 +257,18 @@ pub struct Cluster {
     transport: Box<dyn Transport>,
     /// `Some(reason)` once worker i is unreachable for good.
     down: Vec<Option<String>>,
+    /// Session-scoped routing: results that arrive for a *registered*
+    /// session other than the round being collected are parked here and
+    /// drained first on that session's next collect. Key presence is the
+    /// registration; a dedicated cluster registers only session 0.
+    pending: HashMap<u64, VecDeque<StepResult>>,
+    /// Results whose session id matched no registered session: rejected,
+    /// never decoded, counted here (and on the round that saw them).
+    misrouted: u64,
+    /// Per-session worker span: session s drives workers `0..widths[s]`
+    /// of the shared pool. Absent means the full pool — the dedicated
+    /// single-session case and any serve job as wide as the pool.
+    widths: HashMap<u64, usize>,
 }
 
 impl Cluster {
@@ -257,8 +286,9 @@ impl Cluster {
         match cfg.kind {
             TransportKind::Memory => {
                 let n = specs.len();
+                let session = specs.first().map(|s| s.session).unwrap_or(0);
                 let transport = ChannelTransport::spawn(specs)?;
-                Ok(Cluster { transport: Box::new(transport), down: vec![None; n] })
+                Ok(Cluster::wrap(Box::new(transport), vec![None; n], session))
             }
             TransportKind::Tcp => {
                 if cfg.tcp.workers.len() != specs.len() {
@@ -268,10 +298,84 @@ impl Cluster {
                         cfg.tcp.workers.len()
                     )));
                 }
+                let session = specs.first().map(|s| s.session).unwrap_or(0);
                 let (transport, down) = TcpTransport::connect(&specs, &cfg.tcp)?;
-                Ok(Cluster { transport: Box::new(transport), down })
+                Ok(Cluster::wrap(Box::new(transport), down, session))
             }
         }
+    }
+
+    fn wrap(transport: Box<dyn Transport>, down: Vec<Option<String>>, session: u64) -> Self {
+        let mut pending = HashMap::new();
+        pending.insert(session, VecDeque::new());
+        Cluster { transport, down, pending, misrouted: 0, widths: HashMap::new() }
+    }
+
+    /// Register an additional session id with the routing table. Results
+    /// carrying a registered session are buffered across interleaved
+    /// collects instead of rejected. The session of the specs the cluster
+    /// was built with is registered implicitly.
+    pub fn register_session(&mut self, session: u64) {
+        self.pending.entry(session).or_default();
+    }
+
+    /// Total results rejected because their session id matched no
+    /// registered session.
+    pub fn misrouted(&self) -> u64 {
+        self.misrouted
+    }
+
+    /// Declare that `session` drives only the first `workers` workers of
+    /// the pool. Its dispatch/load calls then take exactly that many
+    /// shares, its rounds expect that many answers, and deaths outside
+    /// the span are never charged to it. Unset sessions span the pool.
+    pub fn set_session_workers(&mut self, session: u64, workers: usize) {
+        assert!(
+            workers >= 1 && workers <= self.transport.n(),
+            "session {session} wants {workers} workers from a pool of {}",
+            self.transport.n()
+        );
+        self.widths.insert(session, workers);
+    }
+
+    /// Worker span of `session` (pool-wide when never narrowed).
+    fn width(&self, session: u64) -> usize {
+        self.widths.get(&session).copied().unwrap_or(self.transport.n())
+    }
+
+    /// Build an engine for `spec`'s session on an already-connected
+    /// worker (the serve scheduler's way of sharing one pool between
+    /// jobs). A send failure marks the worker down.
+    pub fn attach_worker(&mut self, spec: &WorkerSpec) -> Result<(), String> {
+        let w = spec.id;
+        if let Some(e) = &self.down[w] {
+            return Err(format!("worker down: {e}"));
+        }
+        if let Err(e) = self.transport.send_attach(w, spec) {
+            self.down[w] = Some(e.clone());
+            return Err(e);
+        }
+        Ok(())
+    }
+
+    /// Ship one session's coded data share to one worker (serve-side
+    /// sibling of [`Cluster::revive`]'s re-ship, used after
+    /// [`Cluster::attach_worker`]).
+    pub fn load_worker(
+        &mut self,
+        worker: usize,
+        session: u64,
+        x: Vec<u64>,
+        y: Option<Vec<u64>>,
+    ) -> Result<(), String> {
+        if let Some(e) = &self.down[worker] {
+            return Err(format!("worker down: {e}"));
+        }
+        if let Err(e) = self.transport.send_load(worker, session, x, y) {
+            self.down[worker] = Some(e.clone());
+            return Err(e);
+        }
+        Ok(())
     }
 
     pub fn n(&self) -> usize {
@@ -305,15 +409,25 @@ impl Cluster {
     pub fn load_data(
         &mut self,
         x_shares: Vec<Vec<u64>>,
+        y_shares: Option<Vec<Vec<u64>>>,
+    ) -> Result<(), ClusterError> {
+        self.load_data_for(0, x_shares, y_shares)
+    }
+
+    /// [`Cluster::load_data`] addressed to one session's engines.
+    pub fn load_data_for(
+        &mut self,
+        session: u64,
+        x_shares: Vec<Vec<u64>>,
         mut y_shares: Option<Vec<Vec<u64>>>,
     ) -> Result<(), ClusterError> {
-        assert_eq!(x_shares.len(), self.transport.n());
+        assert_eq!(x_shares.len(), self.width(session));
         for (i, x) in x_shares.into_iter().enumerate() {
             if self.down[i].is_some() {
                 continue;
             }
             let y = y_shares.as_mut().map(|ys| std::mem::take(&mut ys[i]));
-            if let Err(e) = self.transport.send_load(i, x, y) {
+            if let Err(e) = self.transport.send_load(i, session, x, y) {
                 self.down[i] = Some(e);
             }
         }
@@ -322,12 +436,22 @@ impl Cluster {
 
     /// Send coded weights for iteration `iter` to every live worker.
     pub fn dispatch(&mut self, iter: u64, w_shares: Vec<Vec<u64>>) -> Result<(), ClusterError> {
-        assert_eq!(w_shares.len(), self.transport.n());
+        self.dispatch_for(0, iter, w_shares)
+    }
+
+    /// [`Cluster::dispatch`] addressed to one session's engines.
+    pub fn dispatch_for(
+        &mut self,
+        session: u64,
+        iter: u64,
+        w_shares: Vec<Vec<u64>>,
+    ) -> Result<(), ClusterError> {
+        assert_eq!(w_shares.len(), self.width(session));
         for (i, w) in w_shares.into_iter().enumerate() {
             if self.down[i].is_some() {
                 continue;
             }
-            if let Err(e) = self.transport.send_step(i, iter, w) {
+            if let Err(e) = self.transport.send_step(i, session, iter, w) {
                 self.down[i] = Some(e);
             }
         }
@@ -349,6 +473,16 @@ impl Cluster {
         self.collect_deadline(need, iter, &Deadline::none())
     }
 
+    /// [`Cluster::collect_first`] scoped to one session's results.
+    pub fn collect_first_for(
+        &mut self,
+        session: u64,
+        need: usize,
+        iter: u64,
+    ) -> Result<Round, ClusterError> {
+        self.collect_deadline_for(session, need, iter, &Deadline::none())
+    }
+
     /// [`Cluster::collect_first`] with a wall-clock budget: when `deadline`
     /// expires first, every still-outstanding worker is charged a
     /// synthesized `"round deadline expired"` failure, the round's
@@ -362,12 +496,27 @@ impl Cluster {
         iter: u64,
         deadline: &Deadline,
     ) -> Result<Round, ClusterError> {
-        let n = self.transport.n();
-        let mut round = Round::new(iter, need, n);
+        self.collect_deadline_for(0, need, iter, deadline)
+    }
+
+    /// [`Cluster::collect_deadline`] scoped to one session: only results
+    /// stamped with `session` enter the round; results for other
+    /// registered sessions are parked (drained on their own collect), and
+    /// unknown session ids are rejected and counted.
+    pub fn collect_deadline_for(
+        &mut self,
+        session: u64,
+        need: usize,
+        iter: u64,
+        deadline: &Deadline,
+    ) -> Result<Round, ClusterError> {
+        let n = self.width(session);
+        let mut round = Round::for_session(session, iter, need, n);
         for w in 0..n {
             if let Some(e) = &self.down[w] {
                 round.absorb(StepResult {
                     worker: w,
+                    session,
                     iter,
                     data: Err(format!("worker down: {e}")),
                     compute_secs: 0.0,
@@ -389,21 +538,49 @@ impl Cluster {
         deadline: &Deadline,
     ) -> Result<(), ClusterError> {
         let (res, wall_secs) = timed(|| -> Result<(), ClusterError> {
+            // Results for this session that arrived while another
+            // session's round was being collected were parked — they are
+            // the oldest traffic, so feed them in first.
+            if let Some(buf) = self.pending.get_mut(&round.session) {
+                while !round.complete() {
+                    match buf.pop_front() {
+                        Some(res) => round.absorb(res),
+                        None => break,
+                    }
+                }
+            }
             while !round.complete() {
                 match self.transport.recv_deadline(deadline)? {
-                    Some(TransportEvent::Result(res)) => round.absorb(res),
+                    Some(TransportEvent::Result(res)) => {
+                        if res.session == round.session {
+                            round.absorb(res);
+                        } else if let Some(buf) = self.pending.get_mut(&res.session) {
+                            buf.push_back(res);
+                        } else {
+                            // Unknown session id: reject, never decode.
+                            self.misrouted += 1;
+                            round.misrouted += 1;
+                        }
+                    }
                     Some(TransportEvent::Down { worker, error }) => {
                         // First notice of this death: count it against the
-                        // current round. (Subsequent rounds charge it via
-                        // the up-front down scan above.)
+                        // current round — unless the dead worker sits
+                        // outside this session's span, in which case only
+                        // the down mark is set and the sessions that do
+                        // drive it get charged via their own up-front down
+                        // scans. (Subsequent rounds of *this* session
+                        // charge in-span deaths the same way.)
                         if self.down[worker].is_none() {
                             self.down[worker] = Some(error.clone());
-                            round.absorb(StepResult {
-                                worker,
-                                iter: round.iter,
-                                data: Err(format!("worker down: {error}")),
-                                compute_secs: 0.0,
-                            });
+                            if worker < self.width(round.session) {
+                                round.absorb(StepResult {
+                                    worker,
+                                    session: round.session,
+                                    iter: round.iter,
+                                    data: Err(format!("worker down: {error}")),
+                                    compute_secs: 0.0,
+                                });
+                            }
                         }
                     }
                     None => {
@@ -415,6 +592,7 @@ impl Cluster {
                         for w in self.outstanding(round) {
                             round.absorb(StepResult {
                                 worker: w,
+                                session: round.session,
                                 iter: round.iter,
                                 data: Err("round deadline expired".to_string()),
                                 compute_secs: 0.0,
@@ -430,10 +608,10 @@ impl Cluster {
         res
     }
 
-    /// Workers with no entry yet in this round's accounting (no result,
-    /// no live failure, no healed failure).
+    /// Workers of the round's session span with no entry yet in this
+    /// round's accounting (no result, no live failure, no healed failure).
     fn outstanding(&self, round: &Round) -> Vec<usize> {
-        let n = self.transport.n();
+        let n = self.width(round.session);
         let mut seen = vec![false; n];
         for r in &round.results {
             if r.worker < n {
@@ -462,7 +640,7 @@ impl Cluster {
         assert!(w < self.down.len(), "worker id {w} out of range");
         self.transport.reconnect(spec)?;
         self.down[w] = None;
-        if let Err(e) = self.transport.send_load(w, x, y) {
+        if let Err(e) = self.transport.send_load(w, spec.session, x, y) {
             self.down[w] = Some(e.clone());
             return Err(e);
         }
@@ -473,10 +651,21 @@ impl Cluster {
     /// a freshly revived worker into the current round). A send failure
     /// re-marks it down.
     pub fn dispatch_to(&mut self, worker: usize, iter: u64, w: Vec<u64>) -> Result<(), String> {
+        self.dispatch_to_for(0, worker, iter, w)
+    }
+
+    /// [`Cluster::dispatch_to`] addressed to one session's engine.
+    pub fn dispatch_to_for(
+        &mut self,
+        session: u64,
+        worker: usize,
+        iter: u64,
+        w: Vec<u64>,
+    ) -> Result<(), String> {
         if let Some(e) = &self.down[worker] {
             return Err(format!("worker down: {e}"));
         }
-        if let Err(e) = self.transport.send_step(worker, iter, w) {
+        if let Err(e) = self.transport.send_step(worker, session, iter, w) {
             self.down[worker] = Some(e.clone());
             return Err(e);
         }
@@ -502,6 +691,7 @@ mod tests {
         (0..n)
             .map(|id| WorkerSpec {
                 id,
+                session: 0,
                 kind: BackendKind::Native,
                 artifact_dir: PathBuf::from("artifacts"),
                 field: f,
@@ -561,6 +751,45 @@ mod tests {
             assert_eq!(round.results.len(), n);
             assert!(round.results.iter().all(|r| r.iter == iter));
         }
+    }
+
+    #[test]
+    fn two_sessions_share_one_pool_without_crossing() {
+        // Sessions 0 and 9 run interleaved rounds over the same two
+        // workers. Collecting session 9 first forces session-0 results to
+        // be parked and drained later — values must never cross.
+        let f = PrimeField::new(PAPER_PRIME);
+        let base = specs(2, 2, 2, WorkerOp::Logistic);
+        let mut cluster = Cluster::spawn(base.clone()).unwrap();
+        cluster.register_session(9);
+        for spec in &base {
+            let mut other = spec.clone();
+            other.session = 9;
+            cluster.attach_worker(&other).unwrap();
+        }
+        cluster.load_data_for(0, vec![vec![1, 2, 3, 4]; 2], None).unwrap();
+        cluster.load_data_for(9, vec![vec![5, 6, 7, 8]; 2], None).unwrap();
+        let wc = WorkerComputation::new(f, 2, 2, vec![3, 7]);
+        let want0 = wc.compute(&[1, 2, 3, 4], &[1, 2]);
+        let want9 = wc.compute(&[5, 6, 7, 8], &[3, 4]);
+        for iter in 0..3u64 {
+            cluster.dispatch_for(0, iter, vec![vec![1, 2]; 2]).unwrap();
+            cluster.dispatch_for(9, iter, vec![vec![3, 4]; 2]).unwrap();
+            let r9 = cluster.collect_first_for(9, 2, iter).unwrap();
+            assert!(r9.ok(), "{:?}", r9.failures);
+            for r in &r9.results {
+                assert_eq!(r.session, 9);
+                assert_eq!(r.data.as_ref().unwrap(), &want9);
+            }
+            let r0 = cluster.collect_first_for(0, 2, iter).unwrap();
+            assert!(r0.ok(), "{:?}", r0.failures);
+            for r in &r0.results {
+                assert_eq!(r.session, 0);
+                assert_eq!(r.data.as_ref().unwrap(), &want0);
+            }
+            assert_eq!(r0.misrouted + r9.misrouted, 0);
+        }
+        assert_eq!(cluster.misrouted(), 0);
     }
 
     #[test]

@@ -90,16 +90,27 @@ const APPROX_DEGREE_CAP: usize = 3;
 /// every elimination pivot nonzero) even for degenerate abscissae.
 const APPROX_RIDGE: f64 = 1e-9;
 
+/// Key of one cached coefficient matrix: the decoder's layout
+/// fingerprint plus the sorted responding-worker subset. Keying by
+/// fingerprint makes entries self-describing — coefficients computed for
+/// one modulus + eval-point layout can never be served to another, even
+/// if sessions ever share (or swap) cache storage.
+type CacheKey = (u64, Vec<u32>);
+
 /// Decoder with per-subset coefficient cache.
 #[derive(Debug)]
 pub struct Decoder {
     pub field: PrimeField,
     pub params: CodingParams,
     pub points: EvalPoints,
-    /// subset (sorted worker ids) → K rows of R Lagrange coefficients.
-    cache: HashMap<Vec<u32>, Vec<Vec<u64>>>,
+    /// FNV-1a digest of (modulus, α's, β's, coset marker) — the full
+    /// identity of the Lagrange coefficient space this decoder works in.
+    fingerprint: u64,
+    /// (fingerprint, sorted worker ids) → K rows of R Lagrange
+    /// coefficients.
+    cache: HashMap<CacheKey, Vec<Vec<u64>>>,
     /// Recency order of cached subsets (front = least recently used).
-    order: VecDeque<Vec<u32>>,
+    order: VecDeque<CacheKey>,
     /// Max cached subsets; 0 = unbounded.
     cache_cap: usize,
     hits: u64,
@@ -110,12 +121,33 @@ pub struct Decoder {
     par: Parallelism,
 }
 
+/// One FNV-1a step over a u64 (little-endian bytes).
+fn fnv1a(mut h: u64, v: u64) -> u64 {
+    for b in v.to_le_bytes() {
+        h = (h ^ b as u64).wrapping_mul(0x100_0000_01b3);
+    }
+    h
+}
+
 impl Decoder {
     pub fn new(field: PrimeField, params: CodingParams, points: EvalPoints) -> Self {
+        // Digest everything the cached coefficients depend on: the field
+        // modulus, every evaluation point, and whether the coset
+        // (closed-form barycentric) layout is active. Two decoders agree
+        // on a fingerprint iff their caches are interchangeable.
+        let mut fp = fnv1a(0xcbf2_9ce4_8422_2325, field.modulus());
+        fp = fnv1a(fp, points.coset.is_some() as u64);
+        for &a in &points.alphas {
+            fp = fnv1a(fp, a);
+        }
+        for &b in &points.betas {
+            fp = fnv1a(fp, b);
+        }
         Decoder {
             field,
             params,
             points,
+            fingerprint: fp,
             cache: HashMap::new(),
             order: VecDeque::new(),
             cache_cap: DEFAULT_CACHE_CAP,
@@ -147,6 +179,13 @@ impl Decoder {
     /// Subsets evicted from the coefficient cache (LRU, beyond the cap).
     pub fn cache_evictions(&self) -> u64 {
         self.evictions
+    }
+
+    /// The modulus + eval-point layout digest this decoder keys its cache
+    /// entries with. Two sessions share a fingerprint exactly when their
+    /// cached coefficient matrices would be interchangeable.
+    pub fn cache_fingerprint(&self) -> u64 {
+        self.fingerprint
     }
 
     /// Decode the K true sub-results {f(X̄_k, W̄)}_k from worker results.
@@ -191,9 +230,10 @@ impl Decoder {
             }
         }
 
-        // Cache key: sorted worker ids.
-        let mut key: Vec<u32> = used.iter().map(|r| r.worker as u32).collect();
-        key.sort_unstable();
+        // Cache key: layout fingerprint + sorted worker ids.
+        let mut ids: Vec<u32> = used.iter().map(|r| r.worker as u32).collect();
+        ids.sort_unstable();
+        let key: CacheKey = (self.fingerprint, ids);
 
         // Order results to match the sorted key so cached coefficients align.
         let mut ordered: Vec<&WorkerResult> = used.iter().collect();
@@ -207,7 +247,7 @@ impl Decoder {
                 self.order.push_back(key.clone());
             }
         } else {
-            let rows = self.subset_rows(&key);
+            let rows = self.subset_rows(&key.1);
             self.cache.insert(key.clone(), rows);
             self.order.push_back(key.clone());
             self.misses += 1;
@@ -767,6 +807,57 @@ mod tests {
         }
         assert_eq!(dec.cache_stats(), (0, 3));
         assert_eq!(dec.cache_evictions(), 0);
+    }
+
+    #[test]
+    fn cache_fingerprint_separates_moduli_and_layouts() {
+        // Same modulus + same points → same fingerprint (caches are
+        // interchangeable); different modulus or a different eval-point
+        // layout → different fingerprint (entries can never cross).
+        let params = CodingParams::new(10, 3, 1, 1).unwrap();
+        let f_paper = PrimeField::new(PAPER_PRIME);
+        let f_ntt = PrimeField::new(PRIME_NTT_25);
+        let pts_paper = EvalPoints::standard(&f_paper, 3, 1, 10);
+        let a = Decoder::new(f_paper, params, pts_paper.clone());
+        let b = Decoder::new(f_paper, params, pts_paper);
+        assert_eq!(a.cache_fingerprint(), b.cache_fingerprint());
+        let c = Decoder::new(f_ntt, params, EvalPoints::standard(&f_ntt, 3, 1, 10));
+        assert_ne!(a.cache_fingerprint(), c.cache_fingerprint(), "modulus in the key");
+        let coset = Decoder::new(
+            f_ntt,
+            params,
+            EvalPoints::ntt_coset(&f_ntt, 3, 1, 10).unwrap(),
+        );
+        assert_ne!(
+            c.cache_fingerprint(),
+            coset.cache_fingerprint(),
+            "point layout in the key"
+        );
+    }
+
+    #[test]
+    fn mixed_modulus_decoders_key_cache_entries_apart() {
+        // The serve regression shape: two sessions on different moduli
+        // decode the same worker subset. Each entry carries its decoder's
+        // fingerprint, so the subsets cannot collide even though the
+        // sorted worker ids are identical.
+        let params = CodingParams::new(5, 1, 1, 1).unwrap(); // threshold 4
+        let f_paper = PrimeField::new(PAPER_PRIME);
+        let f_ntt = PrimeField::new(PRIME_NTT_25);
+        let mut da = Decoder::new(f_paper, params, EvalPoints::standard(&f_paper, 1, 1, 5));
+        let mut db = Decoder::new(f_ntt, params, EvalPoints::standard(&f_ntt, 1, 1, 5));
+        assert_ne!(da.cache_fingerprint(), db.cache_fingerprint());
+        let results: Vec<WorkerResult> = (0..4)
+            .map(|w| WorkerResult { worker: w, data: vec![1; 2] })
+            .collect();
+        let a = da.decode(&results, 2).unwrap();
+        let b = db.decode(&results, 2).unwrap();
+        // Repeats hit each decoder's own entry — the fingerprint keeps the
+        // identically-numbered subsets distinct.
+        assert_eq!(da.decode(&results, 2).unwrap(), a);
+        assert_eq!(db.decode(&results, 2).unwrap(), b);
+        assert_eq!(da.cache_stats(), (1, 1));
+        assert_eq!(db.cache_stats(), (1, 1));
     }
 
     #[test]

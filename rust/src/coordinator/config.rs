@@ -169,6 +169,12 @@ pub struct CodedMlConfig {
     /// ...of this many milliseconds (real slow machines; the streaming
     /// round engine must leave them behind, not wait).
     pub chaos_slow_ms: u64,
+    /// First worker id of the slow span: workers in
+    /// `[chaos_slow_from, chaos_slow_from + chaos_slow_workers)` sleep.
+    /// Default 0 keeps the historical prefix placement; the serve bench
+    /// uses it to give each session a disjoint slow set. JSON
+    /// `chaos_slow_from`.
+    pub chaos_slow_from: usize,
     /// Which transport the cluster runs on (CLI `--transport`/`--workers`,
     /// JSON `transport`/`tcp_workers`/`connect_*`). Memory spawns threads
     /// in-process; Tcp connects to running `codedml --worker` processes.
@@ -206,6 +212,12 @@ pub struct CodedMlConfig {
     /// deadline to mean + 4σ of observed round wall times (never above
     /// `round_deadline_ms` when that is set). CLI `--adaptive-deadline`.
     pub adaptive_deadline: bool,
+    /// Fair-share weight under the serve scheduler (JSON `priority`): a
+    /// session's virtual time advances by 1/priority per round, so a
+    /// priority-2 job is offered roughly twice the round slots of a
+    /// priority-1 one when both are ready. Ignored (and harmless) for
+    /// dedicated single-session runs. Must be ≥ 1.
+    pub priority: u64,
 }
 
 impl Default for CodedMlConfig {
@@ -238,6 +250,7 @@ impl Default for CodedMlConfig {
             batch_blocks: 0,
             chaos_slow_workers: 0,
             chaos_slow_ms: 0,
+            chaos_slow_from: 0,
             transport: TransportConfig::default(),
             coding_backend: CodingBackendChoice::Auto,
             decode_cache_cap: crate::coding::decoder::DEFAULT_CACHE_CAP,
@@ -246,6 +259,7 @@ impl Default for CodedMlConfig {
             approx_r_min: 0,
             max_respawns: 0,
             adaptive_deadline: false,
+            priority: 1,
         }
     }
 }
@@ -445,6 +459,10 @@ impl CodedMlConfig {
                 "chaos_slow_ms" => {
                     self.chaos_slow_ms = val.as_u64().ok_or("chaos_slow_ms: want integer")?
                 }
+                "chaos_slow_from" => {
+                    self.chaos_slow_from =
+                        val.as_usize().ok_or("chaos_slow_from: want integer")?
+                }
                 "transport" => {
                     self.transport.kind = val
                         .as_str()
@@ -505,6 +523,13 @@ impl CodedMlConfig {
                     self.adaptive_deadline =
                         val.as_bool().ok_or("adaptive_deadline: want bool")?
                 }
+                "priority" => {
+                    let p = val.as_u64().ok_or("priority: want integer")?;
+                    if p == 0 {
+                        return Err("priority: must be >= 1".into());
+                    }
+                    self.priority = p;
+                }
                 other => return Err(format!("unknown config key '{other}'")),
             }
         }
@@ -555,6 +580,7 @@ impl CodedMlConfig {
             ("chaos_from_iter", Json::Num(self.chaos_from_iter as f64)),
             ("chaos_slow_workers", Json::Num(self.chaos_slow_workers as f64)),
             ("chaos_slow_ms", Json::Num(self.chaos_slow_ms as f64)),
+            ("chaos_slow_from", Json::Num(self.chaos_slow_from as f64)),
             ("transport", Json::Str(self.transport.kind.to_string())),
             (
                 "tcp_workers",
@@ -586,6 +612,7 @@ impl CodedMlConfig {
             ("approx_r_min", Json::Num(self.approx_r_min as f64)),
             ("max_respawns", Json::Num(self.max_respawns as f64)),
             ("adaptive_deadline", Json::Bool(self.adaptive_deadline)),
+            ("priority", Json::Num(self.priority as f64)),
         ];
         if let Some(eta) = self.eta {
             fields.push(("eta", Json::Num(eta)));
@@ -707,6 +734,7 @@ mod tests {
             batch_blocks: 3,
             chaos_slow_workers: 1,
             chaos_slow_ms: 40,
+            chaos_slow_from: 2,
             transport: TransportConfig {
                 kind: TransportKind::Tcp,
                 tcp: crate::cluster::transport::TcpConfig {
@@ -723,6 +751,7 @@ mod tests {
             approx_r_min: 6,
             max_respawns: 2,
             adaptive_deadline: true,
+            priority: 3,
         };
         let text = cfg.to_json().to_string();
         let mut restored = CodedMlConfig::default();
@@ -829,6 +858,16 @@ mod tests {
         }
         let cfg = CodedMlConfig { approx_r_min: 10, ..Default::default() };
         cfg.validate(300, 1.0).unwrap();
+    }
+
+    #[test]
+    fn json_priority_applies_and_rejects_zero() {
+        let mut cfg = CodedMlConfig::default();
+        assert_eq!(cfg.priority, 1);
+        cfg.apply_json(r#"{"priority": 4}"#).unwrap();
+        assert_eq!(cfg.priority, 4);
+        assert!(cfg.apply_json(r#"{"priority": 0}"#).is_err());
+        assert!(cfg.apply_json(r#"{"priority": "high"}"#).is_err());
     }
 
     #[test]

@@ -17,6 +17,6 @@ mod trace;
 
 pub use config::{CodedMlConfig, CompMode, ConfigError, ModelKind};
 pub use objective::{CodedObjective, LinearObjective, LogisticObjective};
-pub use report::{IterationMetrics, TimingBreakdown, TrainReport};
-pub use session::{CodedMlSession, TrainError};
+pub use report::{IterationMetrics, ServeReport, SessionSummary, TimingBreakdown, TrainReport};
+pub use session::{CodedMlSession, DetachedSession, TrainError};
 pub use trace::Tracer;

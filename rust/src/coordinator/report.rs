@@ -133,9 +133,123 @@ impl TrainReport {
     }
 }
 
+/// One session's slice of a serve run: identity + scheduling config on
+/// top of its ordinary [`TrainReport`].
+#[derive(Debug, Clone, Default)]
+pub struct SessionSummary {
+    /// Job name from the serve spec.
+    pub name: String,
+    /// Routing id the scheduler assigned (unique within the run).
+    pub session_id: u64,
+    /// Fair-share weight the scheduler honored.
+    pub priority: u64,
+    /// Objective trained ("logistic" / "linear").
+    pub objective: String,
+    /// Why the session stopped early, if it did. Sessions fail
+    /// independently under the scheduler: one job's abort never takes the
+    /// run (or its siblings) down, it just lands here.
+    pub error: Option<String>,
+    pub report: TrainReport,
+}
+
+/// The outcome of a `codedml serve` run: N concurrent sessions
+/// multiplexed over one shared worker pool.
+#[derive(Debug, Clone, Default)]
+pub struct ServeReport {
+    /// Transport backend the pool ran on ("memory" / "tcp").
+    pub transport: String,
+    /// Shared pool size (max worker count over the sessions).
+    pub pool_workers: usize,
+    /// Pool-level wire bytes actually moved (frame-layout units; the
+    /// per-session modeled bytes live in each session's report).
+    pub wire_sent: u64,
+    pub wire_received: u64,
+    /// Results rejected because their session id matched no registered
+    /// session — any nonzero value is a routing bug.
+    pub misrouted: u64,
+    /// Shared workers the scheduler revived across the run.
+    pub respawns: u64,
+    pub sessions: Vec<SessionSummary>,
+}
+
+impl ServeReport {
+    /// Machine-readable JSON (written by `codedml serve --report-json`).
+    pub fn to_json(&self) -> Json {
+        obj(&[
+            ("transport", Json::Str(self.transport.clone())),
+            ("pool_workers", Json::Num(self.pool_workers as f64)),
+            ("wire_sent", Json::Num(self.wire_sent as f64)),
+            ("wire_received", Json::Num(self.wire_received as f64)),
+            ("misrouted", Json::Num(self.misrouted as f64)),
+            ("respawns", Json::Num(self.respawns as f64)),
+            (
+                "sessions",
+                Json::Arr(
+                    self.sessions
+                        .iter()
+                        .map(|s| {
+                            obj(&[
+                                ("name", Json::Str(s.name.clone())),
+                                ("session_id", Json::Num(s.session_id as f64)),
+                                ("priority", Json::Num(s.priority as f64)),
+                                ("objective", Json::Str(s.objective.clone())),
+                                (
+                                    "error",
+                                    s.error
+                                        .clone()
+                                        .map(Json::Str)
+                                        .unwrap_or(Json::Null),
+                                ),
+                                ("report", s.report.to_json()),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+        ])
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn serve_report_json_nests_sessions() {
+        let rep = ServeReport {
+            transport: "memory".to_string(),
+            pool_workers: 10,
+            wire_sent: 100,
+            wire_received: 50,
+            misrouted: 0,
+            respawns: 1,
+            sessions: vec![SessionSummary {
+                name: "job-a".to_string(),
+                session_id: 1,
+                priority: 2,
+                objective: "logistic".to_string(),
+                error: None,
+                report: TrainReport {
+                    iterations: vec![IterationMetrics {
+                        iter: 0,
+                        train_loss: 0.5,
+                        test_accuracy: None,
+                    }],
+                    ..Default::default()
+                },
+            }],
+        };
+        let parsed = Json::parse(&rep.to_json().to_string()).unwrap();
+        assert_eq!(parsed.get("pool_workers").unwrap().as_u64(), Some(10));
+        assert_eq!(parsed.get("misrouted").unwrap().as_u64(), Some(0));
+        let sessions = parsed.get("sessions").unwrap().as_arr().unwrap();
+        assert_eq!(sessions.len(), 1);
+        assert_eq!(sessions[0].get("priority").unwrap().as_u64(), Some(2));
+        assert_eq!(sessions[0].get("error"), Some(&Json::Null));
+        let inner = sessions[0].get("report").unwrap();
+        let curve = inner.get("loss_curve").unwrap().as_arr().unwrap();
+        assert_eq!(curve.len(), 1);
+    }
 
     #[test]
     fn total_is_sum() {

@@ -6,7 +6,7 @@
 use super::config::{CodedMlConfig, CompMode, ConfigError};
 use super::objective::{CodedObjective, LinearObjective, LogisticObjective};
 use super::report::{IterationMetrics, TimingBreakdown, TrainReport};
-use crate::cluster::{Cluster, ClusterError, DeadlineController, Supervisor, WorkerSpec};
+use crate::cluster::{Cluster, ClusterError, DeadlineController, Round, Supervisor, WorkerSpec};
 use crate::coding::decoder::WorkerResult;
 use crate::coding::{
     CodingBackend, CodingBackendChoice, CodingParams, DecodeError, Decoder, Encoder, EvalPoints,
@@ -26,6 +26,10 @@ pub enum TrainError {
     Decode(DecodeError),
     /// More workers failed than the straggler slack allows.
     TooManyFailures { ok: usize, need: usize },
+    /// [`CodedMlSession::step`] was called on a detached session — one
+    /// built for the serve scheduler, which owns the shared cluster and
+    /// drives rounds through `begin_round`/`collect_round`/`finish_round`.
+    Detached,
 }
 
 impl std::fmt::Display for TrainError {
@@ -36,6 +40,9 @@ impl std::fmt::Display for TrainError {
             TrainError::Decode(e) => write!(f, "{e}"),
             TrainError::TooManyFailures { ok, need } => {
                 write!(f, "only {ok} workers produced results, need {need}")
+            }
+            TrainError::Detached => {
+                write!(f, "session is detached; drive it through the serve scheduler")
             }
         }
     }
@@ -70,7 +77,15 @@ pub struct CodedMlSession<O: CodedObjective = LogisticObjective> {
     params: CodingParams,
     encoder: Encoder,
     decoder: Decoder,
-    cluster: Cluster,
+    /// The dedicated cluster. `None` for a detached session — one driven
+    /// over a *shared* pool by [`crate::serve::Scheduler`], which owns the
+    /// cluster and passes it into `begin_round`/`collect_round`/
+    /// `finish_round` explicitly.
+    cluster: Option<Cluster>,
+    /// Session id stamped into every frame this session sends (and
+    /// checked on every result it absorbs). 0 for a dedicated session;
+    /// unique per job under the serve scheduler.
+    session_id: u64,
     objective: O,
     wquant: WeightQuantizer,
     /// Quantized dataset (field form, kept for ground-truth tests).
@@ -110,6 +125,15 @@ pub struct CodedMlSession<O: CodedObjective = LogisticObjective> {
     supervisor: Option<Supervisor>,
     /// Per-round deadline policy (static and/or adaptive).
     deadline_ctl: DeadlineController,
+    /// Keep a copy of each round's dispatched weight shares so a heal can
+    /// re-dispatch them mid-round. On for supervised dedicated sessions
+    /// and always on for detached (scheduler-driven) ones.
+    keep_weights: bool,
+    /// The kept weight shares of the in-flight round (index = worker).
+    inflight_w: Option<Vec<Vec<u64>>>,
+    /// Deadline the in-flight round was collected under (ms), for resume
+    /// and tracing.
+    last_deadline_ms: u64,
     /// Clip bound handed to approximate decodes: tracked from the exact
     /// decodes actually seen (2× the largest centered lift), so a
     /// degraded round cannot produce estimates wildly outside the
@@ -125,12 +149,35 @@ pub struct CodedMlSession<O: CodedObjective = LogisticObjective> {
     tracer: super::trace::Tracer,
 }
 
+/// A session built for the serve scheduler: detached from any cluster,
+/// plus everything the scheduler needs to attach it to the shared pool —
+/// the per-worker specs (stamped with the session id) and the encoded
+/// dataset shares, kept verbatim so pool heals re-ship the exact bytes.
+pub struct DetachedSession<O: CodedObjective> {
+    pub session: CodedMlSession<O>,
+    pub specs: Vec<WorkerSpec>,
+    pub x_shares: Vec<Vec<u64>>,
+    pub y_shares: Option<Vec<Vec<u64>>>,
+}
+
 impl CodedMlSession<LogisticObjective> {
     /// Build the paper's logistic session: fit the sigmoid polynomial,
     /// quantize + encode + secret-share the dataset, spawn the cluster.
     /// The dataset is trimmed to a multiple of K rows.
     pub fn new(cfg: CodedMlConfig, train: &Dataset) -> Result<Self, TrainError> {
         Self::build(cfg, train, |cfg, xbar_real, y, m, d, k| {
+            Ok(LogisticObjective::new(cfg, xbar_real, y, m, d, k))
+        })
+    }
+
+    /// [`CodedMlSession::new`] without a cluster: encode and secret-share
+    /// but leave attachment to the serve scheduler's shared pool.
+    pub fn new_detached(
+        cfg: CodedMlConfig,
+        train: &Dataset,
+        session_id: u64,
+    ) -> Result<DetachedSession<LogisticObjective>, TrainError> {
+        Self::build_parts(cfg, train, session_id, |cfg, xbar_real, y, m, d, k| {
             Ok(LogisticObjective::new(cfg, xbar_real, y, m, d, k))
         })
     }
@@ -148,6 +195,24 @@ impl CodedMlSession<LinearObjective> {
     /// so the recovery threshold matches logistic at r = 1 (enforced).
     pub fn new_linear(cfg: CodedMlConfig, train: &Dataset) -> Result<Self, TrainError> {
         Self::build(cfg, train, |cfg, _xbar_real, y, m, d, k| {
+            if cfg.r != 1 {
+                return Err(TrainError::Config(ConfigError::BadShape(format!(
+                    "linear regression is a degree-3 worker polynomial (r = 1); got r = {}",
+                    cfg.r
+                ))));
+            }
+            Ok(LinearObjective::new(cfg, y, m, d, k))
+        })
+    }
+
+    /// [`CodedMlSession::new_linear`] without a cluster: encode and
+    /// secret-share but leave attachment to the serve scheduler's pool.
+    pub fn new_linear_detached(
+        cfg: CodedMlConfig,
+        train: &Dataset,
+        session_id: u64,
+    ) -> Result<DetachedSession<LinearObjective>, TrainError> {
+        Self::build_parts(cfg, train, session_id, |cfg, _xbar_real, y, m, d, k| {
             if cfg.r != 1 {
                 return Err(TrainError::Config(ConfigError::BadShape(format!(
                     "linear regression is a degree-3 worker polynomial (r = 1); got r = {}",
@@ -177,6 +242,44 @@ impl<O: CodedObjective> CodedMlSession<O> {
             usize,
         ) -> Result<O, TrainError>,
     ) -> Result<Self, TrainError> {
+        let parts = Self::build_parts(cfg, train, 0, make_objective)?;
+        let DetachedSession { mut session, specs, x_shares, y_shares } = parts;
+        // Supervision needs the specs and the exact encoded shares kept
+        // around so a revived worker can be re-shipped its predecessor's
+        // data verbatim (re-encoding would draw fresh masks and break
+        // bit-identical trajectories). Clone only when it is enabled.
+        let sup_specs = (session.cfg.max_respawns > 0).then(|| specs.clone());
+        let mut cluster = Cluster::connect(specs, &session.cfg.transport)?;
+        session.supervisor = sup_specs.map(|sp| {
+            Supervisor::new(sp, x_shares.clone(), y_shares.clone(), session.cfg.max_respawns)
+        });
+        session.keep_weights = session.supervisor.is_some();
+        cluster.load_data(x_shares, y_shares)?;
+        session.cluster = Some(cluster);
+        Ok(session)
+    }
+
+    /// Everything [`CodedMlSession::build`] does except spawning a
+    /// cluster: the session comes back detached, alongside its worker
+    /// specs and encoded shares, for the serve scheduler to attach to a
+    /// shared pool. A detached session keeps its dispatched weights every
+    /// round (the scheduler re-dispatches them on pool heals) and never
+    /// owns a [`Supervisor`] — healing shared workers is the scheduler's
+    /// job, since a revive tears down every session's engine on that
+    /// worker.
+    fn build_parts(
+        cfg: CodedMlConfig,
+        train: &Dataset,
+        session_id: u64,
+        make_objective: impl FnOnce(
+            &CodedMlConfig,
+            &[f64],
+            &[f64],
+            usize,
+            usize,
+            usize,
+        ) -> Result<O, TrainError>,
+    ) -> Result<DetachedSession<O>, TrainError> {
         let params = cfg.coding_params()?;
         let field = cfg.field();
         let ds = train.take_rows_multiple_of(train.m, params.k);
@@ -246,6 +349,7 @@ impl<O: CodedObjective> CodedMlSession<O> {
         let specs: Vec<WorkerSpec> = (0..params.n)
             .map(|id| WorkerSpec {
                 id,
+                session: session_id,
                 kind: cfg.backend,
                 artifact_dir: cfg.artifact_dir.clone(),
                 field,
@@ -254,25 +358,23 @@ impl<O: CodedObjective> CodedMlSession<O> {
                 coeffs: coeffs.clone(),
                 op,
                 // Chaos hooks: the first `chaos_failures` workers die at
-                // `chaos_from_iter`; the first `chaos_slow_workers` drag
-                // every step by `chaos_slow_ms` (the round engine must
-                // leave them behind, not wait — resilience tests).
+                // `chaos_from_iter`; the `chaos_slow_workers` workers from
+                // `chaos_slow_from` drag every step by `chaos_slow_ms` (the
+                // round engine must leave them behind, not wait —
+                // resilience tests; the serve bench offsets the span so
+                // concurrent sessions straggle on disjoint workers).
                 fail_from_iter: (id < cfg.chaos_failures).then_some(cfg.chaos_from_iter),
-                slow_ms: if id < cfg.chaos_slow_workers { cfg.chaos_slow_ms } else { 0 },
+                slow_ms: if id >= cfg.chaos_slow_from
+                    && id < cfg.chaos_slow_from + cfg.chaos_slow_workers
+                {
+                    cfg.chaos_slow_ms
+                } else {
+                    0
+                },
                 par: cfg.parallelism,
             })
             .collect();
-        // Supervision needs the specs and the exact encoded shares kept
-        // around so a revived worker can be re-shipped its predecessor's
-        // data verbatim (re-encoding would draw fresh masks and break
-        // bit-identical trajectories). Clone only when it is enabled.
-        let sup_specs = (cfg.max_respawns > 0).then(|| specs.clone());
-        let mut cluster = Cluster::connect(specs, &cfg.transport)?;
         let x_data: Vec<Vec<u64>> = shares.into_iter().map(|s| s.data).collect();
-        let supervisor = sup_specs.map(|sp| {
-            Supervisor::new(sp, x_data.clone(), y_shares.clone(), cfg.max_respawns)
-        });
-        cluster.load_data(x_data, y_shares)?;
 
         let eta = cfg
             .eta
@@ -280,13 +382,14 @@ impl<O: CodedObjective> CodedMlSession<O> {
         let wquant = WeightQuantizer::new(field, cfg.lw, objective.weight_draws() as u32);
         let deadline_ctl = DeadlineController::new(cfg.round_deadline_ms, cfg.adaptive_deadline);
 
-        Ok(CodedMlSession {
+        let session = CodedMlSession {
             cfg,
             field,
             params,
             encoder,
             decoder,
-            cluster,
+            cluster: None,
+            session_id,
             objective,
             wquant,
             xbar,
@@ -307,15 +410,19 @@ impl<O: CodedObjective> CodedMlSession<O> {
             iter: 0,
             failures: 0,
             late: 0,
-            supervisor,
+            supervisor: None,
             deadline_ctl,
+            keep_weights: true,
+            inflight_w: None,
+            last_deadline_ms: 0,
             approx_clip: (field.modulus() - 1) / 2,
             approx_rounds: 0,
             max_approx_residual: 0.0,
             deadline_expired_rounds: 0,
             budget_warning,
             tracer: super::trace::Tracer::disabled(),
-        })
+        };
+        Ok(DetachedSession { session, specs, x_shares: x_data, y_shares })
     }
 
     /// Resolve eval points + backend for `cfg.coding_backend`: `Dense`
@@ -419,7 +526,28 @@ impl<O: CodedObjective> CodedMlSession<O> {
     /// [`TrainReport`]'s *modeled* byte counts, which account the paper's
     /// protocol (optionally bit-packed) rather than this build's wire.
     pub fn transport_bytes(&self) -> (u64, u64) {
-        self.cluster.wire_bytes()
+        self.cluster.as_ref().map(Cluster::wire_bytes).unwrap_or((0, 0))
+    }
+
+    /// This session's routing id (0 for dedicated sessions).
+    pub fn session_id(&self) -> u64 {
+        self.session_id
+    }
+
+    /// Deadline (ms) the in-flight round was collected under — the serve
+    /// scheduler resumes a healed round under the same budget. 0 = none.
+    pub fn last_deadline_ms(&self) -> u64 {
+        self.last_deadline_ms
+    }
+
+    /// The configuration the session was built with.
+    pub fn config(&self) -> &CodedMlConfig {
+        &self.cfg
+    }
+
+    /// The iteration the next round will run (rounds completed so far).
+    pub fn current_iter(&self) -> u64 {
+        self.iter
     }
 
     /// Wire size of `count` field elements under the configured framing
@@ -458,49 +586,30 @@ impl<O: CodedObjective> CodedMlSession<O> {
     ///    decoder (only this round's batch blocks), assemble the
     ///    objective's gradient, update the weights.
     pub fn step(&mut self) -> Result<Vec<f64>, TrainError> {
-        let need = self.params.recovery_threshold();
-        let (n, d) = (self.params.n, self.d);
-        let draws = self.objective.weight_draws();
+        let mut cluster = self.cluster.take().ok_or(TrainError::Detached)?;
+        let out = self.step_on(&mut cluster);
+        self.cluster = Some(cluster);
+        out
+    }
 
-        // (1) Quantize weights (independent stochastic draws) + encode
-        //     with fresh masks — both count as encode time.
-        let w_shares = {
-            let rng = &mut self.rng;
-            let (wquant, encoder, w) = (&self.wquant, &self.encoder, &self.w);
-            self.t_encode.time(|| {
-                let wq = wquant.quantize(w, rng);
-                encoder.encode_weights(&wq, d, draws, rng)
-            })
-        };
+    /// [`CodedMlSession::step`] against an explicit cluster — the
+    /// composition of [`begin_round`](Self::begin_round),
+    /// [`collect_round`](Self::collect_round), the dedicated-mode
+    /// supervision pass, and [`finish_round`](Self::finish_round).
+    fn step_on(&mut self, cluster: &mut Cluster) -> Result<Vec<f64>, TrainError> {
+        self.begin_round(cluster)?;
+        let mut round = self.collect_round(cluster)?;
 
-        // (2) Master → workers: W̃ shares.
-        let wbytes = self.wire_bytes(d * draws);
-        self.t_comm.add_seconds(self.cfg.net.fanout_time(n, wbytes));
-        self.bytes_sent += wbytes * n as u64;
-        let w_data: Vec<Vec<u64>> = w_shares.into_iter().map(|s| s.data).collect();
-        // Supervision may need to re-dispatch this iteration's weights to
-        // a revived worker mid-round; keep a copy only in that case.
-        let w_kept: Option<Vec<Vec<u64>>> = self.supervisor.is_some().then(|| w_data.clone());
-        self.cluster.dispatch(self.iter, w_data)?;
-
-        // (3) Stream arrivals; stop at the fastest R usable results, or
-        //     at the round deadline (static and/or adaptive) — whichever
-        //     comes first. An expired deadline charges every silent
-        //     worker a round failure instead of blocking forever.
-        let deadline_ms = self.deadline_ctl.next_deadline_ms();
-        let mut round = self
-            .cluster
-            .collect_deadline(need, self.iter, &Deadline::after_ms(deadline_ms))?;
-
-        // (3b) Supervision: revive this round's failed workers within the
-        //      respawn budget. A mid-round heal re-dispatches the weights
-        //      and reopens the round, and collection resumes under a
-        //      fresh deadline — unless the controller pre-armed degraded
-        //      mode after a streak of expired rounds.
+        // Supervision: revive this round's failed workers within the
+        // respawn budget. A mid-round heal re-dispatches the weights
+        // and reopens the round, and collection resumes under a
+        // fresh deadline — unless the controller pre-armed degraded
+        // mode after a streak of expired rounds.
         if let Some(mut sup) = self.supervisor.take() {
+            let w_kept = self.inflight_w.take();
             sup.observe_round(&round);
             let w_ref: &[Vec<u64>] = w_kept.as_deref().unwrap_or(&[]);
-            let outcomes = sup.heal(&mut self.cluster, &mut round, w_ref);
+            let outcomes = sup.heal(cluster, &mut round, w_ref);
             if self.tracer.enabled() {
                 use crate::util::json::Json;
                 for o in &outcomes {
@@ -518,12 +627,86 @@ impl<O: CodedObjective> CodedMlSession<O> {
             }
             let reopened = outcomes.iter().any(|o| o.redispatched);
             if reopened && !round.ok() && !self.deadline_ctl.pre_arm_approx() {
-                self.cluster
-                    .collect_resume(&mut round, &Deadline::after_ms(deadline_ms))?;
+                cluster.collect_resume(&mut round, &Deadline::after_ms(self.last_deadline_ms))?;
             }
             self.supervisor = Some(sup);
         }
 
+        self.finish_round(cluster, round)
+    }
+
+    /// Phases 1–2 of a round: quantize + encode this iteration's weights
+    /// (consuming the session RNG exactly as a dedicated run would) and
+    /// dispatch them to all N workers under this session's id. The serve
+    /// scheduler calls this directly; [`step`](Self::step) composes it
+    /// with the other round phases.
+    pub fn begin_round(&mut self, cluster: &mut Cluster) -> Result<(), TrainError> {
+        let (n, d) = (self.params.n, self.d);
+        let draws = self.objective.weight_draws();
+
+        // (1) Quantize weights (independent stochastic draws) + encode
+        //     with fresh masks — both count as encode time.
+        let w_shares = {
+            let rng = &mut self.rng;
+            let (wquant, encoder, w) = (&self.wquant, &self.encoder, &self.w);
+            self.t_encode.time(|| {
+                let wq = wquant.quantize(w, rng);
+                encoder.encode_weights(&wq, d, draws, rng)
+            })
+        };
+
+        // (2) Master → workers: W̃ shares. A heal may need to re-dispatch
+        //     this iteration's weights to a revived worker mid-round;
+        //     keep a copy only when someone can ask for that.
+        let wbytes = self.wire_bytes(d * draws);
+        self.t_comm.add_seconds(self.cfg.net.fanout_time(n, wbytes));
+        self.bytes_sent += wbytes * n as u64;
+        let w_data: Vec<Vec<u64>> = w_shares.into_iter().map(|s| s.data).collect();
+        self.inflight_w = self.keep_weights.then(|| w_data.clone());
+        cluster.dispatch_for(self.session_id, self.iter, w_data)?;
+        Ok(())
+    }
+
+    /// Phase 3: stream arrivals for this session until the fastest R
+    /// usable results land, or the round deadline (static and/or
+    /// adaptive) fires — whichever comes first. An expired deadline
+    /// charges every silent worker a round failure instead of blocking
+    /// forever. Results for other sessions sharing the pool are parked by
+    /// the cluster, never absorbed here.
+    pub fn collect_round(&mut self, cluster: &mut Cluster) -> Result<Round, TrainError> {
+        let need = self.params.recovery_threshold();
+        let deadline_ms = self.deadline_ctl.next_deadline_ms();
+        self.last_deadline_ms = deadline_ms;
+        let round = cluster.collect_deadline_for(
+            self.session_id,
+            need,
+            self.iter,
+            &Deadline::after_ms(deadline_ms),
+        )?;
+        Ok(round)
+    }
+
+    /// Re-send the in-flight round's kept weights to one worker (the
+    /// serve scheduler's heal path after reviving a shared worker).
+    /// No-op when no round is in flight. A send failure re-marks the
+    /// worker down; the round then charges it as a failure.
+    pub fn redispatch(&mut self, cluster: &mut Cluster, worker: usize) -> Result<(), String> {
+        match self.inflight_w.as_ref().and_then(|ws| ws.get(worker)) {
+            Some(w) => cluster.dispatch_to_for(self.session_id, worker, self.iter, w.clone()),
+            None => Ok(()),
+        }
+    }
+
+    /// Phases 4–6: account the collected round (failures, deadlines,
+    /// modeled timing, wire bytes), run the degrade-or-abort ladder,
+    /// decode this round's batch blocks, and apply the gradient update.
+    pub fn finish_round(
+        &mut self,
+        cluster: &mut Cluster,
+        round: Round,
+    ) -> Result<Vec<f64>, TrainError> {
+        let need = self.params.recovery_threshold();
+        let (n, d) = (self.params.n, self.d);
         self.late += round.late_drained as u64;
         // A failure is a failure whichever round's drain observed it —
         // stale Errs (late_failures) still count and still trace, and so
@@ -556,7 +739,7 @@ impl<O: CodedObjective> CodedMlSession<O> {
                     "round.deadline",
                     self.iter,
                     &[
-                        ("deadline_ms", Json::Num(deadline_ms as f64)),
+                        ("deadline_ms", Json::Num(self.last_deadline_ms as f64)),
                         ("results", Json::Num(round.results.len() as f64)),
                         ("need", Json::Num(need as f64)),
                         ("pre_armed", Json::Bool(self.deadline_ctl.pre_arm_approx())),
@@ -606,7 +789,7 @@ impl<O: CodedObjective> CodedMlSession<O> {
             CompMode::Wall => round.wall_secs,
         };
         self.t_comp.add_seconds(iter_comp);
-        let (wire_sent, wire_received) = self.cluster.wire_bytes();
+        let (wire_sent, wire_received) = cluster.wire_bytes();
         if self.tracer.enabled() {
             use crate::util::json::Json;
             let used: Vec<Json> = round
@@ -623,7 +806,7 @@ impl<O: CodedObjective> CodedMlSession<O> {
                     ("fastest", Json::Arr(used)),
                     ("late", Json::Num(round.late_drained as f64)),
                     ("failed", Json::Num(round.failures.len() as f64)),
-                    ("transport", Json::Str(self.cluster.transport_name().to_string())),
+                    ("transport", Json::Str(cluster.transport_name().to_string())),
                     ("wire_sent", Json::Num(wire_sent as f64)),
                     ("wire_received", Json::Num(wire_received as f64)),
                 ],
@@ -742,6 +925,7 @@ impl<O: CodedObjective> CodedMlSession<O> {
         // Feed the controller: observed wall time sharpens the next
         // adaptive deadline; an expiry extends the pre-arm streak.
         self.deadline_ctl.observe(round.wall_secs, round.deadline_expired);
+        self.inflight_w = None;
         self.iter += 1;
         Ok(grad)
     }
@@ -781,7 +965,12 @@ impl<O: CodedObjective> CodedMlSession<O> {
         crate::util::stats::min_max(&z)
     }
 
-    fn report(&mut self, iterations: Vec<IterationMetrics>) -> TrainReport {
+    /// Assemble the [`TrainReport`] for the rounds run so far. [`train`]
+    /// calls this with the metrics it recorded; the serve scheduler
+    /// records per-iteration metrics itself and calls this at the end.
+    ///
+    /// [`train`]: Self::train
+    pub fn report(&mut self, iterations: Vec<IterationMetrics>) -> TrainReport {
         TrainReport {
             breakdown: TimingBreakdown {
                 encode_s: self.t_encode.seconds(),

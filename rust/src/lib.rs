@@ -18,7 +18,10 @@
 //! 5. [`mpc`] — the BGW/Shamir baseline the paper compares against,
 //! 6. [`runtime`] — PJRT execution of the AOT-compiled JAX/Pallas worker
 //!    kernel (`artifacts/*.hlo.txt`), with a bit-exact native fallback in
-//!    [`compute`].
+//!    [`compute`],
+//! 7. [`serve`] — multi-session serving: a weighted-fair scheduler
+//!    multiplexing concurrent training jobs over one shared worker pool,
+//!    each job's trajectory bit-identical to a dedicated run.
 //!
 //! See `DESIGN.md` for the experiment index and `EXPERIMENTS.md` for
 //! paper-vs-measured results.
@@ -40,6 +43,7 @@ pub mod mpc;
 pub mod quant;
 pub mod reproduce;
 pub mod runtime;
+pub mod serve;
 pub mod sigmoid;
 pub mod util;
 

@@ -1,0 +1,119 @@
+//! Multi-session serving: N concurrent training jobs over one pool.
+//!
+//! A dedicated [`CodedMlSession`] owns its cluster outright. The serve
+//! layer breaks that coupling: the [`Scheduler`] owns a single
+//! [`crate::cluster::Cluster`] (either transport) and multiplexes any
+//! number of concurrent sessions over it, each encoded and secret-shared
+//! independently (possibly with different K/T/N, moduli, and even
+//! objectives) and addressed on the wire by its `session_id`.
+//!
+//! The invariant the whole layer is built around: **a session's
+//! trajectory under the scheduler is bit-identical to running alone on a
+//! dedicated cluster**. LCC decoding is exact on *any* fastest-R subset,
+//! so interleaving — which only perturbs arrival order — can never change
+//! a decoded gradient; session-scoped routing (results carry their
+//! session id, mismatches are parked or rejected, never absorbed) keeps
+//! one job's rounds out of another's decoder; and pool heals re-ship the
+//! exact encoded shares kept from construction, never re-encode.
+//! `rust/tests/serve.rs` asserts the invariant on both transports, at
+//! several thread counts, and under chaos churn.
+//!
+//! Scheduling is weighted fair queueing over round slots: among
+//! simultaneously-ready sessions, dispatch goes to the lowest virtual
+//! time first, and a session's virtual time advances by `1/priority` per
+//! round (config key `priority`). Dispatch is pipelined — every ready
+//! session's round goes to the workers before the scheduler blocks
+//! collecting the oldest one — so heterogeneous jobs genuinely overlap on
+//! the shared pool (`rust/benches/serve.rs` measures the win).
+
+mod scheduler;
+mod spec;
+
+pub use scheduler::{Scheduler, ServeError};
+pub use spec::{JobSpec, ServeSpec};
+
+use crate::cluster::{Cluster, Round};
+use crate::coordinator::{
+    CodedMlConfig, CodedMlSession, IterationMetrics, LinearObjective, LogisticObjective,
+    TrainError, TrainReport,
+};
+
+/// A scheduler-driven session of either objective. The scheduler is
+/// deliberately objective-agnostic: everything it needs is the detached
+/// round API, which both instantiations share.
+pub enum AnySession {
+    Logistic(Box<CodedMlSession<LogisticObjective>>),
+    Linear(Box<CodedMlSession<LinearObjective>>),
+}
+
+macro_rules! delegate {
+    ($self:ident, $s:ident => $body:expr) => {
+        match $self {
+            AnySession::Logistic($s) => $body,
+            AnySession::Linear($s) => $body,
+        }
+    };
+}
+
+impl AnySession {
+    /// Encode this iteration's weights and dispatch them to the pool
+    /// under this session's id.
+    pub fn begin_round(&mut self, cluster: &mut Cluster) -> Result<(), TrainError> {
+        delegate!(self, s => s.begin_round(cluster))
+    }
+
+    /// Stream this session's results until the fastest R land (or its
+    /// deadline fires). Other sessions' traffic is parked by the cluster.
+    pub fn collect_round(&mut self, cluster: &mut Cluster) -> Result<Round, TrainError> {
+        delegate!(self, s => s.collect_round(cluster))
+    }
+
+    /// Account, decode, and apply the collected round.
+    pub fn finish_round(
+        &mut self,
+        cluster: &mut Cluster,
+        round: Round,
+    ) -> Result<Vec<f64>, TrainError> {
+        delegate!(self, s => s.finish_round(cluster, round))
+    }
+
+    /// Re-send the in-flight round's kept weights to one (just-revived)
+    /// worker.
+    pub fn redispatch(&mut self, cluster: &mut Cluster, worker: usize) -> Result<(), String> {
+        delegate!(self, s => s.redispatch(cluster, worker))
+    }
+
+    pub fn train_loss(&self) -> f64 {
+        delegate!(self, s => s.train_loss())
+    }
+
+    pub fn session_id(&self) -> u64 {
+        delegate!(self, s => s.session_id())
+    }
+
+    pub fn config(&self) -> &CodedMlConfig {
+        delegate!(self, s => s.config())
+    }
+
+    pub fn current_iter(&self) -> u64 {
+        delegate!(self, s => s.current_iter())
+    }
+
+    /// Deadline the in-flight round was collected under (for heal
+    /// resumes).
+    pub fn last_deadline_ms(&self) -> u64 {
+        delegate!(self, s => s.last_deadline_ms())
+    }
+
+    /// Assemble the session's [`TrainReport`] from the metrics the
+    /// scheduler recorded round by round.
+    pub fn report(&mut self, iterations: Vec<IterationMetrics>) -> TrainReport {
+        delegate!(self, s => s.report(iterations))
+    }
+}
+
+impl std::fmt::Debug for AnySession {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        delegate!(self, s => write!(f, "AnySession({s:?})"))
+    }
+}

@@ -1,0 +1,529 @@
+//! The session scheduler: one shared pool, N interleaved training jobs.
+//!
+//! State machine per job: `Ready → Inflight → {Ready, Done, Failed}`.
+//! The run loop alternates two moves until every job is `Done` or
+//! `Failed`:
+//!
+//! 1. **Dispatch** — every `Ready` job's next round is encoded and sent
+//!    to the pool, lowest virtual time first (weighted fair queueing:
+//!    a job's virtual time advances by `1/priority` per round, ties
+//!    break on session id). Dispatch never blocks, so all live jobs
+//!    keep rounds in flight concurrently.
+//! 2. **Collect** — the oldest in-flight round is collected to
+//!    completion. Results for *other* sessions that arrive meanwhile are
+//!    parked by the cluster and drained when their own round collects;
+//!    a result whose session id matches no registered session is
+//!    rejected and counted (`ServeReport::misrouted`).
+//!
+//! Healing is pool-aware: reviving a shared worker tears down every
+//! session's engine on it, so after a revive the scheduler re-attaches
+//! and re-loads **all** live jobs that span the worker (shipping the
+//! exact encoded shares kept from construction — never re-encoded) and
+//! re-dispatches the in-flight weights of each affected round. One job's
+//! failure is never fatal to its siblings: it lands in that session's
+//! [`SessionSummary::error`] and the run keeps going.
+
+use std::collections::VecDeque;
+
+use crate::cluster::{Cluster, ClusterError, Round, TransportKind};
+use crate::coordinator::{
+    CodedMlSession, IterationMetrics, ModelKind, ServeReport, SessionSummary,
+};
+use crate::data::{synthetic_3v7, synthetic_planted_linear};
+use crate::util::timer::Deadline;
+
+use super::spec::ServeSpec;
+use super::AnySession;
+
+/// Pool-level failures. Per-job failures never surface here — they land
+/// in the job's [`SessionSummary::error`] instead.
+#[derive(Debug)]
+pub enum ServeError {
+    /// The spec is unusable (bad shapes, pool/transport mismatch, a
+    /// session that cannot be built).
+    Spec(String),
+    /// The shared pool itself could not be brought up or torn down.
+    Cluster(ClusterError),
+}
+
+impl std::fmt::Display for ServeError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ServeError::Spec(msg) => write!(f, "serve spec: {msg}"),
+            ServeError::Cluster(e) => write!(f, "pool: {e}"),
+        }
+    }
+}
+
+impl std::error::Error for ServeError {}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum JobState {
+    /// Next round may be dispatched.
+    Ready,
+    /// A round is on the workers, awaiting collection.
+    Inflight,
+    Done,
+    Failed,
+}
+
+/// One scheduled job: the session plus everything pool healing needs —
+/// its worker specs (chaos flags cleared as workers are revived) and the
+/// exact encoded shares to re-ship.
+struct Job {
+    name: String,
+    session: AnySession,
+    session_id: u64,
+    priority: u64,
+    /// Weighted-fair-queueing clock: advances by `1/priority` per
+    /// dispatched round.
+    vtime: f64,
+    specs: Vec<crate::cluster::WorkerSpec>,
+    x_shares: Vec<Vec<u64>>,
+    y_shares: Option<Vec<Vec<u64>>>,
+    iters: usize,
+    metrics: Vec<IterationMetrics>,
+    error: Option<String>,
+    state: JobState,
+}
+
+/// Multiplexes N concurrent [`AnySession`]s over one shared
+/// [`Cluster`]. Build with [`Scheduler::new`], drive with
+/// [`Scheduler::run`].
+pub struct Scheduler {
+    cluster: Cluster,
+    jobs: Vec<Job>,
+    pool_workers: usize,
+    /// Per-worker revive budget (max `max_respawns` over the jobs; the
+    /// pool is shared, so the most tolerant job sets the ceiling).
+    respawn_budget: u32,
+    respawns: u64,
+    respawns_by_worker: Vec<u32>,
+    /// Session id of every dispatched round, in dispatch order — the
+    /// observable fair-share schedule.
+    dispatch_log: Vec<u64>,
+    /// Per-round misroute counts accumulated as rounds retire.
+    misrouted_rounds: u64,
+}
+
+impl Scheduler {
+    /// Build every session detached, spawn the shared pool, and attach
+    /// + load each session onto it. The pool is as wide as the widest
+    /// job; narrower jobs span a prefix of it
+    /// ([`Cluster::set_session_workers`]).
+    pub fn new(spec: ServeSpec) -> Result<Scheduler, ServeError> {
+        let mut jobs = Vec::with_capacity(spec.jobs.len());
+        for (i, js) in spec.jobs.iter().enumerate() {
+            let sid = (i + 1) as u64;
+            let bad = |e: &dyn std::fmt::Display| {
+                ServeError::Spec(format!("session '{}': {e}", js.name))
+            };
+            let (session, specs, x_shares, y_shares) = match js.cfg.model {
+                ModelKind::Logistic => {
+                    let ds = synthetic_3v7(js.m, js.data_seed);
+                    let parts = CodedMlSession::new_detached(js.cfg.clone(), &ds, sid)
+                        .map_err(|e| bad(&e))?;
+                    (
+                        AnySession::Logistic(Box::new(parts.session)),
+                        parts.specs,
+                        parts.x_shares,
+                        parts.y_shares,
+                    )
+                }
+                ModelKind::Linear => {
+                    let (ds, _) = synthetic_planted_linear(js.m, js.d, js.data_seed);
+                    let parts =
+                        CodedMlSession::new_linear_detached(js.cfg.clone(), &ds, sid)
+                            .map_err(|e| bad(&e))?;
+                    (
+                        AnySession::Linear(Box::new(parts.session)),
+                        parts.specs,
+                        parts.x_shares,
+                        parts.y_shares,
+                    )
+                }
+            };
+            jobs.push(Job {
+                name: js.name.clone(),
+                session,
+                session_id: sid,
+                priority: js.cfg.priority,
+                vtime: 0.0,
+                specs,
+                x_shares,
+                y_shares,
+                iters: js.cfg.iters,
+                metrics: Vec::new(),
+                error: None,
+                state: JobState::Ready,
+            });
+        }
+
+        // The pool spans the widest job; worker w's spawn spec is
+        // borrowed from any job covering w (attachment below rebuilds
+        // every covering job's engine on it anyway).
+        let pool = jobs.iter().map(|j| j.specs.len()).max().unwrap_or(0);
+        let mut pool_specs = Vec::with_capacity(pool);
+        for w in 0..pool {
+            match jobs.iter().find(|j| j.specs.len() > w) {
+                Some(j) => pool_specs.push(j.specs[w].clone()),
+                None => return Err(ServeError::Spec(format!("no job covers worker {w}"))),
+            }
+        }
+        if spec.transport.kind == TransportKind::Tcp
+            && spec.transport.tcp.workers.len() != pool
+        {
+            return Err(ServeError::Spec(format!(
+                "tcp pool of {pool} workers needs {pool} addresses in \
+                 'tcp_workers', got {}",
+                spec.transport.tcp.workers.len()
+            )));
+        }
+        let respawn_budget = spec.jobs.iter().map(|j| j.cfg.max_respawns).max().unwrap_or(0);
+
+        let mut cluster =
+            Cluster::connect(pool_specs, &spec.transport).map_err(ServeError::Cluster)?;
+        for job in &jobs {
+            cluster.register_session(job.session_id);
+            cluster.set_session_workers(job.session_id, job.specs.len());
+            for sp in &job.specs {
+                // A worker unreachable at attach time stays marked down
+                // and is charged a failure each round — same contract as
+                // a dedicated cluster.
+                let _ = cluster.attach_worker(sp);
+            }
+            cluster
+                .load_data_for(job.session_id, job.x_shares.clone(), job.y_shares.clone())
+                .map_err(ServeError::Cluster)?;
+        }
+
+        Ok(Scheduler {
+            cluster,
+            jobs,
+            pool_workers: pool,
+            respawn_budget,
+            respawns: 0,
+            respawns_by_worker: vec![0; pool],
+            dispatch_log: Vec::new(),
+            misrouted_rounds: 0,
+        })
+    }
+
+    /// Shared pool width.
+    pub fn pool_workers(&self) -> usize {
+        self.pool_workers
+    }
+
+    /// Session id of every dispatched round, in dispatch order.
+    pub fn dispatch_log(&self) -> &[u64] {
+        &self.dispatch_log
+    }
+
+    /// Drive every job to `Done` (or `Failed`) and assemble the
+    /// [`ServeReport`]. Consumes the per-round metrics, so call once.
+    pub fn run(&mut self) -> Result<ServeReport, ServeError> {
+        let Scheduler {
+            cluster,
+            jobs,
+            respawn_budget,
+            respawns,
+            respawns_by_worker,
+            dispatch_log,
+            misrouted_rounds,
+            ..
+        } = self;
+        let pool_workers = self.pool_workers;
+        let mut queue: VecDeque<usize> = VecDeque::new();
+        loop {
+            // (1) Dispatch wave: offer a slot to every ready job, lowest
+            // virtual time first (ties on session id). All live jobs end
+            // up with rounds in flight at once — that concurrency is the
+            // whole point of sharing the pool.
+            loop {
+                let next = (0..jobs.len())
+                    .filter(|&i| jobs[i].state == JobState::Ready)
+                    .min_by(|&a, &b| {
+                        jobs[a]
+                            .vtime
+                            .total_cmp(&jobs[b].vtime)
+                            .then(jobs[a].session_id.cmp(&jobs[b].session_id))
+                    });
+                let ci = match next {
+                    Some(ci) => ci,
+                    None => break,
+                };
+                match jobs[ci].session.begin_round(cluster) {
+                    Ok(()) => {
+                        jobs[ci].state = JobState::Inflight;
+                        jobs[ci].vtime += 1.0 / jobs[ci].priority as f64;
+                        dispatch_log.push(jobs[ci].session_id);
+                        queue.push_back(ci);
+                    }
+                    Err(e) => {
+                        jobs[ci].error = Some(e.to_string());
+                        jobs[ci].state = JobState::Failed;
+                    }
+                }
+            }
+            if queue.is_empty() {
+                // Nothing dispatched and nothing ready: every job is
+                // done or failed.
+                break;
+            }
+
+            // (2) Collect wave: retire every in-flight round, oldest
+            // dispatch first. Traffic for rounds deeper in the queue is
+            // parked by the cluster while an earlier one collects.
+            while let Some(ci) = queue.pop_front() {
+                let mut round = match jobs[ci].session.collect_round(cluster) {
+                    Ok(r) => r,
+                    Err(e) => {
+                        jobs[ci].error = Some(e.to_string());
+                        jobs[ci].state = JobState::Failed;
+                        continue;
+                    }
+                };
+
+                // (3) While short of R, heal failed shared workers
+                // (within budget) and resume collecting the reopened
+                // round.
+                let mut aborted = false;
+                while !round.ok() {
+                    if !heal_pass(
+                        cluster,
+                        jobs,
+                        ci,
+                        &mut round,
+                        *respawn_budget,
+                        respawns,
+                        respawns_by_worker,
+                    ) {
+                        break;
+                    }
+                    let dl = jobs[ci].session.last_deadline_ms();
+                    if let Err(e) =
+                        cluster.collect_resume(&mut round, &Deadline::after_ms(dl))
+                    {
+                        jobs[ci].error = Some(format!("collect resume: {e}"));
+                        jobs[ci].state = JobState::Failed;
+                        aborted = true;
+                        break;
+                    }
+                }
+                *misrouted_rounds += round.misrouted;
+                if aborted {
+                    continue;
+                }
+
+                // (4) Decode + apply; record the round's metrics.
+                match jobs[ci].session.finish_round(cluster, round) {
+                    Ok(_) => {
+                        let m = IterationMetrics {
+                            iter: jobs[ci].metrics.len(),
+                            train_loss: jobs[ci].session.train_loss(),
+                            test_accuracy: None,
+                        };
+                        jobs[ci].metrics.push(m);
+                        jobs[ci].state = if jobs[ci].metrics.len() >= jobs[ci].iters {
+                            JobState::Done
+                        } else {
+                            JobState::Ready
+                        };
+                    }
+                    Err(e) => {
+                        jobs[ci].error = Some(e.to_string());
+                        jobs[ci].state = JobState::Failed;
+                    }
+                }
+            }
+        }
+
+        let (wire_sent, wire_received) = cluster.wire_bytes();
+        let mut sessions = Vec::with_capacity(jobs.len());
+        for job in jobs.iter_mut() {
+            let metrics = std::mem::take(&mut job.metrics);
+            sessions.push(SessionSummary {
+                name: job.name.clone(),
+                session_id: job.session_id,
+                priority: job.priority,
+                objective: job.session.config().model.to_string(),
+                error: job.error.clone(),
+                report: job.session.report(metrics),
+            });
+        }
+        Ok(ServeReport {
+            transport: cluster.transport_name().to_string(),
+            pool_workers,
+            wire_sent,
+            wire_received,
+            misrouted: cluster.misrouted() + *misrouted_rounds,
+            respawns: *respawns,
+            sessions,
+        })
+    }
+}
+
+/// Revive the collecting round's failed workers (within the per-worker
+/// budget) and rebuild every live sibling's engine on each revived
+/// worker. Returns whether at least one failure was healed — i.e.
+/// whether the round reopened and collection should resume.
+fn heal_pass(
+    cluster: &mut Cluster,
+    jobs: &mut [Job],
+    ci: usize,
+    round: &mut Round,
+    budget: u32,
+    respawns: &mut u64,
+    respawns_by_worker: &mut [u32],
+) -> bool {
+    if budget == 0 {
+        return false;
+    }
+    let mut failed: Vec<usize> = round.failures.iter().map(|&(w, _)| w).collect();
+    failed.sort_unstable();
+    failed.dedup();
+    let mut healed_any = false;
+    for w in failed {
+        if w >= respawns_by_worker.len()
+            || respawns_by_worker[w] >= budget
+            || w >= jobs[ci].specs.len()
+        {
+            continue;
+        }
+        // A revived worker comes back healthy: clear the chaos flag so
+        // the replacement engine (and any later revive) doesn't re-fail.
+        jobs[ci].specs[w].fail_from_iter = None;
+        let spec = jobs[ci].specs[w].clone();
+        let x = jobs[ci].x_shares[w].clone();
+        let y = jobs[ci].y_shares.as_ref().map(|ys| ys[w].clone());
+        if cluster.revive(&spec, x, y).is_err() {
+            // Still unreachable; the failure stands and the job's
+            // degrade-or-abort ladder decides.
+            continue;
+        }
+        *respawns += 1;
+        respawns_by_worker[w] += 1;
+        // The revive rebuilt worker w with only the collecting session's
+        // engine. Re-attach and re-load every other live job spanning w
+        // (the exact shares kept from construction — never re-encoded),
+        // and re-send in-flight weights so their open rounds still
+        // complete.
+        for j in 0..jobs.len() {
+            if j == ci
+                || jobs[j].specs.len() <= w
+                || matches!(jobs[j].state, JobState::Done | JobState::Failed)
+            {
+                continue;
+            }
+            jobs[j].specs[w].fail_from_iter = None;
+            let sp = jobs[j].specs[w].clone();
+            if cluster.attach_worker(&sp).is_err() {
+                continue;
+            }
+            let xj = jobs[j].x_shares[w].clone();
+            let yj = jobs[j].y_shares.as_ref().map(|ys| ys[w].clone());
+            let _ = cluster.load_worker(w, jobs[j].session_id, xj, yj);
+            if jobs[j].state == JobState::Inflight {
+                let _ = jobs[j].session.redispatch(cluster, w);
+            }
+        }
+        // Only reopen the round once the replacement actually has this
+        // iteration's weights; otherwise the failure stands.
+        if jobs[ci].session.redispatch(cluster, w).is_ok() && round.heal(w) {
+            healed_any = true;
+        }
+    }
+    healed_any
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn quiet(extra: &str) -> String {
+        // Deterministic, fast sessions: no modeled stragglers/network
+        // noise beyond the defaults, tiny iteration counts.
+        format!(
+            r#"{{ "sessions": [
+                {{ "name": "log", "m": 60, "data_seed": 3,
+                   "config": {{ "n": 8, "k": 2, "t": 1, "iters": 3 {extra} }} }},
+                {{ "name": "lin", "m": 60, "d": 4, "data_seed": 9,
+                   "config": {{ "model": "linear", "n": 6, "k": 1, "t": 1,
+                                "iters": 3 }} }}
+            ] }}"#
+        )
+    }
+
+    #[test]
+    fn two_heterogeneous_jobs_complete_with_clean_routing() {
+        let spec = ServeSpec::from_json(&quiet("")).unwrap();
+        let mut sched = Scheduler::new(spec).unwrap();
+        assert_eq!(sched.pool_workers(), 8);
+        let rep = sched.run().unwrap();
+        assert_eq!(rep.sessions.len(), 2);
+        for s in &rep.sessions {
+            assert_eq!(s.error, None, "session '{}' failed", s.name);
+            assert_eq!(s.report.iterations.len(), 3);
+        }
+        assert_eq!(rep.misrouted, 0, "session routing must be airtight");
+        assert_eq!(rep.transport, "memory");
+        // Both sessions' rounds actually interleaved.
+        let log = sched.dispatch_log();
+        assert_eq!(log.iter().filter(|&&s| s == 1).count(), 3);
+        assert_eq!(log.iter().filter(|&&s| s == 2).count(), 3);
+    }
+
+    #[test]
+    fn priority_orders_dispatch_within_each_wave() {
+        // Give the *second* session (higher id — it loses every id
+        // tie-break) the higher priority; once virtual times diverge it
+        // must be offered slots first.
+        let spec = ServeSpec::from_json(
+            r#"{ "sessions": [
+                { "name": "slowpoke", "m": 60, "data_seed": 3,
+                  "config": { "n": 6, "k": 1, "t": 1, "iters": 3 } },
+                { "name": "vip", "m": 60, "data_seed": 5,
+                  "config": { "n": 6, "k": 1, "t": 1, "iters": 3,
+                              "priority": 4 } }
+            ] }"#,
+        )
+        .unwrap();
+        let mut sched = Scheduler::new(spec).unwrap();
+        sched.run().unwrap();
+        let log = sched.dispatch_log().to_vec();
+        assert_eq!(log.len(), 6);
+        // Wave 1: both at vtime 0 — id order. Every later wave: the
+        // priority-4 job's clock (1/4 per round) trails the
+        // priority-1 job's, so it dispatches first.
+        assert_eq!(&log[..2], &[1, 2]);
+        for pair in log[2..].chunks(2) {
+            assert_eq!(pair, &[2, 1], "full log: {log:?}");
+        }
+    }
+
+    #[test]
+    fn one_jobs_failure_never_takes_down_its_sibling() {
+        // Session 1 loses more workers than its threshold can absorb
+        // (n=8, k=2, t=1 ⇒ R=7; 3 dead leaves 5 usable) with no respawn
+        // budget: it must fail; its sibling must finish clean.
+        let spec = ServeSpec::from_json(
+            r#"{ "sessions": [
+                { "name": "doomed", "m": 60, "data_seed": 3,
+                  "config": { "n": 8, "k": 2, "t": 1, "iters": 3,
+                              "chaos_failures": 3, "chaos_from_iter": 1 } },
+                { "name": "survivor", "m": 60, "data_seed": 5,
+                  "config": { "n": 8, "k": 2, "t": 1, "iters": 3 } }
+            ] }"#,
+        )
+        .unwrap();
+        let mut sched = Scheduler::new(spec).unwrap();
+        let rep = sched.run().unwrap();
+        let doomed = &rep.sessions[0];
+        let survivor = &rep.sessions[1];
+        let msg = doomed.error.as_deref().unwrap_or("");
+        assert!(msg.contains("produced results"), "expected threshold abort, got '{msg}'");
+        assert_eq!(survivor.error, None);
+        assert_eq!(survivor.report.iterations.len(), 3);
+        assert_eq!(rep.misrouted, 0);
+    }
+}

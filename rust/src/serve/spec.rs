@@ -1,0 +1,242 @@
+//! The `codedml serve --sessions <spec.json>` input format.
+//!
+//! A serve spec is one JSON object describing the shared pool and the
+//! jobs multiplexed over it:
+//!
+//! ```json
+//! {
+//!   "transport": "memory",
+//!   "sessions": [
+//!     { "name": "mnist-3v7", "m": 120, "data_seed": 7,
+//!       "config": { "n": 8, "k": 2, "t": 1, "iters": 5 } },
+//!     { "name": "planted-linear", "m": 120, "d": 4, "data_seed": 11,
+//!       "config": { "model": "linear", "n": 6, "k": 2, "t": 1,
+//!                   "iters": 5, "priority": 2 } }
+//!   ]
+//! }
+//! ```
+//!
+//! The transport is a property of the *pool*, not of any one job — a
+//! session config that tries to set `transport`/`tcp_workers` is
+//! rejected. Nested `"config"` objects otherwise take every key
+//! [`CodedMlConfig::apply_json`] knows, with `"model": "linear"` also
+//! switching the base defaults to [`CodedMlConfig::linear`].
+
+use crate::cluster::{TransportConfig, TransportKind};
+use crate::coordinator::CodedMlConfig;
+use crate::util::json::Json;
+
+/// One job of a serve run: dataset shape + full session config.
+#[derive(Debug, Clone)]
+pub struct JobSpec {
+    pub name: String,
+    /// Training rows (trimmed to a multiple of K by the session).
+    pub m: usize,
+    /// Feature count — only used by the linear objective's planted
+    /// dataset; the logistic 3-vs-7 dataset fixes its own width.
+    pub d: usize,
+    /// Seed of the synthetic dataset (independent of `cfg.seed`, which
+    /// drives masks/quantization/stragglers).
+    pub data_seed: u64,
+    pub cfg: CodedMlConfig,
+}
+
+/// A parsed serve spec: the pool transport plus the jobs to multiplex.
+#[derive(Debug, Clone)]
+pub struct ServeSpec {
+    pub transport: TransportConfig,
+    pub jobs: Vec<JobSpec>,
+}
+
+impl ServeSpec {
+    /// Parse a spec from JSON text. Unknown keys are rejected at both
+    /// levels — a typoed knob silently ignored is a misconfigured
+    /// experiment.
+    pub fn from_json(text: &str) -> Result<ServeSpec, String> {
+        let root = Json::parse(text).map_err(|e| e.to_string())?;
+        let obj = root.as_obj().ok_or("serve spec must be a JSON object")?;
+        let mut transport = TransportConfig::default();
+        let mut sessions: Option<&[Json]> = None;
+        for (key, val) in obj {
+            match key.as_str() {
+                "transport" => {
+                    transport.kind = val
+                        .as_str()
+                        .ok_or("transport: want string")?
+                        .parse::<TransportKind>()?
+                }
+                "tcp_workers" => {
+                    let arr = val.as_arr().ok_or("tcp_workers: want array of strings")?;
+                    let mut workers = Vec::with_capacity(arr.len());
+                    for v in arr {
+                        workers.push(
+                            v.as_str().ok_or("tcp_workers: want array of strings")?.to_string(),
+                        );
+                    }
+                    transport.tcp.workers = workers;
+                }
+                "sessions" => {
+                    sessions = Some(val.as_arr().ok_or("sessions: want an array")?)
+                }
+                other => return Err(format!("unknown serve spec key '{other}'")),
+            }
+        }
+        let sessions = sessions.ok_or("serve spec needs a 'sessions' array")?;
+        if sessions.is_empty() {
+            return Err("serve spec needs at least one session".to_string());
+        }
+        let mut jobs = Vec::with_capacity(sessions.len());
+        for (i, s) in sessions.iter().enumerate() {
+            let job = parse_job(s, i).map_err(|e| format!("sessions[{i}]: {e}"))?;
+            if jobs.iter().any(|j: &JobSpec| j.name == job.name) {
+                return Err(format!("sessions[{i}]: duplicate session name '{}'", job.name));
+            }
+            jobs.push(job);
+        }
+        Ok(ServeSpec { transport, jobs })
+    }
+}
+
+fn parse_job(s: &Json, index: usize) -> Result<JobSpec, String> {
+    let obj = s.as_obj().ok_or("want an object")?;
+    let mut name = format!("session-{}", index + 1);
+    let mut m = 120usize;
+    let mut d = 4usize;
+    let mut data_seed = 7u64;
+    let mut config_text: Option<String> = None;
+    for (key, val) in obj {
+        match key.as_str() {
+            "name" => name = val.as_str().ok_or("name: want string")?.to_string(),
+            "m" => m = val.as_usize().ok_or("m: want integer")?,
+            "d" => d = val.as_usize().ok_or("d: want integer")?,
+            "data_seed" => data_seed = val.as_u64().ok_or("data_seed: want integer")?,
+            "config" => {
+                let cobj = val.as_obj().ok_or("config: want an object")?;
+                if let Some(forbidden) = cobj.keys().find(|k| {
+                    *k == "transport" || *k == "tcp_workers" || k.starts_with("connect_")
+                }) {
+                    return Err(format!(
+                        "config key '{forbidden}': per-session transport is owned \
+                         by the pool; set it at the spec top level"
+                    ));
+                }
+                config_text = Some(val.to_string());
+            }
+            other => return Err(format!("unknown session key '{other}'")),
+        }
+    }
+    // "model": "linear" switches the base defaults too (larger prime,
+    // linear quantization scales) — exactly what `codedml train` does.
+    let linear_base = config_text
+        .as_deref()
+        .and_then(|t| Json::parse(t).ok())
+        .and_then(|c| c.get("model").and_then(|v| v.as_str().map(|s| s == "linear")))
+        .unwrap_or(false);
+    let mut cfg =
+        if linear_base { CodedMlConfig::linear() } else { CodedMlConfig::default() };
+    if let Some(text) = &config_text {
+        cfg.apply_json(text)?;
+    }
+    if cfg.approx_decode {
+        return Err(
+            "approx_decode is not supported under serve: a degraded round's \
+             output depends on which subset arrived, so pool interleaving \
+             could change the trajectory and break the bit-identical \
+             isolation invariant"
+                .to_string(),
+        );
+    }
+    Ok(JobSpec { name, m, d, data_seed, cfg })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::ModelKind;
+
+    #[test]
+    fn parses_two_heterogeneous_sessions() {
+        let spec = ServeSpec::from_json(
+            r#"{
+                "transport": "memory",
+                "sessions": [
+                    { "name": "log", "m": 60, "data_seed": 3,
+                      "config": { "n": 8, "k": 2, "t": 1, "iters": 4 } },
+                    { "name": "lin", "m": 80, "d": 5, "data_seed": 9,
+                      "config": { "model": "linear", "n": 6, "k": 2, "t": 1,
+                                  "priority": 2 } }
+                ]
+            }"#,
+        )
+        .unwrap();
+        assert_eq!(spec.transport.kind, TransportKind::Memory);
+        assert_eq!(spec.jobs.len(), 2);
+        assert_eq!(spec.jobs[0].name, "log");
+        assert_eq!(spec.jobs[0].m, 60);
+        assert_eq!(spec.jobs[0].cfg.n, 8);
+        assert_eq!(spec.jobs[0].cfg.model, ModelKind::Logistic);
+        assert_eq!(spec.jobs[1].cfg.model, ModelKind::Linear);
+        // Linear base defaults engaged, then overridden keys applied.
+        assert_eq!(spec.jobs[1].cfg.p, crate::field::PRIME_26);
+        assert_eq!(spec.jobs[1].cfg.priority, 2);
+        assert_eq!(spec.jobs[1].d, 5);
+    }
+
+    #[test]
+    fn default_names_are_positional() {
+        let spec = ServeSpec::from_json(
+            r#"{ "sessions": [ { "config": { "iters": 1 } }, {} ] }"#,
+        )
+        .unwrap();
+        assert_eq!(spec.jobs[0].name, "session-1");
+        assert_eq!(spec.jobs[1].name, "session-2");
+    }
+
+    #[test]
+    fn rejects_per_session_transport() {
+        let err = ServeSpec::from_json(
+            r#"{ "sessions": [ { "config": { "transport": "tcp" } } ] }"#,
+        )
+        .unwrap_err();
+        assert!(err.contains("owned by the pool"), "{err}");
+        let err = ServeSpec::from_json(
+            r#"{ "sessions": [ { "config": { "tcp_workers": ["x:1"] } } ] }"#,
+        )
+        .unwrap_err();
+        assert!(err.contains("owned by the pool"), "{err}");
+    }
+
+    #[test]
+    fn rejects_approx_decode() {
+        let err = ServeSpec::from_json(
+            r#"{ "sessions": [ { "config": { "approx_decode": true } } ] }"#,
+        )
+        .unwrap_err();
+        assert!(err.contains("isolation invariant"), "{err}");
+    }
+
+    #[test]
+    fn rejects_unknown_and_malformed_keys() {
+        assert!(ServeSpec::from_json(r#"{ "sesions": [] }"#).is_err());
+        assert!(ServeSpec::from_json(r#"{ "sessions": [ { "mm": 3 } ] }"#).is_err());
+        assert!(ServeSpec::from_json(r#"{ "sessions": [] }"#).is_err());
+        assert!(ServeSpec::from_json(r#"[1, 2]"#).is_err());
+        let err = ServeSpec::from_json(
+            r#"{ "sessions": [ { "name": "a" }, { "name": "a" } ] }"#,
+        )
+        .unwrap_err();
+        assert!(err.contains("duplicate"), "{err}");
+    }
+
+    #[test]
+    fn tcp_spec_carries_worker_addresses() {
+        let spec = ServeSpec::from_json(
+            r#"{ "transport": "tcp",
+                 "tcp_workers": ["127.0.0.1:9001", "127.0.0.1:9002"],
+                 "sessions": [ { "config": { "n": 2, "k": 1, "t": 1 } } ] }"#,
+        )
+        .unwrap();
+        assert_eq!(spec.transport.kind, TransportKind::Tcp);
+        assert_eq!(spec.transport.tcp.workers.len(), 2);
+    }
+}

@@ -1,0 +1,13 @@
+//! Lint fixture: trips exactly `no-cross-session-state`.
+//!
+//! This file is never compiled — `rust/tests/lint.rs` feeds it to the
+//! linter and asserts the rule fires here and nowhere else. The bug it
+//! models: scheduler code taking a worker result it happens to hold and
+//! pushing it straight into a round, skipping the cluster's session-id
+//! check that keeps one job's results out of a sibling's decode.
+
+pub fn drain_into(round: &mut Round, parked: Vec<StepResult>) {
+    for res in parked {
+        round.absorb(res);
+    }
+}

@@ -161,6 +161,72 @@ fn weight_shares_rerandomize_across_iterations() {
     }
 }
 
+/// Cross-session isolation, statistical half (the serve layer's privacy
+/// contract): a worker serving two concurrent sessions observes one
+/// share from each. With per-session mask streams — what the scheduler
+/// builds — that combined view is jointly randomized: even the
+/// *difference* of the two shares is uniform. Had the sessions shared a
+/// mask stream, encoding all-zeros in session A and all-(p−1) in session
+/// B would make the difference a constant, and colluding workers could
+/// compare datasets across jobs.
+#[test]
+fn colluding_workers_across_two_sessions_learn_nothing() {
+    let field = PrimeField::new(PAPER_PRIME);
+    let params = CodingParams::new(7, 1, 2, 1).unwrap();
+    let enc = Encoder::new(field, params);
+    let (m, d) = (1usize, 16usize);
+    let zeros = vec![0u64; m * d];
+    let spikes: Vec<u64> = (0..m * d).map(|_| field.modulus() - 1).collect();
+
+    // Two sessions, two independent mask streams.
+    let mut rng_a = Rng::new(101);
+    let mut rng_b = Rng::new(202);
+
+    let buckets = 16;
+    let trials = 4000;
+    let mut h_diff = vec![0usize; buckets];
+    for _ in 0..trials {
+        let sa = enc.encode_dataset(&zeros, m, d, &mut rng_a);
+        let sb = enc.encode_dataset(&spikes, m, d, &mut rng_b);
+        // Worker 3 colludes with itself across sessions: its view is the
+        // pair (sa[3], sb[3]).
+        let diff = field.sub(sa[3].data[0], sb[3].data[0]);
+        h_diff[(diff as u128 * buckets as u128 / field.modulus() as u128) as usize] += 1;
+    }
+    let expected = trials as f64 / buckets as f64;
+    let tol = 5.0 * expected.sqrt();
+    for (b, &h) in h_diff.iter().enumerate() {
+        assert!((h as f64 - expected).abs() < tol, "diff bucket {b}: {h}");
+    }
+}
+
+/// Cross-session isolation, structural half: the frames shipped to the
+/// pool for session A never appear among session B's frames — for *any*
+/// worker pair — even when both sessions encode the very same dataset.
+/// This is the regression net for mask-stream sharing between sessions:
+/// a sibling session must draw fresh masks, so every one of its shares
+/// differs from every share of A's.
+#[test]
+fn session_shares_never_cross_worker_frames() {
+    use codedml::coordinator::{CodedMlConfig, CodedMlSession, LogisticObjective};
+    use codedml::data::synthetic_3v7;
+
+    let ds = synthetic_3v7(60, 3);
+    let cfg_a = CodedMlConfig { n: 8, k: 2, t: 1, seed: 42, ..Default::default() };
+    let cfg_b = CodedMlConfig { seed: 43, ..cfg_a.clone() };
+    let a = CodedMlSession::<LogisticObjective>::new_detached(cfg_a, &ds, 1).unwrap();
+    let b = CodedMlSession::<LogisticObjective>::new_detached(cfg_b, &ds, 2).unwrap();
+    for (wa, fa) in a.x_shares.iter().enumerate() {
+        for (wb, fb) in b.x_shares.iter().enumerate() {
+            assert_ne!(
+                fa, fb,
+                "session A's frame for worker {wa} shows up as session B's \
+                 frame for worker {wb}"
+            );
+        }
+    }
+}
+
 /// The Shamir baseline has the same sharpness: T+1 shares reconstruct,
 /// and T shares are consistent with every candidate secret (perfect
 /// secrecy's combinatorial core).

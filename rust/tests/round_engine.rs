@@ -20,6 +20,7 @@ fn specs(n: usize, rows: usize, d: usize, coeffs: Vec<u64>, slow: &[usize]) -> V
     (0..n)
         .map(|id| WorkerSpec {
             id,
+            session: 0,
             kind: codedml::runtime::BackendKind::Native,
             artifact_dir: PathBuf::from("artifacts"),
             field: f,

@@ -1,0 +1,186 @@
+//! The serve layer's tentpole guarantee, end to end: a session scheduled
+//! onto a shared pool trains **bit-identically** to the same session
+//! running alone on a dedicated cluster — on both transports, at several
+//! thread counts, and through chaos kills of shared workers. LCC
+//! decoding is exact on any fastest-R subset, so interleaving N jobs'
+//! rounds (which only perturbs arrival order) must never change a
+//! decoded gradient; these tests pin that entire argument.
+//!
+//! TCP scenarios spawn real `codedml --worker` processes on loopback via
+//! `CARGO_BIN_EXE_codedml`, exactly as `transport_conformance.rs` does.
+
+use std::io::{BufRead, BufReader};
+use std::process::{Child, Command, Stdio};
+
+use codedml::coordinator::{CodedMlSession, ModelKind, TrainReport};
+use codedml::data::{synthetic_3v7, synthetic_planted_linear};
+use codedml::serve::{JobSpec, Scheduler, ServeSpec};
+
+/// The reference trajectory: the very same job built the ordinary way —
+/// one session, one dedicated cluster — and trained to completion.
+fn dedicated_report(job: &JobSpec) -> TrainReport {
+    match job.cfg.model {
+        ModelKind::Logistic => {
+            let ds = synthetic_3v7(job.m, job.data_seed);
+            let mut s = CodedMlSession::new(job.cfg.clone(), &ds).unwrap();
+            s.train(job.cfg.iters, None).unwrap()
+        }
+        ModelKind::Linear => {
+            let (ds, _) = synthetic_planted_linear(job.m, job.d, job.data_seed);
+            let mut s = CodedMlSession::new_linear(job.cfg.clone(), &ds).unwrap();
+            s.train(job.cfg.iters, None).unwrap()
+        }
+    }
+}
+
+/// Two heterogeneous sessions — different objectives, shapes, *and*
+/// moduli (logistic on the 24-bit paper prime, linear on the 26-bit
+/// one) — interleaved over one pool.
+fn two_session_spec(par: usize, transport_block: &str) -> String {
+    format!(
+        r#"{{ {transport_block}"sessions": [
+            {{ "name": "log", "m": 60, "data_seed": 3,
+               "config": {{ "n": 8, "k": 2, "t": 1, "iters": 3,
+                            "parallelism": {par} }} }},
+            {{ "name": "lin", "m": 60, "d": 4, "data_seed": 9,
+               "config": {{ "model": "linear", "n": 6, "k": 1, "t": 1,
+                            "iters": 3, "parallelism": {par} }} }}
+        ] }}"#
+    )
+}
+
+/// Assert every session of `rep` matched its dedicated run bit-for-bit:
+/// identical per-iteration losses and identical final weights.
+fn assert_isolated(rep: &codedml::coordinator::ServeReport, jobs: &[JobSpec], ctx: &str) {
+    assert_eq!(rep.misrouted, 0, "{ctx}: session routing must be airtight");
+    assert_eq!(rep.sessions.len(), jobs.len());
+    for (s, job) in rep.sessions.iter().zip(jobs) {
+        assert_eq!(s.error, None, "{ctx}: session '{}' failed", s.name);
+        let reference = dedicated_report(job);
+        assert_eq!(
+            s.report.iterations, reference.iterations,
+            "{ctx}: session '{}' loss curve diverged from its dedicated run",
+            s.name
+        );
+        assert_eq!(
+            s.report.weights, reference.weights,
+            "{ctx}: session '{}' weights diverged from its dedicated run",
+            s.name
+        );
+    }
+}
+
+/// Tentpole, in-memory: at every thread count, each of two interleaved
+/// mixed-modulus sessions is bit-identical to running alone.
+#[test]
+fn interleaved_sessions_match_dedicated_runs_on_memory_transport() {
+    for par in [1usize, 2, 4] {
+        let spec = ServeSpec::from_json(&two_session_spec(par, "")).unwrap();
+        let jobs = spec.jobs.clone();
+        assert_ne!(
+            jobs[0].cfg.p, jobs[1].cfg.p,
+            "the pair must exercise mixed moduli on one pool"
+        );
+        let mut sched = Scheduler::new(spec).unwrap();
+        let rep = sched.run().unwrap();
+        assert_eq!(rep.transport, "memory");
+        assert_isolated(&rep, &jobs, &format!("memory, {par} thread(s)"));
+        // The schedule genuinely interleaved: 3 rounds per session, and
+        // no session dispatched twice before its sibling went once.
+        let log = sched.dispatch_log();
+        assert_eq!(log.len(), 6, "{log:?}");
+        for wave in log.chunks(2) {
+            let mut ids = wave.to_vec();
+            ids.sort_unstable();
+            assert_eq!(ids, [1, 2], "non-interleaved schedule: {log:?}");
+        }
+    }
+}
+
+/// A `codedml --worker` child on an ephemeral loopback port; killed and
+/// reaped on drop so a failing assertion cannot leak processes.
+struct WorkerProc {
+    child: Child,
+    addr: String,
+}
+
+impl Drop for WorkerProc {
+    fn drop(&mut self) {
+        let _ = self.child.kill();
+        let _ = self.child.wait();
+    }
+}
+
+fn spawn_worker() -> WorkerProc {
+    let mut child = Command::new(env!("CARGO_BIN_EXE_codedml"))
+        .args(["--worker", "--listen", "127.0.0.1:0"])
+        .stdout(Stdio::piped())
+        .stderr(Stdio::null())
+        .spawn()
+        .unwrap();
+    let stdout = child.stdout.take().unwrap();
+    let mut line = String::new();
+    BufReader::new(stdout).read_line(&mut line).unwrap();
+    let addr = line.trim().rsplit(' ').next().unwrap_or("").to_string();
+    assert!(addr.contains(':'), "unexpected worker banner: {line:?}");
+    WorkerProc { child, addr }
+}
+
+/// Tentpole, TCP: the same pair of sessions multiplexed over real worker
+/// processes still matches the dedicated (in-memory) trajectories — the
+/// wire changes nothing, the scheduling changes nothing.
+#[test]
+fn interleaved_sessions_match_dedicated_runs_on_tcp_transport() {
+    for par in [1usize, 2, 4] {
+        let procs: Vec<WorkerProc> = (0..8).map(|_| spawn_worker()).collect();
+        let addrs = procs
+            .iter()
+            .map(|p| format!("\"{}\"", p.addr))
+            .collect::<Vec<_>>()
+            .join(", ");
+        let transport = format!(r#""transport": "tcp", "tcp_workers": [{addrs}], "#);
+        let spec = ServeSpec::from_json(&two_session_spec(par, &transport)).unwrap();
+        let jobs = spec.jobs.clone();
+        let mut sched = Scheduler::new(spec).unwrap();
+        let rep = sched.run().unwrap();
+        assert_eq!(rep.transport, "tcp");
+        assert!(rep.wire_sent > 0 && rep.wire_received > 0, "tcp must account bytes");
+        assert_isolated(&rep, &jobs, &format!("tcp, {par} thread(s)"));
+    }
+}
+
+/// Chaos churn on the shared pool: two workers die mid-run under one
+/// session's rounds (n=8, K=2, T=1 ⇒ R=7, slack 1 — two deaths force a
+/// heal). The scheduler must revive them, rebuild *both* sessions'
+/// engines on the replacements, and finish both jobs — still
+/// bit-identical to clean dedicated runs, because heals re-ship the
+/// exact original shares and LCC decoding is subset-independent.
+#[test]
+fn chaos_kill_of_shared_workers_heals_both_sessions_bit_identically() {
+    let spec = ServeSpec::from_json(
+        r#"{ "sessions": [
+            { "name": "churned", "m": 60, "data_seed": 3,
+              "config": { "n": 8, "k": 2, "t": 1, "iters": 3,
+                          "chaos_failures": 2, "chaos_from_iter": 1,
+                          "max_respawns": 2 } },
+            { "name": "bystander", "m": 60, "data_seed": 5,
+              "config": { "n": 8, "k": 2, "t": 1, "iters": 3 } }
+        ] }"#,
+    )
+    .unwrap();
+    // The reference runs are *clean*: chaos + healing must be invisible
+    // in the trajectory, so compare against jobs with chaos stripped.
+    let mut jobs = spec.jobs.clone();
+    for j in jobs.iter_mut() {
+        j.cfg.chaos_failures = 0;
+        j.cfg.chaos_from_iter = 0;
+        j.cfg.max_respawns = 0;
+    }
+    let mut sched = Scheduler::new(spec).unwrap();
+    let rep = sched.run().unwrap();
+    assert!(
+        rep.respawns >= 1,
+        "the chaos deaths must actually exercise the heal path: {rep:?}"
+    );
+    assert_isolated(&rep, &jobs, "memory + chaos churn");
+}

@@ -75,6 +75,7 @@ fn specs(n: usize, rows: usize, d: usize, coeffs: &[u64], par: Parallelism) -> V
     (0..n)
         .map(|id| WorkerSpec {
             id,
+            session: 0,
             kind: codedml::runtime::BackendKind::Native,
             artifact_dir: PathBuf::from("artifacts"),
             field: f,

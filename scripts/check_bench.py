@@ -19,6 +19,16 @@ healthy pool, and actually engage under chaos:
   * "approx rounds (degraded run)" must be > 0 (the degraded path
     really ran).
 
+BENCH_serve.json — multiplexing sessions over one shared pool must pay
+for itself without bending a trajectory:
+  * the "misrouted results (must be 0)" metric row must exist and be
+    exactly 0 — a result crossing a session boundary is a correctness
+    bug, whatever the speedup says;
+  * the "serve: ... [speedup x]" row must exist and exceed 1.5 — with
+    four sessions straggling on disjoint worker pairs, overlapping
+    their waits should approach 4x; below 1.5x the scheduler is
+    serializing rounds it should interleave.
+
 Run against a fresh BENCH_JSON=1 output (see .github/workflows/ci.yml
 bench-smoke and chaos jobs), not against the committed baselines in
 benchmarks/baseline.
@@ -83,8 +93,40 @@ def check_supervisor(rows, failures):
             print(f"ok: {name} = {found[0]['value']:g}")
 
 
+def check_serve(rows, failures):
+    misrouted = [r for r in rows if r["name"].startswith("misrouted results")]
+    if not misrouted:
+        failures.append("no 'misrouted results' metric row in the bench output")
+    for r in misrouted:
+        if r.get("value") != 0:
+            failures.append(
+                f"{r['name']!r}: value {r.get('value')!r} — a worker result "
+                "crossed a session boundary"
+            )
+        else:
+            print(f"ok: {r['name']} = 0")
+
+    speedups = [
+        r
+        for r in rows
+        if "serve" in r["name"] and "[speedup x]" in r["name"]
+    ]
+    if not speedups:
+        failures.append("no 'serve: ... [speedup x]' row in the bench output")
+    for r in speedups:
+        speedup = r.get("value", 0.0)
+        if not speedup > 1.5:
+            failures.append(
+                f"{r['name']!r}: speedup {speedup} <= 1.5 — the scheduler is "
+                "not overlapping the sessions' straggler waits"
+            )
+        else:
+            print(f"ok: {r['name']} = {speedup:.2f}x")
+
+
 CHECKS = {
     "BENCH_coding.json": check_coding,
+    "BENCH_serve.json": check_serve,
     "BENCH_supervisor.json": check_supervisor,
 }
 
